@@ -1,0 +1,27 @@
+//! Regenerates **Fig 10**: C3 speedups with ConCCL vs the best
+//! CU-collective variant — the paper's bottom line (c3_best 48% vs
+//! ConCCL 66% vs ConCCL_rp 72% of ideal; up to 1.67x).
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_fig10;
+use conccl::coordinator::{headline, run_suite, RunnerConfig};
+use conccl::util::bench::Bencher;
+use conccl::workload::scenarios::suite;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("fig10: C3 with ConCCL");
+    let outs = run_suite(&m, &suite(), &RunnerConfig::paper());
+    render_fig10(&outs).print();
+    let h = headline(&outs);
+    let max_conccl = h.per_strategy["conccl_rp"].2.max(h.per_strategy["conccl"].2);
+    println!(
+        "avg %ideal: base {:.0} (paper 21), c3_best {:.0} (48), conccl {:.0} (66), \
+         conccl_rp {:.0} (72); max ConCCL-family speedup {:.2}x (paper 1.67x)",
+        h.per_strategy["c3_base"].1,
+        h.per_strategy["c3_best"].1,
+        h.per_strategy["conccl"].1,
+        h.per_strategy["conccl_rp"].1,
+        max_conccl
+    );
+}

@@ -1,0 +1,22 @@
+//! Regenerates **Fig 5**: (a) GEMM slowdown when CUs are taken away —
+//! compute-bound kernels degrade, memory-bound ones are resilient with
+//! the circled cache-behaviour speedup; (b)/(c) collective slowdown vs
+//! assigned CUs with the 32/64-CU knees.
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::{render_fig5a, render_fig5bc};
+use conccl::util::bench::Bencher;
+use conccl::util::units::MIB;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("fig5a: GEMM slowdown vs CU loss");
+    render_fig5a(&m, &[0, 8, 16, 32, 64, 96, 128, 160]).print();
+    let sizes = [896 * MIB, 3328 * MIB, 13 * 1024 * MIB];
+    let cus = [8u32, 16, 24, 32, 48, 64, 96, 128];
+    b.section("fig5b: all-gather slowdown vs assigned CUs");
+    render_fig5bc(&m, CollectiveKind::AllGather, &sizes, &cus).print();
+    b.section("fig5c: all-to-all slowdown vs assigned CUs");
+    render_fig5bc(&m, CollectiveKind::AllToAll, &sizes, &cus).print();
+}

@@ -1,0 +1,15 @@
+//! Regenerates **Fig 6**: relative Infinity Cache bandwidth utilization
+//! — memory-bound GEMMs dwarf everything; compute-bound GEMMs and
+//! collectives share the remaining headroom (all-gather ~14% below
+//! all-to-all).
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_fig6;
+use conccl::util::bench::Bencher;
+use conccl::util::units::MIB;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("fig6: relative LLC bandwidth utilization");
+    render_fig6(&m, &[896 * MIB, 3328 * MIB, 13 * 1024 * MIB]).print();
+}

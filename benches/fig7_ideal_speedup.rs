@@ -1,0 +1,23 @@
+//! Regenerates **Fig 7**: the ideal speedup bound per Table II scenario
+//! (1.1x .. 2x, avg ~1.6x) — the denominator of every %-of-ideal
+//! number in Figs 8/10.
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_fig7;
+use conccl::coordinator::{run_suite, RunnerConfig};
+use conccl::util::bench::Bencher;
+use conccl::util::stats::mean;
+use conccl::workload::scenarios::suite;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("fig7: ideal speedups");
+    let outs = run_suite(&m, &suite(), &RunnerConfig::default());
+    render_fig7(&outs).print();
+    let ideals: Vec<f64> = outs.iter().map(|o| o.ideal).collect();
+    println!(
+        "avg ideal {:.2}x, max {:.2}x (paper: ~1.6x avg, ~2x max)",
+        mean(&ideals),
+        ideals.iter().cloned().fold(0.0, f64::max)
+    );
+}

@@ -1,0 +1,24 @@
+//! Regenerates **Fig 8**: average C3 speedups per (collective × C3-type)
+//! group for c3_base / c3_sp / c3_rp / c3_sp_rp, with the paper's
+//! measurement protocol (6 warm-up + 9 measured, jittered).
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_fig8;
+use conccl::coordinator::{headline, run_suite, RunnerConfig};
+use conccl::util::bench::Bencher;
+use conccl::workload::scenarios::suite;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("fig8: schedule prioritization + resource partitioning");
+    let outs = run_suite(&m, &suite(), &RunnerConfig::paper());
+    render_fig8(&outs).print();
+    let h = headline(&outs);
+    println!(
+        "avg %ideal: base {:.0} (paper 21), sp {:.0} (42), rp {:.0} (41), sp_rp {:.0}",
+        h.per_strategy["c3_base"].1,
+        h.per_strategy["c3_sp"].1,
+        h.per_strategy["c3_rp"].1,
+        h.per_strategy["c3_sp_rp"].1,
+    );
+}

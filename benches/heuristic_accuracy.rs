@@ -1,0 +1,44 @@
+//! Regenerates the **§V-C claim**: the RP heuristic (one-time slowdown
+//! lookup table + 70%-efficiency rooflines) picks the sweep-optimal CU
+//! allocation for most of the 30 scenarios and loses little otherwise
+//! (paper: 24/30, at best -1.5%).
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::heuristics::{self, SlowdownTable};
+use conccl::sched::C3Executor;
+use conccl::util::bench::Bencher;
+use conccl::workload::scenarios::{resolve, TABLE2};
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("heuristic_accuracy: RP heuristic vs exhaustive sweep");
+    let table = SlowdownTable::build(&m);
+    let exec = C3Executor::new(m.clone());
+    let mut matches = 0;
+    let mut worst: f64 = 0.0;
+    let mut n = 0;
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            let sc = resolve(row, kind);
+            let k_h = heuristics::recommend(&m, &table, &sc);
+            let (best, k_b) = exec.run_rp_sweep(&sc);
+            let r_h = exec.run_rp_at(&sc, k_h);
+            let loss = (r_h.total / best.total - 1.0) * 100.0;
+            let ok = k_h == k_b || loss < 0.1;
+            matches += ok as usize;
+            worst = worst.max(loss);
+            n += 1;
+            println!(
+                "{:>12} {:<11} heuristic={:<4} sweep={:<4} {} loss={:.2}%",
+                sc.tag(),
+                kind.name(),
+                k_h,
+                k_b,
+                if ok { "MATCH" } else { "MISS " },
+                loss
+            );
+        }
+    }
+    println!("\nheuristic optimal: {matches}/{n} scenarios, worst loss {worst:.2}% (paper: 24/30, <=1.5%)");
+}

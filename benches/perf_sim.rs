@@ -1,0 +1,42 @@
+//! L3 hot-path wall-clock benches (the §Perf deliverable): the fluid
+//! simulator event loop, one C3 execution, the rp sweep, and the full
+//! 30-scenario × 7-strategy suite under the paper protocol.
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::coordinator::{run_suite, RunnerConfig};
+use conccl::sched::{C3Executor, Strategy};
+use conccl::sim::{Sim, TaskSpec};
+use conccl::util::bench::Bencher;
+use conccl::workload::scenarios::{resolve, suite, TABLE2};
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let mut b = Bencher::from_args().iters(3, 10);
+    b.section("perf: L3 hot paths");
+
+    b.bench("fluid_sim_8tasks_to_completion", || {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 4.5e12);
+        for i in 0..8 {
+            sim.add_task(TaskSpec {
+                name: String::new(),
+                arrival: i as f64 * 1e-4,
+                work: 1.0,
+                demands: vec![(r, (i + 1) as f64 * 1e9)],
+                cap: 1.0 / (1e-3 * (i + 1) as f64),
+            });
+        }
+        sim.run_to_completion()
+    });
+
+    let exec = C3Executor::new(m.clone());
+    let sc = resolve(&TABLE2[0], CollectiveKind::AllGather);
+    b.bench("c3_executor_single_run", || exec.run(&sc, Strategy::C3Sp).total);
+    b.bench("c3_executor_rp_sweep", || exec.run_rp_sweep(&sc).0.total);
+
+    let scenarios = suite();
+    b.bench("full_suite_30x7_paper_protocol", || {
+        run_suite(&m, &scenarios, &RunnerConfig::paper()).len()
+    });
+    b.finish();
+}

@@ -1,0 +1,21 @@
+//! Regenerates **Table I**: the seven LLaMA-derived GEMMs with measured
+//! intensity, compute/memory classification and isolated times, plus a
+//! wall-clock micro-bench of the GEMM model itself.
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_table1;
+use conccl::util::bench::Bencher;
+use conccl::workload::llama::table1;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let mut b = Bencher::from_args().iters(6, 9);
+    b.section("tab1: GEMMs studied");
+    render_table1(&m).print();
+    b.bench("gemm_model_full_table1_eval", || {
+        table1()
+            .iter()
+            .map(|k| k.time_isolated(&m, m.cus_total()))
+            .sum::<f64>()
+    });
+    b.finish();
+}

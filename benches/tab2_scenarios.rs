@@ -1,0 +1,13 @@
+//! Regenerates **Table II**: the 15 C3 combinations with paper vs
+//! computed taxonomy labels (divergences are the borderline rows
+//! documented in EXPERIMENTS.md).
+use conccl::config::MachineConfig;
+use conccl::coordinator::report::render_table2;
+use conccl::util::bench::Bencher;
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let b = Bencher::from_args();
+    b.section("tab2: C3 combinations and taxonomy");
+    render_table2(&m).print();
+}

@@ -1,0 +1,189 @@
+//! END-TO-END DRIVER: FSDP forward pass with all layers composed.
+//!
+//! This is the repository's integration proof (recorded in
+//! EXPERIMENTS.md §E2E). One run exercises:
+//!
+//! * **L1/L2 (build-time)** — the `fsdp_layer` artifact contains the
+//!   Pallas matmul kernel lowered inside the JAX layer graph;
+//! * **Runtime** — every layer's computation executes *for real* on the
+//!   PJRT CPU client from Rust;
+//! * **Data plane** — every layer's weights live sharded 1/8th per
+//!   simulated GPU and are materialized by a *real* ConCCL all-gather
+//!   (SDMA command packets, engine/link scheduling, bytes verified);
+//! * **L3 scheduler** — the same workload at LLaMA-70B scale is
+//!   replayed on the MI300X timeline under serial / c3_base / c3_sp /
+//!   ConCCL, reporting the paper's headline metric end to end.
+//!
+//! Numerics are verified against an unsharded host reference.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_fsdp`
+
+use conccl::config::MachineConfig;
+use conccl::node::dataplane::{all_gather, Backend};
+use conccl::node::Node;
+use conccl::runtime::Runtime;
+use conccl::sched::Strategy;
+use conccl::util::rng::Rng;
+use conccl::util::table::{f, speedup, Table};
+use conccl::util::units::fmt_seconds;
+use conccl::workload::llama::LlamaConfig;
+use conccl::workload::trace::{fsdp_forward_trace, replay};
+
+const B: usize = 64; // batch
+const H: usize = 128; // hidden
+const F: usize = 256; // ffn
+const LAYERS: usize = 4;
+
+fn rand_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale).collect()
+}
+
+fn to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn from_bytes(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+        .collect()
+}
+
+/// Host reference: relu(x @ w1) @ w2 + x (matches model.layer_fwd_residual).
+fn layer_ref(x: &[f32], w1: &[f32], w2: &[f32]) -> Vec<f32> {
+    let mut h = vec![0.0f32; B * F];
+    for r in 0..B {
+        for c in 0..F {
+            let mut acc = 0.0f64;
+            for k in 0..H {
+                acc += x[r * H + k] as f64 * w1[k * F + c] as f64;
+            }
+            h[r * F + c] = (acc as f32).max(0.0);
+        }
+    }
+    let mut y = vec![0.0f32; B * H];
+    for r in 0..B {
+        for c in 0..H {
+            let mut acc = 0.0f64;
+            for k in 0..F {
+                acc += h[r * F + k] as f64 * w2[k * H + c] as f64;
+            }
+            y[r * H + c] = x[r * H + c] + acc as f32;
+        }
+    }
+    y
+}
+
+fn main() -> anyhow::Result<()> {
+    let m = MachineConfig::mi300x();
+    let mut rt = Runtime::cpu()?;
+    let mut node = Node::new(m.clone());
+    let mut rng = Rng::new(0xF5D9);
+    let n_gpus = node.num_gpus();
+
+    // --- Build the sharded model: each GPU holds 1/8 of every weight.
+    let weights: Vec<(Vec<f32>, Vec<f32>)> = (0..LAYERS)
+        .map(|_| {
+            (
+                rand_f32(&mut rng, H * F, 0.05),
+                rand_f32(&mut rng, F * H, 0.05),
+            )
+        })
+        .collect();
+    let mut sharded: Vec<Vec<conccl::gpu::BufferId>> = Vec::new(); // [layer][2*gpu-slot]
+    for (w1, w2) in &weights {
+        let mut handles = Vec::new();
+        for w in [w1, w2] {
+            let bytes = to_bytes(w);
+            assert_eq!(bytes.len() % n_gpus, 0);
+            let shard = bytes.len() / n_gpus;
+            for g in 0..n_gpus {
+                handles.push(node.alloc_init(g, &bytes[g * shard..(g + 1) * shard]));
+            }
+        }
+        sharded.push(handles);
+    }
+
+    // --- Forward pass: gather each layer's weights (REAL bytes over the
+    // SDMA machinery), then execute the layer (REAL PJRT).
+    let x0 = rand_f32(&mut rng, B * H, 0.5);
+    let mut x = x0.clone();
+    let mut gather_model_time = 0.0;
+    let mut compute_wall = std::time::Duration::ZERO;
+    for (li, handles) in sharded.iter().enumerate() {
+        let mut gathered: Vec<Vec<f32>> = Vec::new();
+        for wslot in 0..2 {
+            let shards: Vec<_> = (0..n_gpus).map(|g| handles[wslot * n_gpus + g]).collect();
+            let shard_len = node.mems[0].len(shards[0]);
+            let outs: Vec<_> = (0..n_gpus).map(|g| node.alloc(g, n_gpus * shard_len)).collect();
+            let run = all_gather(&mut node, &shards, &outs, Backend::Dma);
+            gather_model_time += run.time;
+            // All GPUs must hold the identical full weight.
+            let w = node.mems[0].bytes(outs[0]).to_vec();
+            for g in 1..n_gpus {
+                assert_eq!(node.mems[g].bytes(outs[g]), &w[..], "layer {li} gpu {g}");
+            }
+            gathered.push(from_bytes(&w));
+        }
+        // Verify the gathered weights ARE the original weights.
+        assert_eq!(gathered[0], weights[li].0, "layer {li} w1 gather corrupt");
+        assert_eq!(gathered[1], weights[li].1, "layer {li} w2 gather corrupt");
+        let t0 = std::time::Instant::now();
+        x = rt.execute_f32("fsdp_layer", &[&x, &gathered[0], &gathered[1]])?;
+        compute_wall += t0.elapsed();
+    }
+
+    // --- Numeric verification vs the unsharded host reference.
+    let mut x_ref = x0;
+    for (w1, w2) in &weights {
+        x_ref = layer_ref(&x_ref, w1, w2);
+    }
+    let mut max_err = 0.0f32;
+    for (a, b) in x.iter().zip(&x_ref) {
+        max_err = max_err.max((a - b).abs() / b.abs().max(1.0));
+    }
+    assert!(max_err < 1e-4, "numerics diverged: {max_err}");
+    println!(
+        "e2e numerics: {} layers × (ConCCL gather + PJRT Pallas-GEMM layer) — \
+         max rel err {:.2e} vs host reference ✓",
+        LAYERS, max_err
+    );
+    println!(
+        "real PJRT compute wall-clock: {} | modelled gather time (8-GPU SDMA): {}",
+        fmt_seconds(compute_wall.as_secs_f64()),
+        fmt_seconds(gather_model_time)
+    );
+
+    // --- The same pipeline at LLaMA-70B scale on the MI300X timeline.
+    let trace = fsdp_forward_trace(&LlamaConfig::llama70b(), LAYERS);
+    let mut t = Table::new(vec!["strategy", "step time", "speedup", "%ideal"])
+        .title(format!(
+            "\nLLaMA-70B-scale FSDP forward ({} C3 stages) on simulated MI300X",
+            trace.stages.len()
+        ))
+        .left_cols(1);
+    let mut conccl_speedup = 0.0;
+    for strat in [
+        Strategy::Serial,
+        Strategy::C3Base,
+        Strategy::C3Sp,
+        Strategy::Conccl,
+        Strategy::ConcclRp { cus_removed: 8 },
+    ] {
+        let r = replay(&m, &trace, strat);
+        if matches!(strat, Strategy::ConcclRp { .. }) {
+            conccl_speedup = r.speedup();
+        }
+        t.row(vec![
+            strat.name().to_string(),
+            fmt_seconds(r.total),
+            speedup(r.speedup()),
+            f(r.pct_ideal(), 1),
+        ]);
+    }
+    t.print();
+    println!(
+        "end-to-end ConCCL_rp speedup over serialized FSDP: {} (paper's per-scenario max: 1.67x)",
+        speedup(conccl_speedup)
+    );
+    Ok(())
+}

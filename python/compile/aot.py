@@ -1,0 +1,95 @@
+"""AOT lowering: jax functions -> HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts are listed in ``artifacts/manifest.txt`` with one line per
+artifact::
+
+    <name> <file> <entry> <in0-shape,dtype>;<in1-shape,dtype>;...
+
+which the Rust runtime parses to know what to feed each executable.
+Run: ``python -m compile.aot --out ../artifacts`` (or ``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_spec(s: jax.ShapeDtypeStruct) -> str:
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{dims},{s.dtype}"
+
+
+# The artifact set. Small shapes: these execute for real on the CPU PJRT
+# client inside tests/examples; the simulator supplies MI300X timing for
+# the paper-scale shapes.
+def artifact_specs() -> list[tuple[str, object, list[jax.ShapeDtypeStruct]]]:
+    f32 = jnp.float32
+    return [
+        # Quickstart / runtime-smoke GEMM.
+        ("gemm_256", model.gemm, [model.spec((256, 256), f32), model.spec((256, 256), f32)]),
+        # A rectangular GEMM exercising non-square grids.
+        ("gemm_128x512x256", model.gemm,
+         [model.spec((128, 256), f32), model.spec((256, 512), f32)]),
+        # Scaled-down Table-I mb1 proportions (tokens x 2ffn x h) / 64.
+        ("gemm_mb1_micro", model.gemm,
+         [model.spec((128, 128), f32), model.spec((128, 896), f32)]),
+        # FSDP layer stage for the e2e driver: x[64,128], w1[128,256],
+        # w2[256,128].
+        ("fsdp_layer", model.layer_fwd_residual,
+         [model.spec((64, 128), f32), model.spec((128, 256), f32),
+          model.spec((256, 128), f32)]),
+        # MLP block without residual (ablations).
+        ("mlp_block", model.mlp_block,
+         [model.spec((64, 128), f32), model.spec((128, 256), f32),
+          model.spec((256, 128), f32)]),
+    ]
+
+
+def build(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, specs in artifact_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        ins = ";".join(_fmt_spec(s) for s in specs)
+        manifest_lines.append(f"{name} {fname} {fn.__name__} {ins}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} artifacts)")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Layer 1: the GEMM hot-spot as a tiled Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+computation kernels are rocBLAS GEMMs tiled for MI300X CUs (LDS shared
+memory + MFMA matrix cores). On TPU the same insight — keep operand
+panels resident close to the compute and accumulate over K — maps to:
+
+* ``BlockSpec`` blocks staged HBM->VMEM by the Pallas pipeline (VMEM is
+  the scratchpad analogue of LDS, ~16 MiB/core);
+* the MXU systolic array via ``jnp.dot(..,
+  preferred_element_type=f32)`` on bf16 blocks (the MFMA analogue);
+* a 3-D grid ``(M/bm, N/bn, K/bk)`` where the K axis revisits the same
+  output block, accumulating in f32 — the K-blocking that bounds the
+  streaming-traffic factor in the Rust GEMM model (`gemm_traffic_cap`).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact
+runs under the Rust runtime. Real-TPU performance is *estimated* from
+the VMEM footprint / MXU-alignment table in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: MXU-aligned (128 lanes) and VMEM-frugal — see
+# `vmem_footprint_bytes` below.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: accumulate ``x_block @ y_block`` into the output
+    block. Grid axis 2 is the K loop; the output block is revisited, so
+    initialize on the first K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _check_divisible(name: str, dim: int, block: int) -> None:
+    if dim % block != 0:
+        raise ValueError(
+            f"{name}={dim} not divisible by block {block}; "
+            "pad inputs or pick a compatible block shape"
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul: ``x [M,K] @ y [K,N] -> [M,N]`` in f32.
+
+    Inputs may be f32 or bf16; accumulation is always f32 (MXU
+    semantics). Block shapes must divide the problem shape.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    _check_divisible("M", m, bm)
+    _check_divisible("N", n, bn)
+    _check_divisible("K", k, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, in_dtype=jnp.bfloat16) -> int:
+    """Estimated VMEM bytes for one grid step: an x block, a y block and
+    the f32 output/accumulator block, double-buffered inputs (the Mosaic
+    pipeliner overlaps the next block's DMA with compute)."""
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    x_blk = bm * bk * in_bytes
+    y_blk = bk * bn * in_bytes
+    acc = bm * bn * 4
+    return 2 * (x_blk + y_blk) + acc
+
+
+def mxu_alignment(bm: int, bn: int, bk: int) -> bool:
+    """Are all block edges multiples of the 128-wide MXU tile?"""
+    return bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0

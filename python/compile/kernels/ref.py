@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness
+signal: every kernel must match its oracle under pytest + hypothesis
+before it is allowed into an artifact."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32-accumulating reference matmul."""
+    return jnp.dot(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+
+
+def mlp_ref(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    """Reference 2-layer MLP block: relu(x @ w1) @ w2 (f32)."""
+    h = jax.nn.relu(matmul_ref(x, w1))
+    return matmul_ref(h.astype(x.dtype), w2)

@@ -1,0 +1,43 @@
+"""Layer 2: the JAX compute graphs the coordinator executes via PJRT.
+
+The paper's computation payloads are GEMMs (Table I) and, in the
+end-to-end FSDP driver, a transformer-style MLP block whose weights are
+what the concurrent all-gather materializes. Each function here calls
+the Layer-1 Pallas kernel so the kernel lowers into the same HLO module;
+``aot.py`` lowers these once at build time — Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+
+def gemm(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """One Table-I-style GEMM via the Pallas kernel (1-tuple output —
+    the Rust side unwraps with ``to_tuple1``)."""
+    return (matmul(x, y),)
+
+
+def mlp_block(x: jax.Array, w1: jax.Array, w2: jax.Array) -> tuple[jax.Array]:
+    """The FSDP layer body: ``relu(x @ w1) @ w2``. Both matmuls are the
+    Pallas kernel; the paper's C3 overlap gathers the *next* layer's
+    ``w1``/``w2`` while this runs."""
+    h = jax.nn.relu(matmul(x, w1))
+    return (matmul(h.astype(x.dtype), w2),)
+
+
+def layer_fwd_residual(x: jax.Array, w1: jax.Array, w2: jax.Array) -> tuple[jax.Array]:
+    """MLP block with residual connection — one full FSDP pipeline stage
+    in the e2e driver (cast back to the activation dtype so stages
+    chain)."""
+    (y,) = mlp_block(x, w1, w2)
+    return (x + y.astype(x.dtype),)
+
+
+def spec(shape: tuple[int, ...], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    """Shorthand used by aot.py."""
+    return jax.ShapeDtypeStruct(shape, dtype)

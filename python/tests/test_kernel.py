@@ -1,0 +1,161 @@
+# pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness
+# signal. Hypothesis sweeps shapes, block shapes and dtypes.
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.matmul import (
+    matmul,
+    mxu_alignment,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_ref, mlp_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape, dtype=np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+def _check(x, y, rtol=2e-4, atol=2e-4, **blocks):
+    got = matmul(x, y, **blocks)
+    want = matmul_ref(x, y)
+    assert got.shape == want.shape
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=rtol, atol=atol
+    )
+
+
+def test_square_f32():
+    rng = np.random.default_rng(0)
+    _check(_rand(rng, (128, 128), jnp.float32), _rand(rng, (128, 128), jnp.float32))
+
+
+def test_rectangular_f32():
+    rng = np.random.default_rng(1)
+    _check(
+        _rand(rng, (64, 192), jnp.float32),
+        _rand(rng, (192, 256), jnp.float32),
+        bm=32,
+        bn=64,
+        bk=32,
+    )
+
+
+def test_bf16_inputs_f32_accumulate():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (128, 128), jnp.bfloat16)
+    y = _rand(rng, (128, 128), jnp.bfloat16)
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    # bf16 inputs: tolerance set by input precision, not accumulation.
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_block_bigger_than_problem_clamps():
+    rng = np.random.default_rng(3)
+    _check(
+        _rand(rng, (32, 32), jnp.float32),
+        _rand(rng, (32, 32), jnp.float32),
+        bm=128,
+        bn=128,
+        bk=128,
+    )
+
+
+def test_indivisible_shape_rejected():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (100, 128), jnp.float32)
+    y = _rand(rng, (128, 128), jnp.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        matmul(x, y, bm=64)
+
+
+def test_contraction_mismatch_rejected():
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError, match="contraction"):
+        matmul(
+            _rand(rng, (32, 64), jnp.float32), _rand(rng, (32, 32), jnp.float32)
+        )
+
+
+@hypothesis.given(
+    mi=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    ki=st.integers(1, 6),
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(mi, ni, ki, bm, bn, bk, seed):
+    """Kernel == oracle across random (shape, block) combinations."""
+    m, n, k = mi * bm, ni * bn, ki * bk
+    rng = np.random.default_rng(seed)
+    _check(
+        _rand(rng, (m, k), jnp.float32),
+        _rand(rng, (k, n), jnp.float32),
+        bm=bm,
+        bn=bn,
+        bk=bk,
+    )
+
+
+@hypothesis.given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_dtype_and_scale(dtype, scale, seed):
+    """Numerics hold across dtypes and magnitudes."""
+    rng = np.random.default_rng(seed)
+    x = (_rand(rng, (64, 64), dtype) * scale).astype(dtype)
+    y = _rand(rng, (64, 64), dtype)
+    got = np.asarray(matmul(x, y, bm=32, bn=32, bk=32))
+    want = np.asarray(matmul_ref(x, y))
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * scale)
+
+
+def test_mlp_block_matches_ref():
+    rng = np.random.default_rng(6)
+    from compile.model import mlp_block
+
+    x = _rand(rng, (64, 128), jnp.float32)
+    w1 = _rand(rng, (128, 256), jnp.float32)
+    w2 = _rand(rng, (256, 128), jnp.float32)
+    (got,) = mlp_block(x, w1, w2)
+    want = mlp_ref(x, w1, w2)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_vmem_footprint_under_budget():
+    """DESIGN.md §Perf: default blocks keep one grid step's working set
+    well inside a TPU core's ~16 MiB VMEM (3 operand blocks + accum,
+    double-buffered)."""
+    fp = vmem_footprint_bytes(128, 128, 128, jnp.bfloat16)
+    assert fp <= 4 * 1024 * 1024, f"footprint {fp} too large"
+    assert mxu_alignment(128, 128, 128)
+    assert not mxu_alignment(64, 128, 128)
+
+
+def test_kernel_is_jittable_and_stable():
+    """Two invocations produce bit-identical results (pure function)."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (64, 64), jnp.float32)
+    y = _rand(rng, (64, 64), jnp.float32)
+    a = np.asarray(matmul(x, y, bm=32, bn=32, bk=32))
+    b = np.asarray(matmul(x, y, bm=32, bn=32, bk=32))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,165 @@
+//! Command-line interface (hand-rolled — no `clap` offline).
+//!
+//! ```text
+//! conccl <subcommand> [--set machine.key=value ...] [options]
+//!   characterize   Tables I/II + Fig 5/6 (isolated-execution analysis)
+//!   run            one scenario under one strategy
+//!   sweep          c3_rp CU-reservation sweep for one scenario
+//!   report         full Table II suite -> Fig 7/8/10 + headline
+//!   conccl-bw      Fig 9: ConCCL vs RCCL isolated bandwidth sweep
+//!   heuristics     §V-C heuristic vs exhaustive sweep (30 scenarios)
+//!   e2e            FSDP trace replay (simulated MI300X timeline)
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::machine::MachineConfig;
+use crate::config::parse::Config;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    /// `--key value` / `--flag` options.
+    pub options: BTreeMap<String, String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--set machine.x=y` overrides.
+    pub sets: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv (excluding argv[0]).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        args.subcommand = it
+            .next()
+            .cloned()
+            .ok_or("missing subcommand (try `conccl help`)")?;
+        while let Some(a) = it.next() {
+            if a == "--set" {
+                let v = it.next().ok_or("--set needs key=value")?;
+                args.sets.push(v.clone());
+            } else if let Some(key) = a.strip_prefix("--") {
+                // Option with a value unless followed by another flag/end.
+                let takes_value = it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                let val = if takes_value {
+                    it.next().unwrap().clone()
+                } else {
+                    "true".to_string()
+                };
+                args.options.insert(key.to_string(), val);
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Option lookup with default.
+    pub fn opt(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Numeric option.
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Build the machine config with `--set` overrides applied.
+    pub fn machine(&self) -> Result<MachineConfig, String> {
+        let mut cfg = Config::default();
+        if let Some(path) = self.options.get("config") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("--config {path}: {e}"))?;
+            cfg = Config::parse(&text)?;
+        }
+        cfg.apply_overrides(&self.sets)?;
+        cfg.machine()
+    }
+}
+
+/// Help text.
+pub const HELP: &str = "\
+conccl — reproduction of 'Optimizing ML C3 with GPU DMA Engines'
+
+USAGE: conccl <subcommand> [options] [--set machine.key=value]...
+
+SUBCOMMANDS
+  characterize              Tables I/II, Fig 5a/5b/5c, Fig 6
+  run --scenario mb1_896M --collective all-gather --strategy conccl
+  sweep --scenario cb1_896M --collective all-to-all
+  report [--jitter 0.01]    full suite: Fig 7, Fig 8, Fig 10, headline
+  conccl-bw                 Fig 9 size sweep
+  heuristics                SP order + RP heuristic vs sweep (30 scen.)
+  e2e [--layers 4] [--model 70b|405b]   FSDP trace replay
+  help                      this text
+
+COMMON OPTIONS
+  --config <file>           TOML-lite machine config
+  --set machine.<k>=<v>     override one machine constant
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_positionals() {
+        let a = parse("run --scenario mb1_896M --strategy conccl extra");
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.opt("scenario", ""), "mb1_896M");
+        assert_eq!(a.opt("strategy", ""), "conccl");
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_sets_and_flags() {
+        let a = parse("report --verbose --set machine.compute_eff=0.5 --set machine.hbm_eff=0.9");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.sets.len(), 2);
+        let m = a.machine().unwrap();
+        assert_eq!(m.compute_eff, 0.5);
+        assert_eq!(m.hbm_eff, 0.9);
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn numeric_options() {
+        let a = parse("e2e --layers 7");
+        assert_eq!(a.opt_usize("layers", 4).unwrap(), 7);
+        assert_eq!(a.opt_usize("missing", 3).unwrap(), 3);
+        let bad = parse("e2e --layers seven");
+        assert!(bad.opt_usize("layers", 4).is_err());
+    }
+
+    #[test]
+    fn bad_override_surfaces_error() {
+        let a = parse("report --set machine.nonexistent=1");
+        assert!(a.machine().is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Command plans for ConCCL's direct-algorithm collectives (§VI-B).
+//!
+//! The paper's PoCs "break down the collective operation into a series
+//! of individual transfers … and schedule each such transfer on a
+//! specific available DMA engine". These builders emit exactly those
+//! per-GPU command-packet lists; `gpu::sdma::schedule` prices them and
+//! `node::Node::execute_dma` moves the bytes.
+//!
+//! Ordering matters for the launch-cost model: peer transfers are
+//! enqueued first (they ride the slow fabric links), the local shard
+//! copy last (it rides local HBM and is never the critical path).
+
+use crate::gpu::memory::BufferId;
+use crate::gpu::sdma::CommandPacket;
+
+/// Direct all-gather: every GPU pushes its shard to every peer's output
+/// buffer at the shard's slot, plus one local copy into its own output.
+pub fn allgather_plan(
+    n: usize,
+    shards: &[BufferId],
+    outs: &[BufferId],
+    shard_len: usize,
+) -> Vec<Vec<CommandPacket>> {
+    assert_eq!(shards.len(), n);
+    assert_eq!(outs.len(), n);
+    let mut per_gpu = vec![Vec::with_capacity(n); n];
+    for g in 0..n {
+        for d in (0..n).filter(|&d| d != g) {
+            per_gpu[g].push(CommandPacket {
+                src_gpu: g,
+                src: shards[g],
+                src_off: 0,
+                dst_gpu: d,
+                dst: outs[d],
+                dst_off: g * shard_len,
+                len: shard_len,
+            });
+        }
+        per_gpu[g].push(CommandPacket {
+            src_gpu: g,
+            src: shards[g],
+            src_off: 0,
+            dst_gpu: g,
+            dst: outs[g],
+            dst_off: g * shard_len,
+            len: shard_len,
+        });
+    }
+    per_gpu
+}
+
+/// Direct all-to-all: GPU `g`'s input chunk `d` lands in GPU `d`'s
+/// output at slot `g` (the "transpose of data buffers", §IV-C).
+pub fn alltoall_plan(
+    n: usize,
+    ins: &[BufferId],
+    outs: &[BufferId],
+    chunk_len: usize,
+) -> Vec<Vec<CommandPacket>> {
+    assert_eq!(ins.len(), n);
+    assert_eq!(outs.len(), n);
+    let mut per_gpu = vec![Vec::with_capacity(n); n];
+    for g in 0..n {
+        for d in (0..n).filter(|&d| d != g) {
+            per_gpu[g].push(CommandPacket {
+                src_gpu: g,
+                src: ins[g],
+                src_off: d * chunk_len,
+                dst_gpu: d,
+                dst: outs[d],
+                dst_off: g * chunk_len,
+                len: chunk_len,
+            });
+        }
+        per_gpu[g].push(CommandPacket {
+            src_gpu: g,
+            src: ins[g],
+            src_off: g * chunk_len,
+            dst_gpu: g,
+            dst: outs[g],
+            dst_off: g * chunk_len,
+            len: chunk_len,
+        });
+    }
+    per_gpu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize, base: u64) -> Vec<BufferId> {
+        (0..n as u64).map(|i| BufferId(base + i)).collect()
+    }
+
+    #[test]
+    fn allgather_plan_structure() {
+        let n = 8;
+        let plan = allgather_plan(n, &ids(n, 0), &ids(n, 100), 64);
+        assert_eq!(plan.len(), n);
+        for (g, cmds) in plan.iter().enumerate() {
+            assert_eq!(cmds.len(), n, "gpu {g}: 7 peers + 1 local");
+            // Local copy is last.
+            let local = cmds.last().unwrap();
+            assert_eq!(local.src_gpu, g);
+            assert_eq!(local.dst_gpu, g);
+            // Every destination slot is g's shard slot.
+            for c in cmds {
+                assert_eq!(c.dst_off, g * 64);
+                assert_eq!(c.src_off, 0);
+                assert_eq!(c.len, 64);
+            }
+            // All 8 destinations covered exactly once.
+            let mut dsts: Vec<usize> = cmds.iter().map(|c| c.dst_gpu).collect();
+            dsts.sort_unstable();
+            assert_eq!(dsts, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn alltoall_plan_is_transpose() {
+        let n = 4;
+        let chunk = 32;
+        let plan = alltoall_plan(n, &ids(n, 0), &ids(n, 100), chunk);
+        for (g, cmds) in plan.iter().enumerate() {
+            assert_eq!(cmds.len(), n);
+            for c in cmds {
+                // Chunk d of src g lands at slot g of dst d.
+                assert_eq!(c.src_off, c.dst_gpu * chunk);
+                assert_eq!(c.dst_off, g * chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn plans_cover_all_ordered_pairs_once() {
+        let n = 8;
+        for plan in [
+            allgather_plan(n, &ids(n, 0), &ids(n, 100), 8),
+            alltoall_plan(n, &ids(n, 0), &ids(n, 100), 8),
+        ] {
+            let mut pairs = std::collections::BTreeSet::new();
+            for cmds in &plan {
+                for c in cmds {
+                    assert!(pairs.insert((c.src_gpu, c.dst_gpu)), "dup pair");
+                }
+            }
+            assert_eq!(pairs.len(), n * n);
+        }
+    }
+}

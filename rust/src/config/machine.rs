@@ -1,0 +1,387 @@
+//! Machine description: an MI300X-like GPU node (§II-A of the paper).
+//!
+//! Every model constant the simulator uses lives here, with a note on
+//! where it comes from: either a published MI300X datum (cited) or a
+//! calibration constant fit against a specific paper figure. Calibrated
+//! constants reproduce the *shape* of the paper's curves — orderings,
+//! crossovers, approximate factors — not the authors' absolute numbers
+//! (our substrate is a simulator, not their testbed).
+
+/// Full description of one GPU node (default: 8× MI300X Infinity
+/// Platform, fully connected).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// Human-readable name, e.g. `"mi300x-8"`.
+    pub name: String,
+
+    // ---- Topology (paper §II-A) ----
+    /// GPUs per node (8 for the MI300X Infinity Platform).
+    pub num_gpus: usize,
+    /// Accelerator complex dies per GPU (8 XCDs).
+    pub xcds: usize,
+    /// Active compute units per XCD (38 → 304 total).
+    pub cus_per_xcd: usize,
+
+    // ---- Compute ----
+    /// Peak bf16 matrix throughput, FLOP/s. MI300X: ~1307.4 TFLOP/s
+    /// (CDNA3 whitepaper).
+    pub peak_flops_bf16: f64,
+    /// Achievable fraction of peak for large rocBLAS GEMMs (~0.75;
+    /// consistent with the MI300X performance validation guide).
+    pub compute_eff: f64,
+
+    // ---- Memory subsystem ----
+    /// Peak HBM bandwidth, B/s. MI300X: 5.3 TB/s.
+    pub hbm_bw: f64,
+    /// Achievable fraction of peak HBM bandwidth (~0.85, STREAM-like).
+    pub hbm_eff: f64,
+    /// Bandwidth a single CU can draw from HBM, B/s. Calibrated so that
+    /// ~240 CUs saturate achievable HBM bandwidth (Fig 5a: memory-bound
+    /// GEMMs stay flat when losing up to ~64 CUs).
+    pub per_cu_hbm_bw: f64,
+    /// AMD Infinity Cache (memory-side LLC) capacity, bytes (256 MiB).
+    pub llc_capacity: f64,
+    /// Infinity Cache peak bandwidth, B/s (~17 TB/s, CDNA3 whitepaper).
+    pub llc_bw: f64,
+    /// Per-XCD L2 capacity, bytes (4 MiB).
+    pub l2_per_xcd: f64,
+
+    // ---- Interconnect (paper §II-A) ----
+    /// SDMA copy engines per GPU (14 on MI300X).
+    pub sdma_engines: usize,
+    /// Infinity Fabric peer links per GPU (7, fully connected).
+    pub link_count: usize,
+    /// Uni-directional bandwidth per link, B/s (64 GB/s).
+    pub link_bw: f64,
+    /// Achievable fraction of link peak for CU-driven (RCCL-like)
+    /// collectives (~0.85).
+    pub link_eff: f64,
+    /// Achievable fraction of link peak for SDMA transfers. Set equal to
+    /// `link_eff` so ConCCL is at-par with RCCL when bandwidth-bound
+    /// (paper Fig 9, ≥128 MiB region).
+    pub link_eff_dma: f64,
+
+    // ---- Launch / orchestration latencies ----
+    /// GPU kernel launch latency, s (HIP stream dispatch, ~5 µs).
+    pub kernel_launch_s: f64,
+    /// Launch + protocol-setup latency of a CU-based (RCCL-like)
+    /// collective kernel, s (~15 µs: kernel launch, channel setup,
+    /// intra-kernel sync). Sets the latency-bound regime of Fig 9.
+    pub coll_launch_s: f64,
+    /// CPU-side cost to enqueue ONE SDMA command packet, s (Fig 3 step 1;
+    /// calibrated against Fig 9's ≤4× ConCCL penalty below 32 MiB).
+    pub dma_enqueue_s: f64,
+    /// Engine fetch+decode latency per command, s (Fig 3 steps 2–3).
+    pub dma_fetch_s: f64,
+    /// CPU-side completion-synchronization cost per collective, s.
+    pub dma_sync_s: f64,
+
+    // ---- GEMM kernel model (calibrated: Table I classes, Fig 5a, Fig 6) ----
+    /// Macro-tile edge (rocBLAS-like 128×128 workgroup tiles).
+    pub gemm_tile: usize,
+    /// Coefficient of the LLC-streaming traffic factor:
+    /// `factor = clamp(1, coeff * (ws/llc)^exp, cap)`. Fit so Table I's
+    /// cb/mb classification is reproduced from shapes alone and Fig 6's
+    /// "mb dwarfs everything" utilization gap appears.
+    pub gemm_traffic_coeff: f64,
+    /// Exponent of the traffic factor (see `gemm_traffic_coeff`).
+    pub gemm_traffic_exp: f64,
+    /// Upper bound on the traffic factor (K-blocking bounds streaming).
+    pub gemm_traffic_cap: f64,
+    /// Strength of the "fewer concurrent threads → better cache
+    /// behaviour" effect (paper footnote 3): traffic is damped by
+    /// `(1-damp) + damp·cu/304`. Fit to the small circled mb speedup in
+    /// Fig 5a.
+    pub gemm_cache_damp: f64,
+
+    // ---- Collective kernel model (Fig 5b/c, Fig 6, Fig 9) ----
+    /// CUs an all-gather kernel needs for full bandwidth (32, Fig 5b).
+    pub ag_cu_need: u32,
+    /// CUs an all-to-all kernel needs for full bandwidth (64, Fig 5c).
+    pub a2a_cu_need: u32,
+    /// CUs an all-reduce kernel needs (like AG; §VII-A2 discussion).
+    pub ar_cu_need: u32,
+    /// HBM traffic factor of all-to-all relative to its payload: A2A
+    /// reads and writes distinct buffers both ways plus staging; AG
+    /// writes the gathered buffer once (≈1×). Together with
+    /// `a2a_link_derate`, fit to Fig 6's "AG ~14% lower bandwidth than
+    /// A2A" note.
+    pub a2a_hbm_factor: f64,
+    /// HBM traffic factor of all-gather relative to its payload.
+    pub ag_hbm_factor: f64,
+    /// Fabric efficiency derate for all-to-all relative to all-gather
+    /// (the all-pairs pattern self-interferes on the fabric; A2A kernels
+    /// also stage through intermediate buffers).
+    pub a2a_link_derate: f64,
+
+    // ---- Concurrency interference (calibrated: Fig 8, Fig 10) ----
+    /// Fractional bandwidth loss a CU-based all-gather suffers while a
+    /// GEMM is co-resident even with enough CUs (LLC/HBM/queueing
+    /// interference beyond explicit bandwidth sharing).
+    pub comm_co_penalty_ag: f64,
+    /// Same for all-to-all (higher: more traffic, more staging).
+    pub comm_co_penalty_a2a: f64,
+    /// Fractional compute-rate loss a GEMM suffers from a co-resident
+    /// CU-based all-gather polluting L1/L2 (eliminated under ConCCL —
+    /// DMA engines sit behind L2, §VI-A).
+    pub gemm_l2_pollution_ag: f64,
+    /// Same for a co-resident all-to-all.
+    pub gemm_l2_pollution_a2a: f64,
+    /// Strength of memory-subsystem interference beyond explicit
+    /// bandwidth accounting (LLC port / HBM row-buffer contention): a
+    /// co-running kernel's rate is shaved by
+    /// `min(cap, coeff · other's-bandwidth-share)`. This is §VII-A1's
+    /// residual — it applies to ConCCL too ("contention for HBM
+    /// bandwidth remains") and is what keeps ConCCL at ~66-72% of ideal
+    /// rather than ~100%. Fit jointly to Fig 8 / Fig 10 averages.
+    pub mem_interference_coeff: f64,
+    /// Upper bound of the memory-interference rate penalty.
+    pub mem_interference_cap: f64,
+    /// CUs that "leak" to a later-launched kernel while an earlier
+    /// saturating kernel is resident (c3_base starvation model: the CP
+    /// backfills mostly from the first queue; one XCD's worth spills).
+    pub base_leak_cus: u32,
+    /// Fraction of the first kernel's lifetime before the second
+    /// stream's kernel gets dispatched at all under c3_base (FIFO
+    /// dispatch backlog; fit to Fig 8's c3_base ≈ 21%-of-ideal).
+    pub base_dispatch_backlog: f64,
+
+    // ---- Partitioning / heuristics ----
+    /// Minimum CU-reservation granularity (8: one XCD partition step,
+    /// Fig 5 caption).
+    pub min_cu_granularity: u32,
+    /// Efficiency the RP heuristic's roofline model assumes (70%, §V-C).
+    pub roofline_eff: f64,
+}
+
+impl MachineConfig {
+    /// The default machine: one 8× MI300X Infinity Platform node.
+    pub fn mi300x() -> Self {
+        MachineConfig {
+            name: "mi300x-8".to_string(),
+            num_gpus: 8,
+            xcds: 8,
+            cus_per_xcd: 38,
+            peak_flops_bf16: 1307.4e12,
+            compute_eff: 0.75,
+            hbm_bw: 5.3e12,
+            hbm_eff: 0.85,
+            per_cu_hbm_bw: 25e9,
+            llc_capacity: 256.0 * 1024.0 * 1024.0,
+            llc_bw: 17.0e12,
+            l2_per_xcd: 4.0 * 1024.0 * 1024.0,
+            sdma_engines: 14,
+            link_count: 7,
+            link_bw: 64e9,
+            link_eff: 0.85,
+            link_eff_dma: 0.85,
+            kernel_launch_s: 5e-6,
+            coll_launch_s: 15e-6,
+            dma_enqueue_s: 6e-6,
+            dma_fetch_s: 4e-6,
+            dma_sync_s: 8e-6,
+            gemm_tile: 128,
+            gemm_traffic_coeff: 9.0,
+            gemm_traffic_exp: 2.2,
+            gemm_traffic_cap: 70.0,
+            gemm_cache_damp: 0.15,
+            ag_cu_need: 32,
+            a2a_cu_need: 64,
+            ar_cu_need: 32,
+            a2a_hbm_factor: 1.3,
+            ag_hbm_factor: 1.0,
+            a2a_link_derate: 0.89,
+            comm_co_penalty_ag: 0.20,
+            comm_co_penalty_a2a: 0.30,
+            gemm_l2_pollution_ag: 0.05,
+            gemm_l2_pollution_a2a: 0.08,
+            mem_interference_coeff: 0.7,
+            mem_interference_cap: 0.35,
+            base_leak_cus: 24,
+            base_dispatch_backlog: 0.45,
+            min_cu_granularity: 8,
+            roofline_eff: 0.7,
+        }
+    }
+
+    /// Total compute units on one GPU (304 on MI300X).
+    pub fn cus_total(&self) -> u32 {
+        (self.xcds * self.cus_per_xcd) as u32
+    }
+
+    /// Achievable GEMM FLOP rate with `cu` compute units, FLOP/s.
+    pub fn flops_with_cus(&self, cu: u32) -> f64 {
+        self.peak_flops_bf16 * self.compute_eff * cu as f64 / self.cus_total() as f64
+    }
+
+    /// Achievable HBM bandwidth for a kernel running on `cu` CUs, B/s
+    /// (per-CU issue limit below the machine-wide achievable peak).
+    pub fn hbm_bw_with_cus(&self, cu: u32) -> f64 {
+        (self.per_cu_hbm_bw * cu as f64).min(self.hbm_bw * self.hbm_eff)
+    }
+
+    /// Machine-wide achievable HBM bandwidth, B/s.
+    pub fn hbm_bw_achievable(&self) -> f64 {
+        self.hbm_bw * self.hbm_eff
+    }
+
+    /// Machine op:byte balance point (FLOP per HBM byte). Kernels whose
+    /// measured intensity exceeds this are compute-bound (paper §III).
+    pub fn machine_intensity(&self) -> f64 {
+        self.peak_flops_bf16 / self.hbm_bw
+    }
+
+    /// Achievable uni-directional bandwidth of one fabric link for
+    /// CU-driven collectives, B/s.
+    pub fn link_bw_achievable(&self) -> f64 {
+        self.link_bw * self.link_eff
+    }
+
+    /// Achievable uni-directional bandwidth of one fabric link for SDMA
+    /// transfers, B/s.
+    pub fn link_bw_dma(&self) -> f64 {
+        self.link_bw * self.link_eff_dma
+    }
+
+    /// All legal CU reservations for resource partitioning: powers of two
+    /// from the minimum granularity up to half the machine (§V-B sweeps
+    /// "all possible powers-of-two CU allocations").
+    pub fn rp_candidates(&self) -> Vec<u32> {
+        let mut v = Vec::new();
+        let mut k = self.min_cu_granularity.max(1);
+        while k <= self.cus_total() / 2 {
+            v.push(k);
+            k *= 2;
+        }
+        v
+    }
+
+    /// Validate internal consistency; returns a list of problems.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.num_gpus < 2 {
+            errs.push("num_gpus must be >= 2 for collectives".into());
+        }
+        if self.link_count + 1 != self.num_gpus {
+            errs.push(format!(
+                "fully-connected topology needs link_count == num_gpus-1 \
+                 (got {} links for {} GPUs)",
+                self.link_count, self.num_gpus
+            ));
+        }
+        if self.xcds * self.cus_per_xcd == 0 {
+            errs.push("zero compute units".into());
+        }
+        for (name, v) in [
+            ("compute_eff", self.compute_eff),
+            ("hbm_eff", self.hbm_eff),
+            ("link_eff", self.link_eff),
+            ("link_eff_dma", self.link_eff_dma),
+            ("roofline_eff", self.roofline_eff),
+        ] {
+            if !(0.0 < v && v <= 1.0) {
+                errs.push(format!("{name} must be in (0,1], got {v}"));
+            }
+        }
+        for (name, v) in [
+            ("comm_co_penalty_ag", self.comm_co_penalty_ag),
+            ("comm_co_penalty_a2a", self.comm_co_penalty_a2a),
+            ("gemm_l2_pollution_ag", self.gemm_l2_pollution_ag),
+            ("gemm_l2_pollution_a2a", self.gemm_l2_pollution_a2a),
+            ("base_dispatch_backlog", self.base_dispatch_backlog),
+            ("gemm_cache_damp", self.gemm_cache_damp),
+        ] {
+            if !(0.0..1.0).contains(&v) {
+                errs.push(format!("{name} must be in [0,1), got {v}"));
+            }
+        }
+        if self.min_cu_granularity == 0 || self.min_cu_granularity > self.cus_total() {
+            errs.push("bad min_cu_granularity".into());
+        }
+        errs
+    }
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        Self::mi300x()
+    }
+}
+
+/// Smooth maximum with exponent 4 — used where the roofline transition
+/// between compute- and memory-bound should be gradual rather than a hard
+/// kink (matches measured GEMM behaviour near the balance point).
+pub fn smoothmax(a: f64, b: f64) -> f64 {
+    let m = a.max(b);
+    if m <= 0.0 {
+        return m;
+    }
+    let (x, y) = (a / m, b / m);
+    m * (x.powi(4) + y.powi(4)).powf(0.25)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mi300x_headline_numbers() {
+        let m = MachineConfig::mi300x();
+        assert_eq!(m.cus_total(), 304);
+        assert_eq!(m.num_gpus, 8);
+        assert_eq!(m.sdma_engines, 14);
+        assert_eq!(m.link_count, 7);
+        assert!((m.hbm_bw - 5.3e12).abs() < 1.0);
+        assert!((m.llc_capacity - 268435456.0).abs() < 1.0);
+        assert!(m.validate().is_empty(), "{:?}", m.validate());
+    }
+
+    #[test]
+    fn machine_intensity_near_247() {
+        let m = MachineConfig::mi300x();
+        let i = m.machine_intensity();
+        assert!((i - 246.7).abs() < 1.0, "intensity {i}");
+    }
+
+    #[test]
+    fn cu_scaled_rates_monotone() {
+        let m = MachineConfig::mi300x();
+        assert!(m.flops_with_cus(304) > m.flops_with_cus(240));
+        assert!(m.flops_with_cus(240) > m.flops_with_cus(8));
+        // HBM saturates before full CU count.
+        assert_eq!(m.hbm_bw_with_cus(304), m.hbm_bw_achievable());
+        assert!(m.hbm_bw_with_cus(100) < m.hbm_bw_achievable());
+    }
+
+    #[test]
+    fn hbm_saturation_point_calibration() {
+        // Fig 5a calibration: losing 64 CUs must NOT drop a memory-bound
+        // kernel below achievable HBM bandwidth.
+        let m = MachineConfig::mi300x();
+        assert_eq!(m.hbm_bw_with_cus(304 - 64), m.hbm_bw_achievable());
+    }
+
+    #[test]
+    fn rp_candidates_are_powers_of_two() {
+        let m = MachineConfig::mi300x();
+        let c = m.rp_candidates();
+        assert_eq!(c, vec![8, 16, 32, 64, 128]);
+    }
+
+    #[test]
+    fn validate_catches_bad_topology() {
+        let mut m = MachineConfig::mi300x();
+        m.link_count = 3;
+        assert!(!m.validate().is_empty());
+    }
+
+    #[test]
+    fn smoothmax_behaves() {
+        assert!((smoothmax(1.0, 0.0) - 1.0).abs() < 1e-12);
+        assert!(smoothmax(1.0, 1.0) > 1.0); // inflated near the kink
+        assert!(smoothmax(1.0, 1.0) < 1.2);
+        assert!(smoothmax(10.0, 1.0) < 10.01); // far from kink ≈ max
+        // Symmetry.
+        assert_eq!(smoothmax(2.0, 3.0), smoothmax(3.0, 2.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Configuration system: the machine model (MI300X node description +
+//! calibrated model constants), workload types (GEMMs, collectives, C3
+//! scenarios), and a TOML-lite parser for files and CLI overrides.
+
+pub mod machine;
+pub mod parse;
+pub mod workload;
+
+pub use machine::MachineConfig;
+pub use parse::{Config, Value};
+pub use workload::{C3Scenario, CollectiveKind, CollectiveSpec, DType, GemmShape, Source};

@@ -1,0 +1,339 @@
+//! Config-file and override parsing (TOML-lite; no `serde` offline).
+//!
+//! Grammar:
+//! ```text
+//! # comment
+//! [machine]
+//! compute_eff = 0.75
+//! llc_capacity = 256M          # byte suffixes allowed
+//! name = "mi300x-8"
+//! ```
+//! plus CLI-style dotted overrides: `machine.compute_eff=0.8`.
+//! Unknown keys are hard errors — silent typos in calibration constants
+//! would corrupt experiments.
+
+use std::collections::BTreeMap;
+
+use crate::config::machine::MachineConfig;
+use crate::util::units::parse_bytes;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    /// Parse a raw token: quoted string, bool, number, or byte-suffixed
+    /// number (`256M`).
+    pub fn parse(raw: &str) -> Result<Value, String> {
+        let t = raw.trim();
+        if t.is_empty() {
+            return Err("empty value".into());
+        }
+        if let Some(inner) = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+        {
+            return Ok(Value::Str(inner.to_string()));
+        }
+        match t {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(n) = t.parse::<f64>() {
+            return Ok(Value::Num(n));
+        }
+        // Scientific shorthand like 5.3e12 parses above; try byte suffix.
+        if let Ok(b) = parse_bytes(t) {
+            return Ok(Value::Num(b as f64));
+        }
+        Err(format!("cannot parse value '{raw}'"))
+    }
+
+    /// Numeric view.
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+
+    /// Positive-integer view.
+    pub fn as_usize(&self) -> Result<usize, String> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(format!("expected non-negative integer, got {n}"));
+        }
+        Ok(n as usize)
+    }
+}
+
+/// Parsed config: `section.key -> value`. Keys outside a section land in
+/// the `""` section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // Don't strip '#' inside quotes — keep it simple: only
+                // strip when no quote precedes it.
+                Some(i) if !raw[..i].contains('"') => &raw[..i],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = inner.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = Value::parse(v)
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            if values.insert(key.clone(), val).is_some() {
+                return Err(format!("line {}: duplicate key '{key}'", lineno + 1));
+            }
+        }
+        Ok(Config { values })
+    }
+
+    /// Merge dotted `key=value` override strings (CLI `--set`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<(), String> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| format!("override '{o}': expected key=value"))?;
+            self.values
+                .insert(k.trim().to_string(), Value::parse(v)?);
+        }
+        Ok(())
+    }
+
+    /// Look up a key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// Build a [`MachineConfig`] starting from the MI300X default and
+    /// applying every `machine.*` key. Unknown keys error.
+    pub fn machine(&self) -> Result<MachineConfig, String> {
+        let mut m = MachineConfig::mi300x();
+        for (key, val) in &self.values {
+            let Some(field) = key.strip_prefix("machine.") else {
+                continue;
+            };
+            apply_machine_field(&mut m, field, val)?;
+        }
+        let errs = m.validate();
+        if !errs.is_empty() {
+            return Err(format!("invalid machine config: {}", errs.join("; ")));
+        }
+        Ok(m)
+    }
+}
+
+/// Apply one `machine.<field>` override. Exhaustive by hand (no serde);
+/// the test below cross-checks against the struct so new fields cannot be
+/// silently forgotten.
+fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<(), String> {
+    macro_rules! f64_field {
+        ($f:ident) => {{
+            m.$f = v.as_f64()?;
+            return Ok(());
+        }};
+    }
+    macro_rules! usize_field {
+        ($f:ident) => {{
+            m.$f = v.as_usize()?;
+            return Ok(());
+        }};
+    }
+    macro_rules! u32_field {
+        ($f:ident) => {{
+            m.$f = v.as_usize()? as u32;
+            return Ok(());
+        }};
+    }
+    match field {
+        "name" => {
+            if let Value::Str(s) = v {
+                m.name = s.clone();
+                Ok(())
+            } else {
+                Err("machine.name must be a string".into())
+            }
+        }
+        "num_gpus" => usize_field!(num_gpus),
+        "xcds" => usize_field!(xcds),
+        "cus_per_xcd" => usize_field!(cus_per_xcd),
+        "peak_flops_bf16" => f64_field!(peak_flops_bf16),
+        "compute_eff" => f64_field!(compute_eff),
+        "hbm_bw" => f64_field!(hbm_bw),
+        "hbm_eff" => f64_field!(hbm_eff),
+        "per_cu_hbm_bw" => f64_field!(per_cu_hbm_bw),
+        "llc_capacity" => f64_field!(llc_capacity),
+        "llc_bw" => f64_field!(llc_bw),
+        "l2_per_xcd" => f64_field!(l2_per_xcd),
+        "sdma_engines" => usize_field!(sdma_engines),
+        "link_count" => usize_field!(link_count),
+        "link_bw" => f64_field!(link_bw),
+        "link_eff" => f64_field!(link_eff),
+        "link_eff_dma" => f64_field!(link_eff_dma),
+        "kernel_launch_s" => f64_field!(kernel_launch_s),
+        "coll_launch_s" => f64_field!(coll_launch_s),
+        "dma_enqueue_s" => f64_field!(dma_enqueue_s),
+        "dma_fetch_s" => f64_field!(dma_fetch_s),
+        "dma_sync_s" => f64_field!(dma_sync_s),
+        "gemm_tile" => usize_field!(gemm_tile),
+        "gemm_traffic_coeff" => f64_field!(gemm_traffic_coeff),
+        "gemm_traffic_exp" => f64_field!(gemm_traffic_exp),
+        "gemm_traffic_cap" => f64_field!(gemm_traffic_cap),
+        "gemm_cache_damp" => f64_field!(gemm_cache_damp),
+        "ag_cu_need" => u32_field!(ag_cu_need),
+        "a2a_cu_need" => u32_field!(a2a_cu_need),
+        "ar_cu_need" => u32_field!(ar_cu_need),
+        "a2a_hbm_factor" => f64_field!(a2a_hbm_factor),
+        "ag_hbm_factor" => f64_field!(ag_hbm_factor),
+        "a2a_link_derate" => f64_field!(a2a_link_derate),
+        "comm_co_penalty_ag" => f64_field!(comm_co_penalty_ag),
+        "comm_co_penalty_a2a" => f64_field!(comm_co_penalty_a2a),
+        "gemm_l2_pollution_ag" => f64_field!(gemm_l2_pollution_ag),
+        "gemm_l2_pollution_a2a" => f64_field!(gemm_l2_pollution_a2a),
+        "mem_interference_coeff" => f64_field!(mem_interference_coeff),
+        "mem_interference_cap" => f64_field!(mem_interference_cap),
+        "base_leak_cus" => u32_field!(base_leak_cus),
+        "base_dispatch_backlog" => f64_field!(base_dispatch_backlog),
+        "min_cu_granularity" => u32_field!(min_cu_granularity),
+        "roofline_eff" => f64_field!(roofline_eff),
+        other => Err(format!("unknown machine config field '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # a comment
+            top = 1
+            [machine]
+            compute_eff = 0.8        # inline comment
+            name = "test-box"
+            llc_capacity = 128M
+            [other]
+            flag = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get("top"), Some(&Value::Num(1.0)));
+        assert_eq!(cfg.get("machine.compute_eff"), Some(&Value::Num(0.8)));
+        assert_eq!(
+            cfg.get("machine.name"),
+            Some(&Value::Str("test-box".into()))
+        );
+        assert_eq!(
+            cfg.get("machine.llc_capacity"),
+            Some(&Value::Num((128u64 * 1024 * 1024) as f64))
+        );
+        assert_eq!(cfg.get("other.flag"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn missing_equals_rejected() {
+        let e = Config::parse("justakey").unwrap_err();
+        assert!(e.contains("line 1"));
+    }
+
+    #[test]
+    fn machine_built_with_overrides() {
+        let mut cfg = Config::parse("[machine]\ncompute_eff = 0.5").unwrap();
+        cfg.apply_overrides(&["machine.hbm_eff=0.9".to_string()])
+            .unwrap();
+        let m = cfg.machine().unwrap();
+        assert_eq!(m.compute_eff, 0.5);
+        assert_eq!(m.hbm_eff, 0.9);
+        // Untouched fields keep MI300X defaults.
+        assert_eq!(m.cus_total(), 304);
+    }
+
+    #[test]
+    fn unknown_machine_field_is_error() {
+        let cfg = Config::parse("[machine]\nbogus_knob = 3").unwrap();
+        let err = cfg.machine().unwrap_err();
+        assert!(err.contains("bogus_knob"), "{err}");
+    }
+
+    #[test]
+    fn invalid_machine_rejected() {
+        let cfg = Config::parse("[machine]\ncompute_eff = 1.5").unwrap();
+        assert!(cfg.machine().is_err());
+    }
+
+    #[test]
+    fn every_machine_field_is_settable() {
+        // Guard against forgetting to wire a new field: set each numeric
+        // field via override and confirm the struct changed or errored.
+        let fields = [
+            "num_gpus", "xcds", "cus_per_xcd", "peak_flops_bf16", "compute_eff",
+            "hbm_bw", "hbm_eff", "per_cu_hbm_bw", "llc_capacity", "llc_bw",
+            "l2_per_xcd", "sdma_engines", "link_count", "link_bw", "link_eff",
+            "link_eff_dma", "kernel_launch_s", "coll_launch_s", "dma_enqueue_s", "dma_fetch_s",
+            "dma_sync_s", "gemm_tile", "gemm_traffic_coeff", "gemm_traffic_exp",
+            "gemm_traffic_cap", "gemm_cache_damp", "ag_cu_need", "a2a_cu_need",
+            "ar_cu_need", "a2a_hbm_factor", "ag_hbm_factor", "a2a_link_derate",
+            "comm_co_penalty_ag",
+            "comm_co_penalty_a2a", "gemm_l2_pollution_ag", "gemm_l2_pollution_a2a",
+            "mem_interference_coeff", "mem_interference_cap",
+            "base_leak_cus", "base_dispatch_backlog", "min_cu_granularity",
+            "roofline_eff",
+        ];
+        let mut m = MachineConfig::mi300x();
+        for f in fields {
+            // 0.5 is a valid value for f64 fractions; integers will error
+            // on fraction — both outcomes prove the field is known.
+            let r = apply_machine_field(&mut m, f, &Value::Num(0.5));
+            if let Err(e) = r {
+                assert!(
+                    e.contains("integer"),
+                    "field {f} should be known, got: {e}"
+                );
+            }
+        }
+        assert!(apply_machine_field(&mut m, "nope", &Value::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn value_parsing_edge_cases() {
+        assert_eq!(Value::parse("5.3e12").unwrap(), Value::Num(5.3e12));
+        assert_eq!(Value::parse("\"x y\"").unwrap(), Value::Str("x y".into()));
+        assert!(Value::parse("").is_err());
+        assert!(Value::parse("12garbage34").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Workload descriptions: GEMM shapes, collective operations and the C3
+//! scenarios pairing them (paper Tables I and II).
+
+use crate::util::units::{fmt_bytes, parse_bytes};
+
+/// Element type of a GEMM (the paper's kernels are bf16 with f32
+/// accumulation; collectives move bf16 payloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Bf16,
+    F32,
+}
+
+impl DType {
+    /// Size in bytes of one element.
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::Bf16 => 2,
+            DType::F32 => 4,
+        }
+    }
+
+    /// Lowercase name (matches the python artifact manifest).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// A GEMM `C[M,N] += A[M,K] · B[K,N]` (paper writes shapes `MxNxK`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: DType,
+}
+
+impl GemmShape {
+    /// bf16 GEMM shape (the paper's default).
+    pub fn bf16(m: usize, n: usize, k: usize) -> Self {
+        GemmShape {
+            m,
+            n,
+            k,
+            dtype: DType::Bf16,
+        }
+    }
+
+    /// Total FLOPs (multiply-accumulate counted as 2).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Minimum memory traffic: read A and B once, write C once (bytes).
+    pub fn min_bytes(&self) -> f64 {
+        let e = self.dtype.bytes() as f64;
+        (self.m * self.k + self.k * self.n + self.m * self.n) as f64 * e
+    }
+
+    /// Paper-style tag, e.g. `8192x8192x8192`.
+    pub fn tag(&self) -> String {
+        format!("{}x{}x{}", self.m, self.n, self.k)
+    }
+}
+
+/// Collective kinds studied in the paper. All-reduce is included for the
+/// §VII-A2 hybrid discussion but is not DMA-offloadable (DMA engines have
+/// no arithmetic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllGather,
+    AllToAll,
+    AllReduce,
+}
+
+impl CollectiveKind {
+    /// Short name used in tags and tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveKind::AllGather => "all-gather",
+            CollectiveKind::AllToAll => "all-to-all",
+            CollectiveKind::AllReduce => "all-reduce",
+        }
+    }
+
+    /// Can this collective be offloaded to DMA engines? (§VI-B: engines
+    /// expose no arithmetic, so all-reduce cannot.)
+    pub fn dma_offloadable(self) -> bool {
+        !matches!(self, CollectiveKind::AllReduce)
+    }
+
+    /// The two kinds the paper's evaluation sweeps.
+    pub fn studied() -> [CollectiveKind; 2] {
+        [CollectiveKind::AllGather, CollectiveKind::AllToAll]
+    }
+}
+
+/// One collective operation: kind + data size. `size_bytes` is the
+/// paper's scenario tag size — the full payload materialized per GPU
+/// (the gathered buffer for all-gather, the exchanged buffer for
+/// all-to-all).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveSpec {
+    pub kind: CollectiveKind,
+    pub size_bytes: u64,
+}
+
+impl CollectiveSpec {
+    pub fn new(kind: CollectiveKind, size_bytes: u64) -> Self {
+        CollectiveSpec { kind, size_bytes }
+    }
+
+    /// Parse a size tag like `"896M"` into a spec.
+    pub fn parse(kind: CollectiveKind, size: &str) -> Result<Self, String> {
+        Ok(CollectiveSpec {
+            kind,
+            size_bytes: parse_bytes(size)?,
+        })
+    }
+
+    /// Paper-style size tag (`896M`, `3.25G`).
+    pub fn size_tag(&self) -> String {
+        fmt_bytes(self.size_bytes)
+    }
+}
+
+/// Where a scenario comes from (paper Table II `source` column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    Llama70B,
+    Llama405B,
+    Synthetic,
+}
+
+impl Source {
+    pub fn name(self) -> &'static str {
+        match self {
+            Source::Llama70B => "LLaMA-70B",
+            Source::Llama405B => "LLaMA-405B",
+            Source::Synthetic => "synthetic",
+        }
+    }
+}
+
+/// A C3 scenario: one GEMM paired with one concurrent collective
+/// (paper Table II rows; the collective kind is swept separately).
+#[derive(Debug, Clone, PartialEq)]
+pub struct C3Scenario {
+    /// GEMM tag from Table I (`cb1`..`cb5`, `mb1`, `mb2`).
+    pub gemm_tag: String,
+    pub gemm: GemmShape,
+    pub comm: CollectiveSpec,
+    pub source: Source,
+}
+
+impl C3Scenario {
+    /// Paper-style scenario tag, e.g. `mb1_896M`.
+    pub fn tag(&self) -> String {
+        format!("{}_{}", self.gemm_tag, self.comm.size_tag())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn gemm_flops_and_bytes() {
+        let g = GemmShape::bf16(8192, 8192, 8192);
+        assert_eq!(g.flops(), 2.0 * 8192f64.powi(3));
+        assert_eq!(g.min_bytes(), 3.0 * 8192.0 * 8192.0 * 2.0);
+        assert_eq!(g.tag(), "8192x8192x8192");
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn collective_offloadability() {
+        assert!(CollectiveKind::AllGather.dma_offloadable());
+        assert!(CollectiveKind::AllToAll.dma_offloadable());
+        assert!(!CollectiveKind::AllReduce.dma_offloadable());
+    }
+
+    #[test]
+    fn spec_parse_and_tag() {
+        let s = CollectiveSpec::parse(CollectiveKind::AllGather, "896M").unwrap();
+        assert_eq!(s.size_bytes, 896 * MIB);
+        assert_eq!(s.size_tag(), "896M");
+    }
+
+    #[test]
+    fn scenario_tag_matches_paper_format() {
+        let sc = C3Scenario {
+            gemm_tag: "mb1".into(),
+            gemm: GemmShape::bf16(8192, 57344, 8192),
+            comm: CollectiveSpec::parse(CollectiveKind::AllGather, "896M").unwrap(),
+            source: Source::Llama70B,
+        };
+        assert_eq!(sc.tag(), "mb1_896M");
+        assert_eq!(sc.source.name(), "LLaMA-70B");
+    }
+}

@@ -1,0 +1,10 @@
+//! Coordination layer: the scenario runner (measurement protocol),
+//! metric aggregation (figure groupings, headline averages) and
+//! table/figure rendering.
+
+pub mod metrics;
+pub mod report;
+pub mod runner;
+
+pub use metrics::{group_rows, headline, taxonomy_divergences, GroupRow, Headline};
+pub use runner::{measure, run_scenario, run_suite, Measured, RunnerConfig, ScenarioOutcome};

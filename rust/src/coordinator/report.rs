@@ -1,0 +1,286 @@
+//! Table/figure rendering: turns runner outcomes into the exact tables
+//! and bar-chart series the paper prints. Shared by the benches, the
+//! CLI `report` subcommand and the examples.
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::CollectiveKind;
+use crate::coordinator::metrics::{group_rows, headline};
+use crate::coordinator::runner::ScenarioOutcome;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::util::table::{f, pct, speedup, Table};
+use crate::util::units::fmt_bytes;
+use crate::workload::llama::table1;
+use crate::workload::scenarios::TABLE2;
+
+/// Table I: the GEMMs under study, with our measured-model intensity and
+/// classification.
+pub fn render_table1(m: &MachineConfig) -> Table {
+    let mut t = Table::new(vec![
+        "gemm-tag", "gemm-size", "source", "intensity", "machine", "class", "t_iso", "wgs",
+    ])
+    .title("Table I: computations (GEMMs) studied")
+    .left_cols(3);
+    for k in table1() {
+        let src = if k.tag.ends_with('1') && k.tag.starts_with("cb") || k.tag == "mb1" {
+            "LLaMA-70B"
+        } else {
+            "LLaMA-405B"
+        };
+        t.row(vec![
+            k.tag.clone(),
+            k.shape.tag(),
+            src.to_string(),
+            f(k.intensity(m), 0),
+            f(m.machine_intensity(), 0),
+            if k.is_compute_bound(m) { "compute-bound" } else { "memory-bound" }.to_string(),
+            format!("{:.2}ms", k.time_isolated(m, m.cus_total()) * 1e3),
+            k.workgroups(m).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table II: scenario list with paper + computed taxonomy.
+pub fn render_table2(m: &MachineConfig) -> Table {
+    let mut t = Table::new(vec![
+        "C3", "source", "paper-type", "computed", "t_gemm", "t_comm(AG)", "ideal",
+    ])
+    .title("Table II: C3 combinations and taxonomy")
+    .left_cols(4);
+    for row in &TABLE2 {
+        let sc = crate::workload::scenarios::resolve(row, CollectiveKind::AllGather);
+        let tg = sc.gemm.time_isolated(m, m.cus_total());
+        let tc = sc.comm.time_isolated_full(m);
+        t.row(vec![
+            sc.tag(),
+            row.source.name().to_string(),
+            row.paper_type.name().to_string(),
+            sc.computed_type(m).name().to_string(),
+            format!("{:.2}ms", tg * 1e3),
+            format!("{:.2}ms", tc * 1e3),
+            speedup((tg + tc) / tg.max(tc)),
+        ]);
+    }
+    t
+}
+
+/// Fig 5a: GEMM slowdown vs CUs taken away.
+pub fn render_fig5a(m: &MachineConfig, losses: &[u32]) -> Table {
+    let mut headers = vec!["gemm".to_string()];
+    headers.extend(losses.iter().map(|l| format!("-{l}CU")));
+    let mut t = Table::new(headers).title("Fig 5a: GEMM slowdown vs CU loss").left_cols(1);
+    for k in table1() {
+        let mut row = vec![k.tag.clone()];
+        row.extend(losses.iter().map(|&l| f(k.slowdown_with_cu_loss(m, l), 3)));
+        t.row(row);
+    }
+    t
+}
+
+/// Fig 5b/c: collective slowdown vs assigned CUs.
+pub fn render_fig5bc(m: &MachineConfig, kind: CollectiveKind, sizes: &[u64], cus: &[u32]) -> Table {
+    let mut headers = vec!["size".to_string()];
+    headers.extend(cus.iter().map(|c| format!("{c}CU")));
+    let title = format!(
+        "Fig 5{}: {} slowdown vs assigned CUs (need {})",
+        if kind == CollectiveKind::AllGather { 'b' } else { 'c' },
+        kind.name(),
+        CollectiveKernel::new(crate::config::workload::CollectiveSpec::new(kind, 1 << 30)).cu_need(m),
+    );
+    let mut t = Table::new(headers).title(title).left_cols(1);
+    for &s in sizes {
+        let k = CollectiveKernel::new(crate::config::workload::CollectiveSpec::new(kind, s));
+        let mut row = vec![fmt_bytes(s)];
+        row.extend(cus.iter().map(|&c| f(k.slowdown_with_cus(m, c), 3)));
+        t.row(row);
+    }
+    t
+}
+
+/// Fig 6: relative LLC bandwidth utilization.
+pub fn render_fig6(m: &MachineConfig, a2a_sizes: &[u64]) -> Table {
+    let mut t = Table::new(vec!["kernel", "LLC-bw-utilization", "relative-to-max"])
+        .title("Fig 6: relative AMD Infinity Cache bandwidth utilization")
+        .left_cols(1);
+    let mut entries: Vec<(String, f64)> = table1()
+        .into_iter()
+        .map(|k| (format!("gemm:{}", k.tag), k.llc_bw_utilization(m)))
+        .collect();
+    for &s in a2a_sizes {
+        let k = CollectiveKernel::new(crate::config::workload::CollectiveSpec::new(
+            CollectiveKind::AllToAll,
+            s,
+        ));
+        entries.push((format!("a2a:{}", fmt_bytes(s)), k.llc_bw_utilization(m)));
+    }
+    let max = entries.iter().map(|e| e.1).fold(0.0, f64::max);
+    for (name, util) in entries {
+        t.row(vec![name, f(util, 3), f(util / max, 3)]);
+    }
+    t
+}
+
+/// Fig 7: ideal speedup per scenario.
+pub fn render_fig7(outcomes: &[ScenarioOutcome]) -> Table {
+    let mut t = Table::new(vec!["scenario", "collective", "ideal-speedup"])
+        .title("Fig 7: ideal speedup possible for C3 scenarios")
+        .left_cols(2);
+    for o in outcomes {
+        t.row(vec![
+            o.tag.clone(),
+            o.scenario.comm.spec.kind.name().to_string(),
+            speedup(o.ideal),
+        ]);
+    }
+    t
+}
+
+/// Fig 8: grouped average speedups for the CU-collective strategies.
+pub fn render_fig8(outcomes: &[ScenarioOutcome]) -> Table {
+    let mut t = Table::new(vec![
+        "group", "n", "ideal", "c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "%ideal(base)",
+        "%ideal(sp)",
+    ])
+    .title("Fig 8: C3 speedups with schedule prioritization / resource partitioning")
+    .left_cols(1);
+    for r in group_rows(outcomes) {
+        t.row(vec![
+            format!("{}/{}", r.kind.name(), r.c3_type.name()),
+            r.n.to_string(),
+            speedup(r.ideal),
+            speedup(r.per_strategy["c3_base"].0),
+            speedup(r.per_strategy["c3_sp"].0),
+            speedup(r.per_strategy["c3_rp"].0),
+            speedup(r.per_strategy["c3_sp_rp"].0),
+            pct(r.per_strategy["c3_base"].1),
+            pct(r.per_strategy["c3_sp"].1),
+        ]);
+    }
+    let h = headline(outcomes);
+    t.rule();
+    t.row(vec![
+        "average".to_string(),
+        h.n.to_string(),
+        speedup(h.avg_ideal),
+        speedup(h.per_strategy["c3_base"].0),
+        speedup(h.per_strategy["c3_sp"].0),
+        speedup(h.per_strategy["c3_rp"].0),
+        speedup(h.per_strategy["c3_sp_rp"].0),
+        pct(h.per_strategy["c3_base"].1),
+        pct(h.per_strategy["c3_sp"].1),
+    ]);
+    t
+}
+
+/// Fig 10: ConCCL C3 speedups vs the best CU-collective variant.
+pub fn render_fig10(outcomes: &[ScenarioOutcome]) -> Table {
+    let mut t = Table::new(vec![
+        "group", "n", "ideal", "c3_base", "c3_best", "conccl", "conccl_rp",
+        "%ideal(best)", "%ideal(conccl)", "%ideal(conccl_rp)",
+    ])
+    .title("Fig 10: C3 speedup with ConCCL")
+    .left_cols(1);
+    for r in group_rows(outcomes) {
+        t.row(vec![
+            format!("{}/{}", r.kind.name(), r.c3_type.name()),
+            r.n.to_string(),
+            speedup(r.ideal),
+            speedup(r.per_strategy["c3_base"].0),
+            speedup(r.per_strategy["c3_best"].0),
+            speedup(r.per_strategy["conccl"].0),
+            speedup(r.per_strategy["conccl_rp"].0),
+            pct(r.per_strategy["c3_best"].1),
+            pct(r.per_strategy["conccl"].1),
+            pct(r.per_strategy["conccl_rp"].1),
+        ]);
+    }
+    let h = headline(outcomes);
+    t.rule();
+    t.row(vec![
+        "average".to_string(),
+        h.n.to_string(),
+        speedup(h.avg_ideal),
+        speedup(h.per_strategy["c3_base"].0),
+        speedup(h.per_strategy["c3_best"].0),
+        speedup(h.per_strategy["conccl"].0),
+        speedup(h.per_strategy["conccl_rp"].0),
+        pct(h.per_strategy["c3_best"].1),
+        pct(h.per_strategy["conccl"].1),
+        pct(h.per_strategy["conccl_rp"].1),
+    ]);
+    t
+}
+
+/// Fig 9: ConCCL speedup over the CU-based collective vs size.
+pub fn render_fig9(m: &MachineConfig, sizes: &[u64]) -> Table {
+    let mut t = Table::new(vec!["size", "all-gather", "all-to-all", "regime"])
+        .title("Fig 9: ConCCL speedup over CU-based collective (RCCL)")
+        .left_cols(1);
+    for &s in sizes {
+        let ag = crate::conccl::DmaCollective::new(crate::config::workload::CollectiveSpec::new(
+            CollectiveKind::AllGather,
+            s,
+        ));
+        let a2a = crate::conccl::DmaCollective::new(crate::config::workload::CollectiveSpec::new(
+            CollectiveKind::AllToAll,
+            s,
+        ));
+        let lat = CollectiveKernel::new(ag.spec).is_latency_bound(m);
+        t.row(vec![
+            fmt_bytes(s),
+            f(ag.speedup_vs_cu(m), 3),
+            f(a2a.speedup_vs_cu(m), 3),
+            if lat { "latency-bound" } else { "bandwidth-bound" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// GemmKernel re-export helper for CLI callers.
+pub fn gemm_summary_row(m: &MachineConfig, k: &GemmKernel) -> Vec<String> {
+    vec![
+        k.tag.clone(),
+        k.shape.tag(),
+        f(k.intensity(m), 0),
+        format!("{:.2}ms", k.time_isolated(m, m.cus_total()) * 1e3),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::{run_suite, RunnerConfig};
+    use crate::util::units::MIB;
+    use crate::workload::scenarios::suite;
+
+    #[test]
+    fn tables_render_with_expected_row_counts() {
+        let m = MachineConfig::mi300x();
+        assert_eq!(render_table1(&m).len(), 7);
+        assert_eq!(render_table2(&m).len(), 15);
+        assert_eq!(render_fig5a(&m, &[8, 16, 32, 64]).len(), 7);
+        assert_eq!(
+            render_fig5bc(&m, CollectiveKind::AllGather, &[896 * MIB], &[8, 16, 32, 64]).len(),
+            1
+        );
+        assert!(render_fig6(&m, &[896 * MIB]).len() >= 8);
+        assert_eq!(render_fig9(&m, &[MIB, 128 * MIB]).len(), 2);
+    }
+
+    #[test]
+    fn figure_tables_from_suite() {
+        let outs = run_suite(
+            &MachineConfig::mi300x(),
+            &suite(),
+            &RunnerConfig::default(),
+        );
+        assert_eq!(render_fig7(&outs).len(), 30);
+        let f8 = render_fig8(&outs);
+        assert_eq!(f8.len(), 7); // 6 groups + average
+        let f10 = render_fig10(&outs);
+        assert_eq!(f10.len(), 7);
+        // Renders contain the strategy columns.
+        assert!(f8.render().contains("c3_sp"));
+        assert!(f10.render().contains("conccl_rp"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Infinity-Fabric-like interconnect model: a fully-connected topology
+//! of uni-directional peer links (paper §II-A: each MI300X connects to
+//! the other seven via bi-directional links, 64 GB/s per direction).
+
+/// Fully-connected node topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub num_gpus: usize,
+}
+
+impl Topology {
+    pub fn fully_connected(num_gpus: usize) -> Self {
+        assert!(num_gpus >= 2);
+        Topology { num_gpus }
+    }
+
+    /// Number of uni-directional links (ordered pairs).
+    pub fn num_links(&self) -> usize {
+        self.num_gpus * (self.num_gpus - 1)
+    }
+
+    /// Dense id of the uni-directional link `src → dst`.
+    pub fn link_id(&self, src: usize, dst: usize) -> usize {
+        assert!(src != dst, "no self-link");
+        assert!(src < self.num_gpus && dst < self.num_gpus);
+        // dst index skips the diagonal.
+        let d = if dst > src { dst - 1 } else { dst };
+        src * (self.num_gpus - 1) + d
+    }
+
+    /// Peers of a GPU, in deterministic order.
+    pub fn peers(&self, gpu: usize) -> impl Iterator<Item = usize> + '_ {
+        let n = self.num_gpus;
+        (0..n).filter(move |&p| p != gpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_ids_are_dense_and_unique() {
+        let t = Topology::fully_connected(8);
+        assert_eq!(t.num_links(), 56);
+        let mut seen = vec![false; t.num_links()];
+        for s in 0..8 {
+            for d in 0..8 {
+                if s == d {
+                    continue;
+                }
+                let id = t.link_id(s, d);
+                assert!(!seen[id], "duplicate link id {id}");
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn peers_exclude_self() {
+        let t = Topology::fully_connected(4);
+        let p: Vec<usize> = t.peers(2).collect();
+        assert_eq!(p, vec![0, 1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-link")]
+    fn self_link_rejected() {
+        Topology::fully_connected(4).link_id(1, 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! GPU device machinery: simulated per-GPU memory (real bytes) and the
+//! SDMA copy-engine command/queue/timing model (paper §II-B, Fig 3).
+//!
+//! The *compute* side of the GPU (CU occupancy, waves, caches) is
+//! modelled analytically in `kernels/` and composed by `sched/`; this
+//! module owns the parts ConCCL's data path touches.
+
+pub mod memory;
+pub mod sdma;
+
+pub use memory::{BufferId, GpuMemory};
+pub use sdma::{schedule, CommandPacket, EnginePolicy, SdmaSchedule, TransferTiming};

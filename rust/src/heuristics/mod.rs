@@ -1,0 +1,9 @@
+//! Runtime heuristics (§V-C, §VI-G): schedule prioritization by
+//! workgroup count and resource partitioning via a one-time slowdown
+//! lookup table + 70%-efficiency rooflines.
+
+pub mod rp;
+pub mod sp;
+
+pub use rp::{recommend, recommend_conccl_rp, SlowdownTable};
+pub use sp::{comm_first, launch_order, LaunchInfo};

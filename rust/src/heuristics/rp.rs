@@ -1,0 +1,235 @@
+//! Resource-partitioning heuristic (§V-C).
+//!
+//! The paper's recipe, reproduced exactly:
+//!
+//! 1. **Once per GPU**: profile one memory-bound GEMM, one compute-bound
+//!    GEMM, and one latency-bound + one bandwidth-bound size of each
+//!    collective at every candidate CU allocation → a *slowdown lookup
+//!    table*.
+//! 2. **Per C3 scenario**: compute *roofline* kernel times from peak
+//!    compute/memory/network throughput at 70% efficiency (deliberately
+//!    cruder than the simulator's model — the runtime doesn't have the
+//!    full model), scale them by the table's slowdowns, and pick the CU
+//!    split minimizing `max(t_gemm, t_comm)`.
+//!
+//! The paper reports the heuristic picks the sweep-optimal allocation
+//! for 24 of 30 scenarios and loses ≤1.5% otherwise; the
+//! `heuristic_accuracy` bench regenerates that comparison.
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{CollectiveKind, CollectiveSpec};
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::util::units::MIB;
+use crate::workload::llama::gemm_by_tag;
+use crate::workload::ResolvedScenario;
+
+/// The one-time-per-GPU slowdown lookup table.
+#[derive(Debug, Clone)]
+pub struct SlowdownTable {
+    /// Candidate CU reservations for the collective (powers of two).
+    pub candidates: Vec<u32>,
+    /// GEMM slowdown when losing `candidates[i]` CUs, for
+    /// [compute-bound, memory-bound] representative kernels.
+    pub gemm_cb: Vec<f64>,
+    pub gemm_mb: Vec<f64>,
+    /// Collective slowdown when *assigned* `candidates[i]` CUs
+    /// (bandwidth-bound representative; latency-bound sizes are listed
+    /// too for completeness but never picked by Table II scenarios).
+    pub ag_bw: Vec<f64>,
+    pub a2a_bw: Vec<f64>,
+    pub ag_lat: Vec<f64>,
+    pub a2a_lat: Vec<f64>,
+}
+
+impl SlowdownTable {
+    /// Build the table by "profiling" the representative kernels (the
+    /// analytic models stand in for the rocprof runs a real runtime
+    /// would do once per GPU).
+    pub fn build(m: &MachineConfig) -> SlowdownTable {
+        let candidates = m.rp_candidates();
+        let cb = gemm_by_tag("cb1").expect("cb representative");
+        let mb = gemm_by_tag("mb1").expect("mb representative");
+        let mk = |kind: CollectiveKind, size: u64| CollectiveKernel::new(CollectiveSpec::new(kind, size));
+        // Bandwidth-bound representatives: 896 MiB; latency-bound: 1 MiB.
+        let ag_b = mk(CollectiveKind::AllGather, 896 * MIB);
+        let a2a_b = mk(CollectiveKind::AllToAll, 896 * MIB);
+        let ag_l = mk(CollectiveKind::AllGather, MIB);
+        let a2a_l = mk(CollectiveKind::AllToAll, MIB);
+        // The collective rows are profiled WITH a background GEMM
+        // running (the C3-relevant condition): the measured slowdown
+        // folds in the co-run bandwidth derate, not just the CU knee.
+        // Without this the heuristic under-allocates CUs to G-long
+        // collectives and loses up to ~35% — a real runtime profiles
+        // the condition it schedules for.
+        let ag_co = 1.0 / (1.0 - m.comm_co_penalty_ag);
+        let a2a_co = 1.0 / (1.0 - m.comm_co_penalty_a2a);
+        SlowdownTable {
+            gemm_cb: candidates.iter().map(|&k| cb.slowdown_with_cu_loss(m, k)).collect(),
+            gemm_mb: candidates.iter().map(|&k| mb.slowdown_with_cu_loss(m, k)).collect(),
+            ag_bw: candidates.iter().map(|&k| ag_b.slowdown_with_cus(m, k) * ag_co).collect(),
+            a2a_bw: candidates.iter().map(|&k| a2a_b.slowdown_with_cus(m, k) * a2a_co).collect(),
+            ag_lat: candidates.iter().map(|&k| ag_l.slowdown_with_cus(m, k) * ag_co).collect(),
+            a2a_lat: candidates.iter().map(|&k| a2a_l.slowdown_with_cus(m, k) * a2a_co).collect(),
+            candidates,
+        }
+    }
+
+    fn gemm_slowdown(&self, compute_bound: bool, i: usize) -> f64 {
+        if compute_bound {
+            self.gemm_cb[i]
+        } else {
+            self.gemm_mb[i]
+        }
+    }
+
+    fn comm_slowdown(&self, kind: CollectiveKind, latency_bound: bool, i: usize) -> f64 {
+        match (kind, latency_bound) {
+            (CollectiveKind::AllToAll, false) => self.a2a_bw[i],
+            (CollectiveKind::AllToAll, true) => self.a2a_lat[i],
+            (_, false) => self.ag_bw[i],
+            (_, true) => self.ag_lat[i],
+        }
+    }
+}
+
+/// Roofline kernel times at the heuristic's 70% efficiency (§V-C: "we
+/// simply focus on peak compute, memory and network throughputs and
+/// assume 70% efficiency").
+pub fn roofline_gemm_time(m: &MachineConfig, g: &GemmKernel) -> f64 {
+    let e = m.roofline_eff;
+    (g.shape.flops() / (m.peak_flops_bf16 * e)).max(g.shape.min_bytes() / (m.hbm_bw * e))
+}
+
+/// Roofline collective time (network-only).
+pub fn roofline_comm_time(m: &MachineConfig, c: &CollectiveKernel) -> f64 {
+    c.per_link_bytes(m) / (m.link_bw * m.roofline_eff)
+}
+
+/// Recommend a CU reservation for the collective in a C3 scenario.
+pub fn recommend(m: &MachineConfig, table: &SlowdownTable, sc: &ResolvedScenario) -> u32 {
+    let tg0 = roofline_gemm_time(m, &sc.gemm);
+    let tc0 = roofline_comm_time(m, &sc.comm);
+    let cb = sc.gemm.is_compute_bound(m);
+    let lat = sc.comm.is_latency_bound(m);
+    let mut best = (f64::INFINITY, table.candidates[0]);
+    for (i, &k) in table.candidates.iter().enumerate() {
+        let tg = tg0 * table.gemm_slowdown(cb, i);
+        let tc = tc0 * table.comm_slowdown(sc.comm.spec.kind, lat, i);
+        let obj = tg.max(tc);
+        if obj < best.0 {
+            best = (obj, k);
+        }
+    }
+    best.1
+}
+
+/// §VI-G: the ConCCL-rp variant of the heuristic — only the mb-GEMM
+/// CU-loss row is needed; remove CUs only if the table predicts a
+/// speedup. Returns the number of CUs to take from the GEMM (0 = none).
+pub fn recommend_conccl_rp(m: &MachineConfig, table: &SlowdownTable, g: &GemmKernel) -> u32 {
+    if g.is_compute_bound(m) {
+        return 0;
+    }
+    // Find the best (lowest) mb slowdown < 1, then prefer the SMALLEST
+    // removal within noise of it (0.2%) — removing CUs is free upside
+    // only while the cache effect holds, so take the conservative k.
+    let best = table
+        .gemm_mb
+        .iter()
+        .cloned()
+        .fold(1.0f64, f64::min);
+    if best >= 1.0 {
+        return 0;
+    }
+    for (i, &k) in table.candidates.iter().enumerate() {
+        if table.gemm_mb[i] <= best + 0.002 {
+            return k;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::scenarios::{resolve, TABLE2};
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    #[test]
+    fn table_shape_and_monotonicity() {
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        assert_eq!(t.candidates, vec![8, 16, 32, 64, 128]);
+        // cb slowdown grows with CU loss.
+        for w in t.gemm_cb.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+        // Collective slowdown shrinks (to 1) as CUs are assigned.
+        for w in t.ag_bw.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+        // Floor is the co-run derate, not 1.0 (profiled under C3).
+        let floor = 1.0 / (1.0 - m.comm_co_penalty_ag);
+        assert!((t.ag_bw.last().unwrap() - floor).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recommendation_is_legal_for_all_30() {
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        for kind in CollectiveKind::studied() {
+            for row in &TABLE2 {
+                let sc = resolve(row, kind);
+                let k = recommend(&m, &t, &sc);
+                assert!(t.candidates.contains(&k), "{}: {k}", sc.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn a2a_gets_at_least_its_need_when_comm_long() {
+        // C-long all-to-all should never be squeezed below ~its need.
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        let row = TABLE2.iter().find(|r| r.size == "20G").unwrap();
+        let sc = resolve(row, CollectiveKind::AllToAll);
+        let k = recommend(&m, &t, &sc);
+        assert!(k >= 64, "C-long A2A squeezed to {k} CUs");
+    }
+
+    #[test]
+    fn g_long_mb_gives_comm_its_need_cheaply() {
+        // mb GEMMs don't care about CU loss, so the heuristic should
+        // grant the collective its full need (32 for AG).
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        let row = TABLE2.iter().find(|r| r.gemm_tag == "mb1" && r.size == "896M").unwrap();
+        let sc = resolve(row, CollectiveKind::AllGather);
+        let k = recommend(&m, &t, &sc);
+        assert!(k >= 32, "AG starved at {k}");
+    }
+
+    #[test]
+    fn conccl_rp_recommendation() {
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        let mb1 = gemm_by_tag("mb1").unwrap();
+        let cb1 = gemm_by_tag("cb1").unwrap();
+        let r_mb = recommend_conccl_rp(&m, &t, &mb1);
+        assert!(r_mb > 0, "mb GEMM should shed CUs (paper: 8)");
+        assert_eq!(r_mb, 8, "paper §VI-G: taking away eight CUs");
+        assert_eq!(recommend_conccl_rp(&m, &t, &cb1), 0);
+    }
+
+    #[test]
+    fn roofline_uses_70pct_efficiency() {
+        let m = m();
+        let g = gemm_by_tag("cb1").unwrap();
+        let t = roofline_gemm_time(&m, &g);
+        let expect = g.shape.flops() / (m.peak_flops_bf16 * 0.7);
+        assert!((t - expect).abs() / expect < 1e-9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Schedule-prioritization heuristic (§V-C).
+//!
+//! "As runtimes launch GPU kernels, they can use the information about
+//! number of workgroups per kernel as a proxy for CU requirement …
+//! the runtime can employ scheduling order in the order of resource
+//! requirements (number of workgroups), low to high."
+//!
+//! Generalizes to any number of kernels (§VII-B1).
+
+use crate::config::machine::MachineConfig;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+
+/// What a runtime knows about a kernel at launch time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaunchInfo {
+    pub name: String,
+    /// Workgroup count — the CU-requirement proxy.
+    pub workgroups: u64,
+}
+
+impl LaunchInfo {
+    /// From a GEMM kernel.
+    pub fn of_gemm(m: &MachineConfig, g: &GemmKernel) -> LaunchInfo {
+        LaunchInfo {
+            name: format!("gemm:{}", g.tag),
+            workgroups: g.workgroups(m),
+        }
+    }
+
+    /// From a CU collective: RCCL-like kernels launch ~one persistent
+    /// workgroup per needed CU.
+    pub fn of_collective(m: &MachineConfig, c: &CollectiveKernel) -> LaunchInfo {
+        LaunchInfo {
+            name: format!("comm:{}", c.spec.kind.name()),
+            workgroups: c.cu_need(m) as u64,
+        }
+    }
+}
+
+/// Order kernels for launch: ascending workgroup count (ties keep input
+/// order — stable). Returns indices into the input.
+pub fn launch_order(kernels: &[LaunchInfo]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..kernels.len()).collect();
+    idx.sort_by_key(|&i| kernels[i].workgroups);
+    idx
+}
+
+/// The two-kernel special case the paper evaluates: should the
+/// collective be scheduled before the GEMM?
+pub fn comm_first(m: &MachineConfig, g: &GemmKernel, c: &CollectiveKernel) -> bool {
+    let order = launch_order(&[LaunchInfo::of_gemm(m, g), LaunchInfo::of_collective(m, c)]);
+    order[0] == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::{CollectiveKind, CollectiveSpec};
+    use crate::util::units::MIB;
+    use crate::workload::llama::table1;
+
+    #[test]
+    fn every_paper_pairing_schedules_comm_first() {
+        // All Table I GEMMs have thousands of workgroups; collectives
+        // have 32-64 — the heuristic always prioritizes communication,
+        // matching §V-A's design.
+        let m = MachineConfig::mi300x();
+        for g in table1() {
+            for kind in CollectiveKind::studied() {
+                let c = CollectiveKernel::new(CollectiveSpec::new(kind, 896 * MIB));
+                assert!(comm_first(&m, &g, &c), "{} vs {}", g.tag, kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn order_is_ascending_and_stable() {
+        let ks = vec![
+            LaunchInfo { name: "big".into(), workgroups: 1000 },
+            LaunchInfo { name: "small-a".into(), workgroups: 32 },
+            LaunchInfo { name: "small-b".into(), workgroups: 32 },
+            LaunchInfo { name: "mid".into(), workgroups: 64 },
+        ];
+        assert_eq!(launch_order(&ks), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn multi_kernel_generalization() {
+        // §VII-B1: more than two kernels still order low-to-high.
+        let m = MachineConfig::mi300x();
+        let g = table1().remove(0);
+        let mut infos = vec![LaunchInfo::of_gemm(&m, &g)];
+        for kind in CollectiveKind::studied() {
+            infos.push(LaunchInfo::of_collective(
+                &m,
+                &CollectiveKernel::new(CollectiveSpec::new(kind, MIB)),
+            ));
+        }
+        let order = launch_order(&infos);
+        assert_eq!(*order.last().unwrap(), 0, "GEMM launches last");
+    }
+}

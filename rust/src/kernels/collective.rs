@@ -1,0 +1,236 @@
+//! CU-based collective kernel model (the RCCL-like baseline, §IV-A1).
+//!
+//! RCCL collectives on a fully-connected 8-GPU node run a *direct*
+//! algorithm: persistent GPU workgroups on each GPU read the local
+//! buffer and push shards to all seven peers over Infinity Fabric links.
+//! The model captures the three properties the paper measures:
+//!
+//! * **CU needs** (Fig 5b/c): achieved fabric bandwidth scales with the
+//!   CUs granted up to a kernel-specific need (32 for all-gather, 64 for
+//!   all-to-all); extra CUs add nothing.
+//! * **Wire time**: every GPU moves `7/8 · S` across its 7 links in
+//!   parallel → `(S/8) / link_bw` when bandwidth-bound, plus a launch
+//!   latency that dominates small sizes (latency-bound regime, §III).
+//! * **Memory traffic** (Fig 6): all-gather writes the gathered buffer
+//!   (≈ `1.0 · S` of HBM traffic); all-to-all reads *and* writes
+//!   distinct per-peer buffers with staging (≈ `1.3 · S`) and runs at a
+//!   fabric derate — jointly reproducing all-gather's ~14% lower LLC
+//!   bandwidth.
+//!
+//! `size` semantics follow the paper's scenario tags: the full payload
+//! materialized per GPU (gathered buffer for AG, exchanged buffer for
+//! A2A/AR).
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{CollectiveKind, CollectiveSpec};
+
+/// A CU-based (RCCL-like) collective kernel instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveKernel {
+    pub spec: CollectiveSpec,
+}
+
+impl CollectiveKernel {
+    pub fn new(spec: CollectiveSpec) -> Self {
+        CollectiveKernel { spec }
+    }
+
+    /// CUs this kernel needs for full bandwidth (Fig 5b/c knees).
+    pub fn cu_need(&self, m: &MachineConfig) -> u32 {
+        match self.spec.kind {
+            CollectiveKind::AllGather => m.ag_cu_need,
+            CollectiveKind::AllToAll => m.a2a_cu_need,
+            CollectiveKind::AllReduce => m.ar_cu_need,
+        }
+    }
+
+    /// Bytes each GPU must push over each of its links (the per-link
+    /// serialization quantum). All-reduce is reduce-scatter + all-gather
+    /// → two passes.
+    pub fn per_link_bytes(&self, m: &MachineConfig) -> f64 {
+        let shard = self.spec.size_bytes as f64 / m.num_gpus as f64;
+        match self.spec.kind {
+            CollectiveKind::AllGather | CollectiveKind::AllToAll => shard,
+            CollectiveKind::AllReduce => 2.0 * shard,
+        }
+    }
+
+    /// Total bytes each GPU sends on the wire (all links combined).
+    pub fn wire_bytes_per_gpu(&self, m: &MachineConfig) -> f64 {
+        self.per_link_bytes(m) * m.link_count as f64
+    }
+
+    /// HBM traffic per GPU, bytes (Fig 6's numerator).
+    pub fn hbm_traffic(&self, m: &MachineConfig) -> f64 {
+        let s = self.spec.size_bytes as f64;
+        match self.spec.kind {
+            CollectiveKind::AllGather => s * m.ag_hbm_factor,
+            CollectiveKind::AllToAll => s * m.a2a_hbm_factor,
+            // RS pass reads+writes, AG pass writes: ~2x payload.
+            CollectiveKind::AllReduce => 2.0 * s * m.ag_hbm_factor,
+        }
+    }
+
+    /// Fabric efficiency derate for this collective's traffic pattern.
+    pub fn link_derate(&self, m: &MachineConfig) -> f64 {
+        match self.spec.kind {
+            CollectiveKind::AllGather | CollectiveKind::AllReduce => 1.0,
+            CollectiveKind::AllToAll => m.a2a_link_derate,
+        }
+    }
+
+    /// Fraction of full bandwidth achieved with `cu` CUs granted
+    /// (Fig 5b/c: linear up to the need, flat beyond).
+    pub fn bw_scale(&self, m: &MachineConfig, cu: u32) -> f64 {
+        (cu as f64 / self.cu_need(m) as f64).min(1.0)
+    }
+
+    /// Pure wire time with `cu` CUs, no launch latency, seconds.
+    pub fn t_wire(&self, m: &MachineConfig, cu: u32) -> f64 {
+        if cu == 0 {
+            return f64::INFINITY;
+        }
+        let bw = m.link_bw_achievable() * self.link_derate(m) * self.bw_scale(m, cu);
+        self.per_link_bytes(m) / bw
+    }
+
+    /// Isolated execution time with `cu` CUs, seconds (launch + wire;
+    /// HBM is never the binding resource in isolation on MI300X — the
+    /// fabric is an order of magnitude slower).
+    pub fn time_isolated(&self, m: &MachineConfig, cu: u32) -> f64 {
+        m.coll_launch_s + self.t_wire(m, cu)
+    }
+
+    /// Isolated time at the kernel's full CU allocation.
+    pub fn time_isolated_full(&self, m: &MachineConfig) -> f64 {
+        self.time_isolated(m, self.cu_need(m))
+    }
+
+    /// §III: latency-bound if the launch overhead is a significant
+    /// share of the total (latency doesn't shrink with size).
+    pub fn is_latency_bound(&self, m: &MachineConfig) -> bool {
+        let need = self.cu_need(m);
+        m.coll_launch_s >= 0.3 * self.time_isolated(m, need)
+    }
+
+    /// Fraction of achievable HBM bandwidth used in isolation (Fig 6).
+    pub fn llc_bw_utilization(&self, m: &MachineConfig) -> f64 {
+        self.hbm_traffic(m) / self.time_isolated_full(m) / m.hbm_bw_achievable()
+    }
+
+    /// Fig 5b/c: slowdown at `cu` assigned CUs vs the kernel's need.
+    pub fn slowdown_with_cus(&self, m: &MachineConfig, cu: u32) -> f64 {
+        self.time_isolated(m, cu) / self.time_isolated_full(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GIB, MIB};
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    fn ag(bytes: u64) -> CollectiveKernel {
+        CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, bytes))
+    }
+
+    fn a2a(bytes: u64) -> CollectiveKernel {
+        CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllToAll, bytes))
+    }
+
+    #[test]
+    fn cu_needs_match_fig5() {
+        let m = m();
+        assert_eq!(ag(GIB).cu_need(&m), 32);
+        assert_eq!(a2a(GIB).cu_need(&m), 64);
+    }
+
+    #[test]
+    fn wire_math_fully_connected() {
+        let m = m();
+        let k = ag(8 * GIB);
+        // Each GPU owns 1 GiB shard and pushes it to 7 peers.
+        assert_eq!(k.per_link_bytes(&m), GIB as f64);
+        assert_eq!(k.wire_bytes_per_gpu(&m), 7.0 * GIB as f64);
+    }
+
+    #[test]
+    fn fig5bc_slowdown_shape() {
+        let m = m();
+        // Below the need: proportional slowdown; above: flat.
+        let k = ag(896 * MIB);
+        let s16 = k.slowdown_with_cus(&m, 16);
+        assert!((1.8..2.2).contains(&s16), "AG at 16 CUs: {s16}");
+        let s64 = k.slowdown_with_cus(&m, 64);
+        assert!((s64 - 1.0).abs() < 1e-9, "AG flat beyond 32: {s64}");
+        let k2 = a2a(896 * MIB);
+        let s32 = k2.slowdown_with_cus(&m, 32);
+        assert!((1.8..2.2).contains(&s32), "A2A at 32 CUs: {s32}");
+        assert!((k2.slowdown_with_cus(&m, 128) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a2a_slower_and_hungrier_than_ag() {
+        let m = m();
+        let s = 896 * MIB;
+        let t_ag = ag(s).time_isolated_full(&m);
+        let t_a2a = a2a(s).time_isolated_full(&m);
+        assert!(t_a2a > t_ag, "A2A derated fabric: {t_a2a} vs {t_ag}");
+        // Fig 6 note: AG has ~14% lower LLC bandwidth than A2A.
+        let r = ag(s).llc_bw_utilization(&m) / a2a(s).llc_bw_utilization(&m);
+        assert!(
+            (0.80..0.92).contains(&r),
+            "AG/A2A bandwidth ratio {r:.3} (paper ~0.86)"
+        );
+    }
+
+    #[test]
+    fn latency_vs_bandwidth_bound_regimes() {
+        let m = m();
+        assert!(ag(64 * 1024).is_latency_bound(&m)); // 64 KiB
+        assert!(!ag(128 * MIB).is_latency_bound(&m));
+        // All Table II sizes (>=128M) are bandwidth-bound (§VI-C).
+        assert!(!ag(896 * MIB).is_latency_bound(&m));
+    }
+
+    #[test]
+    fn allreduce_double_pass() {
+        let m = m();
+        let s = GIB;
+        let ar = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllReduce, s));
+        assert_eq!(ar.per_link_bytes(&m), 2.0 * ag(s).per_link_bytes(&m));
+        assert!(ar.time_isolated_full(&m) > ag(s).time_isolated_full(&m));
+    }
+
+    #[test]
+    fn ag_896m_wire_time_plausible() {
+        // (896M/8) / (64 GB/s * 0.85) ≈ 2.16 ms.
+        let m = m();
+        let t = ag(896 * MIB).time_isolated_full(&m);
+        assert!((1.9e-3..2.4e-3).contains(&t), "t = {t}");
+    }
+
+    #[test]
+    fn prop_time_monotone_in_size_and_cus() {
+        use crate::util::prop::forall;
+        let m = m();
+        forall("collective time monotone", 80, |rng| {
+            (rng.i64_in(1, 2000) as u64 * MIB / 8, rng.i64_in(1, 38) as u64 * 8)
+        })
+        .check(|&(sz, cu)| {
+            let k = ag(sz);
+            let bigger = ag(sz * 2);
+            if bigger.time_isolated(&m, cu as u32) < k.time_isolated(&m, cu as u32) {
+                return Err("time decreased with size".into());
+            }
+            let more = k.time_isolated(&m, (cu as u32) + 8);
+            if more > k.time_isolated(&m, cu as u32) + 1e-12 {
+                return Err("time increased with more CUs".into());
+            }
+            Ok(())
+        });
+    }
+}

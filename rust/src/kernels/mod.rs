@@ -1,0 +1,13 @@
+//! Kernel models: the two primary ML operators the paper studies
+//! (§III) — GEMM computation kernels and collective communication
+//! kernels — as mechanistic analytic models over the machine config.
+//!
+//! Both expose `time_isolated(cu)`, HBM traffic and slowdown curves;
+//! the C3 executor (`sched/`) composes them inside the fluid simulator
+//! to produce concurrent timelines.
+
+pub mod collective;
+pub mod gemm;
+
+pub use collective::CollectiveKernel;
+pub use gemm::GemmKernel;

@@ -1,0 +1,33 @@
+//! # ConCCL — Concurrent Computation & Communication with GPU DMA engines
+//!
+//! A full reproduction of *"Optimizing ML Concurrent Computation and
+//! Communication with GPU DMA Engines"* (AMD, ISPASS'24) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a C3 scheduler
+//!   with schedule prioritization, CU resource partitioning, runtime
+//!   heuristics, and ConCCL DMA-offloaded collectives, running over a
+//!   discrete-event fluid simulator of an 8× MI300X node (the hardware
+//!   substitute; see DESIGN.md) plus a real byte-moving data plane.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs (GEMM /
+//!   MLP blocks) lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the GEMM hot-spot as a
+//!   tiled Pallas kernel, validated against a pure-jnp oracle.
+//!
+//! The `runtime` module loads the AOT artifacts via PJRT and executes
+//! them from Rust — Python is never on the request path.
+
+pub mod cli;
+pub mod conccl;
+pub mod config;
+pub mod coordinator;
+pub mod fabric;
+pub mod gpu;
+pub mod heuristics;
+pub mod kernels;
+pub mod node;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

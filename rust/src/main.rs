@@ -1,0 +1,272 @@
+//! `conccl` — leader entrypoint / CLI for the C3 + ConCCL system.
+//!
+//! See `cli::HELP` (or `conccl help`) for the subcommand reference.
+
+use conccl::cli::{Args, HELP};
+use conccl::config::workload::CollectiveKind;
+use conccl::coordinator::{report, run_suite, taxonomy_divergences, RunnerConfig};
+use conccl::heuristics::{self, SlowdownTable};
+use conccl::kernels::CollectiveKernel;
+use conccl::sched::{C3Executor, Strategy};
+use conccl::util::table::{f as fnum, speedup, Table};
+use conccl::util::units::{fmt_seconds, MIB};
+use conccl::workload::llama::LlamaConfig;
+use conccl::workload::scenarios::{resolve, suite, TABLE2};
+use conccl::workload::trace::{fsdp_forward_trace, replay};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "characterize" => characterize(args),
+        "run" => run_one(args),
+        "sweep" => sweep(args),
+        "report" => full_report(args),
+        "conccl-bw" => conccl_bw(args),
+        "heuristics" => heuristics_cmd(args),
+        "e2e" => e2e(args),
+        other => Err(format!("unknown subcommand '{other}'\n\n{HELP}")),
+    }
+}
+
+fn parse_collective(s: &str) -> Result<CollectiveKind, String> {
+    match s {
+        "all-gather" | "ag" => Ok(CollectiveKind::AllGather),
+        "all-to-all" | "a2a" => Ok(CollectiveKind::AllToAll),
+        "all-reduce" | "ar" => Ok(CollectiveKind::AllReduce),
+        other => Err(format!("unknown collective '{other}'")),
+    }
+}
+
+fn parse_strategy(s: &str, comm_need: u32) -> Result<Strategy, String> {
+    match s {
+        "serial" => Ok(Strategy::Serial),
+        "c3_base" | "base" => Ok(Strategy::C3Base),
+        "c3_sp" | "sp" => Ok(Strategy::C3Sp),
+        "c3_rp" | "rp" => Ok(Strategy::C3Rp { comm_cus: comm_need }),
+        "c3_sp_rp" | "sp_rp" => Ok(Strategy::C3SpRp { comm_cus: comm_need }),
+        "conccl" => Ok(Strategy::Conccl),
+        "conccl_rp" => Ok(Strategy::ConcclRp { cus_removed: 8 }),
+        other => Err(format!("unknown strategy '{other}'")),
+    }
+}
+
+fn find_scenario(
+    tag: &str,
+    kind: CollectiveKind,
+) -> Result<conccl::workload::ResolvedScenario, String> {
+    TABLE2
+        .iter()
+        .find(|r| format!("{}_{}", r.gemm_tag, r.size) == tag)
+        .map(|r| resolve(r, kind))
+        .ok_or_else(|| format!("unknown scenario '{tag}' (see `conccl characterize`)"))
+}
+
+fn characterize(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    report::render_table1(&m).print();
+    println!();
+    report::render_table2(&m).print();
+    println!();
+    report::render_fig5a(&m, &[0, 8, 16, 32, 64, 96, 128]).print();
+    println!();
+    let sizes = [896 * MIB, 3328 * MIB, 13 * 1024 * MIB];
+    report::render_fig5bc(&m, CollectiveKind::AllGather, &sizes, &[8, 16, 32, 64, 128]).print();
+    println!();
+    report::render_fig5bc(&m, CollectiveKind::AllToAll, &sizes, &[8, 16, 32, 64, 128]).print();
+    println!();
+    report::render_fig6(&m, &[896 * MIB, 3328 * MIB]).print();
+    Ok(())
+}
+
+fn run_one(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
+    let sc = find_scenario(&args.opt("scenario", "mb1_896M"), kind)?;
+    let exec = C3Executor::new(m);
+    let strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
+    let r = exec.run(&sc, strat);
+    let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!("{} × {} under {}", sc.tag(), kind.name(), strat.name()));
+    t.row(vec!["serial".to_string(), fmt_seconds(r.serial)]);
+    t.row(vec!["concurrent".to_string(), fmt_seconds(r.total)]);
+    t.row(vec!["gemm finish".to_string(), fmt_seconds(r.gemm_finish)]);
+    t.row(vec!["comm finish".to_string(), fmt_seconds(r.comm_finish)]);
+    t.row(vec!["ideal speedup".to_string(), speedup(r.ideal)]);
+    t.row(vec!["attained speedup".to_string(), speedup(r.speedup)]);
+    t.row(vec!["% of ideal".to_string(), fnum(r.pct_ideal, 1)]);
+    t.print();
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
+    let sc = find_scenario(&args.opt("scenario", "cb1_896M"), kind)?;
+    let exec = C3Executor::new(m);
+    let mut t = Table::new(vec!["comm CUs", "total", "speedup", "%ideal"])
+        .title(format!("c3_rp sweep: {} × {}", sc.tag(), kind.name()));
+    for k in exec.m.rp_candidates() {
+        let r = exec.run(&sc, Strategy::C3Rp { comm_cus: k });
+        t.row(vec![
+            k.to_string(),
+            fmt_seconds(r.total),
+            speedup(r.speedup),
+            fnum(r.pct_ideal, 1),
+        ]);
+    }
+    let (best, k) = exec.run_rp_sweep(&sc);
+    t.rule();
+    t.row(vec![
+        format!("best={k}"),
+        fmt_seconds(best.total),
+        speedup(best.speedup),
+        fnum(best.pct_ideal, 1),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn full_report(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let jitter: f64 = args
+        .opt("jitter", "0.01")
+        .parse()
+        .map_err(|e| format!("--jitter: {e}"))?;
+    let cfg = RunnerConfig {
+        jitter,
+        ..RunnerConfig::default()
+    };
+    let outs = run_suite(&m, &suite(), &cfg);
+    report::render_fig7(&outs).print();
+    println!();
+    report::render_fig8(&outs).print();
+    println!();
+    report::render_fig10(&outs).print();
+    let div = taxonomy_divergences(&m, &outs);
+    if !div.is_empty() {
+        println!("\ntaxonomy divergences (paper label vs our models):");
+        for (tag, paper, ours) in div {
+            println!("  {tag}: paper {} / computed {}", paper.name(), ours.name());
+        }
+    }
+    Ok(())
+}
+
+fn conccl_bw(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let sizes: Vec<u64> = [1, 4, 8, 16, 32, 64, 128, 256, 896, 2048, 8192, 20480]
+        .iter()
+        .map(|mb| mb * MIB)
+        .collect();
+    report::render_fig9(&m, &sizes).print();
+    Ok(())
+}
+
+fn heuristics_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let table = SlowdownTable::build(&m);
+    let exec = C3Executor::new(m.clone());
+    let mut t = Table::new(vec![
+        "scenario", "collective", "heuristic", "sweep-best", "match", "loss%",
+    ])
+    .title("§V-C RP heuristic vs exhaustive sweep")
+    .left_cols(2);
+    let mut matches = 0;
+    let mut worst_loss: f64 = 0.0;
+    let mut n = 0;
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            let sc = resolve(row, kind);
+            let k_h = heuristics::recommend(&m, &table, &sc);
+            let (best, k_b) = exec.run_rp_sweep(&sc);
+            let r_h = exec.run_rp_at(&sc, k_h);
+            let loss = (r_h.total / best.total - 1.0) * 100.0;
+            let is_match = k_h == k_b || loss < 0.1;
+            matches += is_match as usize;
+            worst_loss = worst_loss.max(loss);
+            n += 1;
+            t.row(vec![
+                sc.tag(),
+                kind.name().to_string(),
+                k_h.to_string(),
+                k_b.to_string(),
+                if is_match { "yes" } else { "no" }.to_string(),
+                fnum(loss, 2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "heuristic optimal for {matches}/{n} scenarios; worst loss {worst_loss:.2}% \
+         (paper: 24/30, <=1.5%)"
+    );
+    let sp_ok = TABLE2.iter().all(|row| {
+        let sc = resolve(row, CollectiveKind::AllGather);
+        heuristics::comm_first(&m, &sc.gemm, &sc.comm)
+    });
+    println!("SP heuristic schedules communication first for all scenarios: {sp_ok}");
+    Ok(())
+}
+
+fn e2e(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let layers = args.opt_usize("layers", 4)?;
+    let model = match args.opt("model", "70b").as_str() {
+        "70b" => LlamaConfig::llama70b(),
+        "405b" => LlamaConfig::llama405b(),
+        other => return Err(format!("unknown model '{other}'")),
+    };
+    let trace = fsdp_forward_trace(&model, layers);
+    let mut t = Table::new(vec!["strategy", "step time", "speedup", "%ideal"]).left_cols(1).title(format!(
+        "FSDP forward, {} × {layers} layers ({} C3 stages)",
+        model.name,
+        trace.stages.len()
+    ));
+    for strat in [
+        Strategy::Serial,
+        Strategy::C3Base,
+        Strategy::C3Sp,
+        Strategy::Conccl,
+        Strategy::ConcclRp { cus_removed: 8 },
+    ] {
+        let r = replay(&m, &trace, strat);
+        t.row(vec![
+            strat.name().to_string(),
+            fmt_seconds(r.total),
+            speedup(r.speedup()),
+            fnum(r.pct_ideal(), 1),
+        ]);
+    }
+    t.print();
+    // Isolated comparison of CU vs DMA collectives on this trace.
+    let mut wire = Table::new(vec!["stage", "gather", "rccl", "conccl"]).left_cols(2);
+    for s in trace.stages.iter().take(2) {
+        let dma = conccl::conccl::DmaCollective::new(s.gather.spec);
+        wire.row(vec![
+            s.label.clone(),
+            s.gather.spec.size_tag(),
+            fmt_seconds(CollectiveKernel::new(s.gather.spec).time_isolated_full(&m)),
+            fmt_seconds(dma.time_isolated(&m)),
+        ]);
+    }
+    println!();
+    wire.print();
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! AOT artifact manifest: what `python -m compile.aot` produced and how
+//! to feed it.
+//!
+//! Manifest line format (one artifact per line):
+//! `<name> <file> <entry> <in0>;<in1>;...` where each input spec is
+//! `<d0>x<d1>x...,<dtype>`.
+
+use std::path::{Path, PathBuf};
+
+/// One tensor input description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Parse `"64x128,float32"`.
+    pub fn parse(s: &str) -> Result<TensorSpec, String> {
+        let (dims_s, dtype) = s
+            .split_once(',')
+            .ok_or_else(|| format!("bad tensor spec '{s}'"))?;
+        let dims = dims_s
+            .split('x')
+            .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim in '{s}': {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        if dims.is_empty() {
+            return Err(format!("empty dims in '{s}'"));
+        }
+        Ok(TensorSpec {
+            dims,
+            dtype: dtype.to_string(),
+        })
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Dims as i64 (what the xla crate's reshape wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One artifact: an HLO-text module plus its input signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub entry: String,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let mut artifacts = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(4, ' ');
+            let (name, file, entry, ins) = (
+                parts.next().ok_or(format!("line {}: missing name", i + 1))?,
+                parts.next().ok_or(format!("line {}: missing file", i + 1))?,
+                parts.next().ok_or(format!("line {}: missing entry", i + 1))?,
+                parts.next().ok_or(format!("line {}: missing inputs", i + 1))?,
+            );
+            let inputs = ins
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| format!("line {}: {e}", i + 1))?;
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.to_string(),
+                entry: entry.to_string(),
+                inputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Load `manifest.txt` from a directory.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default artifact directory: `$CONCCL_ARTIFACTS` or `./artifacts`
+    /// (walking up from the current dir so tests work from any cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("CONCCL_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parse() {
+        let t = TensorSpec::parse("64x128,float32").unwrap();
+        assert_eq!(t.dims, vec![64, 128]);
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.numel(), 8192);
+        assert_eq!(t.dims_i64(), vec![64, 128]);
+        assert!(TensorSpec::parse("no-comma").is_err());
+        assert!(TensorSpec::parse("axb,f32").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_round_trip() {
+        let text = "\
+gemm_256 gemm_256.hlo.txt gemm 256x256,float32;256x256,float32
+fsdp_layer fsdp_layer.hlo.txt layer_fwd_residual 64x128,float32;128x256,float32;256x128,float32
+# comment line
+
+";
+        let m = Manifest::parse(Path::new("/tmp/arts"), text).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("gemm_256").unwrap();
+        assert_eq!(g.entry, "gemm");
+        assert_eq!(g.inputs.len(), 2);
+        let f = m.get("fsdp_layer").unwrap();
+        assert_eq!(f.inputs.len(), 3);
+        assert_eq!(f.inputs[1].dims, vec![128, 256]);
+        assert_eq!(m.path_of(g), Path::new("/tmp/arts/gemm_256.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse(Path::new("."), "justname").is_err());
+        assert!(Manifest::parse(Path::new("."), "a b c bad-spec").is_err());
+    }
+}

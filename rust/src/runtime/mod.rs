@@ -1,0 +1,9 @@
+//! Request-path runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`
+//! produced once by `python -m compile.aot`) and executes them on the
+//! PJRT CPU client. Python never runs here.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::Runtime;

@@ -1,0 +1,205 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path — Python is never involved at run time.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`. One compiled executable per
+//! artifact, cached after first use.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+
+/// The runtime: a PJRT client plus compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over the default artifact directory.
+    pub fn cpu() -> Result<Runtime> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    /// Create a CPU PJRT runtime over a specific artifact directory.
+    pub fn with_dir(dir: &std::path::Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect()
+    }
+
+    /// Input signature of an artifact.
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.path_of(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an f32 artifact: `inputs[i]` must match the manifest
+    /// signature. Returns the flattened f32 output (first tuple
+    /// element — our L2 functions return 1-tuples).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let spec = self.signature(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if data.len() != tspec.numel() {
+                return Err(anyhow!(
+                    "{name} input {i}: expected {} elements, got {}",
+                    tspec.numel(),
+                    data.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(&tspec.dims_i64())
+                .with_context(|| format!("reshaping input {i}"))?;
+            literals.push(lit);
+        }
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests are skipped (with a loud note) if artifacts haven't been
+    /// built — `make artifacts` is a build-time step, and `make test`
+    /// always runs it first.
+    fn runtime() -> Option<Runtime> {
+        match Runtime::cpu() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!("SKIP pjrt tests: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_artifact_matches_host_reference() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 256;
+        let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let y: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+        let got = rt.execute_f32("gemm_256", &[&x, &y]).expect("execute");
+        assert_eq!(got.len(), n * n);
+        // Host reference for a few entries.
+        for &(r, c) in &[(0usize, 0usize), (5, 9), (100, 200), (255, 255)] {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += (x[r * n + k] as f64) * (y[k * n + c] as f64);
+            }
+            let got_v = got[r * n + c] as f64;
+            assert!(
+                (got_v - acc).abs() <= 1e-3 * acc.abs().max(1.0),
+                "({r},{c}): {got_v} vs {acc}"
+            );
+        }
+    }
+
+    #[test]
+    fn rectangular_gemm_shape() {
+        let Some(mut rt) = runtime() else { return };
+        let x = vec![0.01f32; 128 * 256];
+        let y = vec![0.02f32; 256 * 512];
+        let got = rt.execute_f32("gemm_128x512x256", &[&x, &y]).unwrap();
+        assert_eq!(got.len(), 128 * 512);
+        // All entries equal: 256 * 0.01 * 0.02 = 0.0512.
+        for &v in got.iter().take(10) {
+            assert!((v - 0.0512).abs() < 1e-5, "{v}");
+        }
+    }
+
+    #[test]
+    fn fsdp_layer_residual_identity_with_zero_weights() {
+        let Some(mut rt) = runtime() else { return };
+        let x: Vec<f32> = (0..64 * 128).map(|i| (i % 11) as f32 * 0.1).collect();
+        let w1 = vec![0.0f32; 128 * 256];
+        let w2 = vec![0.0f32; 256 * 128];
+        let got = rt.execute_f32("fsdp_layer", &[&x, &w1, &w2]).unwrap();
+        assert_eq!(got.len(), x.len());
+        for (a, b) in got.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(mut rt) = runtime() else { return };
+        let bad = vec![0.0f32; 3];
+        assert!(rt.execute_f32("gemm_256", &[&bad, &bad]).is_err());
+        assert!(rt.execute_f32("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilation() {
+        let Some(mut rt) = runtime() else { return };
+        let x = vec![0.0f32; 256 * 256];
+        let t0 = std::time::Instant::now();
+        rt.execute_f32("gemm_256", &[&x, &x]).unwrap();
+        let first = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        rt.execute_f32("gemm_256", &[&x, &x]).unwrap();
+        let second = t1.elapsed();
+        // Second call skips compilation; allow generous slack.
+        assert!(second < first, "cache ineffective: {second:?} vs {first:?}");
+    }
+}

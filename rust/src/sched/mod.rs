@@ -1,0 +1,8 @@
+//! The C3 scheduler: strategies (§IV-C, §V, §VI) and the executor that
+//! produces concurrent timelines over the fluid simulator.
+
+pub mod executor;
+pub mod strategy;
+
+pub use executor::{C3Executor, C3Run};
+pub use strategy::Strategy;

@@ -1,0 +1,77 @@
+//! C3 execution strategies: the configurations the paper evaluates in
+//! Fig 8 and Fig 10.
+
+/// How a C3 scenario's computation and communication are scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Serialize: GEMM then collective (the speedup baseline of 1.0×).
+    Serial,
+    /// Concurrent streams, GEMM scheduled first (`c3_base`, §IV-C). The
+    /// CP works through the GEMM's queued grid first, so the collective
+    /// is dispatch-starved for most of the GEMM's lifetime.
+    C3Base,
+    /// Schedule prioritization (`c3_sp`, §V-A): the collective — the
+    /// kernel with the smaller, complementary resource need — is
+    /// launched first and gets its full CU need.
+    C3Sp,
+    /// Resource partitioning (`c3_rp`, §V-B): GEMM first, but `comm_cus`
+    /// CUs are reserved for the collective's stream so its workgroups
+    /// dispatch immediately into the partition.
+    C3Rp { comm_cus: u32 },
+    /// Both (`c3_sp_rp`, §V-B): comm first *and* a CU reservation. The
+    /// paper found no further gain over `c3_sp`.
+    C3SpRp { comm_cus: u32 },
+    /// ConCCL (§VI): communication offloaded to SDMA engines; all CUs
+    /// stay with the GEMM; no L1/L2 pollution.
+    Conccl,
+    /// ConCCL + resource partitioning (§VI-F): additionally take
+    /// `cus_removed` CUs away from *memory-bound* GEMMs (the Fig 5a
+    /// cache-behaviour speedup also helps under ConCCL).
+    ConcclRp { cus_removed: u32 },
+}
+
+impl Strategy {
+    /// Display name matching the paper's figure legends.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Serial => "serial",
+            Strategy::C3Base => "c3_base",
+            Strategy::C3Sp => "c3_sp",
+            Strategy::C3Rp { .. } => "c3_rp",
+            Strategy::C3SpRp { .. } => "c3_sp_rp",
+            Strategy::Conccl => "conccl",
+            Strategy::ConcclRp { .. } => "conccl_rp",
+        }
+    }
+
+    /// Does this strategy run the collective on compute units?
+    pub fn comm_on_cus(self) -> bool {
+        !matches!(self, Strategy::Conccl | Strategy::ConcclRp { .. })
+    }
+
+    /// The Fig 8 lineup (CU-collective strategies; the rp variants are
+    /// swept by the runner).
+    pub fn fig8_lineup() -> [Strategy; 3] {
+        [Strategy::C3Base, Strategy::C3Sp, Strategy::C3SpRp { comm_cus: 0 }]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(Strategy::C3Base.name(), "c3_base");
+        assert_eq!(Strategy::C3Rp { comm_cus: 32 }.name(), "c3_rp");
+        assert_eq!(Strategy::ConcclRp { cus_removed: 8 }.name(), "conccl_rp");
+    }
+
+    #[test]
+    fn cu_usage_classification() {
+        assert!(Strategy::C3Base.comm_on_cus());
+        assert!(Strategy::C3Sp.comm_on_cus());
+        assert!(!Strategy::Conccl.comm_on_cus());
+        assert!(!Strategy::ConcclRp { cus_removed: 8 }.comm_on_cus());
+    }
+}

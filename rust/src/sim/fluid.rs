@@ -1,0 +1,649 @@
+//! Fluid-rate discrete-event simulator.
+//!
+//! Concurrent GPU kernels are modelled as *fluid tasks*: each task has a
+//! quantity of abstract work, a per-task rate cap (work-units/s — this is
+//! where compute-unit allocation enters: the C3 executor sets the cap
+//! from the kernel model's `t(cu)`), and demands on shared *bandwidth
+//! resources* (HBM bytes, LLC bytes, fabric-link bytes per unit of
+//! work). Between events, every resource's capacity is split among
+//! active tasks by **max-min fair progressive filling**, task progress
+//! integrates at piecewise-constant rates, and the next event is the
+//! earliest task completion / arrival / scheduled wake.
+//!
+//! This is a processor-sharing fluid approximation of the real node:
+//! O((tasks + resources) · events), deterministic, and accurate for the
+//! coarse-grained kernel overlap the paper studies (kernels run for
+//! milliseconds; interference is a bandwidth/occupancy phenomenon, not a
+//! cycle-level one).
+//!
+//! The simulator itself knows nothing about GPUs: CU policies, launch
+//! latencies and interference penalties are applied by the caller (the
+//! C3 executor in `sched/`) between events via [`Sim::set_cap`] /
+//! [`Sim::set_demand`].
+
+/// Index of a resource registered with [`Sim::add_resource`].
+pub type ResourceId = usize;
+/// Index of a task registered with [`Sim::add_task`].
+pub type TaskId = usize;
+
+/// Tolerance for "work is finished" / "resource is saturated" decisions.
+const EPS: f64 = 1e-12;
+
+/// A shared bandwidth resource (capacity in units/s).
+#[derive(Debug, Clone)]
+pub struct Resource {
+    pub name: String,
+    pub capacity: f64,
+}
+
+/// Specification of a fluid task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Diagnostic name.
+    pub name: String,
+    /// Simulation time at which the task becomes runnable.
+    pub arrival: f64,
+    /// Total abstract work (normally 1.0 = "one kernel").
+    pub work: f64,
+    /// `(resource, units-per-unit-work)` demands. A task moving 64 GB
+    /// over HBM with work=1.0 demands `(hbm, 64e9)`.
+    pub demands: Vec<(ResourceId, f64)>,
+    /// Maximum progress rate in work-units/s (∞ allowed only if some
+    /// demand bounds the task).
+    pub cap: f64,
+}
+
+#[derive(Debug, Clone)]
+struct TaskState {
+    spec: TaskSpec,
+    remaining: f64,
+    cap: f64,
+    rate: f64,
+    started: Option<f64>,
+    finished: Option<f64>,
+}
+
+/// What [`Sim::next_event`] observed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A task became runnable.
+    Arrival(TaskId),
+    /// A task finished its work.
+    Completion(TaskId),
+    /// A caller-scheduled wake point was reached.
+    Wake(f64),
+    /// No runnable or pending work remains.
+    Idle,
+}
+
+/// The fluid simulator. See module docs.
+#[derive(Debug, Clone)]
+pub struct Sim {
+    time: f64,
+    resources: Vec<Resource>,
+    tasks: Vec<TaskState>,
+    wakes: Vec<f64>,
+    rates_dirty: bool,
+    // Scratch buffers reused across events (hot path: no allocation).
+    scratch_frozen: Vec<bool>,
+    scratch_load: Vec<f64>,
+    scratch_slack: Vec<f64>,
+}
+
+impl Sim {
+    /// Empty simulator at t = 0.
+    pub fn new() -> Sim {
+        Sim {
+            time: 0.0,
+            resources: Vec::new(),
+            tasks: Vec::new(),
+            wakes: Vec::new(),
+            rates_dirty: true,
+            scratch_frozen: Vec::new(),
+            scratch_load: Vec::new(),
+            scratch_slack: Vec::new(),
+        }
+    }
+
+    /// Register a shared resource.
+    pub fn add_resource(&mut self, name: &str, capacity: f64) -> ResourceId {
+        assert!(capacity > 0.0, "resource capacity must be positive");
+        self.resources.push(Resource {
+            name: name.to_string(),
+            capacity,
+        });
+        self.scratch_load.push(0.0);
+        self.scratch_slack.push(0.0);
+        self.resources.len() - 1
+    }
+
+    /// Register a task; it arrives at `spec.arrival` (may be in the past,
+    /// i.e. ≤ current time, in which case it is runnable immediately).
+    pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
+        assert!(spec.work >= 0.0, "negative work");
+        assert!(spec.cap >= 0.0, "negative cap");
+        for &(rid, amt) in &spec.demands {
+            assert!(rid < self.resources.len(), "unknown resource {rid}");
+            assert!(amt >= 0.0, "negative demand");
+        }
+        let cap = spec.cap;
+        let remaining = spec.work;
+        self.tasks.push(TaskState {
+            spec,
+            remaining,
+            cap,
+            rate: 0.0,
+            started: None,
+            finished: None,
+        });
+        self.scratch_frozen.push(false);
+        self.rates_dirty = true;
+        self.tasks.len() - 1
+    }
+
+    /// Change a task's rate cap (e.g. its CU allocation changed).
+    /// No-op (and no rate recomputation) when the cap is unchanged —
+    /// the C3 executor calls this on every event.
+    pub fn set_cap(&mut self, tid: TaskId, cap: f64) {
+        assert!(cap >= 0.0);
+        if self.tasks[tid].cap == cap {
+            return;
+        }
+        self.tasks[tid].cap = cap;
+        self.rates_dirty = true;
+    }
+
+    /// Current rate cap of a task.
+    pub fn cap(&self, tid: TaskId) -> f64 {
+        self.tasks[tid].cap
+    }
+
+    /// Replace a task's demand on one resource (per unit work).
+    pub fn set_demand(&mut self, tid: TaskId, rid: ResourceId, per_work: f64) {
+        assert!(per_work >= 0.0);
+        let t = &mut self.tasks[tid];
+        if let Some(d) = t.spec.demands.iter_mut().find(|(r, _)| *r == rid) {
+            if d.1 == per_work {
+                return; // unchanged: keep current rates valid
+            }
+            d.1 = per_work;
+        } else {
+            t.spec.demands.push((rid, per_work));
+        }
+        self.rates_dirty = true;
+    }
+
+    /// Schedule a wake event (control point) at absolute time `t`.
+    pub fn schedule_wake(&mut self, t: f64) {
+        assert!(t >= self.time, "wake in the past");
+        self.wakes.push(t);
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.time
+    }
+
+    /// Remaining work fraction of a task (1 = untouched, 0 = done).
+    pub fn remaining_frac(&self, tid: TaskId) -> f64 {
+        let t = &self.tasks[tid];
+        if t.spec.work <= 0.0 {
+            0.0
+        } else {
+            t.remaining / t.spec.work
+        }
+    }
+
+    /// Completion time, if the task has finished.
+    pub fn finish_time(&self, tid: TaskId) -> Option<f64> {
+        self.tasks[tid].finished
+    }
+
+    /// Start (arrival-activation) time, if the task has become runnable.
+    pub fn start_time(&self, tid: TaskId) -> Option<f64> {
+        self.tasks[tid].started
+    }
+
+    /// Is the task active (arrived, unfinished)?
+    pub fn is_active(&self, tid: TaskId) -> bool {
+        let t = &self.tasks[tid];
+        t.started.is_some() && t.finished.is_none()
+    }
+
+    /// Current progress rate of a task (work-units/s) under the last
+    /// computed allocation.
+    pub fn rate(&self, tid: TaskId) -> f64 {
+        self.tasks[tid].rate
+    }
+
+    fn recompute_rates(&mut self) {
+        // Max-min fair progressive filling over active tasks.
+        let n = self.tasks.len();
+        for f in self.scratch_frozen.iter_mut() {
+            *f = true;
+        }
+        let mut any = false;
+        for i in 0..n {
+            let t = &mut self.tasks[i];
+            t.rate = 0.0;
+            let active =
+                t.finished.is_none() && t.spec.arrival <= self.time + EPS && t.remaining > EPS;
+            if active && t.cap > EPS {
+                self.scratch_frozen[i] = false;
+                any = true;
+            }
+        }
+        if !any {
+            self.rates_dirty = false;
+            return;
+        }
+        // Remaining slack per resource.
+        for (r, s) in self.resources.iter().zip(self.scratch_slack.iter_mut()) {
+            *s = r.capacity;
+        }
+        // Progressive filling: raise all unfrozen rates uniformly until a
+        // cap or a resource saturates; iterate.
+        for _round in 0..(n + self.resources.len() + 1) {
+            // Load per resource from unfrozen tasks.
+            for l in self.scratch_load.iter_mut() {
+                *l = 0.0;
+            }
+            let mut delta = f64::INFINITY;
+            let mut any_unfrozen = false;
+            for i in 0..n {
+                if self.scratch_frozen[i] {
+                    continue;
+                }
+                any_unfrozen = true;
+                let t = &self.tasks[i];
+                delta = delta.min(t.cap - t.rate);
+                for &(rid, amt) in &t.spec.demands {
+                    self.scratch_load[rid] += amt;
+                }
+            }
+            if !any_unfrozen {
+                break;
+            }
+            for rid in 0..self.resources.len() {
+                if self.scratch_load[rid] > EPS {
+                    delta = delta.min(self.scratch_slack[rid] / self.scratch_load[rid]);
+                }
+            }
+            debug_assert!(delta.is_finite(), "unbounded task rate: add a cap");
+            let delta = delta.max(0.0);
+            // Apply the uniform raise and consume slack.
+            for i in 0..n {
+                if self.scratch_frozen[i] {
+                    continue;
+                }
+                self.tasks[i].rate += delta;
+                for &(rid, amt) in &self.tasks[i].spec.demands {
+                    self.scratch_slack[rid] -= amt * delta;
+                }
+            }
+            // Freeze tasks at cap or touching a saturated resource.
+            for i in 0..n {
+                if self.scratch_frozen[i] {
+                    continue;
+                }
+                let t = &self.tasks[i];
+                let at_cap = t.rate >= t.cap - EPS * t.cap.max(1.0);
+                let saturated = t
+                    .spec
+                    .demands
+                    .iter()
+                    .any(|&(rid, amt)| amt > EPS && self.scratch_slack[rid] <= EPS * self.resources[rid].capacity);
+                if at_cap || saturated {
+                    self.scratch_frozen[i] = true;
+                }
+            }
+        }
+        self.rates_dirty = false;
+    }
+
+    /// Advance to the next event and return it. Between calls the caller
+    /// may adjust caps/demands (they take effect immediately).
+    pub fn next_event(&mut self) -> Event {
+        // Zero-time events first: tasks that already drained their work
+        // (e.g. simultaneous completions after the last integration).
+        for i in 0..self.tasks.len() {
+            let t = &mut self.tasks[i];
+            if t.started.is_some() && t.finished.is_none() && t.remaining <= EPS {
+                t.remaining = 0.0;
+                t.finished = Some(self.time);
+                self.rates_dirty = true;
+                return Event::Completion(i);
+            }
+        }
+        // Then activate arrivals that are due *now*.
+        for i in 0..self.tasks.len() {
+            let t = &mut self.tasks[i];
+            if t.started.is_none() && t.finished.is_none() && t.spec.arrival <= self.time + EPS {
+                t.started = Some(self.time.max(t.spec.arrival));
+                self.rates_dirty = true;
+                // Zero-work tasks complete instantly.
+                if t.remaining <= EPS {
+                    t.finished = Some(self.time);
+                    return Event::Completion(i);
+                }
+                return Event::Arrival(i);
+            }
+        }
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        // Horizon candidates: completions, future arrivals, wakes.
+        let mut horizon = f64::INFINITY;
+        enum Kind {
+            None,
+            Completion(TaskId),
+            FutureArrival,
+            Wake(usize),
+        }
+        let mut kind = Kind::None;
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.finished.is_some() {
+                continue;
+            }
+            if t.started.is_some() {
+                if t.rate > EPS {
+                    let dt = t.remaining / t.rate;
+                    if self.time + dt < horizon {
+                        horizon = self.time + dt;
+                        kind = Kind::Completion(i);
+                    }
+                }
+            } else if t.spec.arrival < horizon {
+                horizon = t.spec.arrival;
+                kind = Kind::FutureArrival;
+            }
+        }
+        for (wi, &w) in self.wakes.iter().enumerate() {
+            if w < horizon {
+                horizon = w;
+                kind = Kind::Wake(wi);
+            }
+        }
+        if !horizon.is_finite() {
+            // Nothing can make progress. Distinguish "all done" from
+            // "stalled" (active tasks with zero rate wait for the caller
+            // to raise a cap — report Idle either way; the caller drives).
+            return Event::Idle;
+        }
+        // Integrate progress to the horizon.
+        let dt = horizon - self.time;
+        if dt > 0.0 {
+            for t in self.tasks.iter_mut() {
+                if t.started.is_some() && t.finished.is_none() && t.rate > 0.0 {
+                    t.remaining = (t.remaining - t.rate * dt).max(0.0);
+                }
+            }
+            self.time = horizon;
+        }
+        match kind {
+            Kind::Completion(i) => {
+                self.tasks[i].remaining = 0.0;
+                self.tasks[i].finished = Some(self.time);
+                self.rates_dirty = true;
+                Event::Completion(i)
+            }
+            Kind::Wake(wi) => {
+                self.wakes.swap_remove(wi);
+                self.rates_dirty = true;
+                Event::Wake(self.time)
+            }
+            Kind::FutureArrival => {
+                // Loop back through arrival activation at the new time.
+                self.next_event()
+            }
+            Kind::None => Event::Idle,
+        }
+    }
+
+    /// Drive to completion with no controller; returns per-task finish
+    /// times. Panics if the simulation stalls (a task never finishes).
+    pub fn run_to_completion(&mut self) -> Vec<f64> {
+        loop {
+            match self.next_event() {
+                Event::Idle => break,
+                _ => continue,
+            }
+        }
+        self.tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                t.finished
+                    .unwrap_or_else(|| panic!("task {} '{}' stalled", i, t.spec.name))
+            })
+            .collect()
+    }
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_rel_close;
+
+    fn task(name: &str, arrival: f64, work: f64, demands: Vec<(ResourceId, f64)>, cap: f64) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            arrival,
+            work,
+            demands,
+            cap,
+        }
+    }
+
+    #[test]
+    fn single_task_cap_bound() {
+        let mut sim = Sim::new();
+        let _r = sim.add_resource("hbm", 100.0);
+        // work 1, cap 0.5/s, demand far under capacity -> 2 s.
+        let t = sim.add_task(task("a", 0.0, 1.0, vec![(0, 10.0)], 0.5));
+        let fins = sim.run_to_completion();
+        assert_rel_close!(fins[t], 2.0, 1e-9);
+    }
+
+    #[test]
+    fn single_task_resource_bound() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        // demand 100 units/work at capacity 10/s -> rate 0.1 -> 10 s.
+        let t = sim.add_task(task("a", 0.0, 1.0, vec![(r, 100.0)], f64::INFINITY.min(1e18)));
+        sim.set_cap(t, 1e18);
+        let fins = sim.run_to_completion();
+        assert_rel_close!(fins[t], 10.0, 1e-9);
+    }
+
+    #[test]
+    fn two_tasks_share_bandwidth_proportionally() {
+        // Two identical tasks on one resource: each gets half.
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let fins = sim.run_to_completion();
+        // Alone each would take 1 s; sharing, both take 2 s.
+        assert_rel_close!(fins[a], 2.0, 1e-9);
+        assert_rel_close!(fins[b], 2.0, 1e-9);
+    }
+
+    #[test]
+    fn max_min_respects_caps_leaving_slack_to_others() {
+        // Task a is cap-bound at 0.2 (uses 2 of 10 units/s); task b gets
+        // the remaining 8 -> rate 0.8.
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 0.2));
+        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let fins = sim.run_to_completion();
+        assert_rel_close!(fins[b], 1.25, 1e-9); // 1 / 0.8
+        assert_rel_close!(fins[a], 5.0, 1e-9); // cap-bound throughout
+    }
+
+    #[test]
+    fn completion_frees_bandwidth_for_survivor() {
+        // a: work 0.5 shared phase; after a completes, b speeds up.
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let a = sim.add_task(task("a", 0.0, 0.5, vec![(r, 10.0)], 1e18));
+        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let fins = sim.run_to_completion();
+        // Shared at rate .5 each until t=1 (a done: progress .5 each);
+        // then b alone at rate 1: remaining .5 -> t=1.5.
+        assert_rel_close!(fins[a], 1.0, 1e-9);
+        assert_rel_close!(fins[b], 1.5, 1e-9);
+    }
+
+    #[test]
+    fn late_arrival_slows_first_task() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let b = sim.add_task(task("b", 0.5, 1.0, vec![(r, 10.0)], 1e18));
+        let fins = sim.run_to_completion();
+        // a alone until .5 (progress .5), then shared .5 rate: remaining
+        // .5 at rate .5 -> a ends at 1.5. b: work 1 at .5 until a ends
+        // (progress .5 at t=1.5), then alone rate 1 -> ends 2.0.
+        assert_rel_close!(fins[a], 1.5, 1e-9);
+        assert_rel_close!(fins[b], 2.0, 1e-9);
+    }
+
+    #[test]
+    fn multi_resource_bottleneck_is_binding() {
+        let mut sim = Sim::new();
+        let fast = sim.add_resource("fast", 100.0);
+        let slow = sim.add_resource("slow", 1.0);
+        let t = sim.add_task(task(
+            "a",
+            0.0,
+            1.0,
+            vec![(fast, 10.0), (slow, 2.0)],
+            1e18,
+        ));
+        let fins = sim.run_to_completion();
+        // slow allows rate 0.5; fast allows 10 -> 2 s.
+        assert_rel_close!(fins[t], 2.0, 1e-9);
+    }
+
+    #[test]
+    fn wake_allows_mid_flight_cap_change() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let t = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 0.25));
+        sim.schedule_wake(2.0);
+        // Drive manually: first event is the arrival, then the wake.
+        assert_eq!(sim.next_event(), Event::Arrival(t));
+        assert_eq!(sim.next_event(), Event::Wake(2.0));
+        // Progress so far: 0.5. Raise cap; remaining 0.5 at rate 1 -> 2.5.
+        sim.set_cap(t, 1e18);
+        match sim.next_event() {
+            Event::Completion(tid) => assert_eq!(tid, t),
+            e => panic!("expected completion, got {e:?}"),
+        }
+        assert_rel_close!(sim.finish_time(t).unwrap(), 2.5, 1e-9);
+    }
+
+    #[test]
+    fn zero_cap_task_waits_for_controller() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 0.0));
+        assert_eq!(sim.next_event(), Event::Arrival(a));
+        assert_eq!(sim.next_event(), Event::Arrival(b));
+        // b is starved (cap 0): a completes alone at t=1.
+        match sim.next_event() {
+            Event::Completion(tid) => assert_eq!(tid, a),
+            e => panic!("{e:?}"),
+        }
+        assert_rel_close!(sim.now(), 1.0, 1e-9);
+        // Controller grants b a cap now.
+        sim.set_cap(b, 1e18);
+        match sim.next_event() {
+            Event::Completion(tid) => assert_eq!(tid, b),
+            e => panic!("{e:?}"),
+        }
+        assert_rel_close!(sim.now(), 2.0, 1e-9);
+    }
+
+    #[test]
+    fn zero_work_task_completes_at_arrival() {
+        let mut sim = Sim::new();
+        sim.add_resource("hbm", 1.0);
+        let t = sim.add_task(task("z", 3.0, 0.0, vec![], 1.0));
+        let fins = sim.run_to_completion();
+        assert_rel_close!(fins[t], 3.0, 1e-9);
+    }
+
+    #[test]
+    fn prop_sharing_never_exceeds_capacity() {
+        use crate::util::prop::forall;
+        forall("fluid rates never exceed resource capacity", 60, |rng| {
+            let n = rng.i64_in(1, 6) as u64;
+            let cap_r = rng.f64_in(1.0, 100.0);
+            // (#tasks, resource capacity, demand scale)
+            (n, cap_r, rng.f64_in(0.1, 50.0))
+        })
+        .check(|&(n, cap_r, dscale)| {
+            let mut sim = Sim::new();
+            let r = sim.add_resource("r", cap_r);
+            for i in 0..n {
+                sim.add_task(TaskSpec {
+                    name: format!("t{i}"),
+                    arrival: 0.0,
+                    work: 1.0,
+                    demands: vec![(r, dscale * (i + 1) as f64)],
+                    cap: 1e18,
+                });
+            }
+            sim.next_event(); // activate at least one
+            while sim.rates_dirty {
+                sim.recompute_rates();
+            }
+            let used: f64 = (0..n as usize)
+                .map(|i| sim.rate(i) * dscale * (i + 1) as f64)
+                .sum();
+            if used <= cap_r * (1.0 + 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("used {used} > capacity {cap_r}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_work_conservation() {
+        // Total finish time of identical sharing tasks equals n * solo
+        // time (work conservation of processor sharing).
+        use crate::util::prop::forall;
+        forall("work conservation", 40, |rng| rng.i64_in(1, 8) as u64).check(|&n| {
+            let mut sim = Sim::new();
+            let r = sim.add_resource("r", 10.0);
+            for i in 0..n {
+                sim.add_task(TaskSpec {
+                    name: format!("t{i}"),
+                    arrival: 0.0,
+                    work: 1.0,
+                    demands: vec![(r, 10.0)],
+                    cap: 1e18,
+                });
+            }
+            let fins = sim.run_to_completion();
+            let max = fins.iter().cloned().fold(0.0, f64::max);
+            let expect = n as f64;
+            if (max - expect).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("makespan {max} vs expected {expect}"))
+            }
+        });
+    }
+}

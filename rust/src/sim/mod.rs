@@ -1,0 +1,10 @@
+//! Discrete-event fluid simulation core (machine-agnostic).
+//!
+//! [`fluid::Sim`] provides max-min-fair bandwidth sharing with an event
+//! loop; the GPU-specific semantics (CU allocation policies, launch
+//! latencies, interference penalties) are layered on top by `gpu/` and
+//! `sched/`.
+
+pub mod fluid;
+
+pub use fluid::{Event, Resource, ResourceId, Sim, TaskId, TaskSpec};

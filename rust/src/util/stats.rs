@@ -1,0 +1,222 @@
+//! Small statistics toolkit used by the measurement protocol and the
+//! bench harness.
+//!
+//! The paper's protocol (§IV-A1) is: 15 executions, first 6 warm-up, last
+//! 9 measured; we report medians. [`Summary`] captures the usual
+//! location/spread statistics of a measured sample.
+
+/// Arithmetic mean. Returns `NaN` on an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; all inputs must be positive. Standard aggregate for
+/// speedup ratios (used for the paper's "on average X× speedup" rows).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    debug_assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positives");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Sample standard deviation (n-1 denominator). 0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `q` in [0,100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Summary statistics of one measured sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p5: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Summarize a sample; `NaN`-filled for empty input.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                median: f64::NAN,
+                stddev: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                p5: f64::NAN,
+                p95: f64::NAN,
+            };
+        }
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            median: median(xs),
+            stddev: stddev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            p5: percentile(xs, 5.0),
+            p95: percentile(xs, 95.0),
+        }
+    }
+
+    /// Coefficient of variation (stddev / mean).
+    pub fn cv(&self) -> f64 {
+        self.stddev / self.mean
+    }
+}
+
+/// The paper's measurement protocol: run `total` times, discard the first
+/// `warmup`, summarize the rest. `f` returns one measurement (seconds).
+pub fn measure_protocol<F: FnMut(usize) -> f64>(
+    warmup: usize,
+    measured: usize,
+    mut f: F,
+) -> Summary {
+    let mut samples = Vec::with_capacity(measured);
+    for i in 0..(warmup + measured) {
+        let v = f(i);
+        if i >= warmup {
+            samples.push(v);
+        }
+    }
+    Summary::of(&samples)
+}
+
+/// Relative difference |a-b| / max(|a|,|b|); 0 if both are 0.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs());
+    if denom == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / denom
+    }
+}
+
+/// Assert two floats are within `tol` relative difference (test helper).
+#[macro_export]
+macro_rules! assert_rel_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        let rd = $crate::util::stats::rel_diff(a, b);
+        assert!(
+            rd <= tol,
+            "assert_rel_close failed: {} vs {} (rel diff {:.4} > {:.4})",
+            a,
+            b,
+            rd,
+            tol
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 100.0];
+        assert_eq!(mean(&xs), 22.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn median_interpolates_even_n() {
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let xs = [2.0, 8.0];
+        assert!((geomean(&xs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_known_value() {
+        // Sample stddev of [2,4,4,4,5,5,7,9] is ~2.138 (n-1).
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let xs = [3.0, 1.0, 2.0];
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan() && s.median.is_nan());
+    }
+
+    #[test]
+    fn protocol_discards_warmup() {
+        // Warm-up iterations return garbage; measured return 1.0.
+        let s = measure_protocol(6, 9, |i| if i < 6 { 1000.0 } else { 1.0 });
+        assert_eq!(s.n, 9);
+        assert_eq!(s.mean, 1.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn rel_close_macro() {
+        assert_rel_close!(100.0, 101.0, 0.02);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rel_close_macro_fails() {
+        assert_rel_close!(100.0, 120.0, 0.05);
+    }
+}

@@ -1,0 +1,249 @@
+//! ASCII table rendering for reports and bench output.
+//!
+//! Every table/figure regeneration bench prints through this module so
+//! the output is uniform and diffable against EXPERIMENTS.md.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers. Numeric-looking columns
+    /// default to right alignment once rows are added; override with
+    /// [`Table::aligns`].
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        let headers: Vec<String> = headers.into_iter().map(Into::into).collect();
+        let n = headers.len();
+        Table {
+            title: None,
+            headers,
+            aligns: vec![Align::Right; n],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set a title rendered above the table.
+    pub fn title<S: Into<String>>(mut self, title: S) -> Self {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Override column alignments (panics on length mismatch).
+    pub fn aligns(mut self, aligns: Vec<Align>) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns;
+        self
+    }
+
+    /// Mark the first `n` columns left-aligned (label columns).
+    pub fn left_cols(mut self, n: usize) -> Self {
+        for a in self.aligns.iter_mut().take(n) {
+            *a = Align::Left;
+        }
+        self
+    }
+
+    /// Add a row (panics on column-count mismatch).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row has {} cells, table has {} columns",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Add a separator row (rendered as a rule).
+    pub fn rule(&mut self) -> &mut Self {
+        self.rows.push(Vec::new()); // empty row encodes a rule
+        self
+    }
+
+    /// Number of data rows (rules excluded).
+    pub fn len(&self) -> usize {
+        self.rows.iter().filter(|r| !r.is_empty()).count()
+    }
+
+    /// True if no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let rule: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i] - cell.chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            if row.is_empty() {
+                out.push_str(&rule);
+            } else {
+                out.push_str(&fmt_row(row, &self.aligns));
+            }
+            out.push('\n');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Render as tab-separated values (for piping into plotting tools).
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.headers.join("\t");
+        out.push('\n');
+        for row in &self.rows {
+            if row.is_empty() {
+                continue;
+            }
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format an f64 with fixed decimals — table cell helper.
+pub fn f(v: f64, decimals: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.decimals$}")
+    }
+}
+
+/// Format a speedup like `1.43x`.
+pub fn speedup(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.2}x")
+    }
+}
+
+/// Format a percentage like `72%` (already in 0-100 space).
+pub fn pct(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.0}%")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(vec!["name", "value"]).left_cols(1);
+        t.row(vec!["alpha", "1.00"]);
+        t.row(vec!["b", "123.45"]);
+        let r = t.render();
+        assert!(r.contains("| alpha |"));
+        assert!(r.contains("| 123.45 |"));
+        // All lines same width.
+        let widths: Vec<usize> = r.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn title_and_rule() {
+        let mut t = Table::new(vec!["a"]).title("T");
+        t.row(vec!["1"]);
+        t.rule();
+        t.row(vec!["2"]);
+        let r = t.render();
+        assert!(r.starts_with("T\n"));
+        assert_eq!(r.matches("+---+").count(), 4); // top, after header, mid-rule, bottom
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn tsv_skips_rules() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        t.rule();
+        t.row(vec!["3", "4"]);
+        assert_eq!(t.to_tsv(), "a\tb\n1\t2\n3\t4\n");
+    }
+
+    #[test]
+    fn cell_formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(speedup(1.666), "1.67x");
+        assert_eq!(pct(72.4), "72%");
+        assert_eq!(f(f64::NAN, 2), "-");
+    }
+}

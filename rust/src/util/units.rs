@@ -1,0 +1,179 @@
+//! Byte / time / rate units: parsing and pretty-printing.
+//!
+//! The paper tags scenarios like `mb1_896M` and `cb5_13G`: sizes use
+//! binary-ish ML conventions (M = MiB, G = GiB). [`parse_bytes`] accepts
+//! those suffixes; formatters render engineering-friendly strings for
+//! tables and reports.
+
+/// 1 KiB.
+pub const KIB: u64 = 1024;
+/// 1 MiB.
+pub const MIB: u64 = 1024 * KIB;
+/// 1 GiB.
+pub const GIB: u64 = 1024 * MIB;
+
+/// Parse a byte-size string: `"896M"`, `"3.25G"`, `"512K"`, `"64"` (raw
+/// bytes), `"13G"`. Suffixes are binary (K=KiB, M=MiB, G=GiB, T=TiB),
+/// matching the paper's scenario tags. Case-insensitive; optional final
+/// `B`/`iB` tolerated (`"896MiB"`).
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty size string".into());
+    }
+    let lower = t.to_ascii_lowercase();
+    let lower = lower
+        .strip_suffix("ib")
+        .or_else(|| lower.strip_suffix('b').filter(|r| !r.is_empty()))
+        .unwrap_or(&lower);
+    let (num_part, mult) = match lower.chars().last() {
+        Some('k') => (&lower[..lower.len() - 1], KIB as f64),
+        Some('m') => (&lower[..lower.len() - 1], MIB as f64),
+        Some('g') => (&lower[..lower.len() - 1], GIB as f64),
+        Some('t') => (&lower[..lower.len() - 1], (GIB * KIB) as f64),
+        _ => (&lower[..], 1.0),
+    };
+    let v: f64 = num_part
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad size '{s}': {e}"))?;
+    if v < 0.0 {
+        return Err(format!("negative size '{s}'"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
+/// Format bytes with a binary suffix, trimming trailing zeros:
+/// `939524096 -> "896M"`, `3489660928 -> "3.25G"`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    let (v, suffix) = if b >= GIB as f64 {
+        (b / GIB as f64, "G")
+    } else if b >= MIB as f64 {
+        (b / MIB as f64, "M")
+    } else if b >= KIB as f64 {
+        (b / KIB as f64, "K")
+    } else {
+        return format!("{bytes}B");
+    };
+    let s = format!("{v:.2}");
+    let s = s.trim_end_matches('0').trim_end_matches('.');
+    format!("{s}{suffix}")
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/us/ms/s).
+pub fn fmt_seconds(secs: f64) -> String {
+    let a = secs.abs();
+    if !a.is_finite() {
+        format!("{secs}")
+    } else if a >= 1.0 {
+        format!("{secs:.3}s")
+    } else if a >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Format a bandwidth in bytes/second as GB/s (decimal GB, the convention
+/// the paper uses for link/HBM bandwidths).
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    if bytes_per_s >= 1e12 {
+        format!("{:.2}TB/s", bytes_per_s / 1e12)
+    } else {
+        format!("{:.1}GB/s", bytes_per_s / 1e9)
+    }
+}
+
+/// Format a FLOP rate as TFLOP/s or PFLOP/s.
+pub fn fmt_flops(flops_per_s: f64) -> String {
+    if flops_per_s >= 1e15 {
+        format!("{:.2}PF/s", flops_per_s / 1e15)
+    } else {
+        format!("{:.1}TF/s", flops_per_s / 1e12)
+    }
+}
+
+/// Format a count with thousands separators (`1234567 -> "1,234,567"`).
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_and_suffixed() {
+        assert_eq!(parse_bytes("64").unwrap(), 64);
+        assert_eq!(parse_bytes("1K").unwrap(), 1024);
+        assert_eq!(parse_bytes("896M").unwrap(), 896 * MIB);
+        assert_eq!(parse_bytes("3.25G").unwrap(), (3.25 * GIB as f64) as u64);
+        assert_eq!(parse_bytes("13G").unwrap(), 13 * GIB);
+    }
+
+    #[test]
+    fn parse_tolerates_case_and_ib() {
+        assert_eq!(parse_bytes("896m").unwrap(), 896 * MIB);
+        assert_eq!(parse_bytes("896MiB").unwrap(), 896 * MIB);
+        assert_eq!(parse_bytes("896MB").unwrap(), 896 * MIB);
+        assert_eq!(parse_bytes(" 2G ").unwrap(), 2 * GIB);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("abc").is_err());
+        assert!(parse_bytes("-5M").is_err());
+    }
+
+    #[test]
+    fn fmt_round_trips_paper_tags() {
+        assert_eq!(fmt_bytes(896 * MIB), "896M");
+        assert_eq!(fmt_bytes((3.25 * GIB as f64) as u64), "3.25G");
+        assert_eq!(fmt_bytes(13 * GIB), "13G");
+        assert_eq!(fmt_bytes(512 * MIB), "512M");
+        assert_eq!(fmt_bytes(100), "100B");
+    }
+
+    #[test]
+    fn parse_fmt_inverse_on_common_sizes() {
+        for s in ["128M", "512M", "896M", "1G", "2.5G", "4G", "6G", "13G", "20G", "26.5G"] {
+            let b = parse_bytes(s).unwrap();
+            assert_eq!(parse_bytes(&fmt_bytes(b)).unwrap(), b, "tag {s}");
+        }
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_seconds(1.5), "1.500s");
+        assert_eq!(fmt_seconds(0.00125), "1.250ms");
+        assert_eq!(fmt_seconds(2.5e-6), "2.500us");
+        assert_eq!(fmt_seconds(3e-9), "3.0ns");
+    }
+
+    #[test]
+    fn fmt_rates() {
+        assert_eq!(fmt_bw(5.3e12), "5.30TB/s");
+        assert_eq!(fmt_bw(64e9), "64.0GB/s");
+        assert_eq!(fmt_flops(1.3e15), "1.30PF/s");
+    }
+
+    #[test]
+    fn fmt_count_separators() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+}

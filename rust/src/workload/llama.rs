@@ -1,0 +1,187 @@
+//! LLaMA-derived workloads: Table I GEMMs and the FSDP weight-gather
+//! sizes behind Table II's collective payloads.
+//!
+//! The paper sources its shapes from LLaMA-3 70B / 405B training with
+//! 8192 tokens per iteration (§IV-A2). We *derive* them from the
+//! published model dimensions rather than hard-coding, so the mapping is
+//! auditable:
+//!
+//! | tag | role | shape (M×N×K) |
+//! |-----|------|----------------|
+//! | cb1 | 70B attention projection fwd | tokens × h × h |
+//! | cb2 | 405B attention projection grad (transposed) | h × tokens × h |
+//! | cb3 | 405B attention weight grad `dW = dYᵀX` | h × h × tokens |
+//! | cb4 | 405B fused-QKV fwd (transposed) | qkv × tokens × h |
+//! | cb5 | 405B fused MLP-up fwd (transposed) | 2·ffn × tokens × h |
+//! | mb1 | 70B fused MLP-up fwd | tokens × 2·ffn × h |
+//! | mb2 | 405B MLP-up weight grad | h × 2·ffn × tokens |
+//!
+//! FSDP all-gathers materialize full layer weights from 8-way shards;
+//! the gathered-weight sizes are exactly the paper's LLaMA-sourced
+//! collective payloads (e.g. the 70B fused MLP weight, 8192×57344 bf16 =
+//! 896 MiB, is Table II's `mb1_896M`).
+
+use crate::config::workload::{DType, GemmShape};
+use crate::kernels::gemm::GemmKernel;
+
+/// Transformer dimensions needed to derive the paper's GEMMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlamaConfig {
+    /// Model name for reports.
+    pub name: &'static str,
+    /// Hidden (model) dimension.
+    pub hidden: usize,
+    /// MLP intermediate dimension (one of the two fused projections).
+    pub ffn: usize,
+    /// Query heads.
+    pub q_heads: usize,
+    /// KV heads (GQA).
+    pub kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Tokens processed per iteration (batch × sequence).
+    pub tokens: usize,
+}
+
+impl LlamaConfig {
+    /// LLaMA-3 70B.
+    pub fn llama70b() -> Self {
+        LlamaConfig {
+            name: "LLaMA-70B",
+            hidden: 8192,
+            ffn: 28672,
+            q_heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            tokens: 8192,
+        }
+    }
+
+    /// LLaMA-3 405B.
+    pub fn llama405b() -> Self {
+        LlamaConfig {
+            name: "LLaMA-405B",
+            hidden: 16384,
+            ffn: 53248,
+            q_heads: 128,
+            kv_heads: 8,
+            head_dim: 128,
+            tokens: 8192,
+        }
+    }
+
+    /// Fused gate+up MLP projection width (2·ffn).
+    pub fn ffn_fused(&self) -> usize {
+        2 * self.ffn
+    }
+
+    /// Fused QKV projection width ((q_heads + 2·kv_heads) · head_dim).
+    pub fn qkv_fused(&self) -> usize {
+        (self.q_heads + 2 * self.kv_heads) * self.head_dim
+    }
+
+    /// Bytes of the full (gathered) fused MLP weight in `dtype`.
+    pub fn mlp_weight_bytes(&self, dtype: DType) -> u64 {
+        (self.hidden * self.ffn_fused() * dtype.bytes()) as u64
+    }
+
+    /// Bytes of the full attention-projection weight (h × h).
+    pub fn attn_weight_bytes(&self, dtype: DType) -> u64 {
+        (self.hidden * self.hidden * dtype.bytes()) as u64
+    }
+
+    /// Bytes of one unfused MLP projection weight (h × ffn).
+    pub fn mlp_half_weight_bytes(&self, dtype: DType) -> u64 {
+        (self.hidden * self.ffn * dtype.bytes()) as u64
+    }
+}
+
+/// Table I: the seven GEMMs under study, derived from model dims.
+pub fn table1() -> Vec<GemmKernel> {
+    let l70 = LlamaConfig::llama70b();
+    let l405 = LlamaConfig::llama405b();
+    vec![
+        GemmKernel::new("cb1", GemmShape::bf16(l70.tokens, l70.hidden, l70.hidden)),
+        GemmKernel::new("cb2", GemmShape::bf16(l405.hidden, l405.tokens, l405.hidden)),
+        GemmKernel::new("cb3", GemmShape::bf16(l405.hidden, l405.hidden, l405.tokens)),
+        GemmKernel::new(
+            "cb4",
+            GemmShape::bf16(l405.qkv_fused(), l405.tokens, l405.hidden),
+        ),
+        GemmKernel::new(
+            "cb5",
+            GemmShape::bf16(l405.ffn_fused(), l405.tokens, l405.hidden),
+        ),
+        GemmKernel::new(
+            "mb1",
+            GemmShape::bf16(l70.tokens, l70.ffn_fused(), l70.hidden),
+        ),
+        GemmKernel::new(
+            "mb2",
+            GemmShape::bf16(l405.hidden, l405.ffn_fused(), l405.tokens),
+        ),
+    ]
+}
+
+/// Look up a Table I GEMM by tag.
+pub fn gemm_by_tag(tag: &str) -> Option<GemmKernel> {
+    table1().into_iter().find(|k| k.tag == tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GIB, MIB};
+
+    #[test]
+    fn table1_shapes_match_paper() {
+        // Paper Table I, shapes written M×N×K.
+        let expect = [
+            ("cb1", 8192, 8192, 8192),
+            ("cb2", 16384, 8192, 16384),
+            ("cb3", 16384, 16384, 8192),
+            ("cb4", 18432, 8192, 16384),
+            ("cb5", 106496, 8192, 16384),
+            ("mb1", 8192, 57344, 8192),
+            ("mb2", 16384, 106496, 8192),
+        ];
+        let got = table1();
+        assert_eq!(got.len(), expect.len());
+        for (k, (tag, m, n, kk)) in got.iter().zip(expect) {
+            assert_eq!(k.tag, tag);
+            assert_eq!((k.shape.m, k.shape.n, k.shape.k), (m, n, kk), "{tag}");
+        }
+    }
+
+    #[test]
+    fn derived_dims_are_published_values() {
+        let l70 = LlamaConfig::llama70b();
+        let l405 = LlamaConfig::llama405b();
+        assert_eq!(l70.ffn_fused(), 57344);
+        assert_eq!(l405.ffn_fused(), 106496);
+        assert_eq!(l405.qkv_fused(), 18432);
+    }
+
+    #[test]
+    fn fsdp_weight_sizes_match_table2_payloads() {
+        // Table II's LLaMA-sourced collective sizes are gathered weights.
+        let l70 = LlamaConfig::llama70b();
+        let l405 = LlamaConfig::llama405b();
+        assert_eq!(l70.mlp_weight_bytes(DType::Bf16), 896 * MIB); // mb1_896M
+        assert_eq!(l405.attn_weight_bytes(DType::Bf16), 512 * MIB); // cb3/cb4_512M
+        assert_eq!(
+            l405.mlp_weight_bytes(DType::Bf16),
+            (3.25 * GIB as f64) as u64 // cb2/mb2_3.25G
+        );
+        assert_eq!(
+            l405.mlp_half_weight_bytes(DType::Bf16),
+            (1.625 * GIB as f64) as u64 // cb5_1.63G
+        );
+    }
+
+    #[test]
+    fn tag_lookup() {
+        assert!(gemm_by_tag("mb1").is_some());
+        assert!(gemm_by_tag("cb9").is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generation: LLaMA-derived GEMMs (Table I), the C3 scenario
+//! suite (Table II), and the taxonomy engine (§III).
+
+pub mod llama;
+pub mod scenarios;
+pub mod taxonomy;
+pub mod trace;
+
+pub use scenarios::{resolve, suite, suite_for, ResolvedScenario, Table2Row, TABLE2};
+pub use taxonomy::{pct_of_ideal, C3Type, Taxonomy};

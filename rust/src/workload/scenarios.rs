@@ -1,0 +1,168 @@
+//! Table II: the 15 C3 manifestations under study.
+//!
+//! Seven are manifested by FSDP training of LLaMA-70B/405B (8-way
+//! sharding: the collective payload is the gathered layer weight — see
+//! `workload::llama` for the exact derivations); eight are synthetic
+//! additions for taxonomy coverage. Every scenario is evaluated with
+//! both all-gather and all-to-all (30 scenario×collective combinations,
+//! §V-C's "24 of 30").
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{C3Scenario, CollectiveKind, CollectiveSpec, Source};
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::util::units::parse_bytes;
+use crate::workload::llama::gemm_by_tag;
+use crate::workload::taxonomy::C3Type;
+
+/// One Table II row: GEMM tag + collective size + source + the paper's
+/// printed taxonomy label (ours is recomputed; divergences are reported
+/// by the tab2 bench and EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct Table2Row {
+    pub gemm_tag: &'static str,
+    pub size: &'static str,
+    pub source: Source,
+    pub paper_type: C3Type,
+}
+
+/// The 15 rows of Table II, in paper order.
+pub const TABLE2: [Table2Row; 15] = [
+    // C3-type: G-long
+    Table2Row { gemm_tag: "mb1", size: "896M", source: Source::Llama70B, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "mb2", size: "3.25G", source: Source::Llama405B, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "mb1", size: "4G", source: Source::Synthetic, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "mb1", size: "6G", source: Source::Synthetic, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "cb3", size: "512M", source: Source::Llama405B, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "cb4", size: "512M", source: Source::Llama405B, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "cb5", size: "1.63G", source: Source::Llama405B, paper_type: C3Type::GLong },
+    Table2Row { gemm_tag: "cb4", size: "1G", source: Source::Synthetic, paper_type: C3Type::GLong },
+    // C3-type: C-long
+    Table2Row { gemm_tag: "mb1", size: "13G", source: Source::Synthetic, paper_type: C3Type::CLong },
+    Table2Row { gemm_tag: "cb2", size: "3.25G", source: Source::Llama405B, paper_type: C3Type::CLong },
+    Table2Row { gemm_tag: "cb4", size: "2.5G", source: Source::Synthetic, paper_type: C3Type::CLong },
+    Table2Row { gemm_tag: "cb1", size: "896M", source: Source::Llama70B, paper_type: C3Type::CLong },
+    Table2Row { gemm_tag: "cb5", size: "20G", source: Source::Synthetic, paper_type: C3Type::CLong },
+    // C3-type: GC-equal
+    Table2Row { gemm_tag: "mb2", size: "26.5G", source: Source::Synthetic, paper_type: C3Type::GcEqual },
+    Table2Row { gemm_tag: "cb5", size: "13G", source: Source::Synthetic, paper_type: C3Type::GcEqual },
+];
+
+/// A fully-resolved scenario ready for execution: models + metadata.
+#[derive(Debug, Clone)]
+pub struct ResolvedScenario {
+    pub scenario: C3Scenario,
+    pub gemm: GemmKernel,
+    pub comm: CollectiveKernel,
+    pub paper_type: C3Type,
+}
+
+impl ResolvedScenario {
+    /// Paper-style tag, e.g. `mb1_896M`.
+    pub fn tag(&self) -> String {
+        self.scenario.tag()
+    }
+
+    /// Our computed C3 type from the models (may diverge from the
+    /// paper's label on borderline rows).
+    pub fn computed_type(&self, m: &MachineConfig) -> C3Type {
+        C3Type::classify(
+            self.gemm.time_isolated(m, m.cus_total()),
+            self.comm.time_isolated_full(m),
+        )
+    }
+}
+
+/// Resolve one Table II row against a collective kind.
+pub fn resolve(row: &Table2Row, kind: CollectiveKind) -> ResolvedScenario {
+    let gemm = gemm_by_tag(row.gemm_tag)
+        .unwrap_or_else(|| panic!("unknown Table I tag {}", row.gemm_tag));
+    let size = parse_bytes(row.size).expect("bad Table II size literal");
+    let spec = CollectiveSpec::new(kind, size);
+    ResolvedScenario {
+        scenario: C3Scenario {
+            gemm_tag: row.gemm_tag.to_string(),
+            gemm: gemm.shape,
+            comm: spec,
+            source: row.source,
+        },
+        gemm,
+        comm: CollectiveKernel::new(spec),
+        paper_type: row.paper_type,
+    }
+}
+
+/// The full evaluation suite: all 15 rows × the collective kinds the
+/// paper sweeps (all-gather, all-to-all) = 30 combinations.
+pub fn suite() -> Vec<ResolvedScenario> {
+    let mut v = Vec::with_capacity(TABLE2.len() * 2);
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            v.push(resolve(row, kind));
+        }
+    }
+    v
+}
+
+/// Suite restricted to one collective kind (15 scenarios).
+pub fn suite_for(kind: CollectiveKind) -> Vec<ResolvedScenario> {
+    TABLE2.iter().map(|r| resolve(r, kind)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_paper_structure() {
+        assert_eq!(TABLE2.len(), 15);
+        let g = TABLE2.iter().filter(|r| r.paper_type == C3Type::GLong).count();
+        let c = TABLE2.iter().filter(|r| r.paper_type == C3Type::CLong).count();
+        let e = TABLE2.iter().filter(|r| r.paper_type == C3Type::GcEqual).count();
+        assert_eq!((g, c, e), (8, 5, 2));
+        // 7 LLaMA-sourced rows (paper: "seven are manifested in training").
+        let llama = TABLE2
+            .iter()
+            .filter(|r| r.source != Source::Synthetic)
+            .count();
+        assert_eq!(llama, 7);
+    }
+
+    #[test]
+    fn suite_is_30_combinations() {
+        let s = suite();
+        assert_eq!(s.len(), 30);
+        // Tags match the paper format.
+        assert!(s.iter().any(|x| x.tag() == "mb1_896M"));
+        assert!(s.iter().any(|x| x.tag() == "mb2_26.5G"));
+    }
+
+    #[test]
+    fn computed_taxonomy_mostly_matches_paper() {
+        // Our isolated-time models should agree with the paper's
+        // taxonomy labels on at least 12 of 15 all-gather rows
+        // (borderline rows may flip; EXPERIMENTS.md documents them).
+        let m = MachineConfig::mi300x();
+        let matches = suite_for(CollectiveKind::AllGather)
+            .iter()
+            .filter(|s| s.computed_type(&m) == s.paper_type)
+            .count();
+        assert!(matches >= 12, "only {matches}/15 taxonomy labels match");
+    }
+
+    #[test]
+    fn ideal_speedups_span_paper_range() {
+        // Fig 7: ideal speedups range ~1.1x to ~2x.
+        let m = MachineConfig::mi300x();
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for s in suite_for(CollectiveKind::AllGather) {
+            let tg = s.gemm.time_isolated(&m, m.cus_total());
+            let tc = s.comm.time_isolated_full(&m);
+            let ideal = (tg + tc) / tg.max(tc);
+            lo = lo.min(ideal);
+            hi = hi.max(ideal);
+        }
+        assert!(lo >= 1.05 && lo <= 1.25, "min ideal {lo:.3}");
+        assert!(hi >= 1.75 && hi <= 2.0, "max ideal {hi:.3}");
+    }
+}

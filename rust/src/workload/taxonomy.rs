@@ -1,0 +1,140 @@
+//! C3 taxonomy (paper §III, Fig 4).
+//!
+//! Three axes classify a C3 manifestation from *isolated* execution
+//! characteristics:
+//!
+//! 1. **C3 type** — relative magnitude of GEMM vs communication time:
+//!    `G-long` (GEMM > 115% of comm), `C-long` (comm > 115% of GEMM),
+//!    `GC-equal` (within 15%).
+//! 2. **GEMM boundedness** — compute- vs memory-bound by measured
+//!    op:byte against the machine balance point.
+//! 3. **Collective boundedness** — latency- vs bandwidth-bound by
+//!    whether latency at this size is commensurate with size.
+
+use crate::config::machine::MachineConfig;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+
+/// Relative-magnitude class of a C3 pair (paper Fig 4 ①).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum C3Type {
+    GLong,
+    CLong,
+    GcEqual,
+}
+
+impl C3Type {
+    /// Classify from isolated execution times with the paper's 15%
+    /// threshold.
+    pub fn classify(t_gemm: f64, t_comm: f64) -> C3Type {
+        assert!(t_gemm > 0.0 && t_comm > 0.0, "times must be positive");
+        if t_gemm > 1.15 * t_comm {
+            C3Type::GLong
+        } else if t_comm > 1.15 * t_gemm {
+            C3Type::CLong
+        } else {
+            C3Type::GcEqual
+        }
+    }
+
+    /// Display name matching the paper.
+    pub fn name(self) -> &'static str {
+        match self {
+            C3Type::GLong => "G-long",
+            C3Type::CLong => "C-long",
+            C3Type::GcEqual => "GC-equal",
+        }
+    }
+
+    /// All three, in paper order.
+    pub fn all() -> [C3Type; 3] {
+        [C3Type::GLong, C3Type::CLong, C3Type::GcEqual]
+    }
+}
+
+/// Full taxonomy record for one C3 manifestation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Taxonomy {
+    pub c3_type: C3Type,
+    /// Isolated GEMM / comm time ratio (Fig 4's "relative magnitude").
+    pub magnitude: f64,
+    pub gemm_compute_bound: bool,
+    pub comm_latency_bound: bool,
+}
+
+impl Taxonomy {
+    /// Classify a GEMM/collective pair from the analytic models.
+    pub fn of(m: &MachineConfig, gemm: &GemmKernel, comm: &CollectiveKernel) -> Taxonomy {
+        let tg = gemm.time_isolated(m, m.cus_total());
+        let tc = comm.time_isolated_full(m);
+        Taxonomy {
+            c3_type: C3Type::classify(tg, tc),
+            magnitude: tg / tc,
+            gemm_compute_bound: gemm.is_compute_bound(m),
+            comm_latency_bound: comm.is_latency_bound(m),
+        }
+    }
+
+    /// The ideal-speedup bound for this pair (paper §IV-B3): serial over
+    /// max — the shorter kernel fully hidden in the longer one's shadow.
+    pub fn ideal_speedup(t_gemm: f64, t_comm: f64) -> f64 {
+        (t_gemm + t_comm) / t_gemm.max(t_comm)
+    }
+}
+
+/// Percent-of-ideal metric used throughout the evaluation:
+/// `(attained - 1) / (ideal - 1)`, in percent. Degenerate ideals (no
+/// headroom) report 100 if attained, else 0.
+pub fn pct_of_ideal(attained: f64, ideal: f64) -> f64 {
+    if ideal <= 1.0 + 1e-12 {
+        return if attained >= ideal { 100.0 } else { 0.0 };
+    }
+    100.0 * (attained - 1.0) / (ideal - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::{CollectiveKind, CollectiveSpec};
+    use crate::util::units::MIB;
+    use crate::workload::llama::gemm_by_tag;
+
+    #[test]
+    fn classify_thresholds() {
+        assert_eq!(C3Type::classify(2.0, 1.0), C3Type::GLong);
+        assert_eq!(C3Type::classify(1.0, 2.0), C3Type::CLong);
+        assert_eq!(C3Type::classify(1.0, 1.1), C3Type::GcEqual);
+        assert_eq!(C3Type::classify(1.14, 1.0), C3Type::GcEqual);
+        assert_eq!(C3Type::classify(1.16, 1.0), C3Type::GLong);
+    }
+
+    #[test]
+    fn ideal_speedup_bounds() {
+        // Equal kernels: perfect hiding doubles throughput.
+        assert!((Taxonomy::ideal_speedup(1.0, 1.0) - 2.0).abs() < 1e-12);
+        // Extreme imbalance: no headroom.
+        assert!(Taxonomy::ideal_speedup(100.0, 0.001) < 1.01);
+    }
+
+    #[test]
+    fn pct_of_ideal_metric() {
+        assert!((pct_of_ideal(1.13, 1.6) - 21.67).abs() < 0.1); // the paper's 21%
+        assert_eq!(pct_of_ideal(1.0, 1.5), 0.0);
+        assert_eq!(pct_of_ideal(1.5, 1.5), 100.0);
+        assert_eq!(pct_of_ideal(1.2, 1.0), 100.0);
+    }
+
+    #[test]
+    fn mb1_896m_is_g_long_compute_hidden() {
+        let m = MachineConfig::mi300x();
+        let g = gemm_by_tag("mb1").unwrap();
+        let c = CollectiveKernel::new(CollectiveSpec::new(
+            CollectiveKind::AllGather,
+            896 * MIB,
+        ));
+        let t = Taxonomy::of(&m, &g, &c);
+        assert_eq!(t.c3_type, C3Type::GLong);
+        assert!(!t.gemm_compute_bound);
+        assert!(!t.comm_latency_bound);
+        assert!(t.magnitude > 1.15);
+    }
+}

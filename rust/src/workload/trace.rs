@@ -1,0 +1,189 @@
+//! FSDP execution traces: the per-layer C3 stages of a sharded
+//! transformer forward pass (§II-C: "FSDP gathers model weights for a
+//! given layer on a GPU (communication) while performing computations
+//! of previous layers").
+//!
+//! Each trace stage pairs one layer's computation GEMM with the weight
+//! all-gather of the *next* layer — exactly the overlap the Table II
+//! LLaMA rows come from. The e2e driver replays a trace under each
+//! strategy and sums the timeline.
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{CollectiveKind, CollectiveSpec, DType, Source};
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::sched::{C3Executor, C3Run, Strategy};
+use crate::workload::llama::{gemm_by_tag, LlamaConfig};
+use crate::workload::scenarios::ResolvedScenario;
+
+/// One C3 stage of the trace.
+#[derive(Debug, Clone)]
+pub struct TraceStage {
+    /// Human label, e.g. `layer3/mlp`.
+    pub label: String,
+    /// This layer's computation.
+    pub gemm: GemmKernel,
+    /// The next layer's weight gather.
+    pub gather: CollectiveKernel,
+}
+
+impl TraceStage {
+    /// View as a resolved scenario for the executor.
+    pub fn as_scenario(&self) -> ResolvedScenario {
+        ResolvedScenario {
+            scenario: crate::config::workload::C3Scenario {
+                gemm_tag: self.gemm.tag.clone(),
+                gemm: self.gemm.shape,
+                comm: self.gather.spec,
+                source: Source::Llama70B,
+            },
+            gemm: self.gemm.clone(),
+            comm: self.gather,
+            paper_type: crate::workload::taxonomy::C3Type::GLong,
+        }
+    }
+}
+
+/// An FSDP forward trace: alternating attention and MLP stages.
+#[derive(Debug, Clone)]
+pub struct FsdpTrace {
+    pub model: &'static str,
+    pub stages: Vec<TraceStage>,
+}
+
+/// Build the FSDP forward trace of `layers` transformer layers of a
+/// LLaMA-like model: each layer contributes an attention stage (cb1-
+/// style GEMM ∥ gather of the attn weight) and an MLP stage (mb1-style
+/// GEMM ∥ gather of the fused MLP weight).
+pub fn fsdp_forward_trace(l: &LlamaConfig, layers: usize) -> FsdpTrace {
+    let (attn_tag, mlp_tag) = if l.hidden == 8192 {
+        ("cb1", "mb1")
+    } else {
+        ("cb2", "mb2")
+    };
+    let attn_gemm = gemm_by_tag(attn_tag).expect("attn gemm");
+    let mlp_gemm = gemm_by_tag(mlp_tag).expect("mlp gemm");
+    let mut stages = Vec::with_capacity(2 * layers);
+    for i in 0..layers {
+        stages.push(TraceStage {
+            label: format!("layer{i}/attn"),
+            gemm: attn_gemm.clone(),
+            gather: CollectiveKernel::new(CollectiveSpec::new(
+                CollectiveKind::AllGather,
+                l.attn_weight_bytes(DType::Bf16),
+            )),
+        });
+        stages.push(TraceStage {
+            label: format!("layer{i}/mlp"),
+            gemm: mlp_gemm.clone(),
+            gather: CollectiveKernel::new(CollectiveSpec::new(
+                CollectiveKind::AllGather,
+                l.mlp_weight_bytes(DType::Bf16),
+            )),
+        });
+    }
+    FsdpTrace {
+        model: l.name,
+        stages,
+    }
+}
+
+/// Result of replaying a trace under one strategy.
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    pub strategy: Strategy,
+    /// Per-stage runs.
+    pub runs: Vec<C3Run>,
+    /// End-to-end time (sum of stage makespans).
+    pub total: f64,
+    /// Serial baseline (sum of stage serial times).
+    pub serial: f64,
+    /// Sum of stage ideal lower bounds.
+    pub ideal_total: f64,
+}
+
+impl TraceReplay {
+    /// End-to-end speedup over the serial schedule.
+    pub fn speedup(&self) -> f64 {
+        self.serial / self.total
+    }
+
+    /// End-to-end %-of-ideal.
+    pub fn pct_ideal(&self) -> f64 {
+        let ideal_speedup = self.serial / self.ideal_total;
+        crate::workload::taxonomy::pct_of_ideal(self.speedup(), ideal_speedup)
+    }
+}
+
+/// Replay a trace under a strategy: stages execute back-to-back (the
+/// gather of layer i+1 overlaps the compute of layer i within a stage;
+/// stages serialize on the data dependency).
+pub fn replay(m: &MachineConfig, trace: &FsdpTrace, strategy: Strategy) -> TraceReplay {
+    let exec = C3Executor::new(m.clone());
+    let mut runs = Vec::with_capacity(trace.stages.len());
+    let mut total = 0.0;
+    let mut serial = 0.0;
+    let mut ideal_total = 0.0;
+    for stage in &trace.stages {
+        let sc = stage.as_scenario();
+        let run = exec.run(&sc, strategy);
+        total += run.total;
+        serial += run.serial;
+        ideal_total += run.serial / run.ideal;
+        runs.push(run);
+    }
+    TraceReplay {
+        strategy,
+        runs,
+        total,
+        serial,
+        ideal_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_structure() {
+        let t = fsdp_forward_trace(&LlamaConfig::llama70b(), 4);
+        assert_eq!(t.stages.len(), 8);
+        assert_eq!(t.stages[0].label, "layer0/attn");
+        assert_eq!(t.stages[1].gemm.tag, "mb1");
+        // The MLP gather is the famous 896M payload.
+        assert_eq!(
+            t.stages[1].gather.spec.size_bytes,
+            896 * 1024 * 1024
+        );
+    }
+
+    #[test]
+    fn replay_orderings_hold_end_to_end() {
+        let m = MachineConfig::mi300x();
+        let t = fsdp_forward_trace(&LlamaConfig::llama70b(), 3);
+        let serial = replay(&m, &t, Strategy::Serial);
+        let base = replay(&m, &t, Strategy::C3Base);
+        let sp = replay(&m, &t, Strategy::C3Sp);
+        let conccl = replay(&m, &t, Strategy::Conccl);
+        assert!((serial.speedup() - 1.0).abs() < 1e-9);
+        assert!(base.speedup() >= 0.95);
+        // Per-stage sp vs base can be close on GC-equal-ish attention
+        // stages; end-to-end sp must not lose to base materially.
+        assert!(sp.speedup() + 0.02 >= base.speedup());
+        assert!(conccl.speedup() > sp.speedup());
+        assert!(conccl.speedup() > base.speedup());
+        assert!(conccl.total < serial.total);
+        // End-to-end %ideal in a sane band.
+        assert!(conccl.pct_ideal() > 50.0 && conccl.pct_ideal() <= 100.0);
+    }
+
+    #[test]
+    fn replay_405b_uses_405b_kernels() {
+        let m = MachineConfig::mi300x();
+        let t = fsdp_forward_trace(&LlamaConfig::llama405b(), 2);
+        assert_eq!(t.stages[0].gemm.tag, "cb2");
+        let r = replay(&m, &t, Strategy::Conccl);
+        assert_eq!(r.runs.len(), 4);
+        assert!(r.total > 0.0);
+    }
+}
