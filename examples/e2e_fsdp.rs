@@ -73,7 +73,7 @@ fn layer_ref(x: &[f32], w1: &[f32], w2: &[f32]) -> Vec<f32> {
     y
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let m = MachineConfig::mi300x();
     let mut rt = Runtime::cpu()?;
     let mut node = Node::new(m.clone());

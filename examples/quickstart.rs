@@ -19,7 +19,7 @@ use conccl::util::table::{f, speedup, Table};
 use conccl::util::units::fmt_seconds;
 use conccl::workload::scenarios::{resolve, TABLE2};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let m = MachineConfig::mi300x();
     println!(
         "machine: {} — {} CUs, {} SDMA engines, {} GPUs\n",

@@ -4,7 +4,9 @@
 //! conccl <subcommand> [--set machine.key=value ...] [options]
 //!   characterize   Tables I/II + Fig 5/6 (isolated-execution analysis)
 //!   run            one scenario under one strategy
-//!   sweep          c3_rp CU-reservation sweep for one scenario
+//!   sweep          parallel scenario sweep: {scenarios x strategies x
+//!                  machines} on a worker pool, tables + JSON report
+//!   rp-sweep       c3_rp CU-reservation sweep for one scenario
 //!   report         full Table II suite -> Fig 7/8/10 + headline
 //!   conccl-bw      Fig 9: ConCCL vs RCCL isolated bandwidth sweep
 //!   heuristics     §V-C heuristic vs exhaustive sweep (30 scenarios)
@@ -103,12 +105,24 @@ USAGE: conccl <subcommand> [options] [--set machine.key=value]...
 SUBCOMMANDS
   characterize              Tables I/II, Fig 5a/5b/5c, Fig 6
   run --scenario mb1_896M --collective all-gather --strategy conccl
-  sweep --scenario cb1_896M --collective all-to-all
+  sweep                     parallel scenario sweep (see SWEEP OPTIONS)
+  rp-sweep --scenario cb1_896M --collective all-to-all
   report [--jitter 0.01]    full suite: Fig 7, Fig 8, Fig 10, headline
   conccl-bw                 Fig 9 size sweep
   heuristics                SP order + RP heuristic vs sweep (30 scen.)
   e2e [--layers 4] [--model 70b|405b]   FSDP trace replay
   help                      this text
+
+SWEEP OPTIONS (conccl sweep)
+  --scenarios all|tag,tag   Table II tags, e.g. mb1_896M,cb1_896M
+  --strategies all|s,s      serial,c3_base,c3_sp,c3_rp,c3_sp_rp,
+                            c3_best,conccl,conccl_rp
+  --collective both|ag|a2a  collective kinds swept
+  --variants l:k=v;k=v,...  extra machine variants derived from the base
+                            machine (label:field=value;field=value)
+  --threads N               worker threads (0 = one per core)
+  --jitter X --seed N       measurement-protocol noise / base RNG seed
+  --json PATH|-             write the machine-readable report
 
 COMMON OPTIONS
   --config <file>           TOML-lite machine config

@@ -7,5 +7,5 @@ pub mod parse;
 pub mod workload;
 
 pub use machine::MachineConfig;
-pub use parse::{Config, Value};
+pub use parse::{set_machine_field, Config, Value};
 pub use workload::{C3Scenario, CollectiveKind, CollectiveSpec, DType, GemmShape, Source};

@@ -151,6 +151,16 @@ impl Config {
     }
 }
 
+/// Apply one machine override from raw strings (the sweep engine's
+/// machine-variant specs); accepts keys with or without the `machine.`
+/// prefix. The resulting config is NOT validated here — callers batch
+/// several fields then run [`MachineConfig::validate`].
+pub fn set_machine_field(m: &mut MachineConfig, key: &str, raw: &str) -> Result<(), String> {
+    let field = key.strip_prefix("machine.").unwrap_or(key);
+    let v = Value::parse(raw)?;
+    apply_machine_field(m, field, &v)
+}
+
 /// Apply one `machine.<field>` override. Exhaustive by hand (no serde);
 /// the test below cross-checks against the struct so new fields cannot be
 /// silently forgotten.
@@ -327,6 +337,17 @@ mod tests {
             }
         }
         assert!(apply_machine_field(&mut m, "nope", &Value::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn set_machine_field_accepts_both_key_forms() {
+        let mut m = MachineConfig::mi300x();
+        set_machine_field(&mut m, "machine.hbm_eff", "0.9").unwrap();
+        assert_eq!(m.hbm_eff, 0.9);
+        set_machine_field(&mut m, "compute_eff", "0.6").unwrap();
+        assert_eq!(m.compute_eff, 0.6);
+        assert!(set_machine_field(&mut m, "bogus", "1").is_err());
+        assert!(set_machine_field(&mut m, "hbm_eff", "not-a-number").is_err());
     }
 
     #[test]

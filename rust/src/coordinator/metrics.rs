@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use crate::config::machine::MachineConfig;
 use crate::config::workload::CollectiveKind;
 use crate::coordinator::runner::ScenarioOutcome;
+use crate::sched::StrategyKind;
 use crate::util::stats::mean;
 use crate::workload::taxonomy::C3Type;
 
@@ -37,17 +38,14 @@ pub fn group_rows(outcomes: &[ScenarioOutcome]) -> Vec<GroupRow> {
                 continue;
             }
             let mut per_strategy = BTreeMap::new();
-            for name in ["c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "conccl", "conccl_rp", "c3_best"]
-            {
-                let sps: Vec<f64> = members
+            for kind in StrategyKind::reported() {
+                let picked: Vec<&crate::coordinator::runner::Measured> = members
                     .iter()
-                    .map(|o| pick(o, name).speedup_median)
+                    .map(|o| o.measured(kind).expect("reported kinds are measured"))
                     .collect();
-                let pcts: Vec<f64> = members
-                    .iter()
-                    .map(|o| pick(o, name).pct_ideal_median)
-                    .collect();
-                per_strategy.insert(name, (mean(&sps), mean(&pcts)));
+                let sps: Vec<f64> = picked.iter().map(|m| m.speedup_median).collect();
+                let pcts: Vec<f64> = picked.iter().map(|m| m.pct_ideal_median).collect();
+                per_strategy.insert(kind.name(), (mean(&sps), mean(&pcts)));
             }
             rows.push(GroupRow {
                 kind,
@@ -59,22 +57,6 @@ pub fn group_rows(outcomes: &[ScenarioOutcome]) -> Vec<GroupRow> {
         }
     }
     rows
-}
-
-fn pick<'a>(
-    o: &'a ScenarioOutcome,
-    name: &str,
-) -> &'a crate::coordinator::runner::Measured {
-    match name {
-        "c3_base" => &o.base,
-        "c3_sp" => &o.sp,
-        "c3_rp" => &o.rp,
-        "c3_sp_rp" => &o.sp_rp,
-        "conccl" => &o.conccl,
-        "conccl_rp" => &o.conccl_rp,
-        "c3_best" => o.c3_best(),
-        other => panic!("unknown strategy {other}"),
-    }
 }
 
 /// Suite-wide headline averages (the numbers quoted in the abstract).
@@ -90,14 +72,15 @@ pub struct Headline {
 /// Compute the headline metrics over all outcomes.
 pub fn headline(outcomes: &[ScenarioOutcome]) -> Headline {
     let mut per_strategy = BTreeMap::new();
-    for name in ["c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "c3_best", "conccl", "conccl_rp"] {
-        let sps: Vec<f64> = outcomes.iter().map(|o| pick(o, name).speedup_median).collect();
-        let pcts: Vec<f64> = outcomes
+    for kind in StrategyKind::reported() {
+        let picked: Vec<&crate::coordinator::runner::Measured> = outcomes
             .iter()
-            .map(|o| pick(o, name).pct_ideal_median)
+            .map(|o| o.measured(kind).expect("reported kinds are measured"))
             .collect();
+        let sps: Vec<f64> = picked.iter().map(|m| m.speedup_median).collect();
+        let pcts: Vec<f64> = picked.iter().map(|m| m.pct_ideal_median).collect();
         per_strategy.insert(
-            name,
+            kind.name(),
             (
                 mean(&sps),
                 mean(&pcts),
@@ -204,6 +187,15 @@ mod tests {
                 a2a.per_strategy["c3_base"].1
             );
         }
+    }
+
+    #[test]
+    fn unknown_strategy_name_is_err_not_panic() {
+        let outs = outcomes();
+        assert!(outs[0].measured_by_name("c3_sp").is_ok());
+        assert!(outs[0].measured_by_name("c3_best").is_ok());
+        let err = outs[0].measured_by_name("warp_drive").unwrap_err();
+        assert!(err.to_string().contains("warp_drive"));
     }
 
     #[test]

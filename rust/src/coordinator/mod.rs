@@ -7,4 +7,6 @@ pub mod report;
 pub mod runner;
 
 pub use metrics::{group_rows, headline, taxonomy_divergences, GroupRow, Headline};
-pub use runner::{measure, run_scenario, run_suite, Measured, RunnerConfig, ScenarioOutcome};
+pub use runner::{
+    measure, measure_run, run_scenario, run_suite, Measured, RunnerConfig, ScenarioOutcome,
+};

@@ -7,7 +7,8 @@
 //! exercised meaningfully in benches.
 
 use crate::config::machine::MachineConfig;
-use crate::sched::{C3Executor, C3Run, Strategy};
+use crate::error::Error;
+use crate::sched::{C3Executor, C3Run, Strategy, StrategyKind};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::scenarios::ResolvedScenario;
@@ -70,7 +71,13 @@ pub fn measure(
     cfg: &RunnerConfig,
     rng: &mut Rng,
 ) -> Measured {
-    let run = exec.run(sc, strategy);
+    measure_run(exec.run(sc, strategy), cfg, rng)
+}
+
+/// Apply the measurement protocol to an already-computed run (the sweep
+/// engine computes runs with shared baselines, then samples here with a
+/// per-job RNG).
+pub fn measure_run(run: C3Run, cfg: &RunnerConfig, rng: &mut Rng) -> Measured {
     let mut samples = Vec::with_capacity(cfg.measured);
     for i in 0..(cfg.warmup + cfg.measured) {
         // Warm-up executions are typically slower (cold caches, clock
@@ -92,12 +99,13 @@ pub fn measure(
     }
     let stats = Summary::of(&samples);
     let speedup_median = run.serial / stats.median;
+    let pct_ideal_median = pct_of_ideal(speedup_median, run.ideal);
     Measured {
-        strategy,
+        strategy: run.strategy,
         run,
         stats,
         speedup_median,
-        pct_ideal_median: pct_of_ideal(speedup_median, run.ideal),
+        pct_ideal_median,
     }
 }
 
@@ -137,6 +145,31 @@ impl ScenarioOutcome {
             ("conccl_rp", &self.conccl_rp),
         ]
     }
+
+    /// Typed column selection (exhaustive — no panic path). `Serial` is
+    /// not a measured column and reports an error.
+    pub fn measured(&self, kind: StrategyKind) -> Result<&Measured, Error> {
+        Ok(match kind {
+            StrategyKind::C3Base => &self.base,
+            StrategyKind::C3Sp => &self.sp,
+            StrategyKind::C3Rp => &self.rp,
+            StrategyKind::C3SpRp => &self.sp_rp,
+            StrategyKind::Conccl => &self.conccl,
+            StrategyKind::ConcclRp => &self.conccl_rp,
+            StrategyKind::C3Best => self.c3_best(),
+            StrategyKind::Serial => {
+                return Err(Error::Config(
+                    "'serial' is the speedup baseline, not a measured column".into(),
+                ))
+            }
+        })
+    }
+
+    /// Column selection by figure-legend name; unknown names are an
+    /// `Err`, never a panic.
+    pub fn measured_by_name(&self, name: &str) -> Result<&Measured, Error> {
+        self.measured(StrategyKind::parse(name)?)
+    }
 }
 
 /// Run the full strategy lineup on one scenario.
@@ -151,7 +184,7 @@ pub fn run_scenario(
         let tc = exec.t_comm_iso(sc);
         (tg + tc) / tg.max(tc)
     };
-    let (rp_run, rp_cus) = exec.run_rp_sweep(sc);
+    let (_, rp_cus) = exec.run_rp_sweep(sc);
     let comm_need = sc.comm.cu_need(&exec.m);
     ScenarioOutcome {
         tag: sc.tag(),
@@ -160,25 +193,23 @@ pub fn run_scenario(
         base: measure(exec, sc, Strategy::C3Base, cfg, rng),
         sp: measure(exec, sc, Strategy::C3Sp, cfg, rng),
         rp: measure(exec, sc, Strategy::C3Rp { comm_cus: rp_cus }, cfg, rng),
-        rp_cus: rp_run.strategy.comm_on_cus().then_some(rp_cus).unwrap_or(rp_cus),
+        rp_cus,
         sp_rp: measure(exec, sc, Strategy::C3SpRp { comm_cus: comm_need }, cfg, rng),
         conccl: measure(exec, sc, Strategy::Conccl, cfg, rng),
         conccl_rp: measure(exec, sc, Strategy::ConcclRp { cus_removed: 8 }, cfg, rng),
     }
 }
 
-/// Run a list of scenarios (e.g. `workload::suite()`).
+/// Run a list of scenarios (e.g. `workload::suite()`). Thin wrapper
+/// over the parallel sweep engine: jobs execute concurrently with
+/// deterministic per-job RNG seeds, so results are independent of
+/// thread count and identical to a sequential run.
 pub fn run_suite(
     m: &MachineConfig,
     scenarios: &[ResolvedScenario],
     cfg: &RunnerConfig,
 ) -> Vec<ScenarioOutcome> {
-    let exec = C3Executor::new(m.clone());
-    let mut rng = Rng::new(cfg.seed);
-    scenarios
-        .iter()
-        .map(|sc| run_scenario(&exec, sc, cfg, &mut rng))
-        .collect()
+    crate::sweep::suite_outcomes(m, scenarios, cfg, 0)
 }
 
 #[cfg(test)]

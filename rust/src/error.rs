@@ -1,0 +1,80 @@
+//! Typed errors for the evaluation pipeline.
+//!
+//! The seed's lookup and simulation paths panicked on bad input (unknown
+//! Table I tag, unknown scenario/strategy names, a stalled fluid
+//! simulation). The sweep engine runs thousands of jobs concurrently and
+//! must be able to fail *one job* with a diagnosable error instead of
+//! aborting the whole process, so every such path now surfaces an
+//! [`Error`].
+
+use std::fmt;
+
+use crate::sim::fluid::StallError;
+
+/// One failure in the scenario/strategy/simulation pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// A GEMM tag that is not in Table I (`cb1`..`cb5`, `mb1`, `mb2`).
+    UnknownGemmTag(String),
+    /// A scenario tag that is not a Table II row (e.g. `mb1_896M`).
+    UnknownScenario(String),
+    /// A strategy name outside the evaluated lineup.
+    UnknownStrategy(String),
+    /// A collective kind name outside all-gather/all-to-all/all-reduce.
+    UnknownCollective(String),
+    /// Malformed configuration input (sizes, overrides, variant specs).
+    Config(String),
+    /// The fluid simulation stalled: tasks remained with no way to make
+    /// progress. Carries the full per-task diagnosis.
+    SimStall(StallError),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownGemmTag(t) => {
+                write!(f, "unknown Table I GEMM tag '{t}' (expected cb1..cb5, mb1, mb2)")
+            }
+            Error::UnknownScenario(t) => {
+                write!(f, "unknown scenario '{t}' (see `conccl characterize` for Table II tags)")
+            }
+            Error::UnknownStrategy(s) => {
+                write!(f, "unknown strategy '{s}' (expected serial, c3_base, c3_sp, c3_rp, c3_sp_rp, c3_best, conccl, conccl_rp)")
+            }
+            Error::UnknownCollective(s) => {
+                write!(f, "unknown collective '{s}' (expected all-gather, all-to-all, all-reduce)")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::SimStall(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<StallError> for Error {
+    fn from(s: StallError) -> Error {
+        Error::SimStall(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_offender() {
+        let e = Error::UnknownScenario("zz_9G".into());
+        assert!(e.to_string().contains("zz_9G"));
+        let e = Error::UnknownStrategy("warp".into());
+        assert!(e.to_string().contains("warp"));
+        let e = Error::UnknownGemmTag("cb9".into());
+        assert!(e.to_string().contains("cb9"));
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&Error::Config("x".into()));
+    }
+}

@@ -21,6 +21,7 @@ pub mod cli;
 pub mod conccl;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod fabric;
 pub mod gpu;
 pub mod heuristics;
@@ -29,5 +30,8 @@ pub mod node;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;
+
+pub use error::Error;

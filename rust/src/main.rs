@@ -4,14 +4,15 @@
 
 use conccl::cli::{Args, HELP};
 use conccl::config::workload::CollectiveKind;
-use conccl::coordinator::{report, run_suite, taxonomy_divergences, RunnerConfig};
+use conccl::coordinator::{headline, report, run_suite, taxonomy_divergences, RunnerConfig};
 use conccl::heuristics::{self, SlowdownTable};
 use conccl::kernels::CollectiveKernel;
 use conccl::sched::{C3Executor, Strategy};
+use conccl::sweep::{execute as execute_sweep, parse_variants, MachineVariant, SweepPlan};
 use conccl::util::table::{f as fnum, speedup, Table};
 use conccl::util::units::{fmt_seconds, MIB};
 use conccl::workload::llama::LlamaConfig;
-use conccl::workload::scenarios::{resolve, suite, TABLE2};
+use conccl::workload::scenarios::{resolve, resolve_tag, suite, TABLE2};
 use conccl::workload::trace::{fsdp_forward_trace, replay};
 
 fn main() {
@@ -37,7 +38,8 @@ fn dispatch(args: &Args) -> Result<(), String> {
         }
         "characterize" => characterize(args),
         "run" => run_one(args),
-        "sweep" => sweep(args),
+        "sweep" => sweep_cmd(args),
+        "rp-sweep" => rp_sweep(args),
         "report" => full_report(args),
         "conccl-bw" => conccl_bw(args),
         "heuristics" => heuristics_cmd(args),
@@ -56,27 +58,14 @@ fn parse_collective(s: &str) -> Result<CollectiveKind, String> {
 }
 
 fn parse_strategy(s: &str, comm_need: u32) -> Result<Strategy, String> {
-    match s {
-        "serial" => Ok(Strategy::Serial),
-        "c3_base" | "base" => Ok(Strategy::C3Base),
-        "c3_sp" | "sp" => Ok(Strategy::C3Sp),
-        "c3_rp" | "rp" => Ok(Strategy::C3Rp { comm_cus: comm_need }),
-        "c3_sp_rp" | "sp_rp" => Ok(Strategy::C3SpRp { comm_cus: comm_need }),
-        "conccl" => Ok(Strategy::Conccl),
-        "conccl_rp" => Ok(Strategy::ConcclRp { cus_removed: 8 }),
-        other => Err(format!("unknown strategy '{other}'")),
-    }
+    Strategy::parse(s, comm_need).map_err(|e| e.to_string())
 }
 
 fn find_scenario(
     tag: &str,
     kind: CollectiveKind,
 ) -> Result<conccl::workload::ResolvedScenario, String> {
-    TABLE2
-        .iter()
-        .find(|r| format!("{}_{}", r.gemm_tag, r.size) == tag)
-        .map(|r| resolve(r, kind))
-        .ok_or_else(|| format!("unknown scenario '{tag}' (see `conccl characterize`)"))
+    resolve_tag(tag, kind).map_err(|e| e.to_string())
 }
 
 fn characterize(args: &Args) -> Result<(), String> {
@@ -115,7 +104,144 @@ fn run_one(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn sweep(args: &Args) -> Result<(), String> {
+/// The parallel scenario-sweep engine: {scenarios × strategies ×
+/// machine configs} evaluated concurrently, reported as tables + JSON.
+fn sweep_cmd(args: &Args) -> Result<(), String> {
+    // The pre-rename `sweep` took --scenario/--strategy (singular);
+    // silently ignoring those would run a completely different
+    // computation, so reject them loudly.
+    if args.options.contains_key("scenario") {
+        return Err(
+            "`sweep` takes --scenarios (plural, comma-separated); for the single-scenario \
+             CU-reservation sweep use `conccl rp-sweep --scenario ...`"
+                .into(),
+        );
+    }
+    if args.options.contains_key("strategy") {
+        return Err("`sweep` takes --strategies (plural, comma-separated)".into());
+    }
+    let m = args.machine()?;
+    let jitter: f64 = args
+        .opt("jitter", "0")
+        .parse()
+        .map_err(|e| format!("--jitter: {e}"))?;
+    let seed: u64 = args
+        .opt("seed", "24301")
+        .parse()
+        .map_err(|e| format!("--seed: {e}"))?;
+    let cfg = RunnerConfig {
+        jitter,
+        seed,
+        ..RunnerConfig::default()
+    };
+    let kind_opt = args.opt("collective", "both");
+    let kinds: Vec<CollectiveKind> = match kind_opt.as_str() {
+        "both" | "all" => CollectiveKind::studied().to_vec(),
+        other => vec![parse_collective(other)?],
+    };
+    let strat_opt = args.opt("strategies", "all");
+    let strategy_names: Vec<&str> = csv_list(&strat_opt);
+    let scen_opt = args.opt("scenarios", "all");
+    let scenario_tags: Vec<&str> = csv_list(&scen_opt);
+    let mut machines = vec![MachineVariant::base(m.clone())];
+    if let Some(spec) = args.options.get("variants") {
+        machines.extend(parse_variants(&m, spec).map_err(|e| e.to_string())?);
+    }
+    let threads = args.opt_usize("threads", 0)?;
+    let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
+        .map_err(|e| e.to_string())?;
+    let n_jobs = plan.job_count();
+    let t0 = std::time::Instant::now();
+    let results = execute_sweep(plan, threads);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    for (mi, mv) in results.plan.machines.iter().enumerate() {
+        let mut headers: Vec<String> = vec!["scenario".to_string(), "collective".to_string()];
+        headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
+        let mut t = Table::new(headers).left_cols(2).title(format!(
+            "sweep: machine '{}' — median-speedup per strategy",
+            mv.label
+        ));
+        for (si, sc) in results.plan.scenarios.iter().enumerate() {
+            let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
+            for (ki, _) in results.plan.strategies.iter().enumerate() {
+                let out = &results.outputs[results.plan.job_id(mi, si, ki)];
+                row.push(match &out.result {
+                    Ok(meas) => match out.rp_cus {
+                        Some(k) => format!("{} @{k}CU", speedup(meas.speedup_median)),
+                        None => speedup(meas.speedup_median),
+                    },
+                    Err(_) => "ERR".to_string(),
+                });
+            }
+            t.row(row);
+        }
+        t.print();
+        if let Ok(outs) = results.to_scenario_outcomes(mi) {
+            let h = headline(&outs);
+            let p = |k: &str| h.per_strategy[k].1;
+            println!(
+                "machine '{}': avg %ideal — base {:.0}, sp {:.0}, rp {:.0}, best {:.0}, \
+                 conccl {:.0}, conccl_rp {:.0}",
+                mv.label,
+                p("c3_base"),
+                p("c3_sp"),
+                p("c3_rp"),
+                p("c3_best"),
+                p("conccl"),
+                p("conccl_rp")
+            );
+        }
+        println!();
+    }
+    let errs = results.errors();
+    if !errs.is_empty() {
+        println!("{} job(s) failed (sweep continued without them):", errs.len());
+        for (job, e) in &errs {
+            println!(
+                "  job {} [{} × {} × {}]: {e}",
+                job.id,
+                results.machine_label(job.machine_idx),
+                results.plan.scenarios[job.scenario_idx].tag(),
+                job.strategy.name()
+            );
+        }
+    }
+    println!(
+        "{n_jobs} jobs on {} worker thread(s) in {}",
+        results.threads_used,
+        fmt_seconds(elapsed)
+    );
+    if let Some(path) = args.options.get("json") {
+        let j = results.to_json();
+        if path == "-" {
+            println!("{j}");
+        } else {
+            std::fs::write(path, &j).map_err(|e| format!("--json {path}: {e}"))?;
+            println!("wrote JSON report to {path}");
+        }
+    }
+    // Partial failure must not look like success to scripts/CI: the
+    // tables and JSON above still describe what ran, but the exit
+    // status reports the failed jobs.
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} of {n_jobs} sweep jobs failed (see list above)", errs.len()))
+    }
+}
+
+/// Split a comma-separated option; "all" or empty means "everything".
+fn csv_list(opt: &str) -> Vec<&str> {
+    if opt == "all" || opt.trim().is_empty() {
+        Vec::new()
+    } else {
+        opt.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// The original single-scenario c3_rp CU-reservation sweep.
+fn rp_sweep(args: &Args) -> Result<(), String> {
     let m = args.machine()?;
     let kind = parse_collective(&args.opt("collective", "all-gather"))?;
     let sc = find_scenario(&args.opt("scenario", "cb1_896M"), kind)?;

@@ -1,9 +1,11 @@
 //! Request-path runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`
-//! produced once by `python -m compile.aot`) and executes them on the
-//! PJRT CPU client. Python never runs here.
+//! produced once by `python -m compile.aot`) and executes them from
+//! Rust. Python never runs here. Offline builds use the native
+//! reference executor in [`pjrt`] (no `xla` crate available); the API
+//! is identical either way.
 
 pub mod artifacts;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
-pub use pjrt::Runtime;
+pub use pjrt::{Runtime, RuntimeError};

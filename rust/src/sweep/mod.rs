@@ -1,0 +1,33 @@
+//! Parallel scenario-sweep engine: the batched, concurrent evaluation
+//! path behind the paper's Figs 7–10 and Table II characterization.
+//!
+//! The seed evaluated one scenario at a time through
+//! `coordinator::runner`. This subsystem turns that into a *job
+//! matrix*:
+//!
+//! 1. **Plan** ([`plan`]) — expand {Table II scenarios × strategies ×
+//!    machine configs} into independent [`SweepJob`]s, each with a
+//!    deterministic identity-derived RNG seed.
+//! 2. **Execute** ([`engine`]) — run jobs concurrently on a worker pool
+//!    (shared-counter work stealing over `std::thread::scope`); each job
+//!    drives its own `sched::executor` + `sim::fluid` instance.
+//!    Isolated-execution baselines (the serial/ideal denominators) are
+//!    memoized once per (machine, scenario) instead of once per
+//!    strategy. A failed job records a typed [`crate::error::Error`];
+//!    the sweep continues.
+//! 3. **Report** ([`json`] + `coordinator::report`) — aggregate into the
+//!    existing human-readable figure tables and a byte-deterministic
+//!    machine-readable JSON report.
+//!
+//! Determinism: same plan + same base seed ⇒ byte-identical JSON,
+//! regardless of worker count (per-job seeds are derived from job
+//! identity, never from execution order). `coordinator::run_suite` is a
+//! thin wrapper over [`suite_outcomes`], so every figure bench and test
+//! rides this engine.
+
+pub mod engine;
+pub mod json;
+pub mod plan;
+
+pub use engine::{default_threads, execute, outcome_lineup, suite_outcomes, JobOutput, SweepResults};
+pub use plan::{job_seed, parse_variants, MachineVariant, SweepJob, SweepPlan};

@@ -1,0 +1,357 @@
+//! Job-matrix planning: expand {scenarios × strategies × machine
+//! configs} into independent, deterministic simulation jobs.
+//!
+//! Every job carries its own RNG seed derived from the base seed and the
+//! job's *identity* (machine label, scenario tag, collective, strategy)
+//! — not from its position in an execution order — so results are
+//! bit-identical whether the jobs run on one thread or sixteen.
+
+use crate::config::machine::MachineConfig;
+use crate::config::parse::set_machine_field;
+use crate::config::workload::CollectiveKind;
+use crate::coordinator::runner::RunnerConfig;
+use crate::error::Error;
+use crate::sched::StrategyKind;
+use crate::util::rng::SplitMix64;
+use crate::workload::scenarios::{self, ResolvedScenario, TABLE2};
+
+/// One machine configuration under evaluation, with a report label.
+#[derive(Debug, Clone)]
+pub struct MachineVariant {
+    pub label: String,
+    pub machine: MachineConfig,
+}
+
+impl MachineVariant {
+    /// The base machine, labelled by its own name.
+    pub fn base(machine: MachineConfig) -> MachineVariant {
+        MachineVariant {
+            label: machine.name.clone(),
+            machine,
+        }
+    }
+}
+
+/// Parse a machine-variant spec string into variants derived from
+/// `base`. Grammar (one option value, so the hand-rolled CLI can carry
+/// it): comma-separated variants, each `label:key=value;key=value`,
+/// keys with or without the `machine.` prefix:
+///
+/// ```text
+/// hbm90:hbm_eff=0.9,slowlink:link_eff=0.6;link_eff_dma=0.6
+/// ```
+pub fn parse_variants(base: &MachineConfig, spec: &str) -> Result<Vec<MachineVariant>, Error> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (label, overrides) = part
+            .split_once(':')
+            .ok_or_else(|| Error::Config(format!("variant '{part}': expected label:key=value[;...]")))?;
+        let label = label.trim();
+        if label.is_empty() {
+            return Err(Error::Config(format!("variant '{part}': empty label")));
+        }
+        // Labels key per-job RNG seeds and the JSON report's machines[]
+        // entries — duplicates (incl. the base machine's own label) would
+        // alias distinct configs.
+        if label == base.name || out.iter().any(|v: &MachineVariant| v.label == label) {
+            return Err(Error::Config(format!("duplicate machine-variant label '{label}'")));
+        }
+        let mut m = base.clone();
+        for ov in overrides.split(';').map(str::trim).filter(|o| !o.is_empty()) {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("variant '{label}': override '{ov}' is not key=value")))?;
+            set_machine_field(&mut m, k.trim(), v.trim())
+                .map_err(|e| Error::Config(format!("variant '{label}': {e}")))?;
+        }
+        let errs = m.validate();
+        if !errs.is_empty() {
+            return Err(Error::Config(format!(
+                "variant '{label}' is invalid: {}",
+                errs.join("; ")
+            )));
+        }
+        m.name = format!("{}+{label}", base.name);
+        out.push(MachineVariant {
+            label: label.to_string(),
+            machine: m,
+        });
+    }
+    Ok(out)
+}
+
+/// One independent simulation job: a point in the sweep matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepJob {
+    /// Dense id; doubles as the deterministic output ordering.
+    pub id: usize,
+    /// Index into [`SweepPlan::machines`].
+    pub machine_idx: usize,
+    /// Index into [`SweepPlan::scenarios`].
+    pub scenario_idx: usize,
+    pub strategy: StrategyKind,
+    /// Per-job RNG seed (identity-derived; execution-order independent).
+    pub seed: u64,
+}
+
+/// The expanded sweep: every axis plus the measurement protocol.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub machines: Vec<MachineVariant>,
+    pub scenarios: Vec<ResolvedScenario>,
+    pub strategies: Vec<StrategyKind>,
+    pub cfg: RunnerConfig,
+}
+
+impl SweepPlan {
+    /// Plan over explicit axes.
+    pub fn new(
+        machines: Vec<MachineVariant>,
+        scenarios: Vec<ResolvedScenario>,
+        strategies: Vec<StrategyKind>,
+        cfg: RunnerConfig,
+    ) -> SweepPlan {
+        SweepPlan {
+            machines,
+            scenarios,
+            strategies,
+            cfg,
+        }
+    }
+
+    /// The paper's full matrix on one machine: all Table II rows × the
+    /// studied collectives × the whole strategy lineup.
+    pub fn table2(machine: MachineConfig, cfg: RunnerConfig) -> SweepPlan {
+        SweepPlan::new(
+            vec![MachineVariant::base(machine)],
+            scenarios::suite(),
+            StrategyKind::lineup().to_vec(),
+            cfg,
+        )
+    }
+
+    /// Plan from CLI-style selections. `scenario_tags`/`strategy_names`
+    /// empty means "all"; unknown names surface typed errors, never
+    /// panics.
+    pub fn from_selection(
+        machines: Vec<MachineVariant>,
+        scenario_tags: &[&str],
+        kinds: &[CollectiveKind],
+        strategy_names: &[&str],
+        cfg: RunnerConfig,
+    ) -> Result<SweepPlan, Error> {
+        if machines.is_empty() {
+            return Err(Error::Config("sweep needs at least one machine".into()));
+        }
+        if kinds.is_empty() {
+            return Err(Error::Config("sweep needs at least one collective kind".into()));
+        }
+        // Duplicate selections would create identical-identity jobs
+        // (identical seeds) and duplicate JSON keys — reject them on
+        // every axis, matching parse_variants' duplicate-label check.
+        reject_duplicates("scenario", scenario_tags)?;
+        reject_duplicates(
+            "strategy",
+            &strategy_names
+                .iter()
+                .map(|s| StrategyKind::parse(s).map(|k| k.name()))
+                .collect::<Result<Vec<_>, _>>()?,
+        )?;
+        reject_duplicates(
+            "collective",
+            &kinds.iter().map(|k| k.name()).collect::<Vec<_>>(),
+        )?;
+        let rows: Vec<&'static crate::workload::Table2Row> = if scenario_tags.is_empty() {
+            TABLE2.iter().collect()
+        } else {
+            scenario_tags
+                .iter()
+                .map(|t| scenarios::find(t))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        let mut resolved = Vec::with_capacity(rows.len() * kinds.len());
+        for &kind in kinds {
+            for row in &rows {
+                resolved.push(scenarios::try_resolve(row, kind)?);
+            }
+        }
+        let strategies = if strategy_names.is_empty() {
+            StrategyKind::lineup().to_vec()
+        } else {
+            strategy_names
+                .iter()
+                .map(|s| StrategyKind::parse(s))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(SweepPlan::new(machines, resolved, strategies, cfg))
+    }
+
+    /// Number of jobs this plan expands to.
+    pub fn job_count(&self) -> usize {
+        self.machines.len() * self.scenarios.len() * self.strategies.len()
+    }
+
+    /// Dense job id of one matrix point.
+    pub fn job_id(&self, machine_idx: usize, scenario_idx: usize, strategy_idx: usize) -> usize {
+        (machine_idx * self.scenarios.len() + scenario_idx) * self.strategies.len() + strategy_idx
+    }
+
+    /// Expand the matrix into jobs, ids dense in
+    /// machine → scenario → strategy order.
+    pub fn jobs(&self) -> Vec<SweepJob> {
+        let mut out = Vec::with_capacity(self.job_count());
+        for (mi, mv) in self.machines.iter().enumerate() {
+            for (si, sc) in self.scenarios.iter().enumerate() {
+                for (ki, &strategy) in self.strategies.iter().enumerate() {
+                    out.push(SweepJob {
+                        id: self.job_id(mi, si, ki),
+                        machine_idx: mi,
+                        scenario_idx: si,
+                        strategy,
+                        seed: job_seed(
+                            self.cfg.seed,
+                            &mv.label,
+                            &sc.tag(),
+                            sc.comm.spec.kind.name(),
+                            strategy.name(),
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Reject duplicate entries on one selection axis (after normalizing
+/// aliases, e.g. `sp` vs `c3_sp`).
+fn reject_duplicates(axis: &str, names: &[&str]) -> Result<(), Error> {
+    for (i, a) in names.iter().enumerate() {
+        if names[..i].contains(a) {
+            return Err(Error::Config(format!("duplicate {axis} selection '{a}'")));
+        }
+    }
+    Ok(())
+}
+
+/// Identity-derived per-job seed: FNV-1a over the job key (with field
+/// separators), mixed through SplitMix64 so nearby keys do not yield
+/// correlated xoshiro states.
+pub fn job_seed(base: u64, machine: &str, tag: &str, collective: &str, strategy: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for field in [machine, tag, collective, strategy] {
+        for b in field.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h = (h ^ 0x7c).wrapping_mul(0x0000_0100_0000_01b3); // separator
+    }
+    SplitMix64::new(base ^ h).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RunnerConfig {
+        RunnerConfig::default()
+    }
+
+    #[test]
+    fn table2_plan_covers_full_matrix() {
+        let p = SweepPlan::table2(MachineConfig::mi300x(), cfg());
+        assert_eq!(p.scenarios.len(), 30);
+        assert_eq!(p.strategies.len(), 7);
+        assert_eq!(p.job_count(), 210);
+        let jobs = p.jobs();
+        assert_eq!(jobs.len(), 210);
+        // Dense, ordered ids.
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+    }
+
+    #[test]
+    fn seeds_depend_on_identity_not_order() {
+        let p = SweepPlan::table2(MachineConfig::mi300x(), cfg());
+        let jobs = p.jobs();
+        // Same identity -> same seed on re-expansion.
+        assert_eq!(jobs[17].seed, p.jobs()[17].seed);
+        // Distinct identities -> distinct seeds (no collisions in 210).
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 210);
+        // Base seed participates.
+        let mut cfg2 = cfg();
+        cfg2.seed ^= 1;
+        let p2 = SweepPlan::table2(MachineConfig::mi300x(), cfg2);
+        assert_ne!(p2.jobs()[17].seed, jobs[17].seed);
+    }
+
+    #[test]
+    fn selection_rejects_unknown_names_with_typed_errors() {
+        let base = vec![MachineVariant::base(MachineConfig::mi300x())];
+        let kinds = [CollectiveKind::AllGather];
+        let err = SweepPlan::from_selection(base.clone(), &["zz_9G"], &kinds, &[], cfg())
+            .unwrap_err();
+        assert!(matches!(err, Error::UnknownScenario(_)), "{err}");
+        let err = SweepPlan::from_selection(base.clone(), &[], &kinds, &["warp"], cfg())
+            .unwrap_err();
+        assert!(matches!(err, Error::UnknownStrategy(_)), "{err}");
+        let ok = SweepPlan::from_selection(
+            base,
+            &["mb1_896M", "cb1_896M"],
+            &kinds,
+            &["c3_sp", "conccl"],
+            cfg(),
+        )
+        .unwrap();
+        assert_eq!(ok.job_count(), 4);
+    }
+
+    #[test]
+    fn duplicate_selections_are_rejected_on_every_axis() {
+        let base = vec![MachineVariant::base(MachineConfig::mi300x())];
+        let kinds = [CollectiveKind::AllGather];
+        // Duplicate scenario tag.
+        assert!(SweepPlan::from_selection(
+            base.clone(),
+            &["mb1_896M", "mb1_896M"],
+            &kinds,
+            &[],
+            cfg()
+        )
+        .is_err());
+        // Duplicate strategy, including via an alias.
+        assert!(
+            SweepPlan::from_selection(base.clone(), &[], &kinds, &["conccl", "conccl"], cfg())
+                .is_err()
+        );
+        assert!(
+            SweepPlan::from_selection(base.clone(), &[], &kinds, &["c3_sp", "sp"], cfg()).is_err()
+        );
+        // Duplicate collective kind.
+        let dup_kinds = [CollectiveKind::AllGather, CollectiveKind::AllGather];
+        assert!(SweepPlan::from_selection(base, &[], &dup_kinds, &[], cfg()).is_err());
+    }
+
+    #[test]
+    fn variants_parse_and_validate() {
+        let base = MachineConfig::mi300x();
+        let vs = parse_variants(&base, "hbm90:hbm_eff=0.9,slow:link_eff=0.6;link_eff_dma=0.6")
+            .unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].label, "hbm90");
+        assert_eq!(vs[0].machine.hbm_eff, 0.9);
+        assert_eq!(vs[1].machine.link_eff, 0.6);
+        assert_eq!(vs[1].machine.link_eff_dma, 0.6);
+        // Unknown field / invalid value / missing label all error.
+        assert!(parse_variants(&base, "x:bogus_field=1").is_err());
+        assert!(parse_variants(&base, "x:compute_eff=7").is_err());
+        assert!(parse_variants(&base, "no-colon-here").is_err());
+        // Duplicate labels (incl. the base machine's own) are rejected —
+        // labels key per-job seeds and the JSON machines[] entries.
+        assert!(parse_variants(&base, "a:hbm_eff=0.9,a:hbm_eff=0.8").is_err());
+        assert!(parse_variants(&base, "mi300x-8:hbm_eff=0.9").is_err());
+    }
+}

@@ -6,5 +6,7 @@ pub mod scenarios;
 pub mod taxonomy;
 pub mod trace;
 
-pub use scenarios::{resolve, suite, suite_for, ResolvedScenario, Table2Row, TABLE2};
+pub use scenarios::{
+    resolve, resolve_tag, suite, suite_for, try_resolve, ResolvedScenario, Table2Row, TABLE2,
+};
 pub use taxonomy::{pct_of_ideal, C3Type, Taxonomy};

@@ -9,6 +9,7 @@
 
 use crate::config::machine::MachineConfig;
 use crate::config::workload::{C3Scenario, CollectiveKind, CollectiveSpec, Source};
+use crate::error::Error;
 use crate::kernels::{CollectiveKernel, GemmKernel};
 use crate::util::units::parse_bytes;
 use crate::workload::llama::gemm_by_tag;
@@ -25,8 +26,9 @@ pub struct Table2Row {
     pub paper_type: C3Type,
 }
 
-/// The 15 rows of Table II, in paper order.
-pub const TABLE2: [Table2Row; 15] = [
+/// The 15 rows of Table II, in paper order. (A `static`, not a `const`:
+/// lookups hand out `&'static Table2Row` borrows of this array.)
+pub static TABLE2: [Table2Row; 15] = [
     // C3-type: G-long
     Table2Row { gemm_tag: "mb1", size: "896M", source: Source::Llama70B, paper_type: C3Type::GLong },
     Table2Row { gemm_tag: "mb2", size: "3.25G", source: Source::Llama405B, paper_type: C3Type::GLong },
@@ -72,13 +74,16 @@ impl ResolvedScenario {
     }
 }
 
-/// Resolve one Table II row against a collective kind.
-pub fn resolve(row: &Table2Row, kind: CollectiveKind) -> ResolvedScenario {
-    let gemm = gemm_by_tag(row.gemm_tag)
-        .unwrap_or_else(|| panic!("unknown Table I tag {}", row.gemm_tag));
-    let size = parse_bytes(row.size).expect("bad Table II size literal");
+/// Resolve one Table II row against a collective kind, surfacing an
+/// [`Error`] on an unknown Table I tag or a malformed size literal
+/// instead of panicking.
+pub fn try_resolve(row: &Table2Row, kind: CollectiveKind) -> Result<ResolvedScenario, Error> {
+    let gemm =
+        gemm_by_tag(row.gemm_tag).ok_or_else(|| Error::UnknownGemmTag(row.gemm_tag.to_string()))?;
+    let size = parse_bytes(row.size)
+        .map_err(|e| Error::Config(format!("Table II size '{}': {e}", row.size)))?;
     let spec = CollectiveSpec::new(kind, size);
-    ResolvedScenario {
+    Ok(ResolvedScenario {
         scenario: C3Scenario {
             gemm_tag: row.gemm_tag.to_string(),
             gemm: gemm.shape,
@@ -88,7 +93,29 @@ pub fn resolve(row: &Table2Row, kind: CollectiveKind) -> ResolvedScenario {
         gemm,
         comm: CollectiveKernel::new(spec),
         paper_type: row.paper_type,
-    }
+    })
+}
+
+/// Resolve one Table II row against a collective kind. Panicking
+/// convenience wrapper over [`try_resolve`] for the static `TABLE2`
+/// rows, which always resolve.
+pub fn resolve(row: &Table2Row, kind: CollectiveKind) -> ResolvedScenario {
+    try_resolve(row, kind).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Look up a Table II row by its paper-style scenario tag
+/// (e.g. `mb1_896M`).
+pub fn find(tag: &str) -> Result<&'static Table2Row, Error> {
+    TABLE2
+        .iter()
+        .find(|r| format!("{}_{}", r.gemm_tag, r.size) == tag)
+        .ok_or_else(|| Error::UnknownScenario(tag.to_string()))
+}
+
+/// Resolve a scenario by tag + collective kind — the CLI's and sweep
+/// planner's entry point; unknown tags are an `Err`, never a panic.
+pub fn resolve_tag(tag: &str, kind: CollectiveKind) -> Result<ResolvedScenario, Error> {
+    try_resolve(find(tag)?, kind)
 }
 
 /// The full evaluation suite: all 15 rows × the collective kinds the
@@ -125,6 +152,32 @@ mod tests {
             .filter(|r| r.source != Source::Synthetic)
             .count();
         assert_eq!(llama, 7);
+    }
+
+    #[test]
+    fn unknown_tags_are_typed_errors() {
+        assert!(matches!(
+            find("zz_9G"),
+            Err(crate::error::Error::UnknownScenario(_))
+        ));
+        assert!(resolve_tag("mb1_896M", CollectiveKind::AllGather).is_ok());
+        let bad = Table2Row {
+            gemm_tag: "cb9",
+            size: "1G",
+            source: Source::Synthetic,
+            paper_type: C3Type::GLong,
+        };
+        assert!(matches!(
+            try_resolve(&bad, CollectiveKind::AllGather),
+            Err(crate::error::Error::UnknownGemmTag(_))
+        ));
+        let bad_size = Table2Row {
+            gemm_tag: "mb1",
+            size: "huge",
+            source: Source::Synthetic,
+            paper_type: C3Type::GLong,
+        };
+        assert!(try_resolve(&bad_size, CollectiveKind::AllGather).is_err());
     }
 
     #[test]

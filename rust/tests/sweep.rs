@@ -1,0 +1,155 @@
+//! Integration tests for the parallel scenario-sweep engine: the
+//! determinism contract (same seed ⇒ byte-identical JSON regardless of
+//! thread count), typed error surfacing for unknown inputs, and
+//! parallel-vs-sequential aggregate equality.
+
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::coordinator::{headline, run_suite, RunnerConfig};
+use conccl::error::Error;
+use conccl::sched::StrategyKind;
+use conccl::sweep::{execute, parse_variants, MachineVariant, SweepPlan};
+use conccl::workload::scenarios::{resolve_tag, suite, suite_for};
+
+fn jittered_cfg() -> RunnerConfig {
+    RunnerConfig {
+        jitter: 0.02,
+        seed: 0xABCD_1234,
+        ..RunnerConfig::default()
+    }
+}
+
+fn small_plan(cfg: RunnerConfig) -> SweepPlan {
+    SweepPlan::new(
+        vec![MachineVariant::base(MachineConfig::mi300x())],
+        suite_for(CollectiveKind::AllGather),
+        StrategyKind::lineup().to_vec(),
+        cfg,
+    )
+}
+
+#[test]
+fn same_seed_same_bytes_across_thread_counts() {
+    // The headline determinism contract: per-job identity-derived RNG
+    // seeds make the JSON report byte-identical whether jobs run on one
+    // worker or many — even with protocol jitter enabled.
+    let j1 = execute(small_plan(jittered_cfg()), 1).to_json();
+    let j4 = execute(small_plan(jittered_cfg()), 4).to_json();
+    let j0 = execute(small_plan(jittered_cfg()), 0).to_json();
+    assert_eq!(j1, j4, "1-thread vs 4-thread JSON diverged");
+    assert_eq!(j1, j0, "auto-thread JSON diverged");
+    assert!(j1.contains("\"headline\""));
+}
+
+#[test]
+fn different_seed_different_bytes() {
+    let mut other = jittered_cfg();
+    other.seed ^= 0xFF;
+    let a = execute(small_plan(jittered_cfg()), 2).to_json();
+    let b = execute(small_plan(other), 2).to_json();
+    assert_ne!(a, b, "seed must steer the jittered measurements");
+}
+
+#[test]
+fn parallel_and_sequential_aggregates_match() {
+    let seq = execute(small_plan(jittered_cfg()), 1);
+    let par = execute(small_plan(jittered_cfg()), 4);
+    let (ho_s, ho_p) = (
+        headline(&seq.to_scenario_outcomes(0).unwrap()),
+        headline(&par.to_scenario_outcomes(0).unwrap()),
+    );
+    assert_eq!(ho_s.n, ho_p.n);
+    for kind in StrategyKind::reported() {
+        let a = ho_s.per_strategy[kind.name()];
+        let b = ho_p.per_strategy[kind.name()];
+        assert_eq!(a, b, "aggregate diverged for {}", kind.name());
+    }
+}
+
+#[test]
+fn unknown_scenario_and_strategy_are_errors_not_panics() {
+    assert!(matches!(
+        resolve_tag("nope_1G", CollectiveKind::AllGather),
+        Err(Error::UnknownScenario(_))
+    ));
+    assert!(matches!(
+        StrategyKind::parse("hyperdrive"),
+        Err(Error::UnknownStrategy(_))
+    ));
+    let machines = vec![MachineVariant::base(MachineConfig::mi300x())];
+    let kinds = [CollectiveKind::AllGather];
+    assert!(SweepPlan::from_selection(
+        machines.clone(),
+        &["nope_1G"],
+        &kinds,
+        &[],
+        RunnerConfig::default()
+    )
+    .is_err());
+    assert!(SweepPlan::from_selection(
+        machines,
+        &[],
+        &kinds,
+        &["hyperdrive"],
+        RunnerConfig::default()
+    )
+    .is_err());
+}
+
+#[test]
+fn machine_variant_axis_sweeps_distinct_machines() {
+    let base = MachineConfig::mi300x();
+    let mut machines = vec![MachineVariant::base(base.clone())];
+    machines.extend(parse_variants(&base, "slowlink:link_eff=0.5;link_eff_dma=0.5").unwrap());
+    let plan = SweepPlan::new(
+        machines,
+        vec![
+            resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap(),
+            resolve_tag("cb1_896M", CollectiveKind::AllGather).unwrap(),
+        ],
+        vec![StrategyKind::Serial, StrategyKind::Conccl],
+        RunnerConfig::default(),
+    );
+    assert_eq!(plan.job_count(), 8);
+    let res = execute(plan, 2);
+    assert!(res.errors().is_empty());
+    // Halved link bandwidth must slow the serial baseline (comm term).
+    let serial_base = res
+        .output_at(0, 0, StrategyKind::Serial)
+        .unwrap()
+        .result
+        .as_ref()
+        .unwrap()
+        .run
+        .serial;
+    let serial_slow = res
+        .output_at(1, 0, StrategyKind::Serial)
+        .unwrap()
+        .result
+        .as_ref()
+        .unwrap()
+        .run
+        .serial;
+    assert!(
+        serial_slow > serial_base * 1.2,
+        "slow-link variant should lengthen serial time: {serial_slow} vs {serial_base}"
+    );
+    // Both machines appear in the JSON.
+    let j = res.to_json();
+    assert!(j.contains("\"label\":\"mi300x-8\""));
+    assert!(j.contains("\"label\":\"slowlink\""));
+}
+
+#[test]
+fn run_suite_wrapper_preserves_order_and_shape() {
+    // coordinator::run_suite is now a thin wrapper over the sweep
+    // engine; the legacy contract must hold.
+    let scs = suite();
+    let outs = run_suite(&MachineConfig::mi300x(), &scs, &RunnerConfig::default());
+    assert_eq!(outs.len(), 30);
+    for (o, sc) in outs.iter().zip(&scs) {
+        assert_eq!(o.tag, sc.tag());
+        assert!(o.ideal > 1.0);
+        assert!(o.conccl.run.speedup > 0.9, "{}", o.tag);
+    }
+}
