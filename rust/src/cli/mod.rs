@@ -105,7 +105,10 @@ USAGE: conccl <subcommand> [options] [--set machine.key=value]...
 SUBCOMMANDS
   characterize              Tables I/II, Fig 5a/5b/5c, Fig 6
   run --scenario mb1_896M --collective all-gather --strategy conccl
+      [--nodes N]           one scenario on an N-node topology
   sweep                     parallel scenario sweep (see SWEEP OPTIONS)
+  bench-gate --report r.json [--baseline BENCH_baseline.json]
+      [--tolerance 0.02]    CI perf gate: fail on median-speedup drops
   rp-sweep --scenario cb1_896M --collective all-to-all
   report [--jitter 0.01]    full suite: Fig 7, Fig 8, Fig 10, headline
   conccl-bw                 Fig 9 size sweep
@@ -118,6 +121,9 @@ SWEEP OPTIONS (conccl sweep)
   --strategies all|s,s      serial,c3_base,c3_sp,c3_rp,c3_sp_rp,
                             c3_best,conccl,conccl_rp
   --collective both|ag|a2a  collective kinds swept
+  --nodes 1,2,4             node-count axis: re-price every point on a
+                            hierarchical multi-node topology (leaders
+                            exchange over the NIC; see machine.nic_bw)
   --variants l:k=v;k=v,...  extra machine variants derived from the base
                             machine (label:field=value;field=value)
   --threads N               worker threads (0 = one per core)

@@ -17,6 +17,10 @@ pub mod plan;
 
 use crate::config::machine::MachineConfig;
 use crate::config::workload::{CollectiveKind, CollectiveSpec};
+use crate::error::Error;
+use crate::fabric::Topology;
+use crate::gpu::memory::BufferId;
+use crate::gpu::sdma::{schedule_phases, EnginePolicy};
 use crate::kernels::CollectiveKernel;
 
 /// A DMA-offloaded collective (all-gather or all-to-all; all-reduce has
@@ -27,14 +31,21 @@ pub struct DmaCollective {
 }
 
 impl DmaCollective {
-    /// Panics on all-reduce (not DMA-offloadable).
+    /// Typed constructor: `Err(Error::NotDmaOffloadable)` on all-reduce
+    /// (SDMA engines move bytes but cannot do arithmetic). The CLI and
+    /// the sweep engine route through this so a bad job fails itself
+    /// instead of aborting the process.
+    pub fn try_new(spec: CollectiveSpec) -> Result<Self, Error> {
+        if !spec.kind.dma_offloadable() {
+            return Err(Error::NotDmaOffloadable(spec.kind.name().to_string()));
+        }
+        Ok(DmaCollective { spec })
+    }
+
+    /// Panics on all-reduce (not DMA-offloadable). Convenience wrapper
+    /// over [`DmaCollective::try_new`] for statically-known specs.
     pub fn new(spec: CollectiveSpec) -> Self {
-        assert!(
-            spec.kind.dma_offloadable(),
-            "{} cannot be offloaded to DMA engines (no arithmetic)",
-            spec.kind.name()
-        );
-        DmaCollective { spec }
+        Self::try_new(spec).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// CUs consumed: none — the whole point (§VI-A).
@@ -97,6 +108,45 @@ impl DmaCollective {
         let cu = CollectiveKernel::new(self.spec);
         cu.time_isolated_full(m) / self.time_isolated(m)
     }
+
+    /// Isolated execution time on an arbitrary topology. Single node:
+    /// the closed-form [`DmaCollective::time_isolated`]. Multi-node:
+    /// priced *exactly* by building the hierarchical command plan and
+    /// running it through `gpu::sdma::schedule_phases` — the analytic
+    /// model and the command machinery cannot drift apart because they
+    /// are the same computation.
+    pub fn time_isolated_on(&self, m: &MachineConfig, topo: &Topology) -> f64 {
+        if topo.num_nodes() == 1 {
+            return self.time_isolated(m);
+        }
+        let n = topo.num_gpus();
+        let shard = (self.spec.size_bytes as usize).div_ceil(n);
+        // Synthetic buffer ids: the scheduler prices commands without
+        // touching memory contents.
+        let ins: Vec<BufferId> = (0..n as u64).map(BufferId).collect();
+        let outs: Vec<BufferId> = (0..n as u64).map(|i| BufferId(1_000 + i)).collect();
+        let plan = match self.spec.kind {
+            CollectiveKind::AllGather => plan::allgather_hier(topo, &ins, &outs, shard),
+            CollectiveKind::AllToAll => {
+                let nn = topo.num_nodes() as u64;
+                let so: Vec<BufferId> = (0..nn).map(|i| BufferId(2_000 + i)).collect();
+                let si: Vec<BufferId> = (0..nn).map(|i| BufferId(3_000 + i)).collect();
+                plan::alltoall_hier(topo, &ins, &outs, &so, &si, shard)
+            }
+            CollectiveKind::AllReduce => unreachable!("constructor rejects all-reduce"),
+        };
+        schedule_phases(m, topo, &plan.phases, EnginePolicy::LeastLoaded).total
+    }
+
+    /// Wire-phase duration on a topology, for the C3 composition (the
+    /// executor accounts launch/fetch/sync separately around it).
+    pub fn wire_time_on(&self, m: &MachineConfig, topo: &Topology) -> f64 {
+        if topo.num_nodes() == 1 {
+            return self.per_link_bytes(m) / self.link_bw_eff(m);
+        }
+        (self.time_isolated_on(m, topo) - self.launch_time(m) - m.dma_fetch_s - m.dma_sync_s)
+            .max(1e-12)
+    }
 }
 
 /// The §VII-A2 hybrid all-reduce: reduce-scatter on CUs, all-gather on
@@ -134,6 +184,35 @@ mod tests {
     #[should_panic(expected = "cannot be offloaded")]
     fn allreduce_rejected() {
         DmaCollective::new(CollectiveSpec::new(CollectiveKind::AllReduce, GIB));
+    }
+
+    #[test]
+    fn try_new_surfaces_typed_error() {
+        let bad = CollectiveSpec::new(CollectiveKind::AllReduce, GIB);
+        let err = DmaCollective::try_new(bad).unwrap_err();
+        assert!(matches!(err, crate::error::Error::NotDmaOffloadable(_)), "{err}");
+        let ok = CollectiveSpec::new(CollectiveKind::AllGather, GIB);
+        assert!(DmaCollective::try_new(ok).is_ok());
+    }
+
+    #[test]
+    fn multi_node_time_exceeds_single_node_and_tracks_nic_bw() {
+        // The NIC is the new bottleneck: 2-node collectives are slower
+        // than single-node ones at the same payload, and get worse as
+        // NIC bandwidth drops.
+        let m = m();
+        for model in [ag(896 * MIB), a2a(896 * MIB)] {
+            let t1 = model.time_isolated_on(&m, &m.topology(1));
+            let t2 = model.time_isolated_on(&m, &m.topology(2));
+            assert!(t2 > t1, "{}: {t2} vs {t1}", model.spec.kind.name());
+            let mut slow = m.clone();
+            slow.nic_bw = m.nic_bw / 10.0;
+            let t2_slow = model.time_isolated_on(&slow, &slow.topology(2));
+            assert!(t2_slow > 2.0 * t2, "{t2_slow} vs {t2}");
+        }
+        // Single-node `_on` matches the closed form exactly.
+        let model = ag(896 * MIB);
+        assert_eq!(model.time_isolated_on(&m, &m.topology(1)), model.time_isolated(&m));
     }
 
     #[test]

@@ -9,9 +9,32 @@
 //! Ordering matters for the launch-cost model: peer transfers are
 //! enqueued first (they ride the slow fabric links), the local shard
 //! copy last (it rides local HBM and is never the critical path).
+//!
+//! On a [`Topology::MultiNode`] the direct algorithm is replaced by a
+//! *hierarchical* one ([`allgather_hier`] / [`alltoall_hier`]): an
+//! intra-node direct phase, an inter-node leader exchange over the NIC
+//! mesh, and an intra-node scatter — with a barrier between phases
+//! (priced by `gpu::sdma::schedule_phases`). Every plan preserves the
+//! conservation invariant checked by [`check_conservation`]: each byte
+//! of each final output buffer is written exactly once.
 
+use crate::fabric::Topology;
 use crate::gpu::memory::BufferId;
 use crate::gpu::sdma::CommandPacket;
+
+/// A command plan split into barrier-separated phases:
+/// `phases[p][g]` is GPU `g`'s command list for phase `p`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasedPlan {
+    pub phases: Vec<Vec<Vec<CommandPacket>>>,
+}
+
+impl PhasedPlan {
+    /// Iterate every command in phase order.
+    pub fn commands(&self) -> impl Iterator<Item = &CommandPacket> + '_ {
+        self.phases.iter().flatten().flatten()
+    }
+}
 
 /// Direct all-gather: every GPU pushes its shard to every peer's output
 /// buffer at the shard's slot, plus one local copy into its own output.
@@ -85,6 +108,258 @@ pub fn alltoall_plan(
     per_gpu
 }
 
+/// Hierarchical all-gather on `topo`. Single node: one phase, the
+/// direct plan. Multi-node, with `L_i` = node `i`'s leader:
+///
+/// 1. **intra-node all-gather** — every GPU pushes its shard to every
+///    node peer's output at the shard's global slot (+ local copy);
+/// 2. **leader exchange** — `L_i` sends its node's now-contiguous
+///    block `outs[L_i][i·P·shard ..]` to every other leader's output
+///    over the NIC mesh;
+/// 3. **scatter** — each leader forwards every received remote block to
+///    its node peers' outputs.
+///
+/// Leaders stage through their *output* buffer (no scratch needed);
+/// every output byte is still written exactly once.
+pub fn allgather_hier(
+    topo: &Topology,
+    shards: &[BufferId],
+    outs: &[BufferId],
+    shard_len: usize,
+) -> PhasedPlan {
+    let n = topo.num_gpus();
+    assert_eq!(shards.len(), n);
+    assert_eq!(outs.len(), n);
+    if topo.num_nodes() == 1 {
+        return PhasedPlan {
+            phases: vec![allgather_plan(n, shards, outs, shard_len)],
+        };
+    }
+    let (nodes, p) = (topo.num_nodes(), topo.gpus_per_node());
+    let block = p * shard_len; // one node's worth of shards
+    let mut ph1 = vec![Vec::new(); n];
+    for g in 0..n {
+        let i = topo.node_of(g);
+        for d in (i * p..(i + 1) * p).filter(|&d| d != g) {
+            ph1[g].push(CommandPacket {
+                src_gpu: g,
+                src: shards[g],
+                src_off: 0,
+                dst_gpu: d,
+                dst: outs[d],
+                dst_off: g * shard_len,
+                len: shard_len,
+            });
+        }
+        ph1[g].push(CommandPacket {
+            src_gpu: g,
+            src: shards[g],
+            src_off: 0,
+            dst_gpu: g,
+            dst: outs[g],
+            dst_off: g * shard_len,
+            len: shard_len,
+        });
+    }
+    let mut ph2 = vec![Vec::new(); n];
+    for i in 0..nodes {
+        let li = topo.leader_of(i);
+        for j in (0..nodes).filter(|&j| j != i) {
+            let lj = topo.leader_of(j);
+            ph2[li].push(CommandPacket {
+                src_gpu: li,
+                src: outs[li],
+                src_off: i * block,
+                dst_gpu: lj,
+                dst: outs[lj],
+                dst_off: i * block,
+                len: block,
+            });
+        }
+    }
+    let mut ph3 = vec![Vec::new(); n];
+    for i in 0..nodes {
+        let li = topo.leader_of(i);
+        for j in (0..nodes).filter(|&j| j != i) {
+            for d in (i * p..(i + 1) * p).filter(|&d| d != li) {
+                ph3[li].push(CommandPacket {
+                    src_gpu: li,
+                    src: outs[li],
+                    src_off: j * block,
+                    dst_gpu: d,
+                    dst: outs[d],
+                    dst_off: j * block,
+                    len: block,
+                });
+            }
+        }
+    }
+    PhasedPlan {
+        phases: vec![ph1, ph2, ph3],
+    }
+}
+
+/// Per-leader staging-buffer size (bytes) the hierarchical all-to-all
+/// needs on each side (outbound and inbound): one `P×P` chunk block per
+/// remote node. Zero on a single node.
+pub fn a2a_stage_bytes(topo: &Topology, chunk_len: usize) -> usize {
+    let p = topo.gpus_per_node();
+    (topo.num_nodes() - 1) * p * p * chunk_len
+}
+
+/// Hierarchical all-to-all on `topo`. Single node: one phase, the
+/// direct transpose. Multi-node:
+///
+/// 1. **intra + stage** — each GPU delivers node-local chunks directly
+///    and funnels every remote-bound chunk into its leader's
+///    `stage_out` buffer (laid out so each remote node's block is
+///    contiguous: `[remote node][dst][src]`);
+/// 2. **leader exchange** — `L_i` ships each remote node's whole block
+///    to that leader's `stage_in` over the NIC;
+/// 3. **scatter** — each leader unpacks `stage_in` into its node's
+///    outputs (one contiguous `P·chunk` run per (source node, dst)).
+///
+/// `stage_out[i]` / `stage_in[i]` are buffers on node `i`'s leader of
+/// at least [`a2a_stage_bytes`] bytes each (unused on a single node).
+pub fn alltoall_hier(
+    topo: &Topology,
+    ins: &[BufferId],
+    outs: &[BufferId],
+    stage_out: &[BufferId],
+    stage_in: &[BufferId],
+    chunk_len: usize,
+) -> PhasedPlan {
+    let n = topo.num_gpus();
+    assert_eq!(ins.len(), n);
+    assert_eq!(outs.len(), n);
+    if topo.num_nodes() == 1 {
+        return PhasedPlan {
+            phases: vec![alltoall_plan(n, ins, outs, chunk_len)],
+        };
+    }
+    let (nodes, p) = (topo.num_nodes(), topo.gpus_per_node());
+    assert_eq!(stage_out.len(), nodes);
+    assert_eq!(stage_in.len(), nodes);
+    // Rank of node `other` among node `of`'s remote nodes (dense 0..N-1).
+    let rank = |of: usize, other: usize| if other < of { other } else { other - 1 };
+    let blk = p * p * chunk_len;
+    let mut ph1 = vec![Vec::new(); n];
+    for g in 0..n {
+        let i = topo.node_of(g);
+        let li = topo.leader_of(i);
+        for d in (i * p..(i + 1) * p).filter(|&d| d != g) {
+            ph1[g].push(CommandPacket {
+                src_gpu: g,
+                src: ins[g],
+                src_off: d * chunk_len,
+                dst_gpu: d,
+                dst: outs[d],
+                dst_off: g * chunk_len,
+                len: chunk_len,
+            });
+        }
+        for d in (0..n).filter(|&d| topo.node_of(d) != i) {
+            let j = topo.node_of(d);
+            let off = (rank(i, j) * p * p + (d - j * p) * p + (g - i * p)) * chunk_len;
+            ph1[g].push(CommandPacket {
+                src_gpu: g,
+                src: ins[g],
+                src_off: d * chunk_len,
+                dst_gpu: li,
+                dst: stage_out[i],
+                dst_off: off,
+                len: chunk_len,
+            });
+        }
+        ph1[g].push(CommandPacket {
+            src_gpu: g,
+            src: ins[g],
+            src_off: g * chunk_len,
+            dst_gpu: g,
+            dst: outs[g],
+            dst_off: g * chunk_len,
+            len: chunk_len,
+        });
+    }
+    let mut ph2 = vec![Vec::new(); n];
+    for i in 0..nodes {
+        let li = topo.leader_of(i);
+        for j in (0..nodes).filter(|&j| j != i) {
+            ph2[li].push(CommandPacket {
+                src_gpu: li,
+                src: stage_out[i],
+                src_off: rank(i, j) * blk,
+                dst_gpu: topo.leader_of(j),
+                dst: stage_in[j],
+                dst_off: rank(j, i) * blk,
+                len: blk,
+            });
+        }
+    }
+    let mut ph3 = vec![Vec::new(); n];
+    for j in 0..nodes {
+        let lj = topo.leader_of(j);
+        for i in (0..nodes).filter(|&i| i != j) {
+            for d in j * p..(j + 1) * p {
+                // Chunks from node i's sources to `d` sit contiguously
+                // (ordered by source), matching out[d]'s slot run.
+                ph3[lj].push(CommandPacket {
+                    src_gpu: lj,
+                    src: stage_in[j],
+                    src_off: (rank(j, i) * p * p + (d - j * p) * p) * chunk_len,
+                    dst_gpu: d,
+                    dst: outs[d],
+                    dst_off: i * p * chunk_len,
+                    len: p * chunk_len,
+                });
+            }
+        }
+    }
+    PhasedPlan {
+        phases: vec![ph1, ph2, ph3],
+    }
+}
+
+/// Conservation invariant: every byte of every final output buffer
+/// (`outs[g]` on GPU `g`, each `out_len` bytes) is written exactly once
+/// across the whole plan. Writes to other buffers (staging) are
+/// ignored. Returns a description of the first violation.
+pub fn check_conservation(
+    plan: &PhasedPlan,
+    outs: &[BufferId],
+    out_len: usize,
+) -> Result<(), String> {
+    let mut writes: Vec<Vec<u32>> = outs.iter().map(|_| vec![0u32; out_len]).collect();
+    for c in plan.commands() {
+        if c.dst_gpu >= outs.len() || c.dst != outs[c.dst_gpu] {
+            continue; // staging or foreign buffer
+        }
+        if c.dst_off + c.len > out_len {
+            return Err(format!(
+                "write OOB on gpu {}: {}+{} > {}",
+                c.dst_gpu, c.dst_off, c.len, out_len
+            ));
+        }
+        for w in &mut writes[c.dst_gpu][c.dst_off..c.dst_off + c.len] {
+            *w += 1;
+            if *w > 1 {
+                return Err(format!(
+                    "gpu {} output byte range [{}, {}) written more than once",
+                    c.dst_gpu,
+                    c.dst_off,
+                    c.dst_off + c.len
+                ));
+            }
+        }
+    }
+    for (g, w) in writes.iter().enumerate() {
+        if let Some(off) = w.iter().position(|&x| x == 0) {
+            return Err(format!("gpu {g} output byte {off} never written"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +405,90 @@ mod tests {
                 assert_eq!(c.dst_off, g * chunk);
             }
         }
+    }
+
+    #[test]
+    fn hier_plans_collapse_to_direct_on_single_node() {
+        let n = 8;
+        let t = Topology::fully_connected(n);
+        let ag = allgather_hier(&t, &ids(n, 0), &ids(n, 100), 64);
+        assert_eq!(ag.phases.len(), 1);
+        assert_eq!(ag.phases[0], allgather_plan(n, &ids(n, 0), &ids(n, 100), 64));
+        let a2a = alltoall_hier(&t, &ids(n, 0), &ids(n, 100), &[], &[], 32);
+        assert_eq!(a2a.phases.len(), 1);
+        assert_eq!(a2a.phases[0], alltoall_plan(n, &ids(n, 0), &ids(n, 100), 32));
+        assert_eq!(a2a_stage_bytes(&t, 32), 0);
+    }
+
+    #[test]
+    fn hier_allgather_conserves_and_stays_adjacent() {
+        for (nodes, p) in [(2usize, 4usize), (4, 2), (2, 2), (4, 1)] {
+            let t = Topology::multi_node(nodes, p, 50e9, 5e-6);
+            let n = t.num_gpus();
+            let shard = 16;
+            let shards = ids(n, 0);
+            let outs = ids(n, 100);
+            let plan = allgather_hier(&t, &shards, &outs, shard);
+            assert_eq!(plan.phases.len(), 3);
+            check_conservation(&plan, &outs, n * shard)
+                .unwrap_or_else(|e| panic!("{nodes}x{p}: {e}"));
+            for c in plan.commands() {
+                assert!(
+                    c.src_gpu == c.dst_gpu || t.are_adjacent(c.src_gpu, c.dst_gpu),
+                    "{nodes}x{p}: non-adjacent command {c:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hier_alltoall_conserves_and_stays_adjacent() {
+        for (nodes, p) in [(2usize, 4usize), (4, 2), (2, 2)] {
+            let t = Topology::multi_node(nodes, p, 50e9, 5e-6);
+            let n = t.num_gpus();
+            let chunk = 8;
+            let ins = ids(n, 0);
+            let outs = ids(n, 100);
+            let so = ids(nodes, 200);
+            let si = ids(nodes, 300);
+            let plan = alltoall_hier(&t, &ins, &outs, &so, &si, chunk);
+            assert_eq!(plan.phases.len(), 3);
+            check_conservation(&plan, &outs, n * chunk)
+                .unwrap_or_else(|e| panic!("{nodes}x{p}: {e}"));
+            for c in plan.commands() {
+                assert!(
+                    c.src_gpu == c.dst_gpu || t.are_adjacent(c.src_gpu, c.dst_gpu),
+                    "{nodes}x{p}: non-adjacent command {c:?}"
+                );
+            }
+            // Staging writes stay inside the declared staging size.
+            let cap = a2a_stage_bytes(&t, chunk);
+            for c in plan.commands() {
+                if so.contains(&c.dst) || si.contains(&c.dst) {
+                    assert!(c.dst_off + c.len <= cap, "staging OOB: {c:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_check_catches_violations() {
+        let n = 4;
+        let t = Topology::fully_connected(n);
+        let outs = ids(n, 100);
+        let mut plan = allgather_hier(&t, &ids(n, 0), &outs, 16);
+        // Drop one command: a hole.
+        plan.phases[0][2].pop();
+        assert!(check_conservation(&plan, &outs, n * 16)
+            .unwrap_err()
+            .contains("never written"));
+        // Duplicate one command: a double write.
+        let mut plan = allgather_hier(&t, &ids(n, 0), &outs, 16);
+        let dup = plan.phases[0][1][0];
+        plan.phases[0][1].push(dup);
+        assert!(check_conservation(&plan, &outs, n * 16)
+            .unwrap_err()
+            .contains("more than once"));
     }
 
     #[test]

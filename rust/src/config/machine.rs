@@ -60,6 +60,15 @@ pub struct MachineConfig {
     /// `link_eff` so ConCCL is at-par with RCCL when bandwidth-bound
     /// (paper Fig 9, ≥128 MiB region).
     pub link_eff_dma: f64,
+    /// Achievable uni-directional bandwidth of the node's NIC, B/s
+    /// (multi-node topologies only; ~400 Gb/s InfiniBand-class). An
+    /// order of magnitude below the aggregate intra-node fabric — the
+    /// inter-node serialization quantum.
+    pub nic_bw: f64,
+    /// Per-transfer NIC latency, s (RDMA post + wire + completion;
+    /// multi-node collectives are latency-bound far longer than
+    /// intra-node ones).
+    pub nic_latency_s: f64,
 
     // ---- Launch / orchestration latencies ----
     /// GPU kernel launch latency, s (HIP stream dispatch, ~5 µs).
@@ -175,6 +184,8 @@ impl MachineConfig {
             link_bw: 64e9,
             link_eff: 0.85,
             link_eff_dma: 0.85,
+            nic_bw: 50e9,
+            nic_latency_s: 5e-6,
             kernel_launch_s: 5e-6,
             coll_launch_s: 15e-6,
             dma_enqueue_s: 6e-6,
@@ -243,6 +254,23 @@ impl MachineConfig {
         self.link_bw * self.link_eff_dma
     }
 
+    /// Interconnect topology for a job spanning `nodes` copies of this
+    /// machine: the paper's fully-connected node for `nodes <= 1`, else
+    /// the hierarchical leader/NIC topology parameterized by this
+    /// machine's NIC constants.
+    pub fn topology(&self, nodes: usize) -> crate::fabric::Topology {
+        if nodes <= 1 {
+            crate::fabric::Topology::fully_connected(self.num_gpus)
+        } else {
+            crate::fabric::Topology::multi_node(
+                nodes,
+                self.num_gpus,
+                self.nic_bw,
+                self.nic_latency_s,
+            )
+        }
+    }
+
     /// All legal CU reservations for resource partitioning: powers of two
     /// from the minimum granularity up to half the machine (§V-B sweeps
     /// "all possible powers-of-two CU allocations").
@@ -297,6 +325,12 @@ impl MachineConfig {
         }
         if self.min_cu_granularity == 0 || self.min_cu_granularity > self.cus_total() {
             errs.push("bad min_cu_granularity".into());
+        }
+        if self.nic_bw <= 0.0 {
+            errs.push(format!("nic_bw must be positive, got {}", self.nic_bw));
+        }
+        if self.nic_latency_s < 0.0 {
+            errs.push(format!("nic_latency_s must be >= 0, got {}", self.nic_latency_s));
         }
         errs
     }
@@ -366,6 +400,18 @@ mod tests {
         let m = MachineConfig::mi300x();
         let c = m.rp_candidates();
         assert_eq!(c, vec![8, 16, 32, 64, 128]);
+    }
+
+    #[test]
+    fn topology_helper_switches_on_node_count() {
+        use crate::fabric::Topology;
+        let m = MachineConfig::mi300x();
+        assert_eq!(m.topology(1), Topology::fully_connected(8));
+        let t = m.topology(2);
+        assert_eq!(t.num_gpus(), 16);
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.nic_bw(), m.nic_bw);
+        assert_eq!(t.nic_latency(), m.nic_latency_s);
     }
 
     #[test]

@@ -208,6 +208,8 @@ fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<
         "link_bw" => f64_field!(link_bw),
         "link_eff" => f64_field!(link_eff),
         "link_eff_dma" => f64_field!(link_eff_dma),
+        "nic_bw" => f64_field!(nic_bw),
+        "nic_latency_s" => f64_field!(nic_latency_s),
         "kernel_launch_s" => f64_field!(kernel_launch_s),
         "coll_launch_s" => f64_field!(coll_launch_s),
         "dma_enqueue_s" => f64_field!(dma_enqueue_s),
@@ -314,7 +316,8 @@ mod tests {
             "num_gpus", "xcds", "cus_per_xcd", "peak_flops_bf16", "compute_eff",
             "hbm_bw", "hbm_eff", "per_cu_hbm_bw", "llc_capacity", "llc_bw",
             "l2_per_xcd", "sdma_engines", "link_count", "link_bw", "link_eff",
-            "link_eff_dma", "kernel_launch_s", "coll_launch_s", "dma_enqueue_s", "dma_fetch_s",
+            "link_eff_dma", "nic_bw", "nic_latency_s",
+            "kernel_launch_s", "coll_launch_s", "dma_enqueue_s", "dma_fetch_s",
             "dma_sync_s", "gemm_tile", "gemm_traffic_coeff", "gemm_traffic_exp",
             "gemm_traffic_cap", "gemm_cache_damp", "ag_cu_need", "a2a_cu_need",
             "ar_cu_need", "a2a_hbm_factor", "ag_hbm_factor", "a2a_link_derate",

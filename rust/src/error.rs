@@ -22,6 +22,9 @@ pub enum Error {
     UnknownStrategy(String),
     /// A collective kind name outside all-gather/all-to-all/all-reduce.
     UnknownCollective(String),
+    /// A collective that has no DMA-offloaded form (all-reduce: SDMA
+    /// engines move bytes but cannot do arithmetic, §VI-B).
+    NotDmaOffloadable(String),
     /// Malformed configuration input (sizes, overrides, variant specs).
     Config(String),
     /// The fluid simulation stalled: tasks remained with no way to make
@@ -43,6 +46,9 @@ impl fmt::Display for Error {
             }
             Error::UnknownCollective(s) => {
                 write!(f, "unknown collective '{s}' (expected all-gather, all-to-all, all-reduce)")
+            }
+            Error::NotDmaOffloadable(k) => {
+                write!(f, "{k} cannot be offloaded to DMA engines (no arithmetic)")
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::SimStall(s) => write!(f, "{s}"),
@@ -70,6 +76,8 @@ mod tests {
         assert!(e.to_string().contains("warp"));
         let e = Error::UnknownGemmTag("cb9".into());
         assert!(e.to_string().contains("cb9"));
+        let e = Error::NotDmaOffloadable("all-reduce".into());
+        assert!(e.to_string().contains("cannot be offloaded"));
     }
 
     #[test]

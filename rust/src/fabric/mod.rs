@@ -1,37 +1,240 @@
-//! Infinity-Fabric-like interconnect model: a fully-connected topology
-//! of uni-directional peer links (paper §II-A: each MI300X connects to
-//! the other seven via bi-directional links, 64 GB/s per direction).
+//! Interconnect model: the paper's fully-connected single node
+//! (§II-A: each MI300X connects to the other seven via bi-directional
+//! Infinity Fabric links, 64 GB/s per direction) generalized to
+//! hierarchical multi-node topologies.
+//!
+//! A [`Topology`] knows three things the rest of the stack builds on:
+//!
+//! * the **link id space** — every uni-directional physical link
+//!   (fabric or NIC) has a dense id; transfers on the same link
+//!   serialize (`gpu::sdma::schedule`'s serialization quantum);
+//! * the **link class** — intra-node Infinity Fabric links run at the
+//!   machine's link bandwidth with negligible latency; inter-node NIC
+//!   links carry their own (lower) bandwidth and a per-transfer
+//!   latency, making them the new serialization quantum at scale;
+//! * **routing** — [`Topology::path`] returns the GPU-hop sequence a
+//!   transfer takes. On the multi-node topology only the node *leader*
+//!   (GPU 0 of each node) owns a NIC, so cross-node transfers stage
+//!   through the leaders' HBM (`src → src-leader → dst-leader → dst`).
 
-/// Fully-connected node topology.
+/// Class of a physical link, which determines its bandwidth/latency.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Topology {
-    pub num_gpus: usize,
+pub enum LinkClass {
+    /// Intra-node Infinity-Fabric peer link (bandwidth from the
+    /// machine config; latency folded into launch costs).
+    Fabric,
+    /// Inter-node NIC link between two node leaders (bandwidth and
+    /// per-transfer latency carried by the topology).
+    Nic,
+}
+
+/// Interconnect topology spanning all GPUs of a job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Topology {
+    /// One node, every GPU pair directly linked (paper §II-A).
+    FullyConnected {
+        /// Total GPUs (8 for the MI300X Infinity Platform).
+        gpus: usize,
+    },
+    /// `nodes` fully-connected nodes of `gpus_per_node` GPUs each.
+    /// GPU 0 of every node (`leader`) owns the node's NIC; leaders form
+    /// a fully-connected inter-node mesh of NIC links.
+    MultiNode {
+        nodes: usize,
+        gpus_per_node: usize,
+        /// Achievable uni-directional NIC bandwidth per leader pair, B/s.
+        nic_bw: f64,
+        /// Per-transfer NIC latency, seconds (RDMA post + wire + completion).
+        nic_latency: f64,
+    },
 }
 
 impl Topology {
+    /// Fully-connected single node.
     pub fn fully_connected(num_gpus: usize) -> Self {
         assert!(num_gpus >= 2);
-        Topology { num_gpus }
+        Topology::FullyConnected { gpus: num_gpus }
     }
 
-    /// Number of uni-directional links (ordered pairs).
+    /// Hierarchical multi-node topology (`nodes >= 2`).
+    pub fn multi_node(nodes: usize, gpus_per_node: usize, nic_bw: f64, nic_latency: f64) -> Self {
+        assert!(nodes >= 2, "multi_node needs >= 2 nodes (use fully_connected)");
+        assert!(gpus_per_node >= 1);
+        assert!(nic_bw > 0.0 && nic_latency >= 0.0);
+        Topology::MultiNode {
+            nodes,
+            gpus_per_node,
+            nic_bw,
+            nic_latency,
+        }
+    }
+
+    /// Total GPUs across all nodes.
+    pub fn num_gpus(&self) -> usize {
+        match *self {
+            Topology::FullyConnected { gpus } => gpus,
+            Topology::MultiNode {
+                nodes,
+                gpus_per_node,
+                ..
+            } => nodes * gpus_per_node,
+        }
+    }
+
+    /// Number of nodes (1 for the fully-connected topology).
+    pub fn num_nodes(&self) -> usize {
+        match *self {
+            Topology::FullyConnected { .. } => 1,
+            Topology::MultiNode { nodes, .. } => nodes,
+        }
+    }
+
+    /// GPUs per node.
+    pub fn gpus_per_node(&self) -> usize {
+        match *self {
+            Topology::FullyConnected { gpus } => gpus,
+            Topology::MultiNode { gpus_per_node, .. } => gpus_per_node,
+        }
+    }
+
+    /// Node index of a GPU.
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node()
+    }
+
+    /// The NIC-owning leader GPU of a node (its first GPU).
+    pub fn leader_of(&self, node: usize) -> usize {
+        node * self.gpus_per_node()
+    }
+
+    /// Is this GPU its node's leader?
+    pub fn is_leader(&self, gpu: usize) -> bool {
+        gpu % self.gpus_per_node() == 0
+    }
+
+    /// Achievable NIC bandwidth, B/s (infinite on a single node: no NIC
+    /// is ever on a path).
+    pub fn nic_bw(&self) -> f64 {
+        match *self {
+            Topology::FullyConnected { .. } => f64::INFINITY,
+            Topology::MultiNode { nic_bw, .. } => nic_bw,
+        }
+    }
+
+    /// Per-transfer NIC latency, seconds.
+    pub fn nic_latency(&self) -> f64 {
+        match *self {
+            Topology::FullyConnected { .. } => 0.0,
+            Topology::MultiNode { nic_latency, .. } => nic_latency,
+        }
+    }
+
+    /// Number of uni-directional links: all ordered intra-node pairs
+    /// plus (multi-node) all ordered leader pairs.
     pub fn num_links(&self) -> usize {
-        self.num_gpus * (self.num_gpus - 1)
+        match *self {
+            Topology::FullyConnected { gpus } => gpus * (gpus - 1),
+            Topology::MultiNode {
+                nodes,
+                gpus_per_node,
+                ..
+            } => nodes * gpus_per_node * (gpus_per_node - 1) + nodes * (nodes - 1),
+        }
     }
 
-    /// Dense id of the uni-directional link `src → dst`.
+    /// Are two distinct GPUs directly linked (same node, or both node
+    /// leaders)?
+    pub fn are_adjacent(&self, a: usize, b: usize) -> bool {
+        assert!(a != b, "no self-link");
+        match *self {
+            Topology::FullyConnected { .. } => true,
+            Topology::MultiNode { .. } => {
+                self.node_of(a) == self.node_of(b) || (self.is_leader(a) && self.is_leader(b))
+            }
+        }
+    }
+
+    /// Class of the direct link `src → dst` (which must be adjacent).
+    pub fn link_class(&self, src: usize, dst: usize) -> LinkClass {
+        assert!(self.are_adjacent(src, dst), "no direct link {src} → {dst}");
+        if self.node_of(src) == self.node_of(dst) {
+            LinkClass::Fabric
+        } else {
+            LinkClass::Nic
+        }
+    }
+
+    /// Dense id of the uni-directional link `src → dst`. Panics unless
+    /// the two GPUs are adjacent. Intra-node links come first (grouped
+    /// by node), then the NIC links between leaders.
     pub fn link_id(&self, src: usize, dst: usize) -> usize {
         assert!(src != dst, "no self-link");
-        assert!(src < self.num_gpus && dst < self.num_gpus);
-        // dst index skips the diagonal.
-        let d = if dst > src { dst - 1 } else { dst };
-        src * (self.num_gpus - 1) + d
+        let n = self.num_gpus();
+        assert!(src < n && dst < n);
+        match *self {
+            Topology::FullyConnected { gpus } => {
+                // dst index skips the diagonal.
+                let d = if dst > src { dst - 1 } else { dst };
+                src * (gpus - 1) + d
+            }
+            Topology::MultiNode {
+                nodes,
+                gpus_per_node: p,
+                ..
+            } => {
+                let (ns, nd) = (src / p, dst / p);
+                if ns == nd {
+                    let (ls, ld) = (src - ns * p, dst - nd * p);
+                    let d = if ld > ls { ld - 1 } else { ld };
+                    ns * p * (p - 1) + ls * (p - 1) + d
+                } else {
+                    assert!(
+                        self.is_leader(src) && self.is_leader(dst),
+                        "no direct link {src} → {dst}: cross-node transfers route via leaders"
+                    );
+                    let d = if nd > ns { nd - 1 } else { nd };
+                    nodes * p * (p - 1) + ns * (nodes - 1) + d
+                }
+            }
+        }
     }
 
-    /// Peers of a GPU, in deterministic order.
-    pub fn peers(&self, gpu: usize) -> impl Iterator<Item = usize> + '_ {
-        let n = self.num_gpus;
-        (0..n).filter(move |&p| p != gpu)
+    /// Directly-linked peers of a GPU, in deterministic order: node
+    /// peers first, then (for leaders) the other node leaders.
+    pub fn peers(&self, gpu: usize) -> Vec<usize> {
+        let node = self.node_of(gpu);
+        let p = self.gpus_per_node();
+        let mut out: Vec<usize> = (node * p..(node + 1) * p).filter(|&x| x != gpu).collect();
+        if self.num_nodes() > 1 && self.is_leader(gpu) {
+            out.extend((0..self.num_nodes()).filter(|&j| j != node).map(|j| self.leader_of(j)));
+        }
+        out
+    }
+
+    /// GPU-hop route from `src` to `dst`, endpoints included. Direct
+    /// pairs get `[src, dst]`; cross-node pairs stage through the
+    /// leaders' HBM: `src → src-leader → dst-leader → dst` (degenerate
+    /// hops elided when an endpoint is itself a leader).
+    pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
+        if src == dst {
+            return vec![src];
+        }
+        if self.are_adjacent(src, dst) {
+            return vec![src, dst];
+        }
+        let mut p = vec![src];
+        let ls = self.leader_of(self.node_of(src));
+        let ld = self.leader_of(self.node_of(dst));
+        if ls != src {
+            p.push(ls);
+        }
+        if ld != *p.last().unwrap() {
+            p.push(ld);
+        }
+        if dst != *p.last().unwrap() {
+            p.push(dst);
+        }
+        p
     }
 }
 
@@ -58,15 +261,83 @@ mod tests {
     }
 
     #[test]
+    fn multi_node_link_ids_are_dense_and_unique() {
+        // 2 nodes x 4 GPUs: 2*4*3 intra + 2*1 NIC = 26 links.
+        let t = Topology::multi_node(2, 4, 50e9, 5e-6);
+        assert_eq!(t.num_gpus(), 8);
+        assert_eq!(t.num_links(), 26);
+        let mut seen = vec![false; t.num_links()];
+        for s in 0..8 {
+            for d in 0..8 {
+                if s == d || !t.are_adjacent(s, d) {
+                    continue;
+                }
+                let id = t.link_id(s, d);
+                assert!(!seen[id], "duplicate link id {id} for {s}->{d}");
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+
+    #[test]
     fn peers_exclude_self() {
         let t = Topology::fully_connected(4);
-        let p: Vec<usize> = t.peers(2).collect();
-        assert_eq!(p, vec![0, 1, 3]);
+        assert_eq!(t.peers(2), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn multi_node_adjacency_and_classes() {
+        let t = Topology::multi_node(2, 4, 50e9, 5e-6);
+        // Same node: fabric.
+        assert_eq!(t.link_class(1, 3), LinkClass::Fabric);
+        // Leaders: NIC.
+        assert!(t.are_adjacent(0, 4));
+        assert_eq!(t.link_class(0, 4), LinkClass::Nic);
+        // Non-leader cross-node: not adjacent.
+        assert!(!t.are_adjacent(1, 5));
+        // Leaders see node peers then remote leaders.
+        assert_eq!(t.peers(4), vec![5, 6, 7, 0]);
+        assert_eq!(t.peers(5), vec![4, 6, 7]);
+    }
+
+    #[test]
+    fn paths_route_via_leaders() {
+        let t = Topology::multi_node(2, 4, 50e9, 5e-6);
+        assert_eq!(t.path(1, 3), vec![1, 3]);
+        assert_eq!(t.path(1, 5), vec![1, 0, 4, 5]);
+        assert_eq!(t.path(0, 5), vec![0, 4, 5]);
+        assert_eq!(t.path(1, 4), vec![1, 0, 4]);
+        assert_eq!(t.path(0, 4), vec![0, 4]);
+        assert_eq!(t.path(3, 3), vec![3]);
+        // Every hop on every path is adjacent.
+        for s in 0..8 {
+            for d in 0..8 {
+                for w in t.path(s, d).windows(2) {
+                    assert!(t.are_adjacent(w[0], w[1]), "{s}->{d}: hop {w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fully_connected_paths_are_direct() {
+        let t = Topology::fully_connected(8);
+        assert_eq!(t.path(2, 6), vec![2, 6]);
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.gpus_per_node(), 8);
+        assert!(t.nic_bw().is_infinite());
     }
 
     #[test]
     #[should_panic(expected = "self-link")]
     fn self_link_rejected() {
         Topology::fully_connected(4).link_id(1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "route via leaders")]
+    fn cross_node_non_leader_link_rejected() {
+        Topology::multi_node(2, 4, 50e9, 5e-6).link_id(1, 5);
     }
 }

@@ -9,4 +9,7 @@ pub mod memory;
 pub mod sdma;
 
 pub use memory::{BufferId, GpuMemory};
-pub use sdma::{schedule, CommandPacket, EnginePolicy, SdmaSchedule, TransferTiming};
+pub use sdma::{
+    schedule, schedule_phases, CommandPacket, EnginePolicy, PhasedSchedule, SdmaSchedule,
+    TransferTiming,
+};

@@ -13,9 +13,19 @@
 //! command packets (no data movement — usable at 20 GB scale);
 //! the data plane in `node/` replays a schedule against real
 //! [`GpuMemory`](crate::gpu::memory::GpuMemory) buffers.
+//!
+//! Links are heterogeneous: intra-node Infinity-Fabric links run at the
+//! machine's DMA link bandwidth; inter-node NIC links run at the
+//! topology's (lower) NIC bandwidth and charge a per-transfer latency.
+//! A command between GPUs with no direct link becomes a *staged
+//! multi-hop copy*: the engine store-and-forwards the payload through
+//! each intermediate hop's HBM ([`Topology::path`]), serializing on
+//! every link it crosses. [`schedule_phases`] prices barrier-separated
+//! phase sequences (hierarchical collectives sync the CPU between
+//! phases).
 
 use crate::config::machine::MachineConfig;
-use crate::fabric::Topology;
+use crate::fabric::{LinkClass, Topology};
 use crate::gpu::memory::BufferId;
 
 /// One DMA command packet: copy `len` bytes from a buffer on `src_gpu`
@@ -64,6 +74,17 @@ pub enum EnginePolicy {
     LeastLoaded,
 }
 
+/// Timing of a barrier-separated sequence of command batches (one
+/// [`SdmaSchedule`] per phase). Hierarchical collectives need this: a
+/// leader can only forward a node block after the intra-node phase that
+/// assembled it completes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasedSchedule {
+    pub phases: Vec<SdmaSchedule>,
+    /// Completion of the whole pipeline including the final CPU sync.
+    pub total: f64,
+}
+
 /// Compute the timing of a batch of DMA commands. `per_gpu[g]` is the
 /// command list enqueued by GPU `g`'s orchestrating CPU thread, in
 /// order. Commands from different GPUs enqueue in parallel (one host
@@ -74,20 +95,53 @@ pub fn schedule(
     per_gpu: &[Vec<CommandPacket>],
     policy: EnginePolicy,
 ) -> SdmaSchedule {
-    assert_eq!(per_gpu.len(), topo.num_gpus);
+    schedule_at(m, topo, per_gpu, policy, 0.0)
+}
+
+/// Price a sequence of phases with a CPU-side barrier (sync) between
+/// them: phase `p+1` commands are not enqueued before every phase-`p`
+/// transfer has landed and the CPU has synchronized on it.
+pub fn schedule_phases(
+    m: &MachineConfig,
+    topo: &Topology,
+    phases: &[Vec<Vec<CommandPacket>>],
+    policy: EnginePolicy,
+) -> PhasedSchedule {
+    let mut t0 = 0.0f64;
+    let mut out = Vec::with_capacity(phases.len());
+    for per_gpu in phases {
+        let s = schedule_at(m, topo, per_gpu, policy, t0);
+        t0 = s.total; // barrier: last byte landed + CPU sync
+        out.push(s);
+    }
+    PhasedSchedule {
+        phases: out,
+        total: t0,
+    }
+}
+
+/// [`schedule`] with all clocks (CPU threads, engines, links) starting
+/// at `t0` — the building block of [`schedule_phases`].
+fn schedule_at(
+    m: &MachineConfig,
+    topo: &Topology,
+    per_gpu: &[Vec<CommandPacket>],
+    policy: EnginePolicy,
+    t0: f64,
+) -> SdmaSchedule {
+    assert_eq!(per_gpu.len(), topo.num_gpus());
     let engines = m.sdma_engines.max(1);
     // Busy-until times.
-    let mut engine_free = vec![vec![0.0f64; engines]; topo.num_gpus];
-    let mut link_free = vec![0.0f64; topo.num_links()];
+    let mut engine_free = vec![vec![t0; engines]; topo.num_gpus()];
+    let mut link_free = vec![t0; topo.num_links()];
     // Local (intra-GPU) copies run at a fraction of HBM bandwidth
     // (read + write on the same stacks).
     let local_bw = m.hbm_bw_achievable() / 2.0;
-    let link_bw = m.link_bw_dma();
 
     let mut timings: Vec<Vec<TransferTiming>> = Vec::with_capacity(per_gpu.len());
-    let mut last_finish = 0.0f64;
+    let mut last_finish = t0;
     for (g, cmds) in per_gpu.iter().enumerate() {
-        let mut t_cpu = 0.0f64; // this GPU's orchestration thread clock
+        let mut t_cpu = t0; // this GPU's orchestration thread clock
         let mut out = Vec::with_capacity(cmds.len());
         for (i, c) in cmds.iter().enumerate() {
             assert!(c.src_gpu == g || c.dst_gpu == g, "command not owned by GPU {g}");
@@ -103,23 +157,33 @@ pub fn schedule(
                     .map(|(idx, _)| idx)
                     .unwrap(),
             };
-            let (dur, link) = if c.src_gpu == c.dst_gpu {
-                (c.len as f64 / local_bw, None)
+            let (start, finish) = if c.src_gpu == c.dst_gpu {
+                let start = ready.max(engine_free[g][engine]);
+                (start, start + c.len as f64 / local_bw)
             } else {
-                (
-                    c.len as f64 / link_bw,
-                    Some(topo.link_id(c.src_gpu, c.dst_gpu)),
-                )
+                // Store-and-forward along the route: each hop serializes
+                // on its own link; hop k+1 starts when hop k has landed
+                // in the intermediate GPU's HBM.
+                let mut t = ready.max(engine_free[g][engine]);
+                let mut start = f64::NAN;
+                for w in topo.path(c.src_gpu, c.dst_gpu).windows(2) {
+                    let l = topo.link_id(w[0], w[1]);
+                    let (bw, lat) = match topo.link_class(w[0], w[1]) {
+                        LinkClass::Fabric => (m.link_bw_dma(), 0.0),
+                        LinkClass::Nic => (topo.nic_bw(), topo.nic_latency()),
+                    };
+                    let s = t.max(link_free[l]);
+                    if start.is_nan() {
+                        start = s;
+                    }
+                    t = s + lat + c.len as f64 / bw;
+                    link_free[l] = t;
+                }
+                (start, t)
             };
-            let mut start = ready.max(engine_free[g][engine]);
-            if let Some(l) = link {
-                start = start.max(link_free[l]);
-            }
-            let finish = start + dur;
+            // The orchestrating engine coordinates the whole (possibly
+            // staged) transfer and is busy until the last hop lands.
             engine_free[g][engine] = finish;
-            if let Some(l) = link {
-                link_free[l] = finish;
-            }
             last_finish = last_finish.max(finish);
             out.push(TransferTiming {
                 enqueue_done,
@@ -255,6 +319,64 @@ mod tests {
             m.dma_enqueue_s + m.dma_fetch_s + wire,
             1e-9
         );
+    }
+
+    #[test]
+    fn cross_node_transfer_stages_through_leaders() {
+        // 1 → 5 on a 2x4 topology routes 1 → 0 → 4 → 5: two fabric hops
+        // plus one NIC hop with its latency; strictly slower than a
+        // same-size intra-node transfer.
+        let m = m();
+        let topo = Topology::multi_node(2, 4, 10e9, 5e-6);
+        let mut per_gpu = vec![Vec::new(); 8];
+        per_gpu[1].push(cmd(1, 5, 100 << 20));
+        let s = schedule(&m, &topo, &per_gpu, EnginePolicy::RoundRobin);
+        let t = s.timings[1][0];
+        let fabric_hop = (100u64 << 20) as f64 / m.link_bw_dma();
+        let nic_hop = 5e-6 + (100u64 << 20) as f64 / 10e9;
+        assert_rel_close!(t.finish - t.start, 2.0 * fabric_hop + nic_hop, 1e-9);
+
+        let mut intra = vec![Vec::new(); 8];
+        intra[1].push(cmd(1, 2, 100 << 20));
+        let si = schedule(&m, &topo, &intra, EnginePolicy::RoundRobin);
+        assert!(t.finish > 2.0 * si.timings[1][0].finish);
+    }
+
+    #[test]
+    fn nic_link_serializes_between_leader_pair() {
+        // Two cross-node transfers from the same source node share the
+        // single 0 → 4 NIC link and serialize there.
+        let m = m();
+        let topo = Topology::multi_node(2, 4, 10e9, 0.0);
+        let mut per_gpu = vec![Vec::new(); 8];
+        per_gpu[0].push(cmd(0, 4, 100 << 20));
+        per_gpu[0].push(cmd(0, 4, 100 << 20));
+        let s = schedule(&m, &topo, &per_gpu, EnginePolicy::LeastLoaded);
+        let nic_hop = (100u64 << 20) as f64 / 10e9;
+        let (a, b) = (s.timings[0][0], s.timings[0][1]);
+        assert!(b.finish >= a.finish + nic_hop * 0.999, "NIC must serialize");
+    }
+
+    #[test]
+    fn phases_barrier_between_rounds() {
+        // Phase 2 cannot start before phase 1 has landed + synced, even
+        // though it uses different links.
+        let m = m();
+        let topo = Topology::fully_connected(8);
+        let mut p1 = vec![Vec::new(); 8];
+        p1[0].push(cmd(0, 1, 100 << 20));
+        let mut p2 = vec![Vec::new(); 8];
+        p2[2].push(cmd(2, 3, 100 << 20));
+        let ps = schedule_phases(&m, &topo, &[p1.clone(), p2], EnginePolicy::RoundRobin);
+        assert_eq!(ps.phases.len(), 2);
+        let end1 = ps.phases[0].last_finish + m.dma_sync_s;
+        let t2 = ps.phases[1].timings[2][0];
+        assert!(t2.enqueue_done >= end1, "phase 2 enqueued before barrier");
+        assert_rel_close!(ps.total, ps.phases[1].last_finish + m.dma_sync_s, 1e-12);
+        // A single phase prices identically to plain `schedule` + sync.
+        let single = schedule_phases(&m, &topo, &[p1.clone()], EnginePolicy::RoundRobin);
+        let flat = schedule(&m, &topo, &p1, EnginePolicy::RoundRobin);
+        assert_rel_close!(single.total, flat.total, 1e-12);
     }
 
     #[test]

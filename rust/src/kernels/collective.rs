@@ -23,6 +23,7 @@
 
 use crate::config::machine::MachineConfig;
 use crate::config::workload::{CollectiveKind, CollectiveSpec};
+use crate::fabric::Topology;
 
 /// A CU-based (RCCL-like) collective kernel instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -122,6 +123,85 @@ impl CollectiveKernel {
     pub fn slowdown_with_cus(&self, m: &MachineConfig, cu: u32) -> f64 {
         self.time_isolated(m, cu) / self.time_isolated_full(m)
     }
+
+    // ---- hierarchical (multi-node) model ----
+    //
+    // RCCL on a multi-node job runs the hierarchical algorithm: an
+    // intra-node direct phase, an inter-node exchange between the
+    // NIC-owning leaders, and an intra-node scatter. The NIC replaces
+    // the fabric link as the serialization quantum: its (much lower)
+    // bandwidth bounds the exchange and its per-transfer latency keeps
+    // multi-node collectives latency-bound far longer.
+
+    /// Bytes each leader ships over each NIC link per algorithm pass
+    /// (zero on a single node).
+    pub fn per_nic_bytes(&self, t: &Topology) -> f64 {
+        match *t {
+            Topology::FullyConnected { .. } => 0.0,
+            Topology::MultiNode {
+                nodes,
+                gpus_per_node,
+                ..
+            } => {
+                let s = self.spec.size_bytes as f64;
+                match self.spec.kind {
+                    // One node block (its gathered shards) per pass.
+                    CollectiveKind::AllGather | CollectiveKind::AllReduce => s / nodes as f64,
+                    // A full P×P chunk block per node pair.
+                    CollectiveKind::AllToAll => gpus_per_node as f64 * s / nodes as f64,
+                }
+            }
+        }
+    }
+
+    /// Pure wire time on a topology with `cu` CUs granted, seconds.
+    /// Single node: [`CollectiveKernel::t_wire`]. Multi-node: the sum of
+    /// the hierarchical phases, with the NIC exchange in the middle.
+    pub fn t_wire_on(&self, m: &MachineConfig, t: &Topology, cu: u32) -> f64 {
+        match *t {
+            Topology::FullyConnected { .. } => self.t_wire(m, cu),
+            Topology::MultiNode {
+                nodes,
+                gpus_per_node,
+                nic_bw,
+                nic_latency,
+            } => {
+                if cu == 0 {
+                    return f64::INFINITY;
+                }
+                let s = self.spec.size_bytes as f64;
+                let nn = nodes as f64;
+                let p = gpus_per_node as f64;
+                let shard = s / (nn * p);
+                let bw = m.link_bw_achievable() * self.link_derate(m) * self.bw_scale(m, cu);
+                let passes = match self.spec.kind {
+                    CollectiveKind::AllReduce => 2.0, // RS + AG, both hierarchical
+                    _ => 1.0,
+                };
+                // Phase 1 bottleneck link: the all-to-all funnels every
+                // remote-bound chunk through the member → leader link.
+                let ph1 = match self.spec.kind {
+                    CollectiveKind::AllToAll => shard * (1.0 + (nn - 1.0) * p),
+                    _ => shard,
+                };
+                // Phase 3: leaders rebroadcast every remote block.
+                let ph3 = (nn - 1.0) * s / nn;
+                let intra = if gpus_per_node > 1 { (ph1 + ph3) / bw } else { 0.0 };
+                let t_nic = nic_latency + self.per_nic_bytes(t) / nic_bw;
+                passes * (intra + t_nic)
+            }
+        }
+    }
+
+    /// Isolated execution time on a topology with `cu` CUs, seconds.
+    pub fn time_isolated_on(&self, m: &MachineConfig, t: &Topology, cu: u32) -> f64 {
+        m.coll_launch_s + self.t_wire_on(m, t, cu)
+    }
+
+    /// Isolated time on a topology at the kernel's full CU allocation.
+    pub fn time_isolated_full_on(&self, m: &MachineConfig, t: &Topology) -> f64 {
+        self.time_isolated_on(m, t, self.cu_need(m))
+    }
 }
 
 #[cfg(test)]
@@ -211,6 +291,29 @@ mod tests {
         let m = m();
         let t = ag(896 * MIB).time_isolated_full(&m);
         assert!((1.9e-3..2.4e-3).contains(&t), "t = {t}");
+    }
+
+    #[test]
+    fn hierarchical_times_expose_nic_bottleneck() {
+        let m = m();
+        let s = 896 * MIB;
+        for k in [ag(s), a2a(s)] {
+            let t1 = k.time_isolated_full_on(&m, &m.topology(1));
+            assert_eq!(t1, k.time_isolated_full(&m), "single node must match");
+            let t2 = k.time_isolated_full_on(&m, &m.topology(2));
+            let t4 = k.time_isolated_full_on(&m, &m.topology(4));
+            assert!(t2 > t1, "{}: 2-node {t2} <= 1-node {t1}", k.spec.kind.name());
+            assert!(t4 > 0.0 && t2 > 0.0);
+            // Dropping NIC bandwidth 10x lengthens the collective.
+            let mut slow = m.clone();
+            slow.nic_bw = m.nic_bw / 10.0;
+            let t2_slow = k.time_isolated_full_on(&slow, &slow.topology(2));
+            assert!(t2_slow > 1.5 * t2, "{t2_slow} vs {t2}");
+        }
+        // A2A ships P× more bytes per NIC link than AG.
+        let t = m.topology(2);
+        let r = a2a(s).per_nic_bytes(&t) / ag(s).per_nic_bytes(&t);
+        assert!((r - m.num_gpus as f64).abs() < 1e-9, "ratio {r}");
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         "characterize" => characterize(args),
         "run" => run_one(args),
         "sweep" => sweep_cmd(args),
+        "bench-gate" => bench_gate(args),
         "rp-sweep" => rp_sweep(args),
         "report" => full_report(args),
         "conccl-bw" => conccl_bw(args),
@@ -89,10 +90,16 @@ fn run_one(args: &Args) -> Result<(), String> {
     let m = args.machine()?;
     let kind = parse_collective(&args.opt("collective", "all-gather"))?;
     let sc = find_scenario(&args.opt("scenario", "mb1_896M"), kind)?;
-    let exec = C3Executor::new(m);
+    let nodes = args.opt_usize("nodes", 1)?.max(1);
+    let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
     let strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
-    let r = exec.run(&sc, strat);
-    let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!("{} × {} under {}", sc.tag(), kind.name(), strat.name()));
+    let r = exec.try_run(&sc, strat).map_err(|e| e.to_string())?;
+    let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!(
+        "{} × {} under {} ({nodes} node(s))",
+        sc.tag(),
+        kind.name(),
+        strat.name()
+    ));
     t.row(vec!["serial".to_string(), fmt_seconds(r.serial)]);
     t.row(vec!["concurrent".to_string(), fmt_seconds(r.total)]);
     t.row(vec!["gemm finish".to_string(), fmt_seconds(r.gemm_finish)]);
@@ -148,7 +155,15 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
         machines.extend(parse_variants(&m, spec).map_err(|e| e.to_string())?);
     }
     let threads = args.opt_usize("threads", 0)?;
+    let node_counts: Vec<usize> = args
+        .opt("nodes", "1")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|e| format!("--nodes: {e}")))
+        .collect::<Result<_, _>>()?;
     let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
+        .and_then(|p| p.with_node_counts(node_counts))
         .map_err(|e| e.to_string())?;
     let n_jobs = plan.job_count();
     let t0 = std::time::Instant::now();
@@ -156,52 +171,55 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
     let elapsed = t0.elapsed().as_secs_f64();
 
     for (mi, mv) in results.plan.machines.iter().enumerate() {
-        let mut headers: Vec<String> = vec!["scenario".to_string(), "collective".to_string()];
-        headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
-        let mut t = Table::new(headers).left_cols(2).title(format!(
-            "sweep: machine '{}' — median-speedup per strategy",
-            mv.label
-        ));
-        for (si, sc) in results.plan.scenarios.iter().enumerate() {
-            let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
-            for (ki, _) in results.plan.strategies.iter().enumerate() {
-                let out = &results.outputs[results.plan.job_id(mi, si, ki)];
-                row.push(match &out.result {
-                    Ok(meas) => match out.rp_cus {
-                        Some(k) => format!("{} @{k}CU", speedup(meas.speedup_median)),
-                        None => speedup(meas.speedup_median),
-                    },
-                    Err(_) => "ERR".to_string(),
-                });
+        for (ni, &nodes) in results.plan.node_counts.iter().enumerate() {
+            let mut headers: Vec<String> = vec!["scenario".to_string(), "collective".to_string()];
+            headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
+            let mut t = Table::new(headers).left_cols(2).title(format!(
+                "sweep: machine '{}' × {nodes} node(s) — median-speedup per strategy",
+                mv.label
+            ));
+            for (si, sc) in results.plan.scenarios.iter().enumerate() {
+                let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
+                for (ki, _) in results.plan.strategies.iter().enumerate() {
+                    let out = &results.outputs[results.plan.job_id(mi, ni, si, ki)];
+                    row.push(match &out.result {
+                        Ok(meas) => match out.rp_cus {
+                            Some(k) => format!("{} @{k}CU", speedup(meas.speedup_median)),
+                            None => speedup(meas.speedup_median),
+                        },
+                        Err(_) => "ERR".to_string(),
+                    });
+                }
+                t.row(row);
             }
-            t.row(row);
+            t.print();
+            if let Ok(outs) = results.to_scenario_outcomes(mi, ni) {
+                let h = headline(&outs);
+                let p = |k: &str| h.per_strategy[k].1;
+                println!(
+                    "machine '{}' × {nodes} node(s): avg %ideal — base {:.0}, sp {:.0}, \
+                     rp {:.0}, best {:.0}, conccl {:.0}, conccl_rp {:.0}",
+                    mv.label,
+                    p("c3_base"),
+                    p("c3_sp"),
+                    p("c3_rp"),
+                    p("c3_best"),
+                    p("conccl"),
+                    p("conccl_rp")
+                );
+            }
+            println!();
         }
-        t.print();
-        if let Ok(outs) = results.to_scenario_outcomes(mi) {
-            let h = headline(&outs);
-            let p = |k: &str| h.per_strategy[k].1;
-            println!(
-                "machine '{}': avg %ideal — base {:.0}, sp {:.0}, rp {:.0}, best {:.0}, \
-                 conccl {:.0}, conccl_rp {:.0}",
-                mv.label,
-                p("c3_base"),
-                p("c3_sp"),
-                p("c3_rp"),
-                p("c3_best"),
-                p("conccl"),
-                p("conccl_rp")
-            );
-        }
-        println!();
     }
     let errs = results.errors();
     if !errs.is_empty() {
         println!("{} job(s) failed (sweep continued without them):", errs.len());
         for (job, e) in &errs {
             println!(
-                "  job {} [{} × {} × {}]: {e}",
+                "  job {} [{} × {}n × {} × {}]: {e}",
                 job.id,
                 results.machine_label(job.machine_idx),
+                results.plan.node_counts[job.node_idx],
                 results.plan.scenarios[job.scenario_idx].tag(),
                 job.strategy.name()
             );
@@ -228,6 +246,52 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("{} of {n_jobs} sweep jobs failed (see list above)", errs.len()))
+    }
+}
+
+/// CI perf-regression gate: compare a fresh `sweep --json` report
+/// against the checked-in baseline; non-zero exit on any >tolerance
+/// median-speedup regression. A `{"seeded":false}` baseline passes with
+/// instructions (bootstrap mode), so the gate can land before the first
+/// baseline numbers are committed.
+fn bench_gate(args: &Args) -> Result<(), String> {
+    let baseline_path = args.opt("baseline", "BENCH_baseline.json");
+    let report_path = args
+        .options
+        .get("report")
+        .ok_or("bench-gate needs --report <sweep --json output>")?;
+    let tolerance: f64 = args
+        .opt("tolerance", "0.02")
+        .parse()
+        .map_err(|e| format!("--tolerance: {e}"))?;
+    let read = |p: &str| -> Result<conccl::sweep::Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        conccl::sweep::parse_json(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let report = read(report_path)?;
+    if !conccl::sweep::is_seeded(&baseline) {
+        let points = conccl::sweep::extract_points(&report)?;
+        println!(
+            "bench-gate: baseline '{baseline_path}' is not seeded yet; {} point(s) measured.",
+            points.len()
+        );
+        println!(
+            "  To seed the bench trajectory, commit the fresh report as {baseline_path}:\n  \
+             cp {report_path} {baseline_path}"
+        );
+        return Ok(());
+    }
+    let gate = conccl::sweep::gate(&baseline, &report, tolerance)?;
+    print!("{}", gate.render(tolerance));
+    if gate.passed() {
+        Ok(())
+    } else {
+        Err(format!(
+            "perf gate failed: {} regression(s), {} missing point(s)",
+            gate.regressions.len(),
+            gate.missing.len()
+        ))
     }
 }
 
@@ -384,7 +448,8 @@ fn e2e(args: &Args) -> Result<(), String> {
     // Isolated comparison of CU vs DMA collectives on this trace.
     let mut wire = Table::new(vec!["stage", "gather", "rccl", "conccl"]).left_cols(2);
     for s in trace.stages.iter().take(2) {
-        let dma = conccl::conccl::DmaCollective::new(s.gather.spec);
+        let dma = conccl::conccl::DmaCollective::try_new(s.gather.spec)
+            .map_err(|e| e.to_string())?;
         wire.row(vec![
             s.label.clone(),
             s.gather.spec.size_tag(),

@@ -16,9 +16,27 @@
 //! cannot reduce (§VI-B); the hybrid path reduce-scatters on CUs then
 //! all-gathers on DMA engines (§VII-A2).
 
+//! On multi-node topologies the DMA backend switches to the
+//! hierarchical plans (`conccl::plan::allgather_hier` /
+//! `alltoall_hier`) — intra-node direct DMA, inter-node leader
+//! exchange, leader scatter — and asserts the conservation invariant
+//! (every output byte written exactly once) before moving bytes. Both
+//! backends stay byte-identical on every topology.
+
+use crate::conccl::plan::{
+    a2a_stage_bytes, allgather_hier, alltoall_hier, check_conservation, PhasedPlan,
+};
 use crate::gpu::memory::BufferId;
 use crate::gpu::sdma::EnginePolicy;
 use crate::node::Node;
+
+/// Execute a phased collective plan after checking conservation over
+/// the final outputs; returns total modelled time.
+fn run_checked(node: &mut Node, plan: &PhasedPlan, outs: &[BufferId], out_len: usize) -> f64 {
+    check_conservation(plan, outs, out_len)
+        .unwrap_or_else(|e| panic!("collective plan violates conservation: {e}"));
+    node.execute_phases(&plan.phases, EnginePolicy::LeastLoaded).total
+}
 
 /// Which engine executes the data movement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,10 +76,10 @@ pub fn all_gather(
     }
     match backend {
         Backend::Dma => {
-            let plan = crate::conccl::plan::allgather_plan(n, shards, outs, shard_len);
-            let sched = node.execute_dma(&plan, EnginePolicy::LeastLoaded);
+            let plan = allgather_hier(&node.topo, shards, outs, shard_len);
+            let time = run_checked(node, &plan, outs, n * shard_len);
             CollectiveRun {
-                time: sched.total,
+                time,
                 wire_bytes_per_gpu: ((n - 1) * shard_len) as u64,
             }
         }
@@ -80,7 +98,7 @@ pub fn all_gather(
                 ),
             );
             CollectiveRun {
-                time: k.time_isolated_full(&node.machine),
+                time: k.time_isolated_full_on(&node.machine, &node.topo),
                 wire_bytes_per_gpu: ((n - 1) * shard_len) as u64,
             }
         }
@@ -108,10 +126,29 @@ pub fn all_to_all(
     }
     match backend {
         Backend::Dma => {
-            let plan = crate::conccl::plan::alltoall_plan(n, ins, outs, chunk_len);
-            let sched = node.execute_dma(&plan, EnginePolicy::LeastLoaded);
+            // Multi-node plans stage through per-leader scratch buffers
+            // (allocated here, freed after the bytes land).
+            let nodes = node.topo.num_nodes();
+            let stage_len = a2a_stage_bytes(&node.topo, chunk_len);
+            let (so, si): (Vec<BufferId>, Vec<BufferId>) = if nodes > 1 {
+                (0..nodes)
+                    .map(|i| {
+                        let leader = node.topo.leader_of(i);
+                        (node.alloc(leader, stage_len), node.alloc(leader, stage_len))
+                    })
+                    .unzip()
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            let plan = alltoall_hier(&node.topo, ins, outs, &so, &si, chunk_len);
+            let time = run_checked(node, &plan, outs, total_len);
+            for i in 0..nodes.min(so.len()) {
+                let leader = node.topo.leader_of(i);
+                node.mems[leader].free(so[i]);
+                node.mems[leader].free(si[i]);
+            }
             CollectiveRun {
-                time: sched.total,
+                time,
                 wire_bytes_per_gpu: ((n - 1) * chunk_len) as u64,
             }
         }
@@ -130,7 +167,7 @@ pub fn all_to_all(
                 ),
             );
             CollectiveRun {
-                time: k.time_isolated_full(&node.machine),
+                time: k.time_isolated_full_on(&node.machine, &node.topo),
                 wire_bytes_per_gpu: ((n - 1) * chunk_len) as u64,
             }
         }
@@ -163,6 +200,7 @@ pub fn all_reduce_f32(node: &mut Node, bufs: &[BufferId], backend: Backend) -> C
         node.mems[g].write(bufs[g], 0, &out_bytes);
     }
     let m = &node.machine;
+    let topo = &node.topo;
     let size = len as u64;
     match backend {
         Backend::Cu => {
@@ -173,22 +211,21 @@ pub fn all_reduce_f32(node: &mut Node, bufs: &[BufferId], backend: Backend) -> C
                 ),
             );
             CollectiveRun {
-                time: k.time_isolated_full(m),
+                time: k.time_isolated_full_on(m, topo),
                 wire_bytes_per_gpu: 2 * ((n - 1) * len / n) as u64,
             }
         }
         Backend::Dma => {
-            // Hybrid: RS on CUs (one wire pass + reduction) ...
-            let rs_wire = (len / n) as f64 / m.link_bw_achievable();
-            let rs = m.coll_launch_s + rs_wire;
+            // Hybrid: RS on CUs (a reduce-scatter's wire profile mirrors
+            // the all-gather's, on any topology) ...
+            let rs_spec = crate::config::workload::CollectiveSpec::new(
+                crate::config::workload::CollectiveKind::AllGather,
+                size,
+            );
+            let rs_kernel = crate::kernels::CollectiveKernel::new(rs_spec);
+            let rs = m.coll_launch_s + rs_kernel.t_wire_on(m, topo, rs_kernel.cu_need(m));
             // ... then AG on DMA engines.
-            let ag = crate::conccl::DmaCollective::new(
-                crate::config::workload::CollectiveSpec::new(
-                    crate::config::workload::CollectiveKind::AllGather,
-                    size,
-                ),
-            )
-            .time_isolated(m);
+            let ag = crate::conccl::DmaCollective::new(rs_spec).time_isolated_on(m, topo);
             CollectiveRun {
                 time: rs + ag,
                 wire_bytes_per_gpu: 2 * ((n - 1) * len / n) as u64,
@@ -208,6 +245,14 @@ mod tests {
         m.num_gpus = n;
         m.link_count = n - 1;
         Node::new(m)
+    }
+
+    fn multi(nodes: usize, p: usize) -> Node {
+        let mut m = MachineConfig::mi300x();
+        m.num_gpus = p;
+        m.link_count = p.saturating_sub(1).max(1);
+        let topo = m.topology(nodes);
+        Node::with_topology(m, topo)
     }
 
     fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
@@ -276,6 +321,83 @@ mod tests {
     #[test]
     fn alltoall_correct_cu() {
         check_alltoall(Backend::Cu, 4, 64, 6);
+    }
+
+    #[test]
+    fn multi_node_allgather_correct_both_backends() {
+        for (nodes, p) in [(2usize, 4usize), (4, 2)] {
+            let shard_len = 24;
+            for backend in [Backend::Dma, Backend::Cu] {
+                let mut rng = Rng::new(7);
+                let mut nd = multi(nodes, p);
+                let n = nd.num_gpus();
+                let data: Vec<Vec<u8>> =
+                    (0..n).map(|_| random_bytes(&mut rng, shard_len)).collect();
+                let shards: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &data[g])).collect();
+                let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard_len)).collect();
+                let run = all_gather(&mut nd, &shards, &outs, backend);
+                let expect: Vec<u8> = data.concat();
+                for g in 0..n {
+                    assert_eq!(nd.mems[g].bytes(outs[g]), &expect[..], "{nodes}x{p} gpu {g}");
+                }
+                assert!(run.time > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_node_alltoall_correct_and_staging_freed() {
+        let (nodes, p, chunk) = (2usize, 4usize, 16usize);
+        let mut a = multi(nodes, p);
+        let mut b = multi(nodes, p);
+        let n = a.num_gpus();
+        let mut rng = Rng::new(11);
+        let data: Vec<Vec<u8>> = (0..n).map(|_| random_bytes(&mut rng, n * chunk)).collect();
+        let ia: Vec<_> = (0..n).map(|g| a.alloc_init(g, &data[g])).collect();
+        let oa: Vec<_> = (0..n).map(|g| a.alloc(g, n * chunk)).collect();
+        let ib: Vec<_> = (0..n).map(|g| b.alloc_init(g, &data[g])).collect();
+        let ob: Vec<_> = (0..n).map(|g| b.alloc(g, n * chunk)).collect();
+        let fp_before = a.mems[0].footprint();
+        all_to_all(&mut a, &ia, &oa, Backend::Dma);
+        all_to_all(&mut b, &ib, &ob, Backend::Cu);
+        // DMA and CU backends are byte-identical across nodes.
+        for g in 0..n {
+            assert_eq!(a.mems[g].bytes(oa[g]), b.mems[g].bytes(ob[g]), "gpu {g}");
+        }
+        // And match the transpose oracle.
+        for d in 0..n {
+            for g in 0..n {
+                assert_eq!(
+                    a.mems[d].read(oa[d], g * chunk, chunk),
+                    &data[g][d * chunk..(d + 1) * chunk],
+                    "dst {d} src {g}"
+                );
+            }
+        }
+        // Leader staging buffers were freed.
+        assert_eq!(a.mems[0].footprint(), fp_before);
+    }
+
+    #[test]
+    fn multi_node_slower_than_single_node_same_total_gpus() {
+        // 8 GPUs as 2×4 pay the NIC; 8 GPUs in one node do not.
+        let shard_len = 1 << 20;
+        let mut single = node(8);
+        let mut dual = multi(2, 4);
+        let run = |nd: &mut Node| {
+            let n = nd.num_gpus();
+            let shards: Vec<_> = (0..n)
+                .map(|g| {
+                    let fill = vec![g as u8; shard_len];
+                    nd.alloc_init(g, &fill)
+                })
+                .collect();
+            let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard_len)).collect();
+            all_gather(nd, &shards, &outs, Backend::Dma).time
+        };
+        let t1 = run(&mut single);
+        let t2 = run(&mut dual);
+        assert!(t2 > t1, "2x4 ({t2}) should be slower than 1x8 ({t1})");
     }
 
     #[test]

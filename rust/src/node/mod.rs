@@ -1,15 +1,22 @@
-//! The simulated 8-GPU node: per-GPU memory spaces + topology, and the
+//! The simulated GPU cluster: per-GPU memory spaces + topology, and the
 //! functional data plane that executes DMA command batches (moving real
 //! bytes) with the timing from `gpu::sdma::schedule`.
+//!
+//! [`Node::new`] builds the paper's fully-connected single node;
+//! [`Node::with_topology`] spans a hierarchical multi-node fabric, where
+//! cross-node commands between non-leaders are staged through the
+//! leaders' HBM exactly as the scheduler prices them.
 
 pub mod dataplane;
 
 use crate::config::machine::MachineConfig;
 use crate::fabric::Topology;
 use crate::gpu::memory::{copy_range, BufferId, GpuMemory};
-use crate::gpu::sdma::{schedule, CommandPacket, EnginePolicy, SdmaSchedule};
+use crate::gpu::sdma::{
+    schedule, schedule_phases, CommandPacket, EnginePolicy, PhasedSchedule, SdmaSchedule,
+};
 
-/// One multi-GPU node with real (simulated) memory contents.
+/// One multi-GPU system with real (simulated) memory contents.
 pub struct Node {
     pub machine: MachineConfig,
     pub topo: Topology,
@@ -17,10 +24,22 @@ pub struct Node {
 }
 
 impl Node {
-    /// Build a node from a machine config.
+    /// Build a single fully-connected node from a machine config.
     pub fn new(machine: MachineConfig) -> Node {
         let topo = Topology::fully_connected(machine.num_gpus);
-        let mems = (0..machine.num_gpus).map(|_| GpuMemory::new()).collect();
+        Node::with_topology(machine, topo)
+    }
+
+    /// Build a system spanning an arbitrary topology. The machine
+    /// config describes one node; `topo.gpus_per_node()` must match its
+    /// GPU count.
+    pub fn with_topology(machine: MachineConfig, topo: Topology) -> Node {
+        assert_eq!(
+            topo.gpus_per_node(),
+            machine.num_gpus,
+            "topology gpus_per_node must match machine.num_gpus"
+        );
+        let mems = (0..topo.num_gpus()).map(|_| GpuMemory::new()).collect();
         Node {
             machine,
             topo,
@@ -28,9 +47,9 @@ impl Node {
         }
     }
 
-    /// Number of GPUs.
+    /// Total number of GPUs across all nodes.
     pub fn num_gpus(&self) -> usize {
-        self.machine.num_gpus
+        self.topo.num_gpus()
     }
 
     /// Allocate a zeroed buffer on one GPU.
@@ -59,17 +78,49 @@ impl Node {
         sched
     }
 
-    /// Apply one copy command to memory contents.
+    /// Execute a barrier-separated phase sequence (hierarchical
+    /// collective plans): phased timing + byte movement in phase order.
+    pub fn execute_phases(
+        &mut self,
+        phases: &[Vec<Vec<CommandPacket>>],
+        policy: EnginePolicy,
+    ) -> PhasedSchedule {
+        let sched = schedule_phases(&self.machine, &self.topo, phases, policy);
+        for per_gpu in phases {
+            for cmds in per_gpu {
+                for c in cmds {
+                    self.apply_copy(c);
+                }
+            }
+        }
+        sched
+    }
+
+    /// Apply one copy command to memory contents, staging through the
+    /// intermediate hops' HBM when the endpoints have no direct link
+    /// (mirrors the scheduler's store-and-forward route).
     fn apply_copy(&mut self, c: &CommandPacket) {
         if c.src_gpu == c.dst_gpu {
             // Same memory space: stage through a temp (what a DMA
             // local-copy does anyway).
             let data = self.mems[c.src_gpu].read(c.src, c.src_off, c.len).to_vec();
             self.mems[c.dst_gpu].write(c.dst, c.dst_off, &data);
-        } else {
+            return;
+        }
+        let path = self.topo.path(c.src_gpu, c.dst_gpu);
+        if path.len() == 2 {
             let (src_mem, dst_mem) = index_two(&mut self.mems, c.src_gpu, c.dst_gpu);
             copy_range(src_mem, c.src, c.src_off, dst_mem, c.dst, c.dst_off, c.len);
+            return;
         }
+        // Staged route: land the payload in each intermediate hop's HBM
+        // before forwarding (the hop buffers are scratch, freed after).
+        let data = self.mems[c.src_gpu].read(c.src, c.src_off, c.len).to_vec();
+        for &hop in &path[1..path.len() - 1] {
+            let tmp = self.mems[hop].alloc_init(&data);
+            self.mems[hop].free(tmp);
+        }
+        self.mems[c.dst_gpu].write(c.dst, c.dst_off, &data);
     }
 }
 
@@ -104,6 +155,14 @@ mod tests {
     }
 
     #[test]
+    fn multi_node_construction() {
+        let m = MachineConfig::mi300x();
+        let n = Node::with_topology(m.clone(), m.topology(2));
+        assert_eq!(n.num_gpus(), 16);
+        assert_eq!(n.mems.len(), 16);
+    }
+
+    #[test]
     fn execute_dma_moves_bytes_and_times() {
         let mut n = small_node();
         let src = n.alloc_init(0, &[1, 2, 3, 4, 5, 6, 7, 8]);
@@ -123,6 +182,36 @@ mod tests {
         assert_eq!(n.mems[2].read(dst, 4, 4), &[0, 0, 0, 0]);
         assert!(sched.total > 0.0);
         assert_eq!(sched.timings[0].len(), 1);
+    }
+
+    #[test]
+    fn cross_node_copy_stages_through_leader_hbm() {
+        // 1 → 5 on 2×4 routes via GPUs 0 and 4; bytes arrive intact and
+        // the staging buffers are freed (no footprint left behind).
+        let mut m = MachineConfig::mi300x();
+        m.num_gpus = 4;
+        m.link_count = 3;
+        let topo = m.topology(2);
+        let mut n = Node::with_topology(m, topo);
+        let src = n.alloc_init(1, &[9, 8, 7, 6]);
+        let dst = n.alloc(5, 4);
+        let mut per_gpu = vec![Vec::new(); 8];
+        per_gpu[1].push(CommandPacket {
+            src_gpu: 1,
+            src,
+            src_off: 0,
+            dst_gpu: 5,
+            dst,
+            dst_off: 0,
+            len: 4,
+        });
+        let sched = n.execute_dma(&per_gpu, EnginePolicy::LeastLoaded);
+        assert_eq!(n.mems[5].bytes(dst), &[9, 8, 7, 6]);
+        assert!(n.mems[0].is_empty(), "leader staging not freed");
+        assert!(n.mems[4].is_empty(), "leader staging not freed");
+        // The staged transfer crosses three links.
+        let t = sched.timings[1][0];
+        assert!(t.finish > t.start);
     }
 
     #[test]

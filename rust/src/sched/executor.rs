@@ -22,6 +22,7 @@
 use crate::conccl::DmaCollective;
 use crate::config::machine::{smoothmax, MachineConfig};
 use crate::error::Error;
+use crate::fabric::Topology;
 use crate::sim::fluid::StallError;
 use crate::sim::{Event, Sim, TaskSpec};
 use crate::workload::taxonomy::pct_of_ideal;
@@ -73,15 +74,30 @@ pub struct C3Run {
     pub pct_ideal: f64,
 }
 
-/// Executes C3 scenarios against a machine model.
+/// Executes C3 scenarios against a machine model on an interconnect
+/// topology (the paper's single fully-connected node by default).
 #[derive(Debug, Clone)]
 pub struct C3Executor {
     pub m: MachineConfig,
+    pub topo: Topology,
 }
 
 impl C3Executor {
+    /// Single fully-connected node (the paper's setting).
     pub fn new(m: MachineConfig) -> Self {
-        C3Executor { m }
+        let topo = Topology::fully_connected(m.num_gpus);
+        C3Executor { m, topo }
+    }
+
+    /// Executor on an arbitrary topology; `topo.gpus_per_node()` must
+    /// match the machine's GPU count.
+    pub fn with_topology(m: MachineConfig, topo: Topology) -> Self {
+        assert_eq!(
+            topo.gpus_per_node(),
+            m.num_gpus,
+            "topology gpus_per_node must match machine.num_gpus"
+        );
+        C3Executor { m, topo }
     }
 
     /// Isolated GEMM time at full CUs.
@@ -91,9 +107,10 @@ impl C3Executor {
 
     /// Isolated CU-collective time at its full CU need (the serial and
     /// ideal baselines always use the CU collective — the paper's
-    /// baseline stack is rocBLAS + RCCL).
+    /// baseline stack is rocBLAS + RCCL). On a multi-node topology this
+    /// is the hierarchical collective with the NIC exchange.
     pub fn t_comm_iso(&self, sc: &ResolvedScenario) -> f64 {
-        sc.comm.time_isolated_full(&self.m)
+        sc.comm.time_isolated_full_on(&self.m, &self.topo)
     }
 
     /// Compute the scenario's isolated-execution baselines once.
@@ -218,9 +235,18 @@ impl C3Executor {
         b: Baselines,
     ) -> Result<(f64, f64, f64), Error> {
         let m = &self.m;
+        let topo = &self.topo;
         let cus = m.cus_total();
         let comm_need = sc.comm.cu_need(m);
         let tg_iso = b.t_gemm_iso;
+
+        // Collective backend: typed failure (never a panic) when a
+        // non-offloadable collective meets a ConCCL strategy.
+        let dma = if strategy.comm_on_cus() {
+            None
+        } else {
+            Some(DmaCollective::try_new(sc.comm.spec)?)
+        };
 
         // Arrival times: who is launched first (stream setup order).
         let (gemm_arrival, comm_arrival) = match strategy {
@@ -235,8 +261,8 @@ impl C3Executor {
             // ConCCL: CPU thread enqueues DMA commands while the GEMM
             // launches; neither waits on the other.
             Strategy::Conccl | Strategy::ConcclRp { .. } => {
-                let dma = DmaCollective::new(sc.comm.spec);
-                (m.kernel_launch_s, dma.launch_time(m) + m.dma_fetch_s)
+                let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
+                (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
             }
             Strategy::Serial => unreachable!("serial handled analytically"),
         };
@@ -306,11 +332,6 @@ impl C3Executor {
         };
 
         // Collective wire work and HBM demand per backend.
-        let dma = if strategy.comm_on_cus() {
-            None
-        } else {
-            Some(DmaCollective::new(sc.comm.spec))
-        };
         let comm_hbm = match &dma {
             Some(d) => d.hbm_traffic(m),
             None => sc.comm.hbm_traffic(m),
@@ -328,10 +349,14 @@ impl C3Executor {
             let t = smoothmax(sc.gemm.t_comp(m, cu), sc.gemm.t_mem(m, cu));
             (sc.gemm.hbm_traffic(m, cu) / t / m.hbm_bw_achievable()).min(1.0)
         };
+        // DMA wire duration is loop-invariant (and on multi-node
+        // topologies pricing it rebuilds the hierarchical plan) —
+        // compute it once, outside the event loop.
+        let dma_wire = dma.as_ref().map(|d| d.wire_time_on(m, topo));
         let comm_share = {
-            let t_wire = match &dma {
-                Some(d) => d.per_link_bytes(m) / d.link_bw_eff(m),
-                None => sc.comm.t_wire(m, comm_need.max(1)),
+            let t_wire = match dma_wire {
+                Some(wire) => wire,
+                None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
             };
             (comm_hbm / t_wire / m.hbm_bw_achievable()).min(1.0)
         };
@@ -411,12 +436,11 @@ impl C3Executor {
             if !comm_done {
                 let gemm_moving = !gemm_done && sim.is_active(gemm_t);
                 let mp = if gemm_moving { mem_pen(gemm_share) } else { 0.0 };
-                let cap = match &dma {
-                    Some(d) => {
+                let cap = match dma_wire {
+                    Some(wire) => {
                         // Engine wire phase (enqueue+fetch folded into
                         // arrival; sync appended after completion). HBM
                         // contention still applies (§VII-A1).
-                        let wire = d.per_link_bytes(m) / d.link_bw_eff(m);
                         (1.0 - mp) / wire
                     }
                     None => {
@@ -424,7 +448,7 @@ impl C3Executor {
                             0.0
                         } else {
                             let pen = if gemm_moving { co_penalty } else { 0.0 };
-                            (1.0 - pen) * (1.0 - mp) / sc.comm.t_wire(m, comm_holds)
+                            (1.0 - pen) * (1.0 - mp) / sc.comm.t_wire_on(m, topo, comm_holds)
                         }
                     }
                 };
@@ -487,6 +511,67 @@ mod tests {
         for strat in [Strategy::Serial, Strategy::C3Sp, Strategy::Conccl] {
             let via_try = e.try_run_with_baselines(&sc, strat, b).unwrap();
             assert_eq!(via_try, e.run(&sc, strat));
+        }
+    }
+
+    #[test]
+    fn conccl_on_allreduce_is_typed_error_not_panic() {
+        let e = exec();
+        let sc = scenario("mb1_896M", CollectiveKind::AllReduce);
+        let err = e.try_run(&sc, Strategy::Conccl).unwrap_err();
+        assert!(matches!(err, Error::NotDmaOffloadable(_)), "{err}");
+        // CU strategies still handle all-reduce fine.
+        assert!(e.try_run(&sc, Strategy::C3Sp).is_ok());
+    }
+
+    #[test]
+    fn multi_node_comm_becomes_the_bottleneck() {
+        // Same scenario on 1 vs 2 nodes: the hierarchical collective
+        // over the NIC dominates, and the conccl advantage over c3_base
+        // shrinks as NIC bandwidth drops (both become comm-bound).
+        let m = MachineConfig::mi300x();
+        let sc = scenario("mb1_896M", CollectiveKind::AllGather);
+        let e1 = C3Executor::new(m.clone());
+        let e2 = C3Executor::with_topology(m.clone(), m.topology(2));
+        assert!(e2.t_comm_iso(&sc) > e1.t_comm_iso(&sc));
+        assert_eq!(e2.t_gemm_iso(&sc), e1.t_gemm_iso(&sc));
+
+        let ratio = |e: &C3Executor| {
+            let base = e.run(&sc, Strategy::C3Base);
+            let con = e.run(&sc, Strategy::Conccl);
+            base.total / con.total
+        };
+        let r_fast = ratio(&e2);
+        let mut slow = m.clone();
+        slow.nic_bw = m.nic_bw / 20.0;
+        let e2_slow = C3Executor::with_topology(slow.clone(), slow.topology(2));
+        let r_slow = ratio(&e2_slow);
+        assert!(
+            r_slow < r_fast,
+            "conccl advantage should shrink with NIC bw: {r_slow:.3} vs {r_fast:.3}"
+        );
+        // Deep in the NIC-bound regime both strategies converge on the
+        // collective's time.
+        assert!(r_slow < 1.1, "r_slow {r_slow:.3}");
+    }
+
+    #[test]
+    fn multi_node_speedups_stay_sane() {
+        let m = MachineConfig::mi300x();
+        let e = C3Executor::with_topology(m.clone(), m.topology(2));
+        for kind in CollectiveKind::studied() {
+            let sc = resolve(&TABLE2[0], kind);
+            for strat in [Strategy::C3Base, Strategy::C3Sp, Strategy::Conccl] {
+                let r = e.run(&sc, strat);
+                assert!(
+                    r.speedup >= 0.85 && r.speedup <= r.ideal * 1.02 + 1e-9,
+                    "{} {}: speedup {:.3} ideal {:.3}",
+                    sc.tag(),
+                    strat.name(),
+                    r.speedup,
+                    r.ideal
+                );
+            }
         }
     }
 

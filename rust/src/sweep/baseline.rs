@@ -1,0 +1,480 @@
+//! Perf-regression gate over sweep reports (the CI bench trajectory).
+//!
+//! CI runs `conccl sweep --json` on a small deterministic matrix and
+//! compares the fresh report against the checked-in
+//! `BENCH_baseline.json` with [`gate`]: any strategy whose median
+//! speedup fell more than the tolerance below its baseline value fails
+//! the build. The reader ([`parse_json`]) is a minimal recursive-descent
+//! JSON parser (no `serde` offline) that understands exactly the
+//! documents our own writer emits — plus a `{"seeded":false}` bootstrap
+//! form so the first commit can land before any baseline numbers exist.
+
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Objects keep insertion order (our reports are
+/// deterministically ordered; preserving it keeps diffs stable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Number view.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing garbage at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", c as char, pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}"))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {pos}"));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or("truncated \\u escape")?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Copy the raw UTF-8 byte run up to the next special.
+                let start = *pos;
+                while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                    *pos += 1;
+                }
+                out.push_str(
+                    std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?,
+                );
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+/// One measured matrix point extracted from a report:
+/// `machine/nodes/tag/collective/strategy` → median speedup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchPoint {
+    pub key: String,
+    pub speedup_median: f64,
+}
+
+/// Flatten a sweep report (schema version 1 or 2) into bench points.
+pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
+    let machines = report
+        .get("machines")
+        .and_then(Json::as_arr)
+        .ok_or("report has no machines[]")?;
+    let mut out = Vec::new();
+    for m in machines {
+        let label = m.get("label").and_then(Json::as_str).unwrap_or("?");
+        // v2 nests scenarios under topologies[]; v1 holds them directly.
+        let topos: Vec<(u64, &Json)> = match m.get("topologies").and_then(Json::as_arr) {
+            Some(ts) => ts
+                .iter()
+                .map(|t| (t.get("nodes").and_then(Json::as_num).unwrap_or(1.0) as u64, t))
+                .collect(),
+            None => vec![(1, m)],
+        };
+        for (nodes, t) in topos {
+            let scenarios = t
+                .get("scenarios")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("machine '{label}' has no scenarios[]"))?;
+            for sc in scenarios {
+                let tag = sc.get("tag").and_then(Json::as_str).unwrap_or("?");
+                let coll = sc.get("collective").and_then(Json::as_str).unwrap_or("?");
+                let Some(Json::Obj(strategies)) = sc.get("strategies") else {
+                    continue;
+                };
+                for (name, v) in strategies {
+                    if let Some(sp) = v.get("speedup_median").and_then(Json::as_num) {
+                        if sp.is_finite() {
+                            out.push(BenchPoint {
+                                key: format!("{label}/{nodes}n/{tag}/{coll}/{name}"),
+                                speedup_median: sp,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Outcome of gating a report against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Points whose speedup fell more than the tolerance:
+    /// (key, baseline, current).
+    pub regressions: Vec<(String, f64, f64)>,
+    /// Baseline points absent from the current report.
+    pub missing: Vec<String>,
+    /// Points compared.
+    pub compared: usize,
+    /// Points at or above baseline (within tolerance).
+    pub held: usize,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self, tolerance: f64) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "perf gate: {} point(s) compared, {} held, {} regressed, {} missing (tolerance {:.1}%)",
+            self.compared,
+            self.held,
+            self.regressions.len(),
+            self.missing.len(),
+            tolerance * 100.0
+        );
+        for (key, base, cur) in &self.regressions {
+            let _ = writeln!(
+                s,
+                "  REGRESSION {key}: speedup {cur:.4} vs baseline {base:.4} ({:+.2}%)",
+                (cur / base - 1.0) * 100.0
+            );
+        }
+        for key in &self.missing {
+            let _ = writeln!(s, "  MISSING    {key}: in baseline but not in report");
+        }
+        s
+    }
+}
+
+/// Is this baseline document still the unseeded bootstrap placeholder?
+pub fn is_seeded(baseline: &Json) -> bool {
+    if let Some(Json::Bool(false)) = baseline.get("seeded") {
+        return false;
+    }
+    baseline
+        .get("machines")
+        .and_then(Json::as_arr)
+        .map(|m| !m.is_empty())
+        .unwrap_or(false)
+}
+
+/// Compare `current` against `baseline`: a point regresses when its
+/// median speedup drops more than `tolerance` (relative) below the
+/// baseline value. Improvements and new points never fail the gate.
+pub fn gate(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateReport, String> {
+    let base_points = extract_points(baseline)?;
+    let cur_points = extract_points(current)?;
+    let mut report = GateReport::default();
+    for bp in &base_points {
+        match cur_points.iter().find(|c| c.key == bp.key) {
+            None => report.missing.push(bp.key.clone()),
+            Some(cp) => {
+                report.compared += 1;
+                if cp.speedup_median < bp.speedup_median * (1.0 - tolerance) {
+                    report
+                        .regressions
+                        .push((bp.key.clone(), bp.speedup_median, cp.speedup_median));
+                } else {
+                    report.held += 1;
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::CollectiveKind;
+    use crate::coordinator::runner::RunnerConfig;
+    use crate::sched::StrategyKind;
+    use crate::sweep::{execute, MachineVariant, SweepPlan};
+    use crate::workload::scenarios::{resolve, TABLE2};
+
+    #[test]
+    fn parser_roundtrips_scalars_and_structures() {
+        let j = parse_json(r#"{"a":1.5,"b":[true,null,"x\ny"],"c":{"d":-2e3}}"#).unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_num), Some(1.5));
+        let arr = j.get("b").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0], Json::Bool(true));
+        assert_eq!(arr[1], Json::Null);
+        assert_eq!(arr[2].as_str(), Some("x\ny"));
+        assert_eq!(j.get("c").unwrap().get("d").and_then(Json::as_num), Some(-2000.0));
+        assert!(parse_json("{oops}").is_err());
+        assert!(parse_json("[1,2,").is_err());
+        assert!(parse_json("{}extra").is_err());
+        assert_eq!(parse_json(r#""A""#).unwrap().as_str(), Some("A"));
+    }
+
+    fn small_report() -> Json {
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::C3Base, StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap();
+        parse_json(&execute(plan, 1).to_json()).unwrap()
+    }
+
+    #[test]
+    fn extracts_points_from_own_reports() {
+        let report = small_report();
+        let points = extract_points(&report).unwrap();
+        // 1 machine × 2 node counts × 1 scenario × 2 strategies.
+        assert_eq!(points.len(), 4);
+        assert!(points.iter().any(|p| p.key == "mi300x-8/1n/mb1_896M/all-gather/conccl"));
+        assert!(points.iter().any(|p| p.key.contains("/2n/")));
+        for p in &points {
+            assert!(p.speedup_median > 0.5, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn gate_passes_against_itself_and_catches_regressions() {
+        let report = small_report();
+        let ok = gate(&report, &report, 0.02).unwrap();
+        assert!(ok.passed(), "{}", ok.render(0.02));
+        assert_eq!(ok.compared, 4);
+
+        // Inflate the baseline 10%: every point now "regressed".
+        let inflated = match &report {
+            Json::Obj(_) => {
+                let mut points = extract_points(&report).unwrap();
+                for p in &mut points {
+                    p.speedup_median *= 1.10;
+                }
+                points
+            }
+            _ => unreachable!(),
+        };
+        // Synthesize a baseline document holding the inflated numbers.
+        let mut doc = String::from(
+            "{\"version\":2,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[",
+        );
+        for (ni, nodes) in [1u64, 2].iter().enumerate() {
+            if ni > 0 {
+                doc.push(',');
+            }
+            doc.push_str(&format!(
+                "{{\"nodes\":{nodes},\"scenarios\":[{{\"tag\":\"mb1_896M\",\
+                 \"collective\":\"all-gather\",\"strategies\":{{"
+            ));
+            let mut first = true;
+            for p in inflated.iter().filter(|p| p.key.contains(&format!("/{nodes}n/"))) {
+                let strat = p.key.rsplit('/').next().unwrap();
+                if !first {
+                    doc.push(',');
+                }
+                first = false;
+                doc.push_str(&format!(
+                    "\"{strat}\":{{\"speedup_median\":{}}}",
+                    p.speedup_median
+                ));
+            }
+            doc.push_str("}}]}");
+        }
+        doc.push_str("]}]}");
+        let baseline = parse_json(&doc).unwrap();
+        let bad = gate(&baseline, &report, 0.02).unwrap();
+        assert!(!bad.passed());
+        assert_eq!(bad.regressions.len(), 4, "{}", bad.render(0.02));
+        // A 10% drop is outside 2% tolerance but inside 15%.
+        let wide = gate(&baseline, &report, 0.15).unwrap();
+        assert!(wide.passed());
+    }
+
+    #[test]
+    fn missing_points_fail_the_gate() {
+        let report = small_report();
+        let baseline = parse_json(
+            "{\"version\":2,\"machines\":[{\"label\":\"ghost\",\"topologies\":[{\"nodes\":1,\
+             \"scenarios\":[{\"tag\":\"zz\",\"collective\":\"all-gather\",\
+             \"strategies\":{\"conccl\":{\"speedup_median\":1.0}}}]}]}]}",
+        )
+        .unwrap();
+        let r = gate(&baseline, &report, 0.02).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.missing.len(), 1);
+    }
+
+    #[test]
+    fn bootstrap_baseline_detected() {
+        let boot = parse_json("{\"version\":2,\"seeded\":false,\"machines\":[]}").unwrap();
+        assert!(!is_seeded(&boot));
+        assert!(is_seeded(&small_report()));
+        assert!(!is_seeded(&parse_json("{}").unwrap()));
+    }
+}

@@ -37,8 +37,8 @@ pub struct SweepResults {
     pub plan: SweepPlan,
     /// Outputs sorted by job id (dense: `outputs[id].job.id == id`).
     pub outputs: Vec<JobOutput>,
-    /// Memoized baselines, `[machine_idx][scenario_idx]`.
-    pub baselines: Vec<Vec<Baselines>>,
+    /// Memoized baselines, `[machine_idx][node_idx][scenario_idx]`.
+    pub baselines: Vec<Vec<Vec<Baselines>>>,
     /// Worker threads actually used.
     pub threads_used: usize,
 }
@@ -55,16 +55,30 @@ pub fn default_threads() -> usize {
 /// path — bit-identical to any parallel run by construction).
 pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
     let jobs = plan.jobs();
-    let execs: Vec<C3Executor> = plan
+    // One executor per (machine, node-count): the topology is part of
+    // the evaluation point.
+    let execs: Vec<Vec<C3Executor>> = plan
         .machines
         .iter()
-        .map(|mv| C3Executor::new(mv.machine.clone()))
+        .map(|mv| {
+            plan.node_counts
+                .iter()
+                .map(|&nodes| {
+                    C3Executor::with_topology(mv.machine.clone(), mv.machine.topology(nodes))
+                })
+                .collect()
+        })
         .collect();
     // Baseline memoization: serial/ideal denominators once per
-    // (machine, scenario), not once per strategy job.
-    let baselines: Vec<Vec<Baselines>> = execs
+    // (machine, node-count, scenario), not once per strategy job.
+    let baselines: Vec<Vec<Vec<Baselines>>> = execs
         .iter()
-        .map(|e| plan.scenarios.iter().map(|sc| e.baselines(sc)).collect())
+        .map(|per_node| {
+            per_node
+                .iter()
+                .map(|e| plan.scenarios.iter().map(|sc| e.baselines(sc)).collect())
+                .collect()
+        })
         .collect();
     let req_threads = if threads == 0 { default_threads() } else { threads };
     let n_threads = req_threads.min(jobs.len()).max(1);
@@ -108,13 +122,13 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
 /// measurement protocol with the job's own RNG.
 fn run_job(
     plan: &SweepPlan,
-    execs: &[C3Executor],
-    baselines: &[Vec<Baselines>],
+    execs: &[Vec<C3Executor>],
+    baselines: &[Vec<Vec<Baselines>>],
     job: &SweepJob,
 ) -> JobOutput {
-    let exec = &execs[job.machine_idx];
+    let exec = &execs[job.machine_idx][job.node_idx];
     let sc = &plan.scenarios[job.scenario_idx];
-    let b = baselines[job.machine_idx][job.scenario_idx];
+    let b = baselines[job.machine_idx][job.node_idx][job.scenario_idx];
     let mut rp_cus = None;
     let run: Result<C3Run, Error> = match job.strategy {
         StrategyKind::Serial => exec.try_run_with_baselines(sc, Strategy::Serial, b),
@@ -155,16 +169,21 @@ impl SweepResults {
     pub fn output_at(
         &self,
         machine_idx: usize,
+        node_idx: usize,
         scenario_idx: usize,
         kind: StrategyKind,
     ) -> Option<&JobOutput> {
         // job_id is dense arithmetic — guard each axis explicitly so an
         // out-of-range index cannot alias another matrix point.
-        if machine_idx >= self.plan.machines.len() || scenario_idx >= self.plan.scenarios.len() {
+        if machine_idx >= self.plan.machines.len()
+            || node_idx >= self.plan.node_counts.len()
+            || scenario_idx >= self.plan.scenarios.len()
+        {
             return None;
         }
         let ki = self.plan.strategies.iter().position(|&k| k == kind)?;
-        self.outputs.get(self.plan.job_id(machine_idx, scenario_idx, ki))
+        self.outputs
+            .get(self.plan.job_id(machine_idx, node_idx, scenario_idx, ki))
     }
 
     /// Job errors, flattened for reporting.
@@ -176,30 +195,35 @@ impl SweepResults {
     }
 
     /// Assemble the legacy per-scenario outcome rows (the structure all
-    /// figure rendering consumes) for one machine. Requires the plan to
-    /// contain the six measured strategy columns; any failed constituent
-    /// job propagates its error.
-    pub fn to_scenario_outcomes(&self, machine_idx: usize) -> Result<Vec<ScenarioOutcome>, Error> {
+    /// figure rendering consumes) for one (machine, node-count) point.
+    /// Requires the plan to contain the six measured strategy columns;
+    /// any failed constituent job propagates its error.
+    pub fn to_scenario_outcomes(
+        &self,
+        machine_idx: usize,
+        node_idx: usize,
+    ) -> Result<Vec<ScenarioOutcome>, Error> {
         let pick = |si: usize, kind: StrategyKind| -> Result<Measured, Error> {
-            let out: &JobOutput = self.output_at(machine_idx, si, kind).ok_or_else(|| {
-                Error::Config(format!(
-                    "plan lacks strategy '{}' needed for scenario outcomes",
-                    kind.name()
-                ))
-            })?;
+            let out: &JobOutput =
+                self.output_at(machine_idx, node_idx, si, kind).ok_or_else(|| {
+                    Error::Config(format!(
+                        "plan lacks strategy '{}' needed for scenario outcomes",
+                        kind.name()
+                    ))
+                })?;
             out.result.clone()
         };
         let mut rows = Vec::with_capacity(self.plan.scenarios.len());
         for (si, sc) in self.plan.scenarios.iter().enumerate() {
             let rp = pick(si, StrategyKind::C3Rp)?;
             let rp_cus = self
-                .output_at(machine_idx, si, StrategyKind::C3Rp)
+                .output_at(machine_idx, node_idx, si, StrategyKind::C3Rp)
                 .and_then(|o| o.rp_cus)
                 .unwrap_or(0);
             rows.push(ScenarioOutcome {
                 tag: sc.tag(),
                 scenario: sc.clone(),
-                ideal: self.baselines[machine_idx][si].ideal(),
+                ideal: self.baselines[machine_idx][node_idx][si].ideal(),
                 base: pick(si, StrategyKind::C3Base)?,
                 sp: pick(si, StrategyKind::C3Sp)?,
                 rp,
@@ -242,7 +266,7 @@ pub fn suite_outcomes(
         *cfg,
     );
     execute(plan, threads)
-        .to_scenario_outcomes(0)
+        .to_scenario_outcomes(0, 0)
         .unwrap_or_else(|e| panic!("{e}"))
 }
 
@@ -308,6 +332,43 @@ mod tests {
     }
 
     #[test]
+    fn node_axis_executes_and_shows_nic_bottleneck() {
+        let m = MachineConfig::mi300x();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Serial, StrategyKind::C3Base, StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap();
+        assert_eq!(plan.job_count(), 6);
+        let res = execute(plan, 2);
+        assert!(res.errors().is_empty());
+        // Multi-node comm inflates the serial baseline.
+        let b1 = res.baselines[0][0][0];
+        let b2 = res.baselines[0][1][0];
+        assert!(b2.t_comm_iso > b1.t_comm_iso);
+        assert_eq!(b2.t_gemm_iso, b1.t_gemm_iso);
+        // conccl's edge over c3_base shrinks on the NIC-bound topology.
+        let total = |ni: usize, k: StrategyKind| {
+            res.output_at(0, ni, 0, k)
+                .unwrap()
+                .result
+                .as_ref()
+                .unwrap()
+                .run
+                .total
+        };
+        let edge1 = total(0, StrategyKind::C3Base) / total(0, StrategyKind::Conccl);
+        let edge2 = total(1, StrategyKind::C3Base) / total(1, StrategyKind::Conccl);
+        assert!(
+            edge2 < edge1,
+            "conccl edge should shrink across nodes: {edge2:.3} vs {edge1:.3}"
+        );
+    }
+
+    #[test]
     fn missing_strategy_column_is_config_error() {
         let m = MachineConfig::mi300x();
         let plan = SweepPlan::new(
@@ -317,7 +378,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let res = execute(plan, 1);
-        let err = res.to_scenario_outcomes(0).unwrap_err();
+        let err = res.to_scenario_outcomes(0, 0).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
         // ... but the job itself ran fine.
         assert!(res.outputs[0].result.is_ok());

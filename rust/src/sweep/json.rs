@@ -51,11 +51,13 @@ fn opt_u32(v: Option<u32>) -> String {
 
 impl SweepResults {
     /// Serialize the whole sweep. See module docs for the determinism
-    /// contract; the schema is versioned for downstream tooling.
+    /// contract; the schema is versioned for downstream tooling
+    /// (version 2 added the per-machine `topologies` nesting for the
+    /// node-count axis).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":1,");
+        s.push_str("{\"version\":2,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -81,89 +83,96 @@ impl SweepResults {
             }
             let _ = write!(
                 s,
-                "{{\"label\":\"{}\",\"name\":\"{}\",\"scenarios\":[",
+                "{{\"label\":\"{}\",\"name\":\"{}\",\"topologies\":[",
                 escape(&mv.label),
                 escape(&mv.machine.name)
             );
-            for (si, sc) in self.plan.scenarios.iter().enumerate() {
-                if si > 0 {
+            for (ni, &nodes) in self.plan.node_counts.iter().enumerate() {
+                if ni > 0 {
                     s.push(',');
                 }
-                let b = self.baselines[mi][si];
-                let _ = write!(
-                    s,
-                    "{{\"tag\":\"{}\",\"collective\":\"{}\",\"source\":\"{}\",\
-                     \"t_gemm_iso_s\":{},\"t_comm_iso_s\":{},\"serial_s\":{},\
-                     \"ideal_speedup\":{},\"strategies\":{{",
-                    escape(&sc.tag()),
-                    sc.comm.spec.kind.name(),
-                    sc.scenario.source.name(),
-                    num(b.t_gemm_iso),
-                    num(b.t_comm_iso),
-                    num(b.serial()),
-                    num(b.ideal())
-                );
-                for (ki, kind) in self.plan.strategies.iter().enumerate() {
-                    if ki > 0 {
+                let _ = write!(s, "{{\"nodes\":{nodes},\"scenarios\":[");
+                for (si, sc) in self.plan.scenarios.iter().enumerate() {
+                    if si > 0 {
                         s.push(',');
                     }
-                    let _ = write!(s, "\"{}\":", kind.name());
-                    let out = &self.outputs[self.plan.job_id(mi, si, ki)];
-                    match &out.result {
-                        Ok(m) => {
-                            let _ = write!(
-                                s,
-                                "{{\"total_s\":{},\"gemm_finish_s\":{},\"comm_finish_s\":{},\
-                                 \"median_s\":{},\"speedup\":{},\"speedup_median\":{},\
-                                 \"pct_ideal\":{},\"pct_ideal_median\":{},\"rp_cus\":{},\
-                                 \"seed\":\"{:#018x}\"}}",
-                                num(m.run.total),
-                                num(m.run.gemm_finish),
-                                num(m.run.comm_finish),
-                                num(m.stats.median),
-                                num(m.run.speedup),
-                                num(m.speedup_median),
-                                num(m.run.pct_ideal),
-                                num(m.pct_ideal_median),
-                                opt_u32(out.rp_cus),
-                                out.job.seed
-                            );
-                        }
-                        Err(e) => {
-                            let _ = write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
-                        }
-                    }
-                }
-                s.push_str("}}");
-            }
-            s.push(']');
-            // Suite-wide headline, when the plan carries the full
-            // outcome lineup (mirrors the human-readable report tables).
-            if let Ok(outcomes) = self.to_scenario_outcomes(mi) {
-                let h = headline(&outcomes);
-                let _ = write!(
-                    s,
-                    ",\"headline\":{{\"n\":{},\"avg_ideal\":{},\"max_ideal\":{},\"per_strategy\":{{",
-                    h.n,
-                    num(h.avg_ideal),
-                    num(h.max_ideal)
-                );
-                for (i, (name, (sp, pct, max))) in h.per_strategy.iter().enumerate() {
-                    if i > 0 {
-                        s.push(',');
-                    }
+                    let b = self.baselines[mi][ni][si];
                     let _ = write!(
                         s,
-                        "\"{}\":{{\"avg_speedup\":{},\"avg_pct_ideal\":{},\"max_speedup\":{}}}",
-                        name,
-                        num(*sp),
-                        num(*pct),
-                        num(*max)
+                        "{{\"tag\":\"{}\",\"collective\":\"{}\",\"source\":\"{}\",\
+                         \"t_gemm_iso_s\":{},\"t_comm_iso_s\":{},\"serial_s\":{},\
+                         \"ideal_speedup\":{},\"strategies\":{{",
+                        escape(&sc.tag()),
+                        sc.comm.spec.kind.name(),
+                        sc.scenario.source.name(),
+                        num(b.t_gemm_iso),
+                        num(b.t_comm_iso),
+                        num(b.serial()),
+                        num(b.ideal())
                     );
+                    for (ki, kind) in self.plan.strategies.iter().enumerate() {
+                        if ki > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(s, "\"{}\":", kind.name());
+                        let out = &self.outputs[self.plan.job_id(mi, ni, si, ki)];
+                        match &out.result {
+                            Ok(m) => {
+                                let _ = write!(
+                                    s,
+                                    "{{\"total_s\":{},\"gemm_finish_s\":{},\"comm_finish_s\":{},\
+                                     \"median_s\":{},\"speedup\":{},\"speedup_median\":{},\
+                                     \"pct_ideal\":{},\"pct_ideal_median\":{},\"rp_cus\":{},\
+                                     \"seed\":\"{:#018x}\"}}",
+                                    num(m.run.total),
+                                    num(m.run.gemm_finish),
+                                    num(m.run.comm_finish),
+                                    num(m.stats.median),
+                                    num(m.run.speedup),
+                                    num(m.speedup_median),
+                                    num(m.run.pct_ideal),
+                                    num(m.pct_ideal_median),
+                                    opt_u32(out.rp_cus),
+                                    out.job.seed
+                                );
+                            }
+                            Err(e) => {
+                                let _ = write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
+                            }
+                        }
+                    }
+                    s.push_str("}}");
                 }
-                s.push_str("}}");
+                s.push(']');
+                // Per-topology headline, when the plan carries the full
+                // outcome lineup (mirrors the human-readable tables).
+                if let Ok(outcomes) = self.to_scenario_outcomes(mi, ni) {
+                    let h = headline(&outcomes);
+                    let _ = write!(
+                        s,
+                        ",\"headline\":{{\"n\":{},\"avg_ideal\":{},\"max_ideal\":{},\"per_strategy\":{{",
+                        h.n,
+                        num(h.avg_ideal),
+                        num(h.max_ideal)
+                    );
+                    for (i, (name, (sp, pct, max))) in h.per_strategy.iter().enumerate() {
+                        if i > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(
+                            s,
+                            "\"{}\":{{\"avg_speedup\":{},\"avg_pct_ideal\":{},\"max_speedup\":{}}}",
+                            name,
+                            num(*sp),
+                            num(*pct),
+                            num(*max)
+                        );
+                    }
+                    s.push_str("}}");
+                }
+                s.push('}');
             }
-            s.push('}');
+            s.push_str("]}");
         }
         s.push_str("]}");
         s
@@ -199,7 +208,8 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":1,"));
+        assert!(j.starts_with("{\"version\":2,"));
+        assert!(j.contains("\"topologies\":[{\"nodes\":1,"));
         assert!(j.contains("\"tag\":\"mb1_896M\""));
         assert!(j.contains("\"conccl\":{\"total_s\":"));
         assert!(j.contains("\"collective\":\"all-gather\""));
@@ -226,5 +236,22 @@ mod tests {
         let j = execute(plan, 2).to_json();
         assert!(j.contains("\"headline\""));
         assert!(j.contains("\"c3_best\""));
+    }
+
+    #[test]
+    fn node_axis_appears_per_machine() {
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Serial, StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap();
+        let j = execute(plan, 1).to_json();
+        assert!(j.contains("{\"nodes\":1,"));
+        assert!(j.contains("{\"nodes\":2,"));
+        let open = j.matches('{').count();
+        assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
     }
 }

@@ -6,8 +6,10 @@
 //! matrix*:
 //!
 //! 1. **Plan** ([`plan`]) — expand {Table II scenarios × strategies ×
-//!    machine configs} into independent [`SweepJob`]s, each with a
-//!    deterministic identity-derived RNG seed.
+//!    machine configs × node counts} into independent [`SweepJob`]s,
+//!    each with a deterministic identity-derived RNG seed. The
+//!    node-count axis prices every point on a hierarchical multi-node
+//!    topology (`fabric::Topology::MultiNode`).
 //! 2. **Execute** ([`engine`]) — run jobs concurrently on a worker pool
 //!    (shared-counter work stealing over `std::thread::scope`); each job
 //!    drives its own `sched::executor` + `sim::fluid` instance.
@@ -25,9 +27,11 @@
 //! thin wrapper over [`suite_outcomes`], so every figure bench and test
 //! rides this engine.
 
+pub mod baseline;
 pub mod engine;
 pub mod json;
 pub mod plan;
 
+pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
 pub use engine::{default_threads, execute, outcome_lineup, suite_outcomes, JobOutput, SweepResults};
 pub use plan::{job_seed, parse_variants, MachineVariant, SweepJob, SweepPlan};

@@ -87,6 +87,8 @@ pub struct SweepJob {
     pub id: usize,
     /// Index into [`SweepPlan::machines`].
     pub machine_idx: usize,
+    /// Index into [`SweepPlan::node_counts`].
+    pub node_idx: usize,
     /// Index into [`SweepPlan::scenarios`].
     pub scenario_idx: usize,
     pub strategy: StrategyKind,
@@ -98,13 +100,18 @@ pub struct SweepJob {
 #[derive(Debug, Clone)]
 pub struct SweepPlan {
     pub machines: Vec<MachineVariant>,
+    /// Node-count axis: every matrix point is evaluated on a topology
+    /// of this many nodes (1 = the paper's single fully-connected node;
+    /// >1 = the hierarchical leader/NIC topology built from each
+    /// machine's `nic_bw`/`nic_latency_s`).
+    pub node_counts: Vec<usize>,
     pub scenarios: Vec<ResolvedScenario>,
     pub strategies: Vec<StrategyKind>,
     pub cfg: RunnerConfig,
 }
 
 impl SweepPlan {
-    /// Plan over explicit axes.
+    /// Plan over explicit axes (single-node topology).
     pub fn new(
         machines: Vec<MachineVariant>,
         scenarios: Vec<ResolvedScenario>,
@@ -113,10 +120,30 @@ impl SweepPlan {
     ) -> SweepPlan {
         SweepPlan {
             machines,
+            node_counts: vec![1],
             scenarios,
             strategies,
             cfg,
         }
+    }
+
+    /// Replace the node-count axis. Rejects empty lists, zero counts
+    /// and duplicates (duplicate axis entries would alias job ids and
+    /// RNG seeds).
+    pub fn with_node_counts(mut self, node_counts: Vec<usize>) -> Result<SweepPlan, Error> {
+        if node_counts.is_empty() {
+            return Err(Error::Config("node-count axis cannot be empty".into()));
+        }
+        for (i, &n) in node_counts.iter().enumerate() {
+            if n == 0 {
+                return Err(Error::Config("node count must be >= 1".into()));
+            }
+            if node_counts[..i].contains(&n) {
+                return Err(Error::Config(format!("duplicate node count {n}")));
+            }
+        }
+        self.node_counts = node_counts;
+        Ok(self)
     }
 
     /// The paper's full matrix on one machine: all Table II rows × the
@@ -188,34 +215,47 @@ impl SweepPlan {
 
     /// Number of jobs this plan expands to.
     pub fn job_count(&self) -> usize {
-        self.machines.len() * self.scenarios.len() * self.strategies.len()
+        self.machines.len() * self.node_counts.len() * self.scenarios.len() * self.strategies.len()
     }
 
     /// Dense job id of one matrix point.
-    pub fn job_id(&self, machine_idx: usize, scenario_idx: usize, strategy_idx: usize) -> usize {
-        (machine_idx * self.scenarios.len() + scenario_idx) * self.strategies.len() + strategy_idx
+    pub fn job_id(
+        &self,
+        machine_idx: usize,
+        node_idx: usize,
+        scenario_idx: usize,
+        strategy_idx: usize,
+    ) -> usize {
+        ((machine_idx * self.node_counts.len() + node_idx) * self.scenarios.len() + scenario_idx)
+            * self.strategies.len()
+            + strategy_idx
     }
 
     /// Expand the matrix into jobs, ids dense in
-    /// machine → scenario → strategy order.
+    /// machine → node-count → scenario → strategy order.
     pub fn jobs(&self) -> Vec<SweepJob> {
         let mut out = Vec::with_capacity(self.job_count());
         for (mi, mv) in self.machines.iter().enumerate() {
-            for (si, sc) in self.scenarios.iter().enumerate() {
-                for (ki, &strategy) in self.strategies.iter().enumerate() {
-                    out.push(SweepJob {
-                        id: self.job_id(mi, si, ki),
-                        machine_idx: mi,
-                        scenario_idx: si,
-                        strategy,
-                        seed: job_seed(
-                            self.cfg.seed,
-                            &mv.label,
-                            &sc.tag(),
-                            sc.comm.spec.kind.name(),
-                            strategy.name(),
-                        ),
-                    });
+            for (ni, &nodes) in self.node_counts.iter().enumerate() {
+                let nodes_label = format!("{nodes}node");
+                for (si, sc) in self.scenarios.iter().enumerate() {
+                    for (ki, &strategy) in self.strategies.iter().enumerate() {
+                        out.push(SweepJob {
+                            id: self.job_id(mi, ni, si, ki),
+                            machine_idx: mi,
+                            node_idx: ni,
+                            scenario_idx: si,
+                            strategy,
+                            seed: job_seed(
+                                self.cfg.seed,
+                                &mv.label,
+                                &nodes_label,
+                                &sc.tag(),
+                                sc.comm.spec.kind.name(),
+                                strategy.name(),
+                            ),
+                        });
+                    }
                 }
             }
         }
@@ -237,9 +277,16 @@ fn reject_duplicates(axis: &str, names: &[&str]) -> Result<(), Error> {
 /// Identity-derived per-job seed: FNV-1a over the job key (with field
 /// separators), mixed through SplitMix64 so nearby keys do not yield
 /// correlated xoshiro states.
-pub fn job_seed(base: u64, machine: &str, tag: &str, collective: &str, strategy: &str) -> u64 {
+pub fn job_seed(
+    base: u64,
+    machine: &str,
+    nodes: &str,
+    tag: &str,
+    collective: &str,
+    strategy: &str,
+) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for field in [machine, tag, collective, strategy] {
+    for field in [machine, nodes, tag, collective, strategy] {
         for b in field.bytes() {
             h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
         }
@@ -268,6 +315,34 @@ mod tests {
         for (i, j) in jobs.iter().enumerate() {
             assert_eq!(j.id, i);
         }
+    }
+
+    #[test]
+    fn node_axis_multiplies_matrix_and_validates() {
+        let p = SweepPlan::table2(MachineConfig::mi300x(), cfg())
+            .with_node_counts(vec![1, 2, 4])
+            .unwrap();
+        assert_eq!(p.job_count(), 630);
+        let jobs = p.jobs();
+        assert_eq!(jobs.len(), 630);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.node_idx < 3);
+        }
+        // Same scenario at different node counts gets distinct seeds.
+        let a = jobs.iter().find(|j| j.node_idx == 0).unwrap();
+        let b = jobs
+            .iter()
+            .find(|j| {
+                j.node_idx == 1 && j.scenario_idx == a.scenario_idx && j.strategy == a.strategy
+            })
+            .unwrap();
+        assert_ne!(a.seed, b.seed);
+        // Bad axes are typed errors.
+        let base = SweepPlan::table2(MachineConfig::mi300x(), cfg());
+        assert!(base.clone().with_node_counts(vec![]).is_err());
+        assert!(base.clone().with_node_counts(vec![0]).is_err());
+        assert!(base.with_node_counts(vec![2, 2]).is_err());
     }
 
     #[test]

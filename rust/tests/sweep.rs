@@ -55,8 +55,8 @@ fn parallel_and_sequential_aggregates_match() {
     let seq = execute(small_plan(jittered_cfg()), 1);
     let par = execute(small_plan(jittered_cfg()), 4);
     let (ho_s, ho_p) = (
-        headline(&seq.to_scenario_outcomes(0).unwrap()),
-        headline(&par.to_scenario_outcomes(0).unwrap()),
+        headline(&seq.to_scenario_outcomes(0, 0).unwrap()),
+        headline(&par.to_scenario_outcomes(0, 0).unwrap()),
     );
     assert_eq!(ho_s.n, ho_p.n);
     for kind in StrategyKind::reported() {
@@ -115,7 +115,7 @@ fn machine_variant_axis_sweeps_distinct_machines() {
     assert!(res.errors().is_empty());
     // Halved link bandwidth must slow the serial baseline (comm term).
     let serial_base = res
-        .output_at(0, 0, StrategyKind::Serial)
+        .output_at(0, 0, 0, StrategyKind::Serial)
         .unwrap()
         .result
         .as_ref()
@@ -123,7 +123,7 @@ fn machine_variant_axis_sweeps_distinct_machines() {
         .run
         .serial;
     let serial_slow = res
-        .output_at(1, 0, StrategyKind::Serial)
+        .output_at(1, 0, 0, StrategyKind::Serial)
         .unwrap()
         .result
         .as_ref()
@@ -138,6 +138,68 @@ fn machine_variant_axis_sweeps_distinct_machines() {
     let j = res.to_json();
     assert!(j.contains("\"label\":\"mi300x-8\""));
     assert!(j.contains("\"label\":\"slowlink\""));
+}
+
+#[test]
+fn node_axis_json_is_deterministic_across_thread_counts() {
+    // Acceptance criterion: a 2-node sweep produces byte-identical JSON
+    // regardless of worker count, with multi-node rows present.
+    let plan = |cfg| {
+        SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![
+                resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap(),
+                resolve_tag("cb1_896M", CollectiveKind::AllToAll).unwrap(),
+            ],
+            StrategyKind::lineup().to_vec(),
+            cfg,
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap()
+    };
+    let j1 = execute(plan(jittered_cfg()), 1).to_json();
+    let j4 = execute(plan(jittered_cfg()), 4).to_json();
+    assert_eq!(j1, j4, "2-node sweep JSON diverged across thread counts");
+    assert!(j1.contains("{\"nodes\":2,"));
+}
+
+#[test]
+fn multi_node_rows_show_nic_bottleneck() {
+    // Acceptance criterion: the conccl speedup edge over c3_base
+    // shrinks as NIC bandwidth drops (both become NIC-bound).
+    let base = MachineConfig::mi300x();
+    let mut machines = vec![MachineVariant::base(base.clone())];
+    machines.extend(parse_variants(&base, "slownic:nic_bw=5e9").unwrap());
+    let plan = SweepPlan::new(
+        machines,
+        vec![resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap()],
+        vec![StrategyKind::C3Base, StrategyKind::Conccl],
+        RunnerConfig::default(),
+    )
+    .with_node_counts(vec![1, 2])
+    .unwrap();
+    let res = execute(plan, 2);
+    assert!(res.errors().is_empty());
+    let total = |mi: usize, ni: usize, k: StrategyKind| {
+        res.output_at(mi, ni, 0, k)
+            .unwrap()
+            .result
+            .as_ref()
+            .unwrap()
+            .run
+            .total
+    };
+    // Comm time inflates with the node count (NIC on the path) ...
+    assert!(res.baselines[0][1][0].t_comm_iso > res.baselines[0][0][0].t_comm_iso);
+    // ... and even more on the derated NIC.
+    assert!(res.baselines[1][1][0].t_comm_iso > res.baselines[0][1][0].t_comm_iso);
+    let edge = |mi: usize| total(mi, 1, StrategyKind::C3Base) / total(mi, 1, StrategyKind::Conccl);
+    assert!(
+        edge(1) < edge(0),
+        "conccl edge should shrink on the slow NIC: {:.3} vs {:.3}",
+        edge(1),
+        edge(0)
+    );
 }
 
 #[test]
