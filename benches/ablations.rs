@@ -61,8 +61,8 @@ fn main() {
             let spec = CollectiveSpec::new(CollectiveKind::AllGather, mb * MIB);
             t.row(vec![
                 fmt_bytes(mb * MIB),
-                f(DmaCollective::new(spec).speedup_vs_cu(&m), 2),
-                f(DmaCollective::new(spec).speedup_vs_cu(&v), 2),
+                f(DmaCollective::try_new(spec).unwrap().speedup_vs_cu(&m), 2),
+                f(DmaCollective::try_new(spec).unwrap().speedup_vs_cu(&v), 2),
             ]);
         }
         t.print();

@@ -31,10 +31,11 @@ fn main() {
         .title("\nConCCL all-gather cost anatomy (why <32MiB loses)")
         .left_cols(1);
     for size in [4 * MIB, 896 * MIB] {
-        let d = conccl::conccl::DmaCollective::new(CollectiveSpec::new(
+        let d = conccl::conccl::DmaCollective::try_new(CollectiveSpec::new(
             CollectiveKind::AllGather,
             size,
-        ));
+        ))
+        .expect("all-gather is DMA-offloadable");
         let enq = d.launch_time(&m);
         let wire = d.per_link_bytes(&m) / d.link_bw_eff(&m);
         let total = d.time_isolated(&m);
@@ -67,8 +68,8 @@ fn main() {
     };
     let (ins_d, outs_d) = mk_inputs(&mut node_dma);
     let (ins_c, outs_c) = mk_inputs(&mut node_cu);
-    let run_dma = all_to_all(&mut node_dma, &ins_d, &outs_d, Backend::Dma);
-    let run_cu = all_to_all(&mut node_cu, &ins_c, &outs_c, Backend::Cu);
+    let run_dma = all_to_all(&mut node_dma, &ins_d, &outs_d, Backend::Dma).expect("conserved plan");
+    let run_cu = all_to_all(&mut node_cu, &ins_c, &outs_c, Backend::Cu).expect("conserved plan");
     for g in 0..n {
         assert_eq!(
             node_dma.mems[g].bytes(outs_d[g]),

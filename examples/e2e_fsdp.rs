@@ -115,7 +115,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let shards: Vec<_> = (0..n_gpus).map(|g| handles[wslot * n_gpus + g]).collect();
             let shard_len = node.mems[0].len(shards[0]);
             let outs: Vec<_> = (0..n_gpus).map(|g| node.alloc(g, n_gpus * shard_len)).collect();
-            let run = all_gather(&mut node, &shards, &outs, Backend::Dma);
+            let run = all_gather(&mut node, &shards, &outs, Backend::Dma)
+                .expect("conserved plan");
             gather_model_time += run.time;
             // All GPUs must hold the identical full weight.
             let w = node.mems[0].bytes(outs[0]).to_vec();

@@ -80,7 +80,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         })
         .collect();
     let outs: Vec<_> = (0..8).map(|g| node.alloc(g, 8 * shard_len)).collect();
-    let run = all_gather(&mut node, &shards, &outs, Backend::Dma);
+    let run = all_gather(&mut node, &shards, &outs, Backend::Dma).expect("conserved plan");
     // Every GPU must now hold identical gathered buffers.
     let reference = node.mems[0].bytes(outs[0]).to_vec();
     for g in 1..8 {
@@ -95,14 +95,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // Bonus: the Fig 9 crossover in two lines.
-    let small = conccl::conccl::DmaCollective::new(CollectiveSpec::new(
+    let small = conccl::conccl::DmaCollective::try_new(CollectiveSpec::new(
         CollectiveKind::AllGather,
         1 << 20,
-    ));
-    let large = conccl::conccl::DmaCollective::new(CollectiveSpec::new(
+    ))
+    .expect("all-gather is DMA-offloadable");
+    let large = conccl::conccl::DmaCollective::try_new(CollectiveSpec::new(
         CollectiveKind::AllGather,
         896 << 20,
-    ));
+    ))
+    .expect("all-gather is DMA-offloadable");
     println!(
         "ConCCL vs RCCL: {:.2}x at 1MiB (launch-bound) vs {:.2}x at 896MiB (at par)",
         small.speedup_vs_cu(&node.machine),

@@ -105,25 +105,37 @@ USAGE: conccl <subcommand> [options] [--set machine.key=value]...
 SUBCOMMANDS
   characterize              Tables I/II, Fig 5a/5b/5c, Fig 6
   run --scenario mb1_896M --collective all-gather --strategy conccl
-      [--nodes N]           one scenario on an N-node topology
+      [--nodes N] [--chunks auto|K]   one scenario on an N-node
+                            topology; --chunks picks the chunk count of
+                            the chunked pipeline strategies (auto = the
+                            runtime chunk heuristic)
   sweep                     parallel scenario sweep (see SWEEP OPTIONS)
   bench-gate --report r.json [--baseline BENCH_baseline.json]
-      [--tolerance 0.02]    CI perf gate: fail on median-speedup drops
+      [--tolerance 0.02] [--strict]
+                            CI perf gate: fail on median-speedup drops;
+                            --strict also fails on an unseeded baseline
   rp-sweep --scenario cb1_896M --collective all-to-all
   report [--jitter 0.01]    full suite: Fig 7, Fig 8, Fig 10, headline
   conccl-bw                 Fig 9 size sweep
-  heuristics                SP order + RP heuristic vs sweep (30 scen.)
+  heuristics                SP order + RP heuristic + chunk tuner vs
+                            exhaustive sweeps (30 scenarios)
   e2e [--layers 4] [--model 70b|405b]   FSDP trace replay
   help                      this text
 
 SWEEP OPTIONS (conccl sweep)
   --scenarios all|tag,tag   Table II tags, e.g. mb1_896M,cb1_896M
   --strategies all|s,s      serial,c3_base,c3_sp,c3_rp,c3_sp_rp,
-                            c3_best,conccl,conccl_rp
+                            c3_best,conccl,conccl_rp,c3_chunked,
+                            conccl_chunked
   --collective both|ag|a2a  collective kinds swept
   --nodes 1,2,4             node-count axis: re-price every point on a
                             hierarchical multi-node topology (leaders
                             exchange over the NIC; see machine.nic_bw)
+  --chunks auto|1,2,4,8     chunk-count axis for the chunked pipeline
+                            strategies (c3_chunked/conccl_chunked):
+                            'auto' sweeps the machine's candidates per
+                            scenario and keeps the best (recording the
+                            winning k); numbers pin the count
   --variants l:k=v;k=v,...  extra machine variants derived from the base
                             machine (label:field=value;field=value)
   --threads N               worker threads (0 = one per core)

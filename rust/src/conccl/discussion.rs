@@ -160,8 +160,8 @@ mod tests {
         let m = m();
         let v = gpu_orchestrated_variant(&m);
         let small = CollectiveSpec::new(CollectiveKind::AllGather, MIB);
-        let before = DmaCollective::new(small).speedup_vs_cu(&m);
-        let after = DmaCollective::new(small).speedup_vs_cu(&v);
+        let before = DmaCollective::try_new(small).unwrap().speedup_vs_cu(&m);
+        let after = DmaCollective::try_new(small).unwrap().speedup_vs_cu(&v);
         assert!(before < 0.5);
         assert!(after > 1.5 * before, "{before} -> {after}");
     }

@@ -31,21 +31,17 @@ pub struct DmaCollective {
 }
 
 impl DmaCollective {
-    /// Typed constructor: `Err(Error::NotDmaOffloadable)` on all-reduce
-    /// (SDMA engines move bytes but cannot do arithmetic). The CLI and
-    /// the sweep engine route through this so a bad job fails itself
-    /// instead of aborting the process.
+    /// Typed constructor — the only constructor:
+    /// `Err(Error::NotDmaOffloadable)` on all-reduce (SDMA engines move
+    /// bytes but cannot do arithmetic). Every caller routes through
+    /// this so a bad input fails its own job instead of aborting the
+    /// process; statically-offloadable call sites `.expect(..)` with
+    /// the reason.
     pub fn try_new(spec: CollectiveSpec) -> Result<Self, Error> {
         if !spec.kind.dma_offloadable() {
             return Err(Error::NotDmaOffloadable(spec.kind.name().to_string()));
         }
         Ok(DmaCollective { spec })
-    }
-
-    /// Panics on all-reduce (not DMA-offloadable). Convenience wrapper
-    /// over [`DmaCollective::try_new`] for statically-known specs.
-    pub fn new(spec: CollectiveSpec) -> Self {
-        Self::try_new(spec).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// CUs consumed: none — the whole point (§VI-A).
@@ -154,7 +150,8 @@ impl DmaCollective {
 pub fn hybrid_allreduce_time(m: &MachineConfig, size_bytes: u64) -> (f64, f64, f64) {
     let rs_wire = (size_bytes as f64 / m.num_gpus as f64) / m.link_bw_achievable();
     let rs = m.coll_launch_s + rs_wire;
-    let ag = DmaCollective::new(CollectiveSpec::new(CollectiveKind::AllGather, size_bytes))
+    let ag = DmaCollective::try_new(CollectiveSpec::new(CollectiveKind::AllGather, size_bytes))
+        .expect("all-gather is DMA-offloadable")
         .time_isolated(m);
     (rs + ag, rs, ag)
 }
@@ -173,17 +170,11 @@ mod tests {
     }
 
     fn ag(bytes: u64) -> DmaCollective {
-        DmaCollective::new(CollectiveSpec::new(CollectiveKind::AllGather, bytes))
+        DmaCollective::try_new(CollectiveSpec::new(CollectiveKind::AllGather, bytes)).unwrap()
     }
 
     fn a2a(bytes: u64) -> DmaCollective {
-        DmaCollective::new(CollectiveSpec::new(CollectiveKind::AllToAll, bytes))
-    }
-
-    #[test]
-    #[should_panic(expected = "cannot be offloaded")]
-    fn allreduce_rejected() {
-        DmaCollective::new(CollectiveSpec::new(CollectiveKind::AllReduce, GIB));
+        DmaCollective::try_new(CollectiveSpec::new(CollectiveKind::AllToAll, bytes)).unwrap()
     }
 
     #[test]

@@ -320,6 +320,24 @@ pub fn alltoall_hier(
     }
 }
 
+/// Chunk a phased plan for the fine-grain pipeline: every phase is
+/// split into `chunks` barrier-separated chunk batches
+/// ([`crate::gpu::sdma::chunk_commands`] — slice `j` of every packet),
+/// so each chunk pays its own per-packet launch and sync. The chunked
+/// plan moves *exactly* the bytes of the original (chunking is a
+/// scheduling decision): [`check_conservation`] holds for one iff it
+/// holds for the other, and the data plane lands byte-identical
+/// outputs — asserted across topologies by `rust/tests/hierarchy.rs`.
+pub fn chunk_phased(plan: &PhasedPlan, chunks: usize) -> PhasedPlan {
+    PhasedPlan {
+        phases: plan
+            .phases
+            .iter()
+            .flat_map(|per_gpu| crate::gpu::sdma::chunk_commands(per_gpu, chunks))
+            .collect(),
+    }
+}
+
 /// Conservation invariant: every byte of every final output buffer
 /// (`outs[g]` on GPU `g`, each `out_len` bytes) is written exactly once
 /// across the whole plan. Writes to other buffers (staging) are
@@ -467,6 +485,33 @@ mod tests {
                 if so.contains(&c.dst) || si.contains(&c.dst) {
                     assert!(c.dst_off + c.len <= cap, "staging OOB: {c:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_plans_conserve_on_every_topology() {
+        // The chunked plan writes exactly the same output bytes as the
+        // whole plan — holes/doubles would fail the conservation check.
+        for (nodes, p) in [(1usize, 8usize), (2, 4), (4, 2)] {
+            let t = if nodes == 1 {
+                Topology::fully_connected(p)
+            } else {
+                Topology::multi_node(nodes, p, 50e9, 5e-6)
+            };
+            let n = t.num_gpus();
+            let shard = 24; // not divisible by 16: exercises ragged slices
+            let outs = ids(n, 100);
+            let ag = allgather_hier(&t, &ids(n, 0), &outs, shard);
+            for k in [1usize, 2, 3, 8, 16] {
+                let chunked = chunk_phased(&ag, k);
+                assert!(chunked.phases.len() >= ag.phases.len());
+                check_conservation(&chunked, &outs, n * shard)
+                    .unwrap_or_else(|e| panic!("{nodes}x{p} k={k}: {e}"));
+                // Same multiset of moved bytes.
+                let total: usize = chunked.commands().map(|c| c.len).sum();
+                let orig: usize = ag.commands().map(|c| c.len).sum();
+                assert_eq!(total, orig, "{nodes}x{p} k={k}");
             }
         }
     }

@@ -161,6 +161,24 @@ pub struct MachineConfig {
     pub min_cu_granularity: u32,
     /// Efficiency the RP heuristic's roofline model assumes (70%, §V-C).
     pub roofline_eff: f64,
+
+    // ---- Fine-grain chunked pipelining (arXiv 2512.10236 / DMA-Latte) ----
+    /// Fraction of the residual memory-subsystem interference
+    /// (`mem_interference_*`, the co-run penalties and L2 pollution)
+    /// eliminated in the fine-grained limit when compute and
+    /// communication are issued at matching chunk boundaries: per-tile
+    /// DMA issue rides the GEMM's inter-chunk HBM gaps instead of
+    /// colliding with its panel-streaming bursts. The surviving penalty
+    /// at `k` chunks is `1 - chunk_align_frac · (1 - 1/k)` of the
+    /// whole-kernel value. Calibration constant in the spirit of
+    /// `mem_interference_coeff`, fit so chunked ConCCL closes roughly
+    /// half the remaining gap to ideal on GC-equal scenarios (the
+    /// finer-grain DSE result) while G-long scenarios see no benefit.
+    pub chunk_align_frac: f64,
+    /// Largest chunk count the auto-tuner / chunk sweep considers
+    /// (powers of two from 1; DMA-Latte: beyond this the per-packet
+    /// launch costs dominate every realistic payload).
+    pub max_chunks: u32,
 }
 
 impl MachineConfig {
@@ -212,6 +230,8 @@ impl MachineConfig {
             base_dispatch_backlog: 0.45,
             min_cu_granularity: 8,
             roofline_eff: 0.7,
+            chunk_align_frac: 0.7,
+            max_chunks: 16,
         }
     }
 
@@ -284,6 +304,57 @@ impl MachineConfig {
         v
     }
 
+    /// Chunk-count candidates for the chunked C3 pipeline: powers of two
+    /// from 1 (no chunking — the whole-kernel strategies) up to
+    /// `max_chunks`. The sweep's `--chunks auto` and the §V-C-style
+    /// chunk heuristic both pick from this set.
+    pub fn chunk_candidates(&self) -> Vec<u32> {
+        let mut v = Vec::new();
+        let mut k = 1u32;
+        while k <= self.max_chunks.max(1) {
+            v.push(k);
+            match k.checked_mul(2) {
+                Some(next) => k = next,
+                None => break, // absurd max_chunks override; stop at 2^31
+            }
+        }
+        v
+    }
+
+    /// Residual-interference survival factor at `k` chunks (see
+    /// [`MachineConfig::chunk_align_frac`]): 1.0 at `k = 1`, shrinking
+    /// toward `1 - chunk_align_frac` as granularity grows.
+    pub fn chunk_align(&self, k: u32) -> f64 {
+        let k = k.max(1) as f64;
+        1.0 - self.chunk_align_frac * (1.0 - 1.0 / k)
+    }
+
+    /// §VII-A1 residual memory-subsystem interference penalty inflicted
+    /// by a co-runner holding `other_share` of achievable HBM
+    /// bandwidth. The single derivation the whole-kernel executor and
+    /// the chunked pipeline share.
+    pub fn mem_pen(&self, other_share: f64) -> f64 {
+        (self.mem_interference_coeff * other_share).min(self.mem_interference_cap)
+    }
+
+    /// L1/L2 pollution a CU-resident collective of `kind` inflicts on a
+    /// co-running GEMM (zero under DMA offload — the caller gates that).
+    pub fn l2_pollution(&self, kind: crate::config::workload::CollectiveKind) -> f64 {
+        match kind {
+            crate::config::workload::CollectiveKind::AllToAll => self.gemm_l2_pollution_a2a,
+            _ => self.gemm_l2_pollution_ag,
+        }
+    }
+
+    /// Co-run bandwidth derate a CU collective of `kind` suffers while
+    /// a GEMM is resident.
+    pub fn comm_co_penalty(&self, kind: crate::config::workload::CollectiveKind) -> f64 {
+        match kind {
+            crate::config::workload::CollectiveKind::AllToAll => self.comm_co_penalty_a2a,
+            _ => self.comm_co_penalty_ag,
+        }
+    }
+
     /// Validate internal consistency; returns a list of problems.
     pub fn validate(&self) -> Vec<String> {
         let mut errs = Vec::new();
@@ -318,10 +389,14 @@ impl MachineConfig {
             ("gemm_l2_pollution_a2a", self.gemm_l2_pollution_a2a),
             ("base_dispatch_backlog", self.base_dispatch_backlog),
             ("gemm_cache_damp", self.gemm_cache_damp),
+            ("chunk_align_frac", self.chunk_align_frac),
         ] {
             if !(0.0..1.0).contains(&v) {
                 errs.push(format!("{name} must be in [0,1), got {v}"));
             }
+        }
+        if self.max_chunks == 0 {
+            errs.push("max_chunks must be >= 1".into());
         }
         if self.min_cu_granularity == 0 || self.min_cu_granularity > self.cus_total() {
             errs.push("bad min_cu_granularity".into());
@@ -412,6 +487,23 @@ mod tests {
         assert_eq!(t.num_nodes(), 2);
         assert_eq!(t.nic_bw(), m.nic_bw);
         assert_eq!(t.nic_latency(), m.nic_latency_s);
+    }
+
+    #[test]
+    fn chunk_candidates_and_alignment() {
+        let m = MachineConfig::mi300x();
+        assert_eq!(m.chunk_candidates(), vec![1, 2, 4, 8, 16]);
+        // Survival factor: full penalty unchunked, floor at 1 - frac.
+        assert!((m.chunk_align(1) - 1.0).abs() < 1e-12);
+        assert!(m.chunk_align(2) < m.chunk_align(1));
+        assert!(m.chunk_align(16) < m.chunk_align(2));
+        assert!(m.chunk_align(u32::MAX) >= 1.0 - m.chunk_align_frac - 1e-9);
+        let mut bad = m.clone();
+        bad.chunk_align_frac = 1.5;
+        assert!(!bad.validate().is_empty());
+        bad = m;
+        bad.max_chunks = 0;
+        assert!(!bad.validate().is_empty());
     }
 
     #[test]

@@ -236,6 +236,8 @@ fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<
         "base_dispatch_backlog" => f64_field!(base_dispatch_backlog),
         "min_cu_granularity" => u32_field!(min_cu_granularity),
         "roofline_eff" => f64_field!(roofline_eff),
+        "chunk_align_frac" => f64_field!(chunk_align_frac),
+        "max_chunks" => u32_field!(max_chunks),
         other => Err(format!("unknown machine config field '{other}'")),
     }
 }
@@ -325,7 +327,7 @@ mod tests {
             "comm_co_penalty_a2a", "gemm_l2_pollution_ag", "gemm_l2_pollution_a2a",
             "mem_interference_coeff", "mem_interference_cap",
             "base_leak_cus", "base_dispatch_backlog", "min_cu_granularity",
-            "roofline_eff",
+            "roofline_eff", "chunk_align_frac", "max_chunks",
         ];
         let mut m = MachineConfig::mi300x();
         for f in fields {

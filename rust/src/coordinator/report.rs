@@ -217,14 +217,14 @@ pub fn render_fig9(m: &MachineConfig, sizes: &[u64]) -> Table {
         .title("Fig 9: ConCCL speedup over CU-based collective (RCCL)")
         .left_cols(1);
     for &s in sizes {
-        let ag = crate::conccl::DmaCollective::new(crate::config::workload::CollectiveSpec::new(
-            CollectiveKind::AllGather,
-            s,
-        ));
-        let a2a = crate::conccl::DmaCollective::new(crate::config::workload::CollectiveSpec::new(
-            CollectiveKind::AllToAll,
-            s,
-        ));
+        let ag = crate::conccl::DmaCollective::try_new(
+            crate::config::workload::CollectiveSpec::new(CollectiveKind::AllGather, s),
+        )
+        .expect("all-gather is DMA-offloadable");
+        let a2a = crate::conccl::DmaCollective::try_new(
+            crate::config::workload::CollectiveSpec::new(CollectiveKind::AllToAll, s),
+        )
+        .expect("all-to-all is DMA-offloadable");
         let lat = CollectiveKernel::new(ag.spec).is_latency_bound(m);
         t.row(vec![
             fmt_bytes(s),

@@ -162,6 +162,13 @@ impl ScenarioOutcome {
                     "'serial' is the speedup baseline, not a measured column".into(),
                 ))
             }
+            StrategyKind::C3Chunked | StrategyKind::ConcclChunked => {
+                return Err(Error::Config(format!(
+                    "'{}' is a chunk-axis column, not a legacy figure column \
+                     (read it from the sweep JSON instead)",
+                    kind.name()
+                )))
+            }
         })
     }
 

@@ -27,6 +27,10 @@ pub enum Error {
     NotDmaOffloadable(String),
     /// Malformed configuration input (sizes, overrides, variant specs).
     Config(String),
+    /// A collective command plan violated the write-exactly-once
+    /// conservation invariant (a hole, a double write, or an
+    /// out-of-bounds write on a final output buffer).
+    Conservation(String),
     /// The fluid simulation stalled: tasks remained with no way to make
     /// progress. Carries the full per-task diagnosis.
     SimStall(StallError),
@@ -42,7 +46,7 @@ impl fmt::Display for Error {
                 write!(f, "unknown scenario '{t}' (see `conccl characterize` for Table II tags)")
             }
             Error::UnknownStrategy(s) => {
-                write!(f, "unknown strategy '{s}' (expected serial, c3_base, c3_sp, c3_rp, c3_sp_rp, c3_best, conccl, conccl_rp)")
+                write!(f, "unknown strategy '{s}' (expected serial, c3_base, c3_sp, c3_rp, c3_sp_rp, c3_best, conccl, conccl_rp, c3_chunked, conccl_chunked)")
             }
             Error::UnknownCollective(s) => {
                 write!(f, "unknown collective '{s}' (expected all-gather, all-to-all, all-reduce)")
@@ -51,6 +55,9 @@ impl fmt::Display for Error {
                 write!(f, "{k} cannot be offloaded to DMA engines (no arithmetic)")
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Conservation(msg) => {
+                write!(f, "collective plan violates conservation: {msg}")
+            }
             Error::SimStall(s) => write!(f, "{s}"),
         }
     }
@@ -78,6 +85,9 @@ mod tests {
         assert!(e.to_string().contains("cb9"));
         let e = Error::NotDmaOffloadable("all-reduce".into());
         assert!(e.to_string().contains("cannot be offloaded"));
+        let e = Error::Conservation("gpu 3 output byte 7 never written".into());
+        assert!(e.to_string().contains("conservation"));
+        assert!(e.to_string().contains("never written"));
     }
 
     #[test]

@@ -120,6 +120,42 @@ pub fn schedule_phases(
     }
 }
 
+/// Split a command batch into `chunks` per-chunk batches for the
+/// fine-grain pipeline: every packet's byte range is cut into `chunks`
+/// contiguous slices (matching source/destination offsets), and chunk
+/// `j`'s batch carries slice `j` of every packet. The union of the
+/// chunk batches covers exactly the original bytes — chunking is a
+/// scheduling decision, never a data decision — and each chunk batch
+/// pays its own per-packet enqueue latency when scheduled, which is
+/// what sends small chunks latency-bound (DMA-Latte).
+pub fn chunk_commands(
+    per_gpu: &[Vec<CommandPacket>],
+    chunks: usize,
+) -> Vec<Vec<Vec<CommandPacket>>> {
+    let k = chunks.max(1);
+    (0..k)
+        .map(|j| {
+            per_gpu
+                .iter()
+                .map(|cmds| {
+                    cmds.iter()
+                        .filter_map(|c| {
+                            let off = c.len * j / k;
+                            let end = c.len * (j + 1) / k;
+                            (end > off).then_some(CommandPacket {
+                                src_off: c.src_off + off,
+                                dst_off: c.dst_off + off,
+                                len: end - off,
+                                ..*c
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// [`schedule`] with all clocks (CPU threads, engines, links) starting
 /// at `t0` — the building block of [`schedule_phases`].
 fn schedule_at(
@@ -377,6 +413,68 @@ mod tests {
         let single = schedule_phases(&m, &topo, &[p1.clone()], EnginePolicy::RoundRobin);
         let flat = schedule(&m, &topo, &p1, EnginePolicy::RoundRobin);
         assert_rel_close!(single.total, flat.total, 1e-12);
+    }
+
+    #[test]
+    fn chunked_batches_cover_exact_bytes_and_pay_per_chunk_launch() {
+        let m = m();
+        let topo = Topology::fully_connected(8);
+        let mut per_gpu = vec![Vec::new(); 8];
+        for p in 1..8 {
+            per_gpu[0].push(cmd(0, p, (100 << 20) + 7)); // odd length
+        }
+        let chunked = chunk_commands(&per_gpu, 4);
+        assert_eq!(chunked.len(), 4);
+        // Byte coverage: each packet's slices tile its range exactly.
+        for (orig_i, orig) in per_gpu[0].iter().enumerate() {
+            let mut covered = 0usize;
+            for batch in &chunked {
+                let slice = &batch[0][orig_i];
+                assert_eq!(slice.src_gpu, orig.src_gpu);
+                assert_eq!(slice.dst_gpu, orig.dst_gpu);
+                assert_eq!(slice.src_off, orig.src_off + covered);
+                assert_eq!(slice.dst_off, orig.dst_off + covered);
+                covered += slice.len;
+            }
+            assert_eq!(covered, orig.len);
+        }
+        // Scheduling the chunk batches as phases pays per-chunk
+        // enqueue/sync: never faster than the whole batch, and the gap
+        // shrinks relatively as payloads grow (latency amortizes).
+        let whole = schedule(&m, &topo, &per_gpu, EnginePolicy::LeastLoaded);
+        let phased = schedule_phases(
+            &m,
+            &topo,
+            &chunk_commands(&per_gpu, 4),
+            EnginePolicy::LeastLoaded,
+        );
+        assert!(phased.total >= whole.total);
+        // Tiny payloads: the per-chunk launch dominates outright.
+        let mut small = vec![Vec::new(); 8];
+        for p in 1..8 {
+            small[0].push(cmd(0, p, 4096));
+        }
+        let sw = schedule(&m, &topo, &small, EnginePolicy::LeastLoaded);
+        let sp = schedule_phases(
+            &m,
+            &topo,
+            &chunk_commands(&small, 8),
+            EnginePolicy::LeastLoaded,
+        );
+        assert!(
+            sp.total > 2.0 * sw.total,
+            "latency-bound chunking should collapse: {} vs {}",
+            sp.total,
+            sw.total
+        );
+        // Chunking a zero-length-free batch never emits empty packets.
+        for batch in chunk_commands(&small, 8) {
+            for cmds in batch {
+                for c in cmds {
+                    assert!(c.len > 0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Runtime heuristics (§V-C, §VI-G): schedule prioritization by
-//! workgroup count and resource partitioning via a one-time slowdown
-//! lookup table + 70%-efficiency rooflines.
+//! Runtime heuristics (§V-C, §VI-G, and the fine-grain follow-up):
+//! schedule prioritization by workgroup count, resource partitioning
+//! via a one-time slowdown lookup table + 70%-efficiency rooflines, and
+//! the chunk-count auto-tuner for the chunked C3 pipeline.
 
+pub mod chunk;
 pub mod rp;
 pub mod sp;
 
+pub use chunk::{project_total, recommend_chunks};
 pub use rp::{recommend, recommend_conccl_rp, SlowdownTable};
 pub use sp::{comm_first, launch_order, LaunchInfo};

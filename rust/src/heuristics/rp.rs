@@ -225,6 +225,83 @@ mod tests {
     }
 
     #[test]
+    fn recommendation_monotone_in_cu_budget() {
+        // Restricting the candidate CU budget (a runtime with fewer
+        // reservable CUs) can only push the recommendation down, never
+        // up — and the constrained pick is the unconstrained one capped
+        // at the budget whenever the unconstrained pick fits.
+        let m = m();
+        let full = SlowdownTable::build(&m);
+        for kind in CollectiveKind::studied() {
+            for row in &TABLE2 {
+                let sc = resolve(row, kind);
+                let k_full = recommend(&m, &full, &sc);
+                let mut prev = u32::MAX;
+                for budget in [128u32, 64, 32, 16, 8] {
+                    let keep: Vec<usize> = full
+                        .candidates
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &c)| c <= budget)
+                        .map(|(i, _)| i)
+                        .collect();
+                    let capped = SlowdownTable {
+                        candidates: keep.iter().map(|&i| full.candidates[i]).collect(),
+                        gemm_cb: keep.iter().map(|&i| full.gemm_cb[i]).collect(),
+                        gemm_mb: keep.iter().map(|&i| full.gemm_mb[i]).collect(),
+                        ag_bw: keep.iter().map(|&i| full.ag_bw[i]).collect(),
+                        a2a_bw: keep.iter().map(|&i| full.a2a_bw[i]).collect(),
+                        ag_lat: keep.iter().map(|&i| full.ag_lat[i]).collect(),
+                        a2a_lat: keep.iter().map(|&i| full.a2a_lat[i]).collect(),
+                    };
+                    let k = recommend(&m, &capped, &sc);
+                    assert!(k <= budget, "{}: {k} exceeds budget {budget}", sc.tag());
+                    assert!(k <= prev, "{}: pick rose as budget shrank", sc.tag());
+                    if k_full <= budget {
+                        assert_eq!(k, k_full, "{}: constrained pick diverged", sc.tag());
+                    }
+                    prev = k;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recommendation_monotone_in_collective_size() {
+        // A bigger collective never gets *fewer* CUs (the objective's
+        // crossing point moves monotonically with the comm term).
+        let m = m();
+        let t = SlowdownTable::build(&m);
+        for kind in CollectiveKind::studied() {
+            for g_tag in ["cb1", "mb1", "cb5"] {
+                let mut prev = 0u32;
+                for mb in [64u64, 256, 896, 3328, 13 * 1024, 20 * 1024] {
+                    let g = gemm_by_tag(g_tag).unwrap();
+                    let spec = CollectiveSpec::new(kind, mb * MIB);
+                    let sc = ResolvedScenario {
+                        scenario: crate::config::workload::C3Scenario {
+                            gemm_tag: g_tag.into(),
+                            gemm: g.shape,
+                            comm: spec,
+                            source: crate::config::workload::Source::Synthetic,
+                        },
+                        gemm: g,
+                        comm: crate::kernels::CollectiveKernel::new(spec),
+                        paper_type: crate::workload::taxonomy::C3Type::GLong,
+                    };
+                    let k = recommend(&m, &t, &sc);
+                    assert!(
+                        k >= prev,
+                        "{g_tag}/{}: recommendation dropped {prev} -> {k} at {mb}M",
+                        kind.name()
+                    );
+                    prev = k;
+                }
+            }
+        }
+    }
+
+    #[test]
     fn roofline_uses_70pct_efficiency() {
         let m = m();
         let g = gemm_by_tag("cb1").unwrap();

@@ -85,6 +85,37 @@ mod tests {
     }
 
     #[test]
+    fn tie_breaking_is_stable_and_comm_first_is_strict() {
+        // Equal workgroup counts keep input order (stable sort): the
+        // runtime must not reorder kernels it has no signal to reorder.
+        let tie = vec![
+            LaunchInfo { name: "first".into(), workgroups: 64 },
+            LaunchInfo { name: "second".into(), workgroups: 64 },
+            LaunchInfo { name: "third".into(), workgroups: 64 },
+        ];
+        assert_eq!(launch_order(&tie), vec![0, 1, 2]);
+        // comm_first demands a *strictly* smaller collective: on a tie
+        // (or a GEMM smaller than the collective's workgroup need) the
+        // GEMM keeps its launch slot.
+        let m = MachineConfig::mi300x();
+        let c = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 896 * MIB));
+        assert_eq!(c.cu_need(&m), 32);
+        // One-workgroup GEMM (128x128): fewer workgroups than the
+        // collective -> GEMM first.
+        let tiny = GemmKernel::new("tiny", crate::config::workload::GemmShape::bf16(128, 128, 128));
+        assert_eq!(tiny.workgroups(&m), 1);
+        assert!(!comm_first(&m, &tiny, &c));
+        // Exactly equal workgroups: stable order keeps the GEMM (listed
+        // first) ahead.
+        let equal = GemmKernel::new(
+            "eq",
+            crate::config::workload::GemmShape::bf16(4 * 128, 8 * 128, 128),
+        );
+        assert_eq!(equal.workgroups(&m), 32);
+        assert!(!comm_first(&m, &equal, &c));
+    }
+
+    #[test]
     fn multi_kernel_generalization() {
         // §VII-B1: more than two kernels still order low-to-high.
         let m = MachineConfig::mi300x();

@@ -119,6 +119,16 @@ impl CollectiveKernel {
         self.hbm_traffic(m) / self.time_isolated_full(m) / m.hbm_bw_achievable()
     }
 
+    /// Fraction of achievable HBM bandwidth this collective demands
+    /// while its wire phase lasts `wire` seconds — the §VII-A1
+    /// residual-interference share. One derivation shared by the
+    /// whole-kernel executor, the chunked pipeline and the chunk tuner
+    /// (the caller supplies the backend/topology-appropriate wire
+    /// time), mirroring [`crate::kernels::GemmKernel::hbm_share`].
+    pub fn hbm_share_with_wire(&self, m: &MachineConfig, wire: f64) -> f64 {
+        (self.hbm_traffic(m) / wire / m.hbm_bw_achievable()).min(1.0)
+    }
+
     /// Fig 5b/c: slowdown at `cu` assigned CUs vs the kernel's need.
     pub fn slowdown_with_cus(&self, m: &MachineConfig, cu: u32) -> f64 {
         self.time_isolated(m, cu) / self.time_isolated_full(m)

@@ -137,6 +137,49 @@ impl GemmKernel {
         assert!(lost < total, "cannot take all CUs away");
         self.time_isolated(m, total - lost) / self.time_isolated(m, total)
     }
+
+    /// Fraction of achievable HBM bandwidth this kernel demands while
+    /// running at `cu` CUs — the §VII-A1 residual-interference share
+    /// used by the executor, the chunked pipeline and the chunk tuner
+    /// (one derivation, so they cannot drift apart).
+    pub fn hbm_share(&self, m: &MachineConfig, cu: u32) -> f64 {
+        let t = smoothmax(self.t_comp(m, cu), self.t_mem(m, cu));
+        (self.hbm_traffic(m, cu) / t / m.hbm_bw_achievable()).min(1.0)
+    }
+
+    /// Largest chunk count an M-split of this GEMM supports: one
+    /// macro-tile row per chunk at most.
+    pub fn max_m_chunks(&self, m: &MachineConfig) -> u32 {
+        (self.shape.m as u64).div_ceil(m.gemm_tile as u64).max(1) as u32
+    }
+
+    /// Split the GEMM into `k` sub-kernels along M (macro-tile-row
+    /// aligned, as even as the tile grid allows) — the tiled sub-shapes
+    /// the chunked C3 pipeline launches back-to-back. `k` is clamped to
+    /// the tile-row count; chunk FLOPs and output rows sum exactly to
+    /// the parent's. Per-chunk wave quantization (partial waves cost a
+    /// full wave) is the compute-side price of chunking.
+    pub fn split_m(&self, m: &MachineConfig, k: u32) -> Vec<GemmKernel> {
+        let tile = m.gemm_tile;
+        let tiles_m = (self.shape.m as u64).div_ceil(tile as u64) as usize;
+        let k = (k.max(1) as usize).min(tiles_m);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let row0 = (tiles_m * i / k) * tile;
+            let row1 = ((tiles_m * (i + 1) / k) * tile).min(self.shape.m);
+            debug_assert!(row1 > row0, "empty GEMM chunk");
+            out.push(GemmKernel::new(
+                &format!("{}#{i}", self.tag),
+                crate::config::workload::GemmShape {
+                    m: row1 - row0,
+                    n: self.shape.n,
+                    k: self.shape.k,
+                    dtype: self.shape.dtype,
+                },
+            ));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +343,37 @@ mod tests {
         let cubic = g("c", 8192, 8192, 8192);
         let fat = g("f", 8192, 57344, 8192);
         assert!(fat.intensity(&m) < cubic.intensity(&m));
+    }
+
+    #[test]
+    fn split_m_conserves_shape_and_flops() {
+        let m = m();
+        for tag in ["cb1", "mb1", "mb2", "cb5"] {
+            let g = crate::workload::llama::gemm_by_tag(tag).unwrap();
+            for k in [1u32, 2, 4, 8, 16] {
+                let chunks = g.split_m(&m, k);
+                assert_eq!(chunks.len(), k as usize, "{tag} k={k}");
+                let m_sum: usize = chunks.iter().map(|c| c.shape.m).sum();
+                assert_eq!(m_sum, g.shape.m, "{tag} k={k}: M rows lost");
+                let f_sum: f64 = chunks.iter().map(|c| c.shape.flops()).sum();
+                assert!((f_sum - g.shape.flops()).abs() / g.shape.flops() < 1e-12);
+                for c in &chunks {
+                    assert_eq!(c.shape.n, g.shape.n);
+                    assert_eq!(c.shape.k, g.shape.k);
+                    assert!(c.shape.m > 0);
+                }
+                // Wave quantization: chunked waves never fewer than whole.
+                let w_sum: u64 = chunks.iter().map(|c| c.waves(&m, 304)).sum();
+                assert!(w_sum >= g.waves(&m, 304), "{tag} k={k}");
+            }
+        }
+        // Clamp: more chunks than tile rows collapses to one per row.
+        let tiny = g("t", 200, 512, 512);
+        assert_eq!(tiny.max_m_chunks(&m), 2);
+        assert_eq!(tiny.split_m(&m, 16).len(), 2);
+        // Partial last tile keeps its true row count.
+        let ms: Vec<usize> = tiny.split_m(&m, 2).iter().map(|c| c.shape.m).collect();
+        assert_eq!(ms, vec![128, 72]);
     }
 
     #[test]

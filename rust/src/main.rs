@@ -8,7 +8,7 @@ use conccl::coordinator::{headline, report, run_suite, taxonomy_divergences, Run
 use conccl::heuristics::{self, SlowdownTable};
 use conccl::kernels::CollectiveKernel;
 use conccl::sched::{C3Executor, Strategy};
-use conccl::sweep::{execute as execute_sweep, parse_variants, MachineVariant, SweepPlan};
+use conccl::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVariant, SweepPlan};
 use conccl::util::table::{f as fnum, speedup, Table};
 use conccl::util::units::{fmt_seconds, MIB};
 use conccl::workload::llama::LlamaConfig;
@@ -92,14 +92,70 @@ fn run_one(args: &Args) -> Result<(), String> {
     let sc = find_scenario(&args.opt("scenario", "mb1_896M"), kind)?;
     let nodes = args.opt_usize("nodes", 1)?.max(1);
     let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
-    let strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
-    let r = exec.try_run(&sc, strat).map_err(|e| e.to_string())?;
+    let mut strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
+    // --chunks auto|N applies to the chunked pipeline strategies: auto
+    // asks the runtime-style heuristic (heuristics::chunk) on the
+    // paper's single node — the regime it is calibrated for — and the
+    // topology-aware exhaustive chunk sweep on multi-node topologies
+    // (the heuristic's rooflines know nothing about the NIC, where
+    // chunking's win shrinks); a number pins the count (clamped to
+    // what the scenario supports).
+    let mut chunk_note = String::new();
+    // The multi-node auto path already simulates every candidate; keep
+    // its winning run instead of re-simulating the same point.
+    let mut swept_run = None;
+    if strat.is_chunked() {
+        let dma = !strat.comm_on_cus();
+        let k = match args.opt("chunks", "auto").as_str() {
+            "auto" if nodes <= 1 => {
+                let k = heuristics::recommend_chunks(&exec.m, &sc, dma);
+                chunk_note = format!("{k} (auto-tuned)");
+                k
+            }
+            "auto" => {
+                let (run, k) = exec
+                    .try_run_chunk_sweep_with(&sc, dma, exec.baselines(&sc))
+                    .map_err(|e| e.to_string())?;
+                chunk_note = format!("{k} (swept, {nodes}-node topology)");
+                swept_run = Some(run);
+                k
+            }
+            other => {
+                let k: u32 = other.parse().map_err(|e| format!("--chunks: {e}"))?;
+                if k == 0 {
+                    return Err("--chunks: chunk count must be >= 1 (or 'auto')".into());
+                }
+                let k = exec.clamp_chunks(&sc, k);
+                chunk_note = k.to_string();
+                k
+            }
+        };
+        strat = match strat {
+            Strategy::C3Chunked { .. } => Strategy::C3Chunked { chunks: k },
+            Strategy::ConcclChunked { .. } => Strategy::ConcclChunked { chunks: k },
+            other => other,
+        };
+    } else if args.options.contains_key("chunks") {
+        // Silently ignoring --chunks would misreport the measurement.
+        return Err(format!(
+            "--chunks applies to the chunked pipeline strategies \
+             (c3_chunked, conccl_chunked), not '{}'",
+            strat.name()
+        ));
+    }
+    let r = match swept_run {
+        Some(run) => run,
+        None => exec.try_run(&sc, strat).map_err(|e| e.to_string())?,
+    };
     let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!(
         "{} × {} under {} ({nodes} node(s))",
         sc.tag(),
         kind.name(),
         strat.name()
     ));
+    if !chunk_note.is_empty() {
+        t.row(vec!["chunks".to_string(), chunk_note]);
+    }
     t.row(vec!["serial".to_string(), fmt_seconds(r.serial)]);
     t.row(vec!["concurrent".to_string(), fmt_seconds(r.total)]);
     t.row(vec!["gemm finish".to_string(), fmt_seconds(r.gemm_finish)]);
@@ -162,8 +218,17 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
         .filter(|s| !s.is_empty())
         .map(|s| s.parse::<usize>().map_err(|e| format!("--nodes: {e}")))
         .collect::<Result<_, _>>()?;
+    let chunk_counts: Vec<ChunkSel> = args
+        .opt("chunks", "auto")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(ChunkSel::parse)
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("--chunks: {e}"))?;
     let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
         .and_then(|p| p.with_node_counts(node_counts))
+        .and_then(|p| p.with_chunk_counts(chunk_counts))
         .map_err(|e| e.to_string())?;
     let n_jobs = plan.job_count();
     let t0 = std::time::Instant::now();
@@ -172,43 +237,51 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
 
     for (mi, mv) in results.plan.machines.iter().enumerate() {
         for (ni, &nodes) in results.plan.node_counts.iter().enumerate() {
-            let mut headers: Vec<String> = vec!["scenario".to_string(), "collective".to_string()];
-            headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
-            let mut t = Table::new(headers).left_cols(2).title(format!(
-                "sweep: machine '{}' × {nodes} node(s) — median-speedup per strategy",
-                mv.label
-            ));
-            for (si, sc) in results.plan.scenarios.iter().enumerate() {
-                let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
-                for (ki, _) in results.plan.strategies.iter().enumerate() {
-                    let out = &results.outputs[results.plan.job_id(mi, ni, si, ki)];
-                    row.push(match &out.result {
-                        Ok(meas) => match out.rp_cus {
-                            Some(k) => format!("{} @{k}CU", speedup(meas.speedup_median)),
-                            None => speedup(meas.speedup_median),
-                        },
-                        Err(_) => "ERR".to_string(),
-                    });
-                }
-                t.row(row);
-            }
-            t.print();
-            if let Ok(outs) = results.to_scenario_outcomes(mi, ni) {
-                let h = headline(&outs);
-                let p = |k: &str| h.per_strategy[k].1;
-                println!(
-                    "machine '{}' × {nodes} node(s): avg %ideal — base {:.0}, sp {:.0}, \
-                     rp {:.0}, best {:.0}, conccl {:.0}, conccl_rp {:.0}",
+            for (ci, &chunks) in results.plan.chunk_counts.iter().enumerate() {
+                let mut headers: Vec<String> =
+                    vec!["scenario".to_string(), "collective".to_string()];
+                headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
+                let mut t = Table::new(headers).left_cols(2).title(format!(
+                    "sweep: machine '{}' × {nodes} node(s) × chunks={} — median-speedup per strategy",
                     mv.label,
-                    p("c3_base"),
-                    p("c3_sp"),
-                    p("c3_rp"),
-                    p("c3_best"),
-                    p("conccl"),
-                    p("conccl_rp")
-                );
+                    chunks.label()
+                ));
+                for (si, sc) in results.plan.scenarios.iter().enumerate() {
+                    let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
+                    for (ki, _) in results.plan.strategies.iter().enumerate() {
+                        let out = &results.outputs[results.plan.job_id(mi, ni, ci, si, ki)];
+                        row.push(match &out.result {
+                            Ok(meas) => match (out.rp_cus, out.chunks_used) {
+                                (Some(k), _) => format!("{} @{k}CU", speedup(meas.speedup_median)),
+                                (None, Some(k)) => {
+                                    format!("{} @{k}ch", speedup(meas.speedup_median))
+                                }
+                                (None, None) => speedup(meas.speedup_median),
+                            },
+                            Err(_) => "ERR".to_string(),
+                        });
+                    }
+                    t.row(row);
+                }
+                t.print();
+                if let Ok(outs) = results.to_scenario_outcomes(mi, ni, ci) {
+                    let h = headline(&outs);
+                    let p = |k: &str| h.per_strategy[k].1;
+                    println!(
+                        "machine '{}' × {nodes} node(s) × chunks={}: avg %ideal — base {:.0}, \
+                         sp {:.0}, rp {:.0}, best {:.0}, conccl {:.0}, conccl_rp {:.0}",
+                        mv.label,
+                        chunks.label(),
+                        p("c3_base"),
+                        p("c3_sp"),
+                        p("c3_rp"),
+                        p("c3_best"),
+                        p("conccl"),
+                        p("conccl_rp")
+                    );
+                }
+                println!();
             }
-            println!();
         }
     }
     let errs = results.errors();
@@ -216,10 +289,11 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
         println!("{} job(s) failed (sweep continued without them):", errs.len());
         for (job, e) in &errs {
             println!(
-                "  job {} [{} × {}n × {} × {}]: {e}",
+                "  job {} [{} × {}n × {}ch × {} × {}]: {e}",
                 job.id,
                 results.machine_label(job.machine_idx),
                 results.plan.node_counts[job.node_idx],
+                results.plan.chunk_counts[job.chunk_idx].label(),
                 results.plan.scenarios[job.scenario_idx].tag(),
                 job.strategy.name()
             );
@@ -251,9 +325,10 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
 
 /// CI perf-regression gate: compare a fresh `sweep --json` report
 /// against the checked-in baseline; non-zero exit on any >tolerance
-/// median-speedup regression. A `{"seeded":false}` baseline passes with
-/// instructions (bootstrap mode), so the gate can land before the first
-/// baseline numbers are committed.
+/// median-speedup regression. Without `--strict` a `{"seeded":false}`
+/// baseline passes with seeding instructions (bootstrap mode, useful
+/// locally); with `--strict` — what CI uses — an unseeded baseline is
+/// a hard failure, so the gate can never pass vacuously.
 fn bench_gate(args: &Args) -> Result<(), String> {
     let baseline_path = args.opt("baseline", "BENCH_baseline.json");
     let report_path = args
@@ -280,6 +355,13 @@ fn bench_gate(args: &Args) -> Result<(), String> {
             "  To seed the bench trajectory, commit the fresh report as {baseline_path}:\n  \
              cp {report_path} {baseline_path}"
         );
+        // --strict: an unseeded/bootstrap baseline is a FAILURE, not a
+        // pass — CI must gate against real numbers.
+        if args.flag("strict") {
+            return Err(format!(
+                "--strict: baseline '{baseline_path}' is not seeded; seed it and re-run"
+            ));
+        }
         return Ok(());
     }
     let gate = conccl::sweep::gate(&baseline, &report, tolerance)?;
@@ -412,6 +494,39 @@ fn heuristics_cmd(args: &Args) -> Result<(), String> {
         heuristics::comm_first(&m, &sc.gemm, &sc.comm)
     });
     println!("SP heuristic schedules communication first for all scenarios: {sp_ok}");
+
+    // Chunk-count tuner vs the exhaustive chunk sweep (the granularity
+    // analog of the rp comparison above), on the ConCCL pipeline.
+    let mut ct = Table::new(vec![
+        "scenario", "collective", "heuristic k", "sweep-best k", "match", "loss%",
+    ])
+    .title("chunk auto-tuner vs exhaustive chunk sweep (conccl_chunked)")
+    .left_cols(2);
+    let mut c_matches = 0;
+    let mut c_worst: f64 = 0.0;
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            let sc = resolve(row, kind);
+            let k_h = heuristics::recommend_chunks(&m, &sc, true);
+            let at_h = exec.run(&sc, Strategy::ConcclChunked { chunks: k_h });
+            let (best, k_b) = exec.run_chunk_sweep(&sc, true);
+            let loss = (at_h.total / best.total - 1.0) * 100.0;
+            let is_match = k_h == k_b || loss < 0.1;
+            c_matches += is_match as usize;
+            c_worst = c_worst.max(loss);
+            ct.row(vec![
+                sc.tag(),
+                kind.name().to_string(),
+                k_h.to_string(),
+                k_b.to_string(),
+                if is_match { "yes" } else { "no" }.to_string(),
+                fnum(loss, 2),
+            ]);
+        }
+    }
+    println!();
+    ct.print();
+    println!("chunk tuner optimal for {c_matches}/{n} scenarios; worst loss {c_worst:.2}%");
     Ok(())
 }
 
@@ -435,6 +550,8 @@ fn e2e(args: &Args) -> Result<(), String> {
         Strategy::C3Sp,
         Strategy::Conccl,
         Strategy::ConcclRp { cus_removed: 8 },
+        // Auto-tuned chunked pipeline, per stage (chunks: 0 = auto).
+        Strategy::ConcclChunked { chunks: 0 },
     ] {
         let r = replay(&m, &trace, strat);
         t.row(vec![

@@ -19,23 +19,32 @@
 //! On multi-node topologies the DMA backend switches to the
 //! hierarchical plans (`conccl::plan::allgather_hier` /
 //! `alltoall_hier`) — intra-node direct DMA, inter-node leader
-//! exchange, leader scatter — and asserts the conservation invariant
-//! (every output byte written exactly once) before moving bytes. Both
-//! backends stay byte-identical on every topology.
+//! exchange, leader scatter — and checks the conservation invariant
+//! (every output byte written exactly once) before moving bytes; a
+//! violation is a typed [`Error::Conservation`], never a panic. Both
+//! backends stay byte-identical on every topology, chunked
+//! (`*_chunked`, the fine-grain pipeline's per-chunk batches) or not.
 
 use crate::conccl::plan::{
-    a2a_stage_bytes, allgather_hier, alltoall_hier, check_conservation, PhasedPlan,
+    a2a_stage_bytes, allgather_hier, alltoall_hier, check_conservation, chunk_phased, PhasedPlan,
 };
+use crate::error::Error;
 use crate::gpu::memory::BufferId;
 use crate::gpu::sdma::EnginePolicy;
 use crate::node::Node;
 
 /// Execute a phased collective plan after checking conservation over
-/// the final outputs; returns total modelled time.
-fn run_checked(node: &mut Node, plan: &PhasedPlan, outs: &[BufferId], out_len: usize) -> f64 {
-    check_conservation(plan, outs, out_len)
-        .unwrap_or_else(|e| panic!("collective plan violates conservation: {e}"));
-    node.execute_phases(&plan.phases, EnginePolicy::LeastLoaded).total
+/// the final outputs; returns total modelled time. A violated
+/// invariant is a typed [`Error::Conservation`] — never a panic — so a
+/// bad plan fails its own job instead of aborting the process.
+fn run_checked(
+    node: &mut Node,
+    plan: &PhasedPlan,
+    outs: &[BufferId],
+    out_len: usize,
+) -> Result<f64, Error> {
+    check_conservation(plan, outs, out_len).map_err(Error::Conservation)?;
+    Ok(node.execute_phases(&plan.phases, EnginePolicy::LeastLoaded).total)
 }
 
 /// Which engine executes the data movement.
@@ -65,7 +74,23 @@ pub fn all_gather(
     shards: &[BufferId],
     outs: &[BufferId],
     backend: Backend,
-) -> CollectiveRun {
+) -> Result<CollectiveRun, Error> {
+    all_gather_chunked(node, shards, outs, backend, 1)
+}
+
+/// [`all_gather`] executed as `chunks` fine-grain chunk batches (the
+/// chunked pipeline's data plane): the DMA backend splits every command
+/// into per-chunk slices ([`chunk_phased`]) with a barrier per chunk;
+/// the byte movement — and therefore every output buffer — is identical
+/// to the unchunked plan on any topology (conservation is checked on
+/// the chunked plan itself).
+pub fn all_gather_chunked(
+    node: &mut Node,
+    shards: &[BufferId],
+    outs: &[BufferId],
+    backend: Backend,
+    chunks: usize,
+) -> Result<CollectiveRun, Error> {
     let n = node.num_gpus();
     assert_eq!(shards.len(), n);
     assert_eq!(outs.len(), n);
@@ -76,15 +101,20 @@ pub fn all_gather(
     }
     match backend {
         Backend::Dma => {
-            let plan = allgather_hier(&node.topo, shards, outs, shard_len);
-            let time = run_checked(node, &plan, outs, n * shard_len);
-            CollectiveRun {
+            let mut plan = allgather_hier(&node.topo, shards, outs, shard_len);
+            if chunks > 1 {
+                plan = chunk_phased(&plan, chunks);
+            }
+            let time = run_checked(node, &plan, outs, n * shard_len)?;
+            Ok(CollectiveRun {
                 time,
                 wire_bytes_per_gpu: ((n - 1) * shard_len) as u64,
-            }
+            })
         }
         Backend::Cu => {
-            // Functionally identical movement, one logical step.
+            // Functionally identical movement, one logical step
+            // (chunking a CU kernel is a launch-schedule detail; its
+            // data path has no command-level structure to slice).
             for src in 0..n {
                 let data = node.mems[src].bytes(shards[src]).to_vec();
                 for dst in 0..n {
@@ -97,10 +127,10 @@ pub fn all_gather(
                     (n * shard_len) as u64,
                 ),
             );
-            CollectiveRun {
+            Ok(CollectiveRun {
                 time: k.time_isolated_full_on(&node.machine, &node.topo),
                 wire_bytes_per_gpu: ((n - 1) * shard_len) as u64,
-            }
+            })
         }
     }
 }
@@ -113,7 +143,19 @@ pub fn all_to_all(
     ins: &[BufferId],
     outs: &[BufferId],
     backend: Backend,
-) -> CollectiveRun {
+) -> Result<CollectiveRun, Error> {
+    all_to_all_chunked(node, ins, outs, backend, 1)
+}
+
+/// [`all_to_all`] executed as `chunks` fine-grain chunk batches; see
+/// [`all_gather_chunked`].
+pub fn all_to_all_chunked(
+    node: &mut Node,
+    ins: &[BufferId],
+    outs: &[BufferId],
+    backend: Backend,
+    chunks: usize,
+) -> Result<CollectiveRun, Error> {
     let n = node.num_gpus();
     assert_eq!(ins.len(), n);
     assert_eq!(outs.len(), n);
@@ -140,17 +182,20 @@ pub fn all_to_all(
             } else {
                 (Vec::new(), Vec::new())
             };
-            let plan = alltoall_hier(&node.topo, ins, outs, &so, &si, chunk_len);
+            let mut plan = alltoall_hier(&node.topo, ins, outs, &so, &si, chunk_len);
+            if chunks > 1 {
+                plan = chunk_phased(&plan, chunks);
+            }
             let time = run_checked(node, &plan, outs, total_len);
             for i in 0..nodes.min(so.len()) {
                 let leader = node.topo.leader_of(i);
                 node.mems[leader].free(so[i]);
                 node.mems[leader].free(si[i]);
             }
-            CollectiveRun {
-                time,
+            Ok(CollectiveRun {
+                time: time?,
                 wire_bytes_per_gpu: ((n - 1) * chunk_len) as u64,
-            }
+            })
         }
         Backend::Cu => {
             for src in 0..n {
@@ -166,10 +211,10 @@ pub fn all_to_all(
                     total_len as u64,
                 ),
             );
-            CollectiveRun {
+            Ok(CollectiveRun {
                 time: k.time_isolated_full_on(&node.machine, &node.topo),
                 wire_bytes_per_gpu: ((n - 1) * chunk_len) as u64,
-            }
+            })
         }
     }
 }
@@ -180,7 +225,11 @@ pub fn all_to_all(
 /// * `Backend::Cu` — classic CU kernel all-reduce (RCCL-like timing).
 /// * `Backend::Dma` — the §VII-A2 *hybrid*: reduce-scatter on CUs +
 ///   all-gather on DMA engines (DMA engines cannot reduce).
-pub fn all_reduce_f32(node: &mut Node, bufs: &[BufferId], backend: Backend) -> CollectiveRun {
+pub fn all_reduce_f32(
+    node: &mut Node,
+    bufs: &[BufferId],
+    backend: Backend,
+) -> Result<CollectiveRun, Error> {
     let n = node.num_gpus();
     assert_eq!(bufs.len(), n);
     let len = node.mems[0].len(bufs[0]);
@@ -210,10 +259,10 @@ pub fn all_reduce_f32(node: &mut Node, bufs: &[BufferId], backend: Backend) -> C
                     size,
                 ),
             );
-            CollectiveRun {
+            Ok(CollectiveRun {
                 time: k.time_isolated_full_on(m, topo),
                 wire_bytes_per_gpu: 2 * ((n - 1) * len / n) as u64,
-            }
+            })
         }
         Backend::Dma => {
             // Hybrid: RS on CUs (a reduce-scatter's wire profile mirrors
@@ -224,12 +273,13 @@ pub fn all_reduce_f32(node: &mut Node, bufs: &[BufferId], backend: Backend) -> C
             );
             let rs_kernel = crate::kernels::CollectiveKernel::new(rs_spec);
             let rs = m.coll_launch_s + rs_kernel.t_wire_on(m, topo, rs_kernel.cu_need(m));
-            // ... then AG on DMA engines.
-            let ag = crate::conccl::DmaCollective::new(rs_spec).time_isolated_on(m, topo);
-            CollectiveRun {
+            // ... then AG on DMA engines (all-gather is statically
+            // offloadable; the typed constructor keeps the panic out).
+            let ag = crate::conccl::DmaCollective::try_new(rs_spec)?.time_isolated_on(m, topo);
+            Ok(CollectiveRun {
                 time: rs + ag,
                 wire_bytes_per_gpu: 2 * ((n - 1) * len / n) as u64,
-            }
+            })
         }
     }
 }
@@ -268,7 +318,7 @@ mod tests {
             .map(|g| nd.alloc_init(g, &shards_data[g]))
             .collect();
         let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard_len)).collect();
-        let run = all_gather(&mut nd, &shards, &outs, backend);
+        let run = all_gather(&mut nd, &shards, &outs, backend).unwrap();
         let expect: Vec<u8> = shards_data.concat();
         for g in 0..n {
             assert_eq!(nd.mems[g].bytes(outs[g]), &expect[..], "gpu {g}");
@@ -300,7 +350,7 @@ mod tests {
             (0..n).map(|_| random_bytes(&mut rng, n * chunk)).collect();
         let ins: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &ins_data[g])).collect();
         let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * chunk)).collect();
-        all_to_all(&mut nd, &ins, &outs, backend);
+        all_to_all(&mut nd, &ins, &outs, backend).unwrap();
         // Oracle: out[d][g·c..] == in[g][d·c..].
         for d in 0..n {
             for g in 0..n {
@@ -335,7 +385,7 @@ mod tests {
                     (0..n).map(|_| random_bytes(&mut rng, shard_len)).collect();
                 let shards: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &data[g])).collect();
                 let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard_len)).collect();
-                let run = all_gather(&mut nd, &shards, &outs, backend);
+                let run = all_gather(&mut nd, &shards, &outs, backend).unwrap();
                 let expect: Vec<u8> = data.concat();
                 for g in 0..n {
                     assert_eq!(nd.mems[g].bytes(outs[g]), &expect[..], "{nodes}x{p} gpu {g}");
@@ -358,8 +408,8 @@ mod tests {
         let ib: Vec<_> = (0..n).map(|g| b.alloc_init(g, &data[g])).collect();
         let ob: Vec<_> = (0..n).map(|g| b.alloc(g, n * chunk)).collect();
         let fp_before = a.mems[0].footprint();
-        all_to_all(&mut a, &ia, &oa, Backend::Dma);
-        all_to_all(&mut b, &ib, &ob, Backend::Cu);
+        all_to_all(&mut a, &ia, &oa, Backend::Dma).unwrap();
+        all_to_all(&mut b, &ib, &ob, Backend::Cu).unwrap();
         // DMA and CU backends are byte-identical across nodes.
         for g in 0..n {
             assert_eq!(a.mems[g].bytes(oa[g]), b.mems[g].bytes(ob[g]), "gpu {g}");
@@ -393,7 +443,7 @@ mod tests {
                 })
                 .collect();
             let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard_len)).collect();
-            all_gather(nd, &shards, &outs, Backend::Dma).time
+            all_gather(nd, &shards, &outs, Backend::Dma).unwrap().time
         };
         let t1 = run(&mut single);
         let t2 = run(&mut dual);
@@ -415,7 +465,7 @@ mod tests {
                     nd.alloc_init(g, &bytes)
                 })
                 .collect();
-            let run = all_reduce_f32(&mut nd, &bufs, backend);
+            let run = all_reduce_f32(&mut nd, &bufs, backend).unwrap();
             for g in 0..n {
                 let got: Vec<f32> = nd.mems[g]
                     .bytes(bufs[g])
@@ -429,6 +479,43 @@ mod tests {
             }
             assert!(run.time > 0.0);
         }
+    }
+
+    #[test]
+    fn chunked_dataplane_is_byte_identical_and_pays_launches() {
+        // Chunked DMA execution lands the same bytes as unchunked (any
+        // chunk count), while its modelled time gains per-chunk
+        // launch/sync cost.
+        let n = 8;
+        let shard = 100; // not divisible by 3 or 8
+        let mut rng = Rng::new(21);
+        let data: Vec<Vec<u8>> = (0..n).map(|_| random_bytes(&mut rng, shard)).collect();
+        let mk = |chunks: usize| {
+            let mut nd = node(n);
+            let shards: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &data[g])).collect();
+            let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard)).collect();
+            let run = all_gather_chunked(&mut nd, &shards, &outs, Backend::Dma, chunks).unwrap();
+            let bytes: Vec<Vec<u8>> = (0..n).map(|g| nd.mems[g].bytes(outs[g]).to_vec()).collect();
+            (run.time, bytes)
+        };
+        let (t1, b1) = mk(1);
+        for chunks in [2usize, 3, 8] {
+            let (tk, bk) = mk(chunks);
+            assert_eq!(b1, bk, "chunked ({chunks}) bytes diverged");
+            assert!(tk >= t1, "chunking cannot be free: {tk} vs {t1}");
+        }
+        // Same for all-to-all.
+        let chunk = 48;
+        let a2a_data: Vec<Vec<u8>> =
+            (0..n).map(|_| random_bytes(&mut rng, n * chunk)).collect();
+        let mk2 = |chunks: usize| {
+            let mut nd = node(n);
+            let ins: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &a2a_data[g])).collect();
+            let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * chunk)).collect();
+            all_to_all_chunked(&mut nd, &ins, &outs, Backend::Dma, chunks).unwrap();
+            (0..n).map(|g| nd.mems[g].bytes(outs[g]).to_vec()).collect::<Vec<_>>()
+        };
+        assert_eq!(mk2(1), mk2(4));
     }
 
     #[test]
@@ -450,8 +537,8 @@ mod tests {
             let (sb, ob): (Vec<_>, Vec<_>) = (0..n)
                 .map(|g| (b.alloc_init(g, &data[g]), b.alloc(g, n * shard)))
                 .unzip();
-            all_gather(&mut a, &sa, &oa, Backend::Dma);
-            all_gather(&mut b, &sb, &ob, Backend::Cu);
+            all_gather(&mut a, &sa, &oa, Backend::Dma).unwrap();
+            all_gather(&mut b, &sb, &ob, Backend::Cu).unwrap();
             for g in 0..n {
                 if a.mems[g].bytes(oa[g]) != b.mems[g].bytes(ob[g]) {
                     return Err(format!("mismatch on gpu {g}"));

@@ -1,8 +1,11 @@
-//! The C3 scheduler: strategies (§IV-C, §V, §VI) and the executor that
-//! produces concurrent timelines over the fluid simulator.
+//! The C3 scheduler: strategies (§IV-C, §V, §VI), the executor that
+//! produces concurrent timelines over the fluid simulator, and the
+//! fine-grain chunked pipeline (arXiv 2512.10236 / DMA-Latte).
 
 pub mod executor;
+pub mod pipeline;
 pub mod strategy;
 
 pub use executor::{Baselines, C3Executor, C3Run};
+pub use pipeline::chunk_sizes;
 pub use strategy::{Strategy, StrategyKind};

@@ -30,6 +30,20 @@ pub enum Strategy {
     /// `cus_removed` CUs away from *memory-bound* GEMMs (the Fig 5a
     /// cache-behaviour speedup also helps under ConCCL).
     ConcclRp { cus_removed: u32 },
+    /// Fine-grain chunked pipeline on the CU backend (arXiv 2512.10236):
+    /// the GEMM is launched as `chunks` tiled sub-kernels and the
+    /// CU collective as `chunks` chunk kernels; collective chunk `i` is
+    /// issued at GEMM chunk `i`'s completion (so it overlaps GEMM chunk
+    /// `i+1`). `chunks == 1` degenerates to [`Strategy::C3Sp`] exactly;
+    /// `chunks == 0` means "auto" — the executor sweeps the machine's
+    /// chunk candidates and keeps the best (the §V-B rp protocol,
+    /// applied to granularity).
+    C3Chunked { chunks: u32 },
+    /// Fine-grain chunked pipeline on the DMA backend: per-chunk
+    /// `CommandPacket` batches with per-packet launch latency, so small
+    /// chunks go latency-bound (DMA-Latte). `chunks == 1` degenerates to
+    /// [`Strategy::Conccl`] exactly; `chunks == 0` means "auto".
+    ConcclChunked { chunks: u32 },
 }
 
 impl Strategy {
@@ -43,12 +57,22 @@ impl Strategy {
             Strategy::C3SpRp { .. } => "c3_sp_rp",
             Strategy::Conccl => "conccl",
             Strategy::ConcclRp { .. } => "conccl_rp",
+            Strategy::C3Chunked { .. } => "c3_chunked",
+            Strategy::ConcclChunked { .. } => "conccl_chunked",
         }
     }
 
     /// Does this strategy run the collective on compute units?
     pub fn comm_on_cus(self) -> bool {
-        !matches!(self, Strategy::Conccl | Strategy::ConcclRp { .. })
+        !matches!(
+            self,
+            Strategy::Conccl | Strategy::ConcclRp { .. } | Strategy::ConcclChunked { .. }
+        )
+    }
+
+    /// Is this one of the fine-grain chunked pipeline strategies?
+    pub fn is_chunked(self) -> bool {
+        matches!(self, Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. })
     }
 
     /// The Fig 8 lineup (CU-collective strategies; the rp variants are
@@ -69,6 +93,10 @@ impl Strategy {
             "c3_sp_rp" | "sp_rp" => Ok(Strategy::C3SpRp { comm_cus }),
             "conccl" => Ok(Strategy::Conccl),
             "conccl_rp" => Ok(Strategy::ConcclRp { cus_removed: 8 }),
+            // Chunk count 0 = auto; the CLI overrides it from --chunks.
+            // Aliases match StrategyKind::parse.
+            "c3_chunked" | "chunked" => Ok(Strategy::C3Chunked { chunks: 0 }),
+            "conccl_chunked" => Ok(Strategy::ConcclChunked { chunks: 0 }),
             other => Err(Error::UnknownStrategy(other.to_string())),
         }
     }
@@ -96,6 +124,11 @@ pub enum StrategyKind {
     C3Best,
     Conccl,
     ConcclRp,
+    /// Chunked CU-backend pipeline; the sweep's chunk axis picks the
+    /// chunk count (auto entries sweep the candidates, rp-style).
+    C3Chunked,
+    /// Chunked DMA-backend (ConCCL) pipeline.
+    ConcclChunked,
 }
 
 impl StrategyKind {
@@ -110,7 +143,15 @@ impl StrategyKind {
             StrategyKind::C3Best => "c3_best",
             StrategyKind::Conccl => "conccl",
             StrategyKind::ConcclRp => "conccl_rp",
+            StrategyKind::C3Chunked => "c3_chunked",
+            StrategyKind::ConcclChunked => "conccl_chunked",
         }
+    }
+
+    /// Is this one of the fine-grain chunked pipeline columns (the ones
+    /// the sweep's chunk axis applies to)?
+    pub fn is_chunked(self) -> bool {
+        matches!(self, StrategyKind::C3Chunked | StrategyKind::ConcclChunked)
     }
 
     /// Parse a name; `Err` (never a panic) on anything unknown.
@@ -124,13 +165,16 @@ impl StrategyKind {
             "c3_best" | "best" => Ok(StrategyKind::C3Best),
             "conccl" => Ok(StrategyKind::Conccl),
             "conccl_rp" => Ok(StrategyKind::ConcclRp),
+            "c3_chunked" | "chunked" => Ok(StrategyKind::C3Chunked),
+            "conccl_chunked" => Ok(StrategyKind::ConcclChunked),
             other => Err(Error::UnknownStrategy(other.to_string())),
         }
     }
 
     /// Every concrete strategy (all figure columns except the derived
-    /// `c3_best`), in figure order. This is the full sweep lineup.
-    pub fn lineup() -> [StrategyKind; 7] {
+    /// `c3_best`, plus the chunked pipeline columns), in figure order.
+    /// This is the full sweep lineup.
+    pub fn lineup() -> [StrategyKind; 9] {
         [
             StrategyKind::Serial,
             StrategyKind::C3Base,
@@ -139,6 +183,8 @@ impl StrategyKind {
             StrategyKind::C3SpRp,
             StrategyKind::Conccl,
             StrategyKind::ConcclRp,
+            StrategyKind::C3Chunked,
+            StrategyKind::ConcclChunked,
         ]
     }
 
@@ -172,16 +218,28 @@ mod tests {
     fn cu_usage_classification() {
         assert!(Strategy::C3Base.comm_on_cus());
         assert!(Strategy::C3Sp.comm_on_cus());
+        assert!(Strategy::C3Chunked { chunks: 4 }.comm_on_cus());
         assert!(!Strategy::Conccl.comm_on_cus());
         assert!(!Strategy::ConcclRp { cus_removed: 8 }.comm_on_cus());
+        assert!(!Strategy::ConcclChunked { chunks: 4 }.comm_on_cus());
+        assert!(Strategy::ConcclChunked { chunks: 4 }.is_chunked());
+        assert!(!Strategy::Conccl.is_chunked());
     }
 
     #[test]
     fn strategy_parse_round_trips() {
-        for s in ["serial", "c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "conccl", "conccl_rp"] {
+        for s in [
+            "serial", "c3_base", "c3_sp", "c3_rp", "c3_sp_rp", "conccl", "conccl_rp",
+            "c3_chunked", "conccl_chunked",
+        ] {
             assert_eq!(Strategy::parse(s, 32).unwrap().name(), s);
         }
         assert!(Strategy::parse("warp", 32).is_err());
+        // Bare chunked parse defaults to auto chunk selection.
+        assert_eq!(
+            Strategy::parse("conccl_chunked", 32).unwrap(),
+            Strategy::ConcclChunked { chunks: 0 }
+        );
     }
 
     #[test]

@@ -219,14 +219,15 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
 }
 
 /// One measured matrix point extracted from a report:
-/// `machine/nodes/tag/collective/strategy` → median speedup.
+/// `machine/nodes/chunking/tag/collective/strategy` → median speedup
+/// (the chunking segment is present from schema v3 on).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchPoint {
     pub key: String,
     pub speedup_median: f64,
 }
 
-/// Flatten a sweep report (schema version 1 or 2) into bench points.
+/// Flatten a sweep report (schema version 1, 2 or 3) into bench points.
 pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
     let machines = report
         .get("machines")
@@ -235,7 +236,7 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
     let mut out = Vec::new();
     for m in machines {
         let label = m.get("label").and_then(Json::as_str).unwrap_or("?");
-        // v2 nests scenarios under topologies[]; v1 holds them directly.
+        // v2+ nests scenarios under topologies[]; v1 holds them directly.
         let topos: Vec<(u64, &Json)> = match m.get("topologies").and_then(Json::as_arr) {
             Some(ts) => ts
                 .iter()
@@ -244,23 +245,44 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
             None => vec![(1, m)],
         };
         for (nodes, t) in topos {
-            let scenarios = t
-                .get("scenarios")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| format!("machine '{label}' has no scenarios[]"))?;
-            for sc in scenarios {
-                let tag = sc.get("tag").and_then(Json::as_str).unwrap_or("?");
-                let coll = sc.get("collective").and_then(Json::as_str).unwrap_or("?");
-                let Some(Json::Obj(strategies)) = sc.get("strategies") else {
-                    continue;
+            // v3 nests scenarios under chunkings[]; v1/v2 documents get
+            // an empty chunk segment so their keys stay stable.
+            let chunkings: Vec<(String, &Json)> =
+                match t.get("chunkings").and_then(Json::as_arr) {
+                    Some(cs) => cs
+                        .iter()
+                        .map(|c| {
+                            let lab = match c.get("chunks") {
+                                Some(Json::Str(s)) => format!("/k={s}"),
+                                Some(Json::Num(n)) => format!("/k={}", *n as u64),
+                                _ => "/k=?".to_string(),
+                            };
+                            (lab, c)
+                        })
+                        .collect(),
+                    None => vec![(String::new(), t)],
                 };
-                for (name, v) in strategies {
-                    if let Some(sp) = v.get("speedup_median").and_then(Json::as_num) {
-                        if sp.is_finite() {
-                            out.push(BenchPoint {
-                                key: format!("{label}/{nodes}n/{tag}/{coll}/{name}"),
-                                speedup_median: sp,
-                            });
+            for (chunk_seg, c) in chunkings {
+                let scenarios = c
+                    .get("scenarios")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("machine '{label}' has no scenarios[]"))?;
+                for sc in scenarios {
+                    let tag = sc.get("tag").and_then(Json::as_str).unwrap_or("?");
+                    let coll = sc.get("collective").and_then(Json::as_str).unwrap_or("?");
+                    let Some(Json::Obj(strategies)) = sc.get("strategies") else {
+                        continue;
+                    };
+                    for (name, v) in strategies {
+                        if let Some(sp) = v.get("speedup_median").and_then(Json::as_num) {
+                            if sp.is_finite() {
+                                out.push(BenchPoint {
+                                    key: format!(
+                                        "{label}/{nodes}n{chunk_seg}/{tag}/{coll}/{name}"
+                                    ),
+                                    speedup_median: sp,
+                                });
+                            }
                         }
                     }
                 }
@@ -327,15 +349,37 @@ pub fn is_seeded(baseline: &Json) -> bool {
         .unwrap_or(false)
 }
 
+/// Rewrite a pre-v3 gate key (no chunking segment) to address the
+/// current report's `auto` chunking entry: the last three segments are
+/// always `tag/collective/strategy`, so `k=auto` slots in before them
+/// (robust to `/` inside machine labels).
+fn with_auto_chunk(key: &str) -> Option<String> {
+    let parts: Vec<&str> = key.rsplitn(4, '/').collect();
+    match parts[..] {
+        [strategy, coll, tag, rest] => Some(format!("{rest}/k=auto/{tag}/{coll}/{strategy}")),
+        _ => None,
+    }
+}
+
 /// Compare `current` against `baseline`: a point regresses when its
 /// median speedup drops more than `tolerance` (relative) below the
 /// baseline value. Improvements and new points never fail the gate.
+/// A v1/v2 baseline (keys without the `k=` chunking segment) gates
+/// against the current report's `auto` chunking entry, so baselines
+/// seeded before the chunk axis keep working.
 pub fn gate(baseline: &Json, current: &Json, tolerance: f64) -> Result<GateReport, String> {
     let base_points = extract_points(baseline)?;
     let cur_points = extract_points(current)?;
     let mut report = GateReport::default();
     for bp in &base_points {
-        match cur_points.iter().find(|c| c.key == bp.key) {
+        let hit = cur_points.iter().find(|c| c.key == bp.key).or_else(|| {
+            if bp.key.contains("/k=") {
+                return None;
+            }
+            let upgraded = with_auto_chunk(&bp.key)?;
+            cur_points.iter().find(|c| c.key == upgraded)
+        });
+        match hit {
             None => report.missing.push(bp.key.clone()),
             Some(cp) => {
                 report.compared += 1;
@@ -395,7 +439,9 @@ mod tests {
         let points = extract_points(&report).unwrap();
         // 1 machine × 2 node counts × 1 scenario × 2 strategies.
         assert_eq!(points.len(), 4);
-        assert!(points.iter().any(|p| p.key == "mi300x-8/1n/mb1_896M/all-gather/conccl"));
+        assert!(points
+            .iter()
+            .any(|p| p.key == "mi300x-8/1n/k=auto/mb1_896M/all-gather/conccl"));
         assert!(points.iter().any(|p| p.key.contains("/2n/")));
         for p in &points {
             assert!(p.speedup_median > 0.5, "{p:?}");
@@ -420,16 +466,17 @@ mod tests {
             }
             _ => unreachable!(),
         };
-        // Synthesize a baseline document holding the inflated numbers.
+        // Synthesize a v3 baseline document holding the inflated numbers.
         let mut doc = String::from(
-            "{\"version\":2,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[",
+            "{\"version\":3,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[",
         );
         for (ni, nodes) in [1u64, 2].iter().enumerate() {
             if ni > 0 {
                 doc.push(',');
             }
             doc.push_str(&format!(
-                "{{\"nodes\":{nodes},\"scenarios\":[{{\"tag\":\"mb1_896M\",\
+                "{{\"nodes\":{nodes},\"chunkings\":[{{\"chunks\":\"auto\",\
+                 \"scenarios\":[{{\"tag\":\"mb1_896M\",\
                  \"collective\":\"all-gather\",\"strategies\":{{"
             ));
             let mut first = true;
@@ -444,7 +491,7 @@ mod tests {
                     p.speedup_median
                 ));
             }
-            doc.push_str("}}]}");
+            doc.push_str("}}]}]}");
         }
         doc.push_str("]}]}");
         let baseline = parse_json(&doc).unwrap();
@@ -454,6 +501,34 @@ mod tests {
         // A 10% drop is outside 2% tolerance but inside 15%.
         let wide = gate(&baseline, &report, 0.15).unwrap();
         assert!(wide.passed());
+    }
+
+    #[test]
+    fn pre_chunk_axis_baseline_gates_against_auto_entry() {
+        // Cross-version compat: a baseline seeded under the v2 schema
+        // (keys without the k= segment) must gate against the current
+        // report's auto-chunking entry instead of failing as missing.
+        let report = small_report();
+        let v2_baseline = parse_json(
+            "{\"version\":2,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[\
+             {\"nodes\":1,\"scenarios\":[{\"tag\":\"mb1_896M\",\
+             \"collective\":\"all-gather\",\"strategies\":{\
+             \"conccl\":{\"speedup_median\":0.5},\
+             \"c3_base\":{\"speedup_median\":0.5}}}]}]}]}",
+        )
+        .unwrap();
+        let r = gate(&v2_baseline, &report, 0.02).unwrap();
+        assert!(r.passed(), "{}", r.render(0.02));
+        assert_eq!(r.compared, 2);
+        // ... and still regresses when the old numbers are higher.
+        let inflated = parse_json(
+            "{\"version\":2,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[\
+             {\"nodes\":1,\"scenarios\":[{\"tag\":\"mb1_896M\",\
+             \"collective\":\"all-gather\",\"strategies\":{\
+             \"conccl\":{\"speedup_median\":99.0}}}]}]}]}",
+        )
+        .unwrap();
+        assert!(!gate(&inflated, &report, 0.02).unwrap().passed());
     }
 
     #[test]
@@ -468,6 +543,43 @@ mod tests {
         let r = gate(&baseline, &report, 0.02).unwrap();
         assert!(!r.passed());
         assert_eq!(r.missing.len(), 1);
+    }
+
+    #[test]
+    fn committed_baseline_is_seeded_and_gates_the_ci_matrix_green() {
+        // The committed BENCH_baseline.json must (a) be a *seeded*
+        // baseline — `--strict` in the perf-gate job fails otherwise —
+        // and (b) pass the gate against a fresh run of the exact CI
+        // sweep matrix, so the workflow is green by construction until
+        // a real regression lands.
+        let text = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_baseline.json"));
+        let baseline = parse_json(text).unwrap();
+        assert!(is_seeded(&baseline), "committed baseline must be seeded");
+        let base_points = extract_points(&baseline).unwrap();
+        assert_eq!(base_points.len(), 144, "CI matrix coverage changed");
+
+        // The CI perf-gate sweep, exactly as .github/workflows/ci.yml
+        // runs it (jitter 0, seed 24301, --chunks auto).
+        let machines = vec![MachineVariant::base(MachineConfig::mi300x())];
+        let kinds = [CollectiveKind::AllGather, CollectiveKind::AllToAll];
+        let cfg = RunnerConfig {
+            jitter: 0.0,
+            seed: 24301,
+            ..RunnerConfig::default()
+        };
+        let plan = SweepPlan::from_selection(
+            machines,
+            &["mb1_896M", "cb1_896M", "mb2_3.25G", "cb5_13G"],
+            &kinds,
+            &["c3_base", "c3_sp", "conccl", "conccl_rp", "c3_chunked", "conccl_chunked"],
+            cfg,
+        )
+        .and_then(|p| p.with_node_counts(vec![1, 2, 4]))
+        .unwrap();
+        let report = parse_json(&execute(plan, 2).to_json()).unwrap();
+        let g = gate(&baseline, &report, 0.02).unwrap();
+        assert!(g.passed(), "{}", g.render(0.02));
+        assert_eq!(g.compared, 144);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::sched::{Baselines, C3Executor, C3Run, Strategy, StrategyKind};
 use crate::util::rng::Rng;
 use crate::workload::scenarios::ResolvedScenario;
 
-use super::plan::{MachineVariant, SweepJob, SweepPlan};
+use super::plan::{ChunkSel, MachineVariant, SweepJob, SweepPlan};
 
 /// The measured (or failed) result of one sweep job.
 #[derive(Debug, Clone)]
@@ -27,6 +27,10 @@ pub struct JobOutput {
     pub job: SweepJob,
     /// For the swept-rp strategy: the winning CU reservation.
     pub rp_cus: Option<u32>,
+    /// For the chunked pipeline strategies: the chunk count actually
+    /// executed (the swept-best one under an `Auto` axis entry, the
+    /// clamped fixed count otherwise).
+    pub chunks_used: Option<u32>,
     pub result: Result<Measured, Error>,
 }
 
@@ -129,7 +133,9 @@ fn run_job(
     let exec = &execs[job.machine_idx][job.node_idx];
     let sc = &plan.scenarios[job.scenario_idx];
     let b = baselines[job.machine_idx][job.node_idx][job.scenario_idx];
+    let chunk_sel = plan.chunk_counts[job.chunk_idx];
     let mut rp_cus = None;
+    let mut chunks_used = None;
     let run: Result<C3Run, Error> = match job.strategy {
         StrategyKind::Serial => exec.try_run_with_baselines(sc, Strategy::Serial, b),
         StrategyKind::C3Base => exec.try_run_with_baselines(sc, Strategy::C3Base, b),
@@ -150,11 +156,31 @@ fn run_job(
         StrategyKind::ConcclRp => {
             exec.try_run_with_baselines(sc, Strategy::ConcclRp { cus_removed: 8 }, b)
         }
+        StrategyKind::C3Chunked | StrategyKind::ConcclChunked => {
+            let dma = job.strategy == StrategyKind::ConcclChunked;
+            match chunk_sel {
+                ChunkSel::Auto => exec.try_run_chunk_sweep_with(sc, dma, b).map(|(run, k)| {
+                    chunks_used = Some(k);
+                    run
+                }),
+                ChunkSel::Fixed(k) => {
+                    let k_eff = exec.clamp_chunks(sc, k);
+                    chunks_used = Some(k_eff);
+                    let strat = if dma {
+                        Strategy::ConcclChunked { chunks: k_eff }
+                    } else {
+                        Strategy::C3Chunked { chunks: k_eff }
+                    };
+                    exec.try_run_with_baselines(sc, strat, b)
+                }
+            }
+        }
     };
     let mut rng = Rng::new(job.seed);
     JobOutput {
         job: *job,
         rp_cus,
+        chunks_used,
         result: run.map(|r| measure_run(r, &plan.cfg, &mut rng)),
     }
 }
@@ -170,6 +196,7 @@ impl SweepResults {
         &self,
         machine_idx: usize,
         node_idx: usize,
+        chunk_idx: usize,
         scenario_idx: usize,
         kind: StrategyKind,
     ) -> Option<&JobOutput> {
@@ -177,13 +204,14 @@ impl SweepResults {
         // out-of-range index cannot alias another matrix point.
         if machine_idx >= self.plan.machines.len()
             || node_idx >= self.plan.node_counts.len()
+            || chunk_idx >= self.plan.chunk_counts.len()
             || scenario_idx >= self.plan.scenarios.len()
         {
             return None;
         }
         let ki = self.plan.strategies.iter().position(|&k| k == kind)?;
         self.outputs
-            .get(self.plan.job_id(machine_idx, node_idx, scenario_idx, ki))
+            .get(self.plan.job_id(machine_idx, node_idx, chunk_idx, scenario_idx, ki))
     }
 
     /// Job errors, flattened for reporting.
@@ -195,17 +223,20 @@ impl SweepResults {
     }
 
     /// Assemble the legacy per-scenario outcome rows (the structure all
-    /// figure rendering consumes) for one (machine, node-count) point.
-    /// Requires the plan to contain the six measured strategy columns;
-    /// any failed constituent job propagates its error.
+    /// figure rendering consumes) for one (machine, node-count,
+    /// chunking) point. Requires the plan to contain the six measured
+    /// strategy columns; any failed constituent job propagates its
+    /// error.
     pub fn to_scenario_outcomes(
         &self,
         machine_idx: usize,
         node_idx: usize,
+        chunk_idx: usize,
     ) -> Result<Vec<ScenarioOutcome>, Error> {
         let pick = |si: usize, kind: StrategyKind| -> Result<Measured, Error> {
-            let out: &JobOutput =
-                self.output_at(machine_idx, node_idx, si, kind).ok_or_else(|| {
+            let out: &JobOutput = self
+                .output_at(machine_idx, node_idx, chunk_idx, si, kind)
+                .ok_or_else(|| {
                     Error::Config(format!(
                         "plan lacks strategy '{}' needed for scenario outcomes",
                         kind.name()
@@ -217,7 +248,7 @@ impl SweepResults {
         for (si, sc) in self.plan.scenarios.iter().enumerate() {
             let rp = pick(si, StrategyKind::C3Rp)?;
             let rp_cus = self
-                .output_at(machine_idx, node_idx, si, StrategyKind::C3Rp)
+                .output_at(machine_idx, node_idx, chunk_idx, si, StrategyKind::C3Rp)
                 .and_then(|o| o.rp_cus)
                 .unwrap_or(0);
             rows.push(ScenarioOutcome {
@@ -266,7 +297,7 @@ pub fn suite_outcomes(
         *cfg,
     );
     execute(plan, threads)
-        .to_scenario_outcomes(0, 0)
+        .to_scenario_outcomes(0, 0, 0)
         .unwrap_or_else(|e| panic!("{e}"))
 }
 
@@ -352,7 +383,7 @@ mod tests {
         assert_eq!(b2.t_gemm_iso, b1.t_gemm_iso);
         // conccl's edge over c3_base shrinks on the NIC-bound topology.
         let total = |ni: usize, k: StrategyKind| {
-            res.output_at(0, ni, 0, k)
+            res.output_at(0, ni, 0, 0, k)
                 .unwrap()
                 .result
                 .as_ref()
@@ -369,6 +400,41 @@ mod tests {
     }
 
     #[test]
+    fn chunk_axis_executes_auto_and_fixed_entries() {
+        let m = MachineConfig::mi300x();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            vec![
+                resolve(&TABLE2[13], CollectiveKind::AllGather), // mb2_26.5G (GC-equal)
+                resolve(&TABLE2[0], CollectiveKind::AllGather),  // mb1_896M (G-long)
+            ],
+            vec![StrategyKind::Conccl, StrategyKind::ConcclChunked, StrategyKind::C3Chunked],
+            RunnerConfig::default(),
+        )
+        .with_chunk_counts(vec![ChunkSel::Auto, ChunkSel::Fixed(4)])
+        .unwrap();
+        assert_eq!(plan.job_count(), 12);
+        let res = execute(plan, 2);
+        assert!(res.errors().is_empty(), "{:?}", res.errors());
+        let out = |ci: usize, si: usize, k: StrategyKind| res.output_at(0, 0, ci, si, k).unwrap();
+        // Auto entries record the swept chunk count; fixed entries echo
+        // the (clamped) requested count; unchunked strategies carry none.
+        assert!(out(0, 0, StrategyKind::ConcclChunked).chunks_used.unwrap() >= 2);
+        assert_eq!(out(1, 0, StrategyKind::ConcclChunked).chunks_used, Some(4));
+        assert_eq!(out(0, 0, StrategyKind::Conccl).chunks_used, None);
+        // Auto-chunked never loses to unchunked ConCCL (same matrix
+        // point), and wins strictly on the GC-equal scenario.
+        let total = |ci: usize, si: usize, k: StrategyKind| {
+            out(ci, si, k).result.as_ref().unwrap().run.total
+        };
+        assert!(total(0, 0, StrategyKind::ConcclChunked) < total(0, 0, StrategyKind::Conccl));
+        assert!(
+            total(0, 1, StrategyKind::ConcclChunked)
+                <= total(0, 1, StrategyKind::Conccl) + 1e-12
+        );
+    }
+
+    #[test]
     fn missing_strategy_column_is_config_error() {
         let m = MachineConfig::mi300x();
         let plan = SweepPlan::new(
@@ -378,7 +444,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let res = execute(plan, 1);
-        let err = res.to_scenario_outcomes(0, 0).unwrap_err();
+        let err = res.to_scenario_outcomes(0, 0, 0).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
         // ... but the job itself ran fine.
         assert!(res.outputs[0].result.is_ok());

@@ -53,11 +53,12 @@ impl SweepResults {
     /// Serialize the whole sweep. See module docs for the determinism
     /// contract; the schema is versioned for downstream tooling
     /// (version 2 added the per-machine `topologies` nesting for the
-    /// node-count axis).
+    /// node-count axis; version 3 nests `chunkings` under each topology
+    /// for the chunk-count axis and records per-strategy `chunks`).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":2,");
+        s.push_str("{\"version\":3,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -91,86 +92,100 @@ impl SweepResults {
                 if ni > 0 {
                     s.push(',');
                 }
-                let _ = write!(s, "{{\"nodes\":{nodes},\"scenarios\":[");
-                for (si, sc) in self.plan.scenarios.iter().enumerate() {
-                    if si > 0 {
+                let _ = write!(s, "{{\"nodes\":{nodes},\"chunkings\":[");
+                for (ci, &chunks) in self.plan.chunk_counts.iter().enumerate() {
+                    if ci > 0 {
                         s.push(',');
                     }
-                    let b = self.baselines[mi][ni][si];
-                    let _ = write!(
-                        s,
-                        "{{\"tag\":\"{}\",\"collective\":\"{}\",\"source\":\"{}\",\
-                         \"t_gemm_iso_s\":{},\"t_comm_iso_s\":{},\"serial_s\":{},\
-                         \"ideal_speedup\":{},\"strategies\":{{",
-                        escape(&sc.tag()),
-                        sc.comm.spec.kind.name(),
-                        sc.scenario.source.name(),
-                        num(b.t_gemm_iso),
-                        num(b.t_comm_iso),
-                        num(b.serial()),
-                        num(b.ideal())
-                    );
-                    for (ki, kind) in self.plan.strategies.iter().enumerate() {
-                        if ki > 0 {
+                    let chunk_json = match chunks {
+                        crate::sweep::plan::ChunkSel::Auto => "\"auto\"".to_string(),
+                        crate::sweep::plan::ChunkSel::Fixed(k) => k.to_string(),
+                    };
+                    let _ = write!(s, "{{\"chunks\":{chunk_json},\"scenarios\":[");
+                    for (si, sc) in self.plan.scenarios.iter().enumerate() {
+                        if si > 0 {
                             s.push(',');
                         }
-                        let _ = write!(s, "\"{}\":", kind.name());
-                        let out = &self.outputs[self.plan.job_id(mi, ni, si, ki)];
-                        match &out.result {
-                            Ok(m) => {
-                                let _ = write!(
-                                    s,
-                                    "{{\"total_s\":{},\"gemm_finish_s\":{},\"comm_finish_s\":{},\
-                                     \"median_s\":{},\"speedup\":{},\"speedup_median\":{},\
-                                     \"pct_ideal\":{},\"pct_ideal_median\":{},\"rp_cus\":{},\
-                                     \"seed\":\"{:#018x}\"}}",
-                                    num(m.run.total),
-                                    num(m.run.gemm_finish),
-                                    num(m.run.comm_finish),
-                                    num(m.stats.median),
-                                    num(m.run.speedup),
-                                    num(m.speedup_median),
-                                    num(m.run.pct_ideal),
-                                    num(m.pct_ideal_median),
-                                    opt_u32(out.rp_cus),
-                                    out.job.seed
-                                );
-                            }
-                            Err(e) => {
-                                let _ = write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
-                            }
-                        }
-                    }
-                    s.push_str("}}");
-                }
-                s.push(']');
-                // Per-topology headline, when the plan carries the full
-                // outcome lineup (mirrors the human-readable tables).
-                if let Ok(outcomes) = self.to_scenario_outcomes(mi, ni) {
-                    let h = headline(&outcomes);
-                    let _ = write!(
-                        s,
-                        ",\"headline\":{{\"n\":{},\"avg_ideal\":{},\"max_ideal\":{},\"per_strategy\":{{",
-                        h.n,
-                        num(h.avg_ideal),
-                        num(h.max_ideal)
-                    );
-                    for (i, (name, (sp, pct, max))) in h.per_strategy.iter().enumerate() {
-                        if i > 0 {
-                            s.push(',');
-                        }
+                        let b = self.baselines[mi][ni][si];
                         let _ = write!(
                             s,
-                            "\"{}\":{{\"avg_speedup\":{},\"avg_pct_ideal\":{},\"max_speedup\":{}}}",
-                            name,
-                            num(*sp),
-                            num(*pct),
-                            num(*max)
+                            "{{\"tag\":\"{}\",\"collective\":\"{}\",\"source\":\"{}\",\
+                             \"t_gemm_iso_s\":{},\"t_comm_iso_s\":{},\"serial_s\":{},\
+                             \"ideal_speedup\":{},\"strategies\":{{",
+                            escape(&sc.tag()),
+                            sc.comm.spec.kind.name(),
+                            sc.scenario.source.name(),
+                            num(b.t_gemm_iso),
+                            num(b.t_comm_iso),
+                            num(b.serial()),
+                            num(b.ideal())
                         );
+                        for (ki, kind) in self.plan.strategies.iter().enumerate() {
+                            if ki > 0 {
+                                s.push(',');
+                            }
+                            let _ = write!(s, "\"{}\":", kind.name());
+                            let out = &self.outputs[self.plan.job_id(mi, ni, ci, si, ki)];
+                            match &out.result {
+                                Ok(m) => {
+                                    let _ = write!(
+                                        s,
+                                        "{{\"total_s\":{},\"gemm_finish_s\":{},\"comm_finish_s\":{},\
+                                         \"median_s\":{},\"speedup\":{},\"speedup_median\":{},\
+                                         \"pct_ideal\":{},\"pct_ideal_median\":{},\"rp_cus\":{},\
+                                         \"chunks\":{},\"seed\":\"{:#018x}\"}}",
+                                        num(m.run.total),
+                                        num(m.run.gemm_finish),
+                                        num(m.run.comm_finish),
+                                        num(m.stats.median),
+                                        num(m.run.speedup),
+                                        num(m.speedup_median),
+                                        num(m.run.pct_ideal),
+                                        num(m.pct_ideal_median),
+                                        opt_u32(out.rp_cus),
+                                        opt_u32(out.chunks_used),
+                                        out.job.seed
+                                    );
+                                }
+                                Err(e) => {
+                                    let _ =
+                                        write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
+                                }
+                            }
+                        }
+                        s.push_str("}}");
                     }
-                    s.push_str("}}");
+                    s.push(']');
+                    // Per-(topology, chunking) headline, when the plan
+                    // carries the full outcome lineup (mirrors the
+                    // human-readable tables).
+                    if let Ok(outcomes) = self.to_scenario_outcomes(mi, ni, ci) {
+                        let h = headline(&outcomes);
+                        let _ = write!(
+                            s,
+                            ",\"headline\":{{\"n\":{},\"avg_ideal\":{},\"max_ideal\":{},\"per_strategy\":{{",
+                            h.n,
+                            num(h.avg_ideal),
+                            num(h.max_ideal)
+                        );
+                        for (i, (name, (sp, pct, max))) in h.per_strategy.iter().enumerate() {
+                            if i > 0 {
+                                s.push(',');
+                            }
+                            let _ = write!(
+                                s,
+                                "\"{}\":{{\"avg_speedup\":{},\"avg_pct_ideal\":{},\"max_speedup\":{}}}",
+                                name,
+                                num(*sp),
+                                num(*pct),
+                                num(*max)
+                            );
+                        }
+                        s.push_str("}}");
+                    }
+                    s.push('}');
                 }
-                s.push('}');
+                s.push_str("]}");
             }
             s.push_str("]}");
         }
@@ -208,11 +223,13 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":2,"));
-        assert!(j.contains("\"topologies\":[{\"nodes\":1,"));
+        assert!(j.starts_with("{\"version\":3,"));
+        assert!(j.contains("\"topologies\":[{\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\","));
         assert!(j.contains("\"tag\":\"mb1_896M\""));
         assert!(j.contains("\"conccl\":{\"total_s\":"));
         assert!(j.contains("\"collective\":\"all-gather\""));
+        // Unchunked strategies carry a null chunks field.
+        assert!(j.contains("\"chunks\":null"));
         // Partial lineup -> no headline object.
         assert!(!j.contains("\"headline\""));
         // Balanced braces (cheap well-formedness check; no strings in
@@ -251,6 +268,27 @@ mod tests {
         let j = execute(plan, 1).to_json();
         assert!(j.contains("{\"nodes\":1,"));
         assert!(j.contains("{\"nodes\":2,"));
+        let open = j.matches('{').count();
+        assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
+    }
+
+    #[test]
+    fn chunk_axis_appears_per_topology() {
+        use super::super::plan::ChunkSel;
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[13], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl, StrategyKind::ConcclChunked],
+            RunnerConfig::default(),
+        )
+        .with_chunk_counts(vec![ChunkSel::Auto, ChunkSel::Fixed(8)])
+        .unwrap();
+        let j = execute(plan, 1).to_json();
+        assert!(j.contains("{\"chunks\":\"auto\","));
+        assert!(j.contains("{\"chunks\":8,"));
+        // The chunked strategy records its executed chunk count.
+        assert!(j.contains("\"conccl_chunked\":{"));
+        assert!(j.contains("\"chunks\":8,\"seed\"") || j.contains("\"chunks\":4,\"seed\""));
         let open = j.matches('{').count();
         assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
     }

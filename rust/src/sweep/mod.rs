@@ -6,10 +6,12 @@
 //! matrix*:
 //!
 //! 1. **Plan** ([`plan`]) — expand {Table II scenarios × strategies ×
-//!    machine configs × node counts} into independent [`SweepJob`]s,
-//!    each with a deterministic identity-derived RNG seed. The
-//!    node-count axis prices every point on a hierarchical multi-node
-//!    topology (`fabric::Topology::MultiNode`).
+//!    machine configs × node counts × chunkings} into independent
+//!    [`SweepJob`]s, each with a deterministic identity-derived RNG
+//!    seed. The node-count axis prices every point on a hierarchical
+//!    multi-node topology (`fabric::Topology::MultiNode`); the
+//!    chunk-count axis re-prices the chunked pipeline strategies at
+//!    fixed or swept-best (`auto`) granularity.
 //! 2. **Execute** ([`engine`]) — run jobs concurrently on a worker pool
 //!    (shared-counter work stealing over `std::thread::scope`); each job
 //!    drives its own `sched::executor` + `sim::fluid` instance.
@@ -34,4 +36,4 @@ pub mod plan;
 
 pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
 pub use engine::{default_threads, execute, outcome_lineup, suite_outcomes, JobOutput, SweepResults};
-pub use plan::{job_seed, parse_variants, MachineVariant, SweepJob, SweepPlan};
+pub use plan::{job_seed, parse_variants, ChunkSel, MachineVariant, SweepJob, SweepPlan};

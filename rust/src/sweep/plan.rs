@@ -80,6 +80,43 @@ pub fn parse_variants(base: &MachineConfig, spec: &str) -> Result<Vec<MachineVar
     Ok(out)
 }
 
+/// One entry of the sweep's chunk-count axis: a fixed chunk count for
+/// the chunked pipeline strategies, or `Auto` — sweep the machine's
+/// candidates per scenario and keep the best (the §V-B rp protocol
+/// applied to granularity). Non-chunked strategies ignore the axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkSel {
+    Auto,
+    Fixed(u32),
+}
+
+impl ChunkSel {
+    /// Axis label used in job seeds, JSON and gate keys.
+    pub fn label(self) -> String {
+        match self {
+            ChunkSel::Auto => "auto".to_string(),
+            ChunkSel::Fixed(k) => k.to_string(),
+        }
+    }
+
+    /// Parse one `--chunks` axis entry (`auto` or a positive integer).
+    pub fn parse(s: &str) -> Result<ChunkSel, Error> {
+        match s {
+            "auto" => Ok(ChunkSel::Auto),
+            other => other
+                .parse::<u32>()
+                .ok()
+                .filter(|&k| k >= 1)
+                .map(ChunkSel::Fixed)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "chunk axis entry '{other}': expected 'auto' or a positive integer"
+                    ))
+                }),
+        }
+    }
+}
+
 /// One independent simulation job: a point in the sweep matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SweepJob {
@@ -89,6 +126,8 @@ pub struct SweepJob {
     pub machine_idx: usize,
     /// Index into [`SweepPlan::node_counts`].
     pub node_idx: usize,
+    /// Index into [`SweepPlan::chunk_counts`].
+    pub chunk_idx: usize,
     /// Index into [`SweepPlan::scenarios`].
     pub scenario_idx: usize,
     pub strategy: StrategyKind,
@@ -105,13 +144,16 @@ pub struct SweepPlan {
     /// >1 = the hierarchical leader/NIC topology built from each
     /// machine's `nic_bw`/`nic_latency_s`).
     pub node_counts: Vec<usize>,
+    /// Chunk-count axis for the chunked pipeline strategies (default
+    /// one `Auto` entry: the per-scenario swept-best chunk count).
+    pub chunk_counts: Vec<ChunkSel>,
     pub scenarios: Vec<ResolvedScenario>,
     pub strategies: Vec<StrategyKind>,
     pub cfg: RunnerConfig,
 }
 
 impl SweepPlan {
-    /// Plan over explicit axes (single-node topology).
+    /// Plan over explicit axes (single-node topology, auto chunking).
     pub fn new(
         machines: Vec<MachineVariant>,
         scenarios: Vec<ResolvedScenario>,
@@ -121,6 +163,7 @@ impl SweepPlan {
         SweepPlan {
             machines,
             node_counts: vec![1],
+            chunk_counts: vec![ChunkSel::Auto],
             scenarios,
             strategies,
             cfg,
@@ -143,6 +186,32 @@ impl SweepPlan {
             }
         }
         self.node_counts = node_counts;
+        Ok(self)
+    }
+
+    /// Replace the chunk-count axis. Rejects empty lists and duplicates
+    /// (duplicate axis entries would alias job ids and RNG seeds);
+    /// `ChunkSel::parse` already rejects zero counts.
+    ///
+    /// Like the node-count axis, the chunk axis multiplies the *whole*
+    /// matrix: non-chunked strategies are re-measured once per entry
+    /// (with per-entry seeds, so under jitter their medians differ
+    /// slightly across entries). That keeps job ids dense and every
+    /// chunking's table self-contained; restrict `--strategies` to the
+    /// chunked columns when sweeping many fixed chunk counts.
+    pub fn with_chunk_counts(mut self, chunk_counts: Vec<ChunkSel>) -> Result<SweepPlan, Error> {
+        if chunk_counts.is_empty() {
+            return Err(Error::Config("chunk axis cannot be empty".into()));
+        }
+        for (i, &c) in chunk_counts.iter().enumerate() {
+            if c == ChunkSel::Fixed(0) {
+                return Err(Error::Config("chunk count must be >= 1".into()));
+            }
+            if chunk_counts[..i].contains(&c) {
+                return Err(Error::Config(format!("duplicate chunk axis entry {}", c.label())));
+            }
+        }
+        self.chunk_counts = chunk_counts;
         Ok(self)
     }
 
@@ -215,7 +284,11 @@ impl SweepPlan {
 
     /// Number of jobs this plan expands to.
     pub fn job_count(&self) -> usize {
-        self.machines.len() * self.node_counts.len() * self.scenarios.len() * self.strategies.len()
+        self.machines.len()
+            * self.node_counts.len()
+            * self.chunk_counts.len()
+            * self.scenarios.len()
+            * self.strategies.len()
     }
 
     /// Dense job id of one matrix point.
@@ -223,38 +296,47 @@ impl SweepPlan {
         &self,
         machine_idx: usize,
         node_idx: usize,
+        chunk_idx: usize,
         scenario_idx: usize,
         strategy_idx: usize,
     ) -> usize {
-        ((machine_idx * self.node_counts.len() + node_idx) * self.scenarios.len() + scenario_idx)
+        (((machine_idx * self.node_counts.len() + node_idx) * self.chunk_counts.len()
+            + chunk_idx)
+            * self.scenarios.len()
+            + scenario_idx)
             * self.strategies.len()
             + strategy_idx
     }
 
     /// Expand the matrix into jobs, ids dense in
-    /// machine → node-count → scenario → strategy order.
+    /// machine → node-count → chunking → scenario → strategy order.
     pub fn jobs(&self) -> Vec<SweepJob> {
         let mut out = Vec::with_capacity(self.job_count());
         for (mi, mv) in self.machines.iter().enumerate() {
             for (ni, &nodes) in self.node_counts.iter().enumerate() {
                 let nodes_label = format!("{nodes}node");
-                for (si, sc) in self.scenarios.iter().enumerate() {
-                    for (ki, &strategy) in self.strategies.iter().enumerate() {
-                        out.push(SweepJob {
-                            id: self.job_id(mi, ni, si, ki),
-                            machine_idx: mi,
-                            node_idx: ni,
-                            scenario_idx: si,
-                            strategy,
-                            seed: job_seed(
-                                self.cfg.seed,
-                                &mv.label,
-                                &nodes_label,
-                                &sc.tag(),
-                                sc.comm.spec.kind.name(),
-                                strategy.name(),
-                            ),
-                        });
+                for (ci, &chunks) in self.chunk_counts.iter().enumerate() {
+                    let chunks_label = format!("{}chunk", chunks.label());
+                    for (si, sc) in self.scenarios.iter().enumerate() {
+                        for (ki, &strategy) in self.strategies.iter().enumerate() {
+                            out.push(SweepJob {
+                                id: self.job_id(mi, ni, ci, si, ki),
+                                machine_idx: mi,
+                                node_idx: ni,
+                                chunk_idx: ci,
+                                scenario_idx: si,
+                                strategy,
+                                seed: job_seed(
+                                    self.cfg.seed,
+                                    &mv.label,
+                                    &nodes_label,
+                                    &chunks_label,
+                                    &sc.tag(),
+                                    sc.comm.spec.kind.name(),
+                                    strategy.name(),
+                                ),
+                            });
+                        }
                     }
                 }
             }
@@ -281,12 +363,13 @@ pub fn job_seed(
     base: u64,
     machine: &str,
     nodes: &str,
+    chunks: &str,
     tag: &str,
     collective: &str,
     strategy: &str,
 ) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for field in [machine, nodes, tag, collective, strategy] {
+    for field in [machine, nodes, chunks, tag, collective, strategy] {
         for b in field.bytes() {
             h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
         }
@@ -307,10 +390,11 @@ mod tests {
     fn table2_plan_covers_full_matrix() {
         let p = SweepPlan::table2(MachineConfig::mi300x(), cfg());
         assert_eq!(p.scenarios.len(), 30);
-        assert_eq!(p.strategies.len(), 7);
-        assert_eq!(p.job_count(), 210);
+        assert_eq!(p.strategies.len(), 9);
+        assert_eq!(p.chunk_counts, vec![ChunkSel::Auto]);
+        assert_eq!(p.job_count(), 270);
         let jobs = p.jobs();
-        assert_eq!(jobs.len(), 210);
+        assert_eq!(jobs.len(), 270);
         // Dense, ordered ids.
         for (i, j) in jobs.iter().enumerate() {
             assert_eq!(j.id, i);
@@ -318,13 +402,52 @@ mod tests {
     }
 
     #[test]
+    fn chunk_axis_multiplies_matrix_and_validates() {
+        let p = SweepPlan::table2(MachineConfig::mi300x(), cfg())
+            .with_chunk_counts(vec![ChunkSel::Auto, ChunkSel::Fixed(4), ChunkSel::Fixed(8)])
+            .unwrap();
+        assert_eq!(p.job_count(), 810);
+        let jobs = p.jobs();
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(j.chunk_idx < 3);
+        }
+        // Same point at different chunkings gets distinct seeds.
+        let a = jobs.iter().find(|j| j.chunk_idx == 0).unwrap();
+        let b = jobs
+            .iter()
+            .find(|j| {
+                j.chunk_idx == 1 && j.scenario_idx == a.scenario_idx && j.strategy == a.strategy
+            })
+            .unwrap();
+        assert_ne!(a.seed, b.seed);
+        // Bad axes are typed errors.
+        let base = SweepPlan::table2(MachineConfig::mi300x(), cfg());
+        assert!(base.clone().with_chunk_counts(vec![]).is_err());
+        assert!(base
+            .clone()
+            .with_chunk_counts(vec![ChunkSel::Fixed(0)])
+            .is_err());
+        assert!(base
+            .with_chunk_counts(vec![ChunkSel::Fixed(4), ChunkSel::Fixed(4)])
+            .is_err());
+        // Entry parsing.
+        assert_eq!(ChunkSel::parse("auto").unwrap(), ChunkSel::Auto);
+        assert_eq!(ChunkSel::parse("8").unwrap(), ChunkSel::Fixed(8));
+        assert!(ChunkSel::parse("0").is_err());
+        assert!(ChunkSel::parse("many").is_err());
+        assert_eq!(ChunkSel::Fixed(4).label(), "4");
+        assert_eq!(ChunkSel::Auto.label(), "auto");
+    }
+
+    #[test]
     fn node_axis_multiplies_matrix_and_validates() {
         let p = SweepPlan::table2(MachineConfig::mi300x(), cfg())
             .with_node_counts(vec![1, 2, 4])
             .unwrap();
-        assert_eq!(p.job_count(), 630);
+        assert_eq!(p.job_count(), 810);
         let jobs = p.jobs();
-        assert_eq!(jobs.len(), 630);
+        assert_eq!(jobs.len(), 810);
         for (i, j) in jobs.iter().enumerate() {
             assert_eq!(j.id, i);
             assert!(j.node_idx < 3);
@@ -351,11 +474,11 @@ mod tests {
         let jobs = p.jobs();
         // Same identity -> same seed on re-expansion.
         assert_eq!(jobs[17].seed, p.jobs()[17].seed);
-        // Distinct identities -> distinct seeds (no collisions in 210).
+        // Distinct identities -> distinct seeds (no collisions in 270).
         let mut seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
         seeds.sort_unstable();
         seeds.dedup();
-        assert_eq!(seeds.len(), 210);
+        assert_eq!(seeds.len(), 270);
         // Base seed participates.
         let mut cfg2 = cfg();
         cfg2.seed ^= 1;

@@ -23,6 +23,11 @@ pub struct Bencher {
     results: Vec<(String, Summary)>,
     warmup_iters: usize,
     measure_iters: usize,
+    /// Smoke mode (CI bit-rot guard): clamp every bench to 0 warmup /
+    /// 1 measured iteration regardless of later `iters()` calls, so
+    /// all bench binaries execute end-to-end in seconds. Enabled by a
+    /// `--smoke` arg or the `CONCCL_BENCH_SMOKE` env var.
+    smoke: bool,
 }
 
 impl Default for Bencher {
@@ -33,10 +38,17 @@ impl Default for Bencher {
 
 impl Bencher {
     /// Build from `std::env::args()`: skips the flags cargo passes
-    /// (`--bench`), treats the first free arg as a substring filter.
+    /// (`--bench`), honors `--smoke` / `CONCCL_BENCH_SMOKE`, treats the
+    /// first free arg as a substring filter.
     pub fn from_args() -> Self {
         let mut filter = None;
+        let mut smoke =
+            std::env::var_os("CONCCL_BENCH_SMOKE").is_some_and(|v| !v.is_empty() && v != "0");
         for a in std::env::args().skip(1) {
+            if a == "--smoke" {
+                smoke = true;
+                continue;
+            }
             if a == "--bench" || a.starts_with("--") {
                 continue;
             }
@@ -48,14 +60,30 @@ impl Bencher {
             results: Vec::new(),
             warmup_iters: 3,
             measure_iters: 10,
+            smoke,
         }
     }
 
     /// Override iteration counts (paper protocol: 6 warmup / 9 measured).
+    /// Smoke mode wins: the clamp survives any `iters()` call.
     pub fn iters(mut self, warmup: usize, measure: usize) -> Self {
         self.warmup_iters = warmup;
         self.measure_iters = measure;
         self
+    }
+
+    /// Is smoke mode active?
+    pub fn smoke(&self) -> bool {
+        self.smoke
+    }
+
+    /// Effective (warmup, measure) iteration counts.
+    fn effective_iters(&self) -> (usize, usize) {
+        if self.smoke {
+            (0, 1)
+        } else {
+            (self.warmup_iters, self.measure_iters)
+        }
     }
 
     /// Should this named bench run under the current filter?
@@ -80,11 +108,12 @@ impl Bencher {
         if !self.enabled(name) {
             return None;
         }
-        for _ in 0..self.warmup_iters {
+        let (warmup, measure) = self.effective_iters();
+        for _ in 0..warmup {
             black_box(f());
         }
-        let mut samples = Vec::with_capacity(self.measure_iters);
-        for _ in 0..self.measure_iters {
+        let mut samples = Vec::with_capacity(measure);
+        for _ in 0..measure {
             let t0 = Instant::now();
             black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
@@ -137,6 +166,7 @@ mod tests {
             results: Vec::new(),
             warmup_iters: 1,
             measure_iters: 3,
+            smoke: false,
         }
     }
 
@@ -168,5 +198,22 @@ mod tests {
         let mut calls = 0;
         assert!(b.bench("other", || calls += 1).is_none());
         assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn smoke_mode_clamps_iterations_even_after_iters() {
+        let mut b = Bencher {
+            filter: None,
+            results: Vec::new(),
+            warmup_iters: 1,
+            measure_iters: 3,
+            smoke: true,
+        }
+        .iters(6, 9); // the paper protocol must NOT undo the clamp
+        assert!(b.smoke());
+        let mut calls = 0;
+        let s = b.bench("fast", || calls += 1).unwrap();
+        assert_eq!(calls, 1, "smoke = 0 warmup + 1 measured");
+        assert_eq!(s.n, 1);
     }
 }

@@ -72,6 +72,17 @@ impl ResolvedScenario {
             self.comm.time_isolated_full(m),
         )
     }
+
+    /// Largest chunk count this scenario supports for the chunked C3
+    /// pipeline: one chunk per GEMM macro-tile row at most, one byte
+    /// per collective chunk at least. The single clamp the executor,
+    /// the pipeline simulator and the chunk tuner all share.
+    pub fn chunk_cap(&self, m: &MachineConfig) -> u32 {
+        self.gemm
+            .max_m_chunks(m)
+            .min(self.comm.spec.size_bytes.min(u32::MAX as u64) as u32)
+            .max(1)
+    }
 }
 
 /// Resolve one Table II row against a collective kind, surfacing an

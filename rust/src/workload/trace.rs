@@ -178,6 +178,28 @@ mod tests {
     }
 
     #[test]
+    fn replay_supports_chunked_pipeline_end_to_end() {
+        // The chunk axis reaches the FSDP e2e path: replaying the trace
+        // under the auto-chunked ConCCL pipeline is never worse than
+        // whole-kernel ConCCL (the swept chunk count includes k = 1).
+        let m = MachineConfig::mi300x();
+        let t = fsdp_forward_trace(&LlamaConfig::llama70b(), 3);
+        let conccl = replay(&m, &t, Strategy::Conccl);
+        let chunked = replay(&m, &t, Strategy::ConcclChunked { chunks: 0 });
+        assert_eq!(chunked.runs.len(), conccl.runs.len());
+        assert!(
+            chunked.total <= conccl.total + 1e-12,
+            "chunked {:.4}ms vs conccl {:.4}ms",
+            chunked.total * 1e3,
+            conccl.total * 1e3
+        );
+        assert!(chunked.speedup() >= 1.0);
+        // A pinned chunk count also replays (and stays bounded).
+        let fixed = replay(&m, &t, Strategy::ConcclChunked { chunks: 4 });
+        assert!(fixed.speedup() > 0.9);
+    }
+
+    #[test]
     fn replay_405b_uses_405b_kernels() {
         let m = MachineConfig::mi300x();
         let t = fsdp_forward_trace(&LlamaConfig::llama405b(), 2);

@@ -106,10 +106,11 @@ fn fig9_crossover_region() {
     use conccl::config::workload::CollectiveSpec;
     let m = MachineConfig::mi300x();
     let s = |mb: u64| {
-        DmaCollective::new(CollectiveSpec::new(
+        DmaCollective::try_new(CollectiveSpec::new(
             CollectiveKind::AllGather,
             mb * 1024 * 1024,
         ))
+        .unwrap()
         .speedup_vs_cu(&m)
     };
     assert!(s(1) < 0.5);

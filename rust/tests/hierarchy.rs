@@ -4,12 +4,15 @@
 
 use conccl::conccl::plan::{
     a2a_stage_bytes, allgather_hier, alltoall_hier, allgather_plan, check_conservation,
+    chunk_phased,
 };
 use conccl::config::MachineConfig;
 use conccl::fabric::Topology;
 use conccl::gpu::memory::BufferId;
 use conccl::gpu::sdma::EnginePolicy;
-use conccl::node::dataplane::{all_gather, all_to_all, Backend};
+use conccl::node::dataplane::{
+    all_gather, all_gather_chunked, all_to_all, all_to_all_chunked, Backend,
+};
 use conccl::node::Node;
 use conccl::util::prop::forall;
 use conccl::util::rng::Rng;
@@ -109,8 +112,8 @@ fn prop_dma_and_cu_dataplanes_agree_on_any_topology() {
         let (sb, ob): (Vec<_>, Vec<_>) = (0..n)
             .map(|g| (b.alloc_init(g, &data[g]), b.alloc(g, n * shard)))
             .unzip();
-        all_gather(&mut a, &sa, &oa, Backend::Dma);
-        all_gather(&mut b, &sb, &ob, Backend::Cu);
+        all_gather(&mut a, &sa, &oa, Backend::Dma).unwrap();
+        all_gather(&mut b, &sb, &ob, Backend::Cu).unwrap();
         for g in 0..n {
             if a.mems[g].bytes(oa[g]) != b.mems[g].bytes(ob[g]) {
                 return Err(format!("allgather mismatch: {nodes}x{p} gpu {g}"));
@@ -130,8 +133,8 @@ fn prop_dma_and_cu_dataplanes_agree_on_any_topology() {
         let (ib, ob): (Vec<_>, Vec<_>) = (0..n)
             .map(|g| (b.alloc_init(g, &data[g]), b.alloc(g, n * chunk)))
             .unzip();
-        all_to_all(&mut a, &ia, &oa, Backend::Dma);
-        all_to_all(&mut b, &ib, &ob, Backend::Cu);
+        all_to_all(&mut a, &ia, &oa, Backend::Dma).unwrap();
+        all_to_all(&mut b, &ib, &ob, Backend::Cu).unwrap();
         for g in 0..n {
             if a.mems[g].bytes(oa[g]) != b.mems[g].bytes(ob[g]) {
                 return Err(format!("alltoall mismatch: {nodes}x{p} gpu {g}"));
@@ -139,6 +142,68 @@ fn prop_dma_and_cu_dataplanes_agree_on_any_topology() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn chunked_plans_stay_byte_identical_to_unchunked_on_every_topology() {
+    // Acceptance criterion for the chunked pipeline's data plane: on
+    // 1/2/4-node topologies, the chunked DMA execution (per-chunk
+    // CommandPacket batches) lands byte-identical outputs to both the
+    // unchunked DMA plan and the CU backend, for both collectives —
+    // and every chunked plan passes the conservation check.
+    for (nodes, p) in [(1usize, 8usize), (2, 4), (4, 4), (4, 2)] {
+        let t = topology(nodes, p);
+        let n = t.num_gpus();
+        let shard = 56; // awkward size: ragged chunk slices
+        let mut rng = Rng::new(0xC0DE + nodes as u64);
+        let data: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..shard).map(|_| rng.u64_below(256) as u8).collect())
+            .collect();
+        let run_ag = |chunks: usize| -> Vec<Vec<u8>> {
+            let mut nd = Node::with_topology(machine(p), t);
+            let shards: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &data[g])).collect();
+            let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard)).collect();
+            all_gather_chunked(&mut nd, &shards, &outs, Backend::Dma, chunks)
+                .unwrap_or_else(|e| panic!("{nodes}x{p} k={chunks}: {e}"));
+            (0..n).map(|g| nd.mems[g].bytes(outs[g]).to_vec()).collect()
+        };
+        let unchunked = run_ag(1);
+        // CU reference.
+        let mut cu = Node::with_topology(machine(p), t);
+        let shards: Vec<_> = (0..n).map(|g| cu.alloc_init(g, &data[g])).collect();
+        let outs: Vec<_> = (0..n).map(|g| cu.alloc(g, n * shard)).collect();
+        all_gather(&mut cu, &shards, &outs, Backend::Cu).unwrap();
+        let cu_bytes: Vec<Vec<u8>> =
+            (0..n).map(|g| cu.mems[g].bytes(outs[g]).to_vec()).collect();
+        assert_eq!(unchunked, cu_bytes, "{nodes}x{p}: DMA != CU");
+        for chunks in [2usize, 4, 16] {
+            assert_eq!(run_ag(chunks), unchunked, "{nodes}x{p} k={chunks}");
+            // Conservation holds on the chunked plan itself.
+            let ids: Vec<BufferId> = (0..n as u64).map(BufferId).collect();
+            let outs_ids: Vec<BufferId> = (0..n as u64).map(|i| BufferId(100 + i)).collect();
+            let plan = chunk_phased(&allgather_hier(&t, &ids, &outs_ids, shard), chunks);
+            check_conservation(&plan, &outs_ids, n * shard)
+                .unwrap_or_else(|e| panic!("{nodes}x{p} k={chunks}: {e}"));
+        }
+
+        // All-to-all, chunked vs unchunked.
+        let chunk = 40;
+        let a2a_data: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..n * chunk).map(|_| rng.u64_below(256) as u8).collect())
+            .collect();
+        let run_a2a = |chunks: usize| -> Vec<Vec<u8>> {
+            let mut nd = Node::with_topology(machine(p), t);
+            let ins: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &a2a_data[g])).collect();
+            let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * chunk)).collect();
+            all_to_all_chunked(&mut nd, &ins, &outs, Backend::Dma, chunks)
+                .unwrap_or_else(|e| panic!("{nodes}x{p} a2a k={chunks}: {e}"));
+            (0..n).map(|g| nd.mems[g].bytes(outs[g]).to_vec()).collect()
+        };
+        let base = run_a2a(1);
+        for chunks in [3usize, 8] {
+            assert_eq!(run_a2a(chunks), base, "{nodes}x{p} a2a k={chunks}");
+        }
+    }
 }
 
 #[test]

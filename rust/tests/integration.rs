@@ -26,14 +26,14 @@ fn dma_collective_chain_preserves_data() {
         .collect();
     let shards: Vec<_> = (0..n).map(|g| node.alloc_init(g, &data[g])).collect();
     let outs: Vec<_> = (0..n).map(|g| node.alloc(g, n * shard)).collect();
-    all_gather(&mut node, &shards, &outs, Backend::Dma);
+    all_gather(&mut node, &shards, &outs, Backend::Dma).unwrap();
     let gathered = node.mems[0].bytes(outs[0]).to_vec();
     assert_eq!(gathered, data.concat());
 
     // All-to-all the gathered buffers (each GPU holds identical data, so
     // the transpose result is predictable: dst g gets src i's chunk g).
     let a2a_out: Vec<_> = (0..n).map(|g| node.alloc(g, n * shard)).collect();
-    all_to_all(&mut node, &outs, &a2a_out, Backend::Dma);
+    all_to_all(&mut node, &outs, &a2a_out, Backend::Dma).unwrap();
     for g in 0..n {
         for src in 0..n {
             assert_eq!(
@@ -53,7 +53,7 @@ fn dma_collective_chain_preserves_data() {
             node.alloc_init(g, &v)
         })
         .collect();
-    all_reduce_f32(&mut node, &vals, Backend::Dma);
+    all_reduce_f32(&mut node, &vals, Backend::Dma).unwrap();
     let first: Vec<u8> = node.mems[0].bytes(vals[0]).to_vec();
     for g in 1..n {
         assert_eq!(node.mems[g].bytes(vals[g]), &first[..]);
@@ -70,10 +70,11 @@ fn executor_and_dataplane_agree_on_conccl_cost_scale() {
     let row = TABLE2.iter().find(|r| r.size == "896M").unwrap();
     let sc = resolve(row, CollectiveKind::AllGather);
     let r = exec.run(&sc, Strategy::Conccl);
-    let dma = conccl::conccl::DmaCollective::new(CollectiveSpec::new(
+    let dma = conccl::conccl::DmaCollective::try_new(CollectiveSpec::new(
         CollectiveKind::AllGather,
         sc.comm.spec.size_bytes,
-    ));
+    ))
+    .unwrap();
     let iso = dma.time_isolated(&m);
     // Under concurrency the collective can only be >= isolated, and the
     // mem-interference cap bounds the stretch.
@@ -113,7 +114,7 @@ fn runtime_composes_with_dataplane_weights() {
         .map(|g| node.alloc_init(g, &bytes[g * shard..(g + 1) * shard]))
         .collect();
     let outs: Vec<_> = (0..n).map(|g| node.alloc(g, bytes.len())).collect();
-    all_gather(&mut node, &shards, &outs, Backend::Dma);
+    all_gather(&mut node, &shards, &outs, Backend::Dma).unwrap();
     let gathered: Vec<f32> = node.mems[3]
         .bytes(outs[3])
         .chunks_exact(4)

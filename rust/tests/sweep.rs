@@ -8,7 +8,7 @@ use conccl::config::MachineConfig;
 use conccl::coordinator::{headline, run_suite, RunnerConfig};
 use conccl::error::Error;
 use conccl::sched::StrategyKind;
-use conccl::sweep::{execute, parse_variants, MachineVariant, SweepPlan};
+use conccl::sweep::{execute, parse_variants, ChunkSel, MachineVariant, SweepPlan};
 use conccl::workload::scenarios::{resolve_tag, suite, suite_for};
 
 fn jittered_cfg() -> RunnerConfig {
@@ -55,8 +55,8 @@ fn parallel_and_sequential_aggregates_match() {
     let seq = execute(small_plan(jittered_cfg()), 1);
     let par = execute(small_plan(jittered_cfg()), 4);
     let (ho_s, ho_p) = (
-        headline(&seq.to_scenario_outcomes(0, 0).unwrap()),
-        headline(&par.to_scenario_outcomes(0, 0).unwrap()),
+        headline(&seq.to_scenario_outcomes(0, 0, 0).unwrap()),
+        headline(&par.to_scenario_outcomes(0, 0, 0).unwrap()),
     );
     assert_eq!(ho_s.n, ho_p.n);
     for kind in StrategyKind::reported() {
@@ -115,7 +115,7 @@ fn machine_variant_axis_sweeps_distinct_machines() {
     assert!(res.errors().is_empty());
     // Halved link bandwidth must slow the serial baseline (comm term).
     let serial_base = res
-        .output_at(0, 0, 0, StrategyKind::Serial)
+        .output_at(0, 0, 0, 0, StrategyKind::Serial)
         .unwrap()
         .result
         .as_ref()
@@ -123,7 +123,7 @@ fn machine_variant_axis_sweeps_distinct_machines() {
         .run
         .serial;
     let serial_slow = res
-        .output_at(1, 0, 0, StrategyKind::Serial)
+        .output_at(1, 0, 0, 0, StrategyKind::Serial)
         .unwrap()
         .result
         .as_ref()
@@ -181,7 +181,7 @@ fn multi_node_rows_show_nic_bottleneck() {
     let res = execute(plan, 2);
     assert!(res.errors().is_empty());
     let total = |mi: usize, ni: usize, k: StrategyKind| {
-        res.output_at(mi, ni, 0, k)
+        res.output_at(mi, ni, 0, 0, k)
             .unwrap()
             .result
             .as_ref()
@@ -200,6 +200,78 @@ fn multi_node_rows_show_nic_bottleneck() {
         edge(1),
         edge(0)
     );
+}
+
+#[test]
+fn chunk_axis_json_is_deterministic_across_thread_counts() {
+    // Acceptance criterion: `conccl sweep --chunks auto` (here: the
+    // library path it drives) produces byte-identical JSON regardless
+    // of worker count, with the chunked strategies and both chunk-axis
+    // entry kinds present.
+    let plan = |cfg| {
+        SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![
+                resolve_tag("mb2_26.5G", CollectiveKind::AllGather).unwrap(),
+                resolve_tag("cb5_13G", CollectiveKind::AllToAll).unwrap(),
+            ],
+            vec![
+                StrategyKind::Conccl,
+                StrategyKind::ConcclChunked,
+                StrategyKind::C3Chunked,
+            ],
+            cfg,
+        )
+        .with_chunk_counts(vec![ChunkSel::Auto, ChunkSel::Fixed(8)])
+        .unwrap()
+    };
+    let j1 = execute(plan(jittered_cfg()), 1).to_json();
+    let j4 = execute(plan(jittered_cfg()), 4).to_json();
+    assert_eq!(j1, j4, "chunk-axis sweep JSON diverged across thread counts");
+    assert!(j1.contains("{\"chunks\":\"auto\","));
+    assert!(j1.contains("{\"chunks\":8,"));
+    assert!(j1.contains("\"conccl_chunked\":{"));
+}
+
+#[test]
+fn chunked_conccl_dominates_on_gc_equal_in_sweep_output() {
+    // Acceptance criterion, end to end through the sweep engine: on the
+    // GC-equal Table II scenarios the auto-chunked ConCCL column's
+    // median speedup is >= the whole-kernel ConCCL column's.
+    let plan = SweepPlan::new(
+        vec![MachineVariant::base(MachineConfig::mi300x())],
+        vec![
+            resolve_tag("mb2_26.5G", CollectiveKind::AllGather).unwrap(),
+            resolve_tag("mb2_26.5G", CollectiveKind::AllToAll).unwrap(),
+            resolve_tag("cb5_13G", CollectiveKind::AllGather).unwrap(),
+            resolve_tag("cb5_13G", CollectiveKind::AllToAll).unwrap(),
+        ],
+        vec![StrategyKind::Conccl, StrategyKind::ConcclChunked],
+        RunnerConfig::default(), // jitter 0: medians are model truth
+    );
+    let res = execute(plan, 2);
+    assert!(res.errors().is_empty());
+    for si in 0..4 {
+        let sp = |k: StrategyKind| {
+            res.output_at(0, 0, 0, si, k)
+                .unwrap()
+                .result
+                .as_ref()
+                .unwrap()
+                .speedup_median
+        };
+        let (conccl, chunked) = (sp(StrategyKind::Conccl), sp(StrategyKind::ConcclChunked));
+        assert!(
+            chunked >= conccl,
+            "scenario {si}: chunked {chunked:.3} < conccl {conccl:.3}"
+        );
+        let k = res
+            .output_at(0, 0, 0, si, StrategyKind::ConcclChunked)
+            .unwrap()
+            .chunks_used
+            .unwrap();
+        assert!(k >= 2, "scenario {si}: auto picked k={k}");
+    }
 }
 
 #[test]
