@@ -42,7 +42,7 @@ fn main() {
         let mut t = Table::new(vec!["size", "cu time", "hybrid time", "cu-seconds saved"])
             .left_cols(1);
         for size in [64 * MIB, 256 * MIB, GIB, 4 * GIB] {
-            let p = allreduce_point(&m, size);
+            let p = allreduce_point(&m, size).expect("all-reduce sizes are hybrid-decomposable");
             t.row(vec![
                 fmt_bytes(size),
                 fmt_seconds(p.cu_time),

@@ -11,6 +11,8 @@
 //!   conccl-bw      Fig 9: ConCCL vs RCCL isolated bandwidth sweep
 //!   heuristics     §V-C heuristic vs exhaustive sweep (30 scenarios)
 //!   e2e            FSDP trace replay (simulated MI300X timeline)
+//!   graph          end-to-end workload graph (multi-layer FSDP/TP) on
+//!                  the workload-graph engine
 //! ```
 
 use std::collections::BTreeMap;
@@ -119,7 +121,15 @@ SUBCOMMANDS
   conccl-bw                 Fig 9 size sweep
   heuristics                SP order + RP heuristic + chunk tuner vs
                             exhaustive sweeps (30 scenarios)
-  e2e [--layers 4] [--model 70b|405b]   FSDP trace replay
+  e2e [--layers 4] [--model 70b|405b] [--prefetch-depth 2]
+                            FSDP trace replay + the workload-graph
+                            engine's continuous-timeline comparison
+  graph --workload fsdp_forward|fsdp_step|tp_chain [--model 70b|405b]
+      [--layers 4] [--prefetch-depth 2] [--nodes N]
+      [--family all|serial|cu|dma]
+                            one end-to-end workload graph: multi-layer
+                            FSDP/TP schedule on the graph engine, with
+                            exposed-comm / bubble / occupancy metrics
   help                      this text
 
 SWEEP OPTIONS (conccl sweep)
@@ -136,6 +146,12 @@ SWEEP OPTIONS (conccl sweep)
                             'auto' sweeps the machine's candidates per
                             scenario and keeps the best (recording the
                             winning k); numbers pin the count
+  --e2e spec,spec           end-to-end workload axis, evaluated per
+                            (machine, node-count) on the graph engine
+                            under serial/cu_overlap/dma_overlap; spec =
+                            workload[:model[:layers[:depth]]], e.g.
+                            fsdp_step:70b:4:2 (JSON schema v4
+                            workloads[] section, gated by bench-gate)
   --variants l:k=v;k=v,...  extra machine variants derived from the base
                             machine (label:field=value;field=value)
   --threads N               worker threads (0 = one per core)

@@ -35,18 +35,22 @@ pub struct AllReducePoint {
 }
 
 /// Evaluate the hybrid all-reduce against the CU kernel at one size.
-pub fn allreduce_point(m: &MachineConfig, size_bytes: u64) -> AllReducePoint {
+/// Propagates the hybrid decomposition's typed error (never a panic).
+pub fn allreduce_point(
+    m: &MachineConfig,
+    size_bytes: u64,
+) -> Result<AllReducePoint, crate::error::Error> {
     let cu = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllReduce, size_bytes));
     let cu_time = cu.time_isolated_full(m);
-    let (hybrid_time, rs, _ag) = hybrid_allreduce_time(m, size_bytes);
-    AllReducePoint {
+    let (hybrid_time, rs, _ag) = hybrid_allreduce_time(m, size_bytes)?;
+    Ok(AllReducePoint {
         size_bytes,
         cu_time,
         hybrid_time,
         // CU-seconds: kernel time x CUs held.
         cu_busy_cu: cu_time * cu.cu_need(m) as f64,
         cu_busy_hybrid: rs * m.ar_cu_need as f64, // AG phase holds zero CUs
-    }
+    })
 }
 
 /// DMA-engine-count sensitivity: ConCCL all-gather completion time at a
@@ -119,7 +123,7 @@ mod tests {
     #[test]
     fn hybrid_allreduce_frees_cu_seconds() {
         let m = m();
-        let p = allreduce_point(&m, GIB);
+        let p = allreduce_point(&m, GIB).unwrap();
         // Wall-clock: hybrid pays the DMA launch tax but saves CU time.
         assert!(p.cu_busy_hybrid < 0.6 * p.cu_busy_cu, "{p:?}");
         // Hybrid wall-clock within ~25% of the CU kernel at large sizes.

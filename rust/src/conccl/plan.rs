@@ -108,6 +108,49 @@ pub fn alltoall_plan(
     per_gpu
 }
 
+/// Reduce-scatter *movement* plan: DMA engines cannot reduce (§VI-B),
+/// so the offloadable part of a reduce-scatter is gathering every
+/// source's segment `d` into GPU `d`'s staging buffer (`stages[d]`,
+/// `n × seg_len` bytes, slot `g` holding GPU `g`'s contribution); the
+/// owner then reduces the staged columns on its CUs. Works unchanged on
+/// multi-node topologies: non-adjacent transfers store-and-forward
+/// through the leaders exactly as `gpu::sdma::schedule` prices them.
+/// [`check_conservation`] holds over the staging buffers — every staged
+/// byte is written exactly once.
+pub fn reduce_scatter_plan(
+    n: usize,
+    ins: &[BufferId],
+    stages: &[BufferId],
+    seg_len: usize,
+) -> Vec<Vec<CommandPacket>> {
+    assert_eq!(ins.len(), n);
+    assert_eq!(stages.len(), n);
+    let mut per_gpu = vec![Vec::with_capacity(n); n];
+    for g in 0..n {
+        for d in (0..n).filter(|&d| d != g) {
+            per_gpu[g].push(CommandPacket {
+                src_gpu: g,
+                src: ins[g],
+                src_off: d * seg_len,
+                dst_gpu: d,
+                dst: stages[d],
+                dst_off: g * seg_len,
+                len: seg_len,
+            });
+        }
+        per_gpu[g].push(CommandPacket {
+            src_gpu: g,
+            src: ins[g],
+            src_off: g * seg_len,
+            dst_gpu: g,
+            dst: stages[g],
+            dst_off: g * seg_len,
+            len: seg_len,
+        });
+    }
+    per_gpu
+}
+
 /// Hierarchical all-gather on `topo`. Single node: one phase, the
 /// direct plan. Multi-node, with `L_i` = node `i`'s leader:
 ///
@@ -421,6 +464,27 @@ mod tests {
                 // Chunk d of src g lands at slot g of dst d.
                 assert_eq!(c.src_off, c.dst_gpu * chunk);
                 assert_eq!(c.dst_off, g * chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_plan_stages_every_segment_once() {
+        let n = 8;
+        let seg = 16;
+        let plan = reduce_scatter_plan(n, &ids(n, 0), &ids(n, 100), seg);
+        // Every staging buffer byte is written exactly once.
+        let phased = PhasedPlan {
+            phases: vec![plan.clone()],
+        };
+        check_conservation(&phased, &ids(n, 100), n * seg).unwrap();
+        for (g, cmds) in plan.iter().enumerate() {
+            assert_eq!(cmds.len(), n, "gpu {g}: n-1 peers + 1 local");
+            for c in cmds {
+                // Source slot is the destination's segment; staged at
+                // the source's slot in the owner's staging buffer.
+                assert_eq!(c.src_off, c.dst_gpu * seg);
+                assert_eq!(c.dst_off, g * seg);
             }
         }
     }

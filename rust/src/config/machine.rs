@@ -110,6 +110,9 @@ pub struct MachineConfig {
     pub a2a_cu_need: u32,
     /// CUs an all-reduce kernel needs (like AG; §VII-A2 discussion).
     pub ar_cu_need: u32,
+    /// CUs a reduce-scatter kernel needs (the all-reduce's first pass;
+    /// the FSDP-backward gradient collective of the e2e graphs).
+    pub rs_cu_need: u32,
     /// HBM traffic factor of all-to-all relative to its payload: A2A
     /// reads and writes distinct buffers both ways plus staging; AG
     /// writes the gathered buffer once (≈1×). Together with
@@ -217,6 +220,7 @@ impl MachineConfig {
             ag_cu_need: 32,
             a2a_cu_need: 64,
             ar_cu_need: 32,
+            rs_cu_need: 32,
             a2a_hbm_factor: 1.3,
             ag_hbm_factor: 1.0,
             a2a_link_derate: 0.89,

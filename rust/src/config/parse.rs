@@ -223,6 +223,7 @@ fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<
         "ag_cu_need" => u32_field!(ag_cu_need),
         "a2a_cu_need" => u32_field!(a2a_cu_need),
         "ar_cu_need" => u32_field!(ar_cu_need),
+        "rs_cu_need" => u32_field!(rs_cu_need),
         "a2a_hbm_factor" => f64_field!(a2a_hbm_factor),
         "ag_hbm_factor" => f64_field!(ag_hbm_factor),
         "a2a_link_derate" => f64_field!(a2a_link_derate),
@@ -322,7 +323,7 @@ mod tests {
             "kernel_launch_s", "coll_launch_s", "dma_enqueue_s", "dma_fetch_s",
             "dma_sync_s", "gemm_tile", "gemm_traffic_coeff", "gemm_traffic_exp",
             "gemm_traffic_cap", "gemm_cache_damp", "ag_cu_need", "a2a_cu_need",
-            "ar_cu_need", "a2a_hbm_factor", "ag_hbm_factor", "a2a_link_derate",
+            "ar_cu_need", "rs_cu_need", "a2a_hbm_factor", "ag_hbm_factor", "a2a_link_derate",
             "comm_co_penalty_ag",
             "comm_co_penalty_a2a", "gemm_l2_pollution_ag", "gemm_l2_pollution_a2a",
             "mem_interference_coeff", "mem_interference_cap",

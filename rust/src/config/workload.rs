@@ -67,13 +67,16 @@ impl GemmShape {
 }
 
 /// Collective kinds studied in the paper. All-reduce is included for the
-/// §VII-A2 hybrid discussion but is not DMA-offloadable (DMA engines have
-/// no arithmetic).
+/// §VII-A2 hybrid discussion and reduce-scatter for the FSDP backward /
+/// tensor-parallel traces; neither is DMA-offloadable as a whole (DMA
+/// engines have no arithmetic — the data plane moves the shards on
+/// engines and reduces on CUs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollectiveKind {
     AllGather,
     AllToAll,
     AllReduce,
+    ReduceScatter,
 }
 
 impl CollectiveKind {
@@ -83,13 +86,14 @@ impl CollectiveKind {
             CollectiveKind::AllGather => "all-gather",
             CollectiveKind::AllToAll => "all-to-all",
             CollectiveKind::AllReduce => "all-reduce",
+            CollectiveKind::ReduceScatter => "reduce-scatter",
         }
     }
 
     /// Can this collective be offloaded to DMA engines? (§VI-B: engines
-    /// expose no arithmetic, so all-reduce cannot.)
+    /// expose no arithmetic, so the reducing collectives cannot.)
     pub fn dma_offloadable(self) -> bool {
-        !matches!(self, CollectiveKind::AllReduce)
+        !matches!(self, CollectiveKind::AllReduce | CollectiveKind::ReduceScatter)
     }
 
     /// The two kinds the paper's evaluation sweeps.
@@ -187,6 +191,8 @@ mod tests {
         assert!(CollectiveKind::AllGather.dma_offloadable());
         assert!(CollectiveKind::AllToAll.dma_offloadable());
         assert!(!CollectiveKind::AllReduce.dma_offloadable());
+        assert!(!CollectiveKind::ReduceScatter.dma_offloadable());
+        assert_eq!(CollectiveKind::ReduceScatter.name(), "reduce-scatter");
     }
 
     #[test]

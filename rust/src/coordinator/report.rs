@@ -12,6 +12,30 @@ use crate::util::units::fmt_bytes;
 use crate::workload::llama::table1;
 use crate::workload::scenarios::TABLE2;
 
+/// End-to-end workload-graph table: one row per e2e family with the
+/// graph engine's metrics (exposed-communication time, bubble time,
+/// per-resource occupancy). Shared by `conccl graph`, `conccl e2e` and
+/// the sweep's human-readable output.
+pub fn render_graph_e2e(title: &str, runs: &[crate::workload::e2e::E2eRun]) -> Table {
+    let mut t = Table::new(vec![
+        "family", "total", "speedup", "exposed comm", "bubble", "hbm occ%", "sdma occ%",
+    ])
+    .title(title.to_string())
+    .left_cols(1);
+    for r in runs {
+        t.row(vec![
+            r.family.name().to_string(),
+            crate::util::units::fmt_seconds(r.total),
+            speedup(r.speedup),
+            crate::util::units::fmt_seconds(r.exposed_comm),
+            crate::util::units::fmt_seconds(r.bubble),
+            f(r.hbm_occupancy * 100.0, 1),
+            f(r.sdma_occupancy * 100.0, 1),
+        ]);
+    }
+    t
+}
+
 /// Table I: the GEMMs under study, with our measured-model intensity and
 /// classification.
 pub fn render_table1(m: &MachineConfig) -> Table {
@@ -265,6 +289,20 @@ mod tests {
         );
         assert!(render_fig6(&m, &[896 * MIB]).len() >= 8);
         assert_eq!(render_fig9(&m, &[MIB, 128 * MIB]).len(), 2);
+    }
+
+    #[test]
+    fn graph_e2e_table_renders_one_row_per_family() {
+        use crate::workload::e2e::{fsdp_forward_stages, run_e2e, E2eFamily};
+        use crate::workload::llama::LlamaConfig;
+        let m = MachineConfig::mi300x();
+        let topo = m.topology(1);
+        let t = fsdp_forward_stages(&LlamaConfig::llama70b(), 2);
+        let runs: Vec<_> = E2eFamily::lineup()
+            .into_iter()
+            .map(|fam| run_e2e(&m, &topo, &t, 2, fam).unwrap())
+            .collect();
+        assert_eq!(render_graph_e2e("e2e", &runs).len(), 3);
     }
 
     #[test]

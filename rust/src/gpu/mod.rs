@@ -10,6 +10,6 @@ pub mod sdma;
 
 pub use memory::{BufferId, GpuMemory};
 pub use sdma::{
-    schedule, schedule_phases, CommandPacket, EnginePolicy, PhasedSchedule, SdmaSchedule,
-    TransferTiming,
+    engine_demand, schedule, schedule_phases, CommandPacket, EnginePolicy, PhasedSchedule,
+    SdmaSchedule, TransferTiming,
 };

@@ -85,6 +85,19 @@ pub struct PhasedSchedule {
     pub total: f64,
 }
 
+/// Engine-occupancy demand of one in-flight DMA collective on its
+/// orchestrating GPU: the direct plans issue one transfer per
+/// destination, so a collective occupies `min(num_gpus, sdma_engines)`
+/// engines for the duration of its wire phase. The workload-graph
+/// engine registers `machine.sdma_engines` as a finite fluid resource
+/// and charges each concurrent DMA collective this demand — two
+/// concurrent collectives on one GPU (2×8 = 16 occupancy units against
+/// 14 engines on MI300X) slow each other, while a lone collective is
+/// never engine-bound (the `min` keeps its own rate cap binding first).
+pub fn engine_demand(m: &MachineConfig) -> f64 {
+    m.num_gpus.min(m.sdma_engines.max(1)) as f64
+}
+
 /// Compute the timing of a batch of DMA commands. `per_gpu[g]` is the
 /// command list enqueued by GPU `g`'s orchestrating CPU thread, in
 /// order. Commands from different GPUs enqueue in parallel (one host
@@ -189,9 +202,9 @@ fn schedule_at(
                 EnginePolicy::LeastLoaded => engine_free[g]
                     .iter()
                     .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .min_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(idx, _)| idx)
-                    .unwrap(),
+                    .unwrap_or(0),
             };
             let (start, finish) = if c.src_gpu == c.dst_gpu {
                 let start = ready.max(engine_free[g][engine]);

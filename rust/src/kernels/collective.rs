@@ -42,16 +42,20 @@ impl CollectiveKernel {
             CollectiveKind::AllGather => m.ag_cu_need,
             CollectiveKind::AllToAll => m.a2a_cu_need,
             CollectiveKind::AllReduce => m.ar_cu_need,
+            CollectiveKind::ReduceScatter => m.rs_cu_need,
         }
     }
 
     /// Bytes each GPU must push over each of its links (the per-link
     /// serialization quantum). All-reduce is reduce-scatter + all-gather
-    /// → two passes.
+    /// → two passes; a reduce-scatter alone mirrors the all-gather's
+    /// wire profile (one shard per peer link).
     pub fn per_link_bytes(&self, m: &MachineConfig) -> f64 {
         let shard = self.spec.size_bytes as f64 / m.num_gpus as f64;
         match self.spec.kind {
-            CollectiveKind::AllGather | CollectiveKind::AllToAll => shard,
+            CollectiveKind::AllGather
+            | CollectiveKind::AllToAll
+            | CollectiveKind::ReduceScatter => shard,
             CollectiveKind::AllReduce => 2.0 * shard,
         }
     }
@@ -67,6 +71,9 @@ impl CollectiveKernel {
         match self.spec.kind {
             CollectiveKind::AllGather => s * m.ag_hbm_factor,
             CollectiveKind::AllToAll => s * m.a2a_hbm_factor,
+            // Read the full payload, write one shard: read-dominated,
+            // same order as the all-gather's gathered-buffer write.
+            CollectiveKind::ReduceScatter => s * m.ag_hbm_factor,
             // RS pass reads+writes, AG pass writes: ~2x payload.
             CollectiveKind::AllReduce => 2.0 * s * m.ag_hbm_factor,
         }
@@ -75,7 +82,9 @@ impl CollectiveKernel {
     /// Fabric efficiency derate for this collective's traffic pattern.
     pub fn link_derate(&self, m: &MachineConfig) -> f64 {
         match self.spec.kind {
-            CollectiveKind::AllGather | CollectiveKind::AllReduce => 1.0,
+            CollectiveKind::AllGather
+            | CollectiveKind::AllReduce
+            | CollectiveKind::ReduceScatter => 1.0,
             CollectiveKind::AllToAll => m.a2a_link_derate,
         }
     }
@@ -156,7 +165,9 @@ impl CollectiveKernel {
                 let s = self.spec.size_bytes as f64;
                 match self.spec.kind {
                     // One node block (its gathered shards) per pass.
-                    CollectiveKind::AllGather | CollectiveKind::AllReduce => s / nodes as f64,
+                    CollectiveKind::AllGather
+                    | CollectiveKind::AllReduce
+                    | CollectiveKind::ReduceScatter => s / nodes as f64,
                     // A full P×P chunk block per node pair.
                     CollectiveKind::AllToAll => gpus_per_node as f64 * s / nodes as f64,
                 }
@@ -284,6 +295,25 @@ mod tests {
         assert!(!ag(128 * MIB).is_latency_bound(&m));
         // All Table II sizes (>=128M) are bandwidth-bound (§VI-C).
         assert!(!ag(896 * MIB).is_latency_bound(&m));
+    }
+
+    #[test]
+    fn reduce_scatter_mirrors_allgather_wire_profile() {
+        let m = m();
+        let s = 896 * MIB;
+        let rs = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::ReduceScatter, s));
+        assert_eq!(rs.cu_need(&m), m.rs_cu_need);
+        assert_eq!(rs.per_link_bytes(&m), ag(s).per_link_bytes(&m));
+        assert_eq!(rs.link_derate(&m), 1.0);
+        // Same wire profile as AG at the same CU grant, and exactly
+        // half an all-reduce (AR = RS + AG).
+        assert!((rs.t_wire(&m, 32) - ag(s).t_wire(&m, 32)).abs() < 1e-15);
+        let ar = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllReduce, s));
+        assert!((2.0 * rs.per_link_bytes(&m) - ar.per_link_bytes(&m)).abs() < 1e-9);
+        // Multi-node: the NIC exchange ships one node block per pass.
+        let t = m.topology(2);
+        assert_eq!(rs.per_nic_bytes(&t), ag(s).per_nic_bytes(&t));
+        assert!(rs.time_isolated_full_on(&m, &t) > rs.time_isolated_full(&m));
     }
 
     #[test]

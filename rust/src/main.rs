@@ -11,6 +11,7 @@ use conccl::sched::{C3Executor, Strategy};
 use conccl::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVariant, SweepPlan};
 use conccl::util::table::{f as fnum, speedup, Table};
 use conccl::util::units::{fmt_seconds, MIB};
+use conccl::workload::e2e::{run_e2e, E2eFamily, E2eSpec};
 use conccl::workload::llama::LlamaConfig;
 use conccl::workload::scenarios::{resolve, resolve_tag, suite, TABLE2};
 use conccl::workload::trace::{fsdp_forward_trace, replay};
@@ -45,6 +46,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         "conccl-bw" => conccl_bw(args),
         "heuristics" => heuristics_cmd(args),
         "e2e" => e2e(args),
+        "graph" => graph_cmd(args),
         other => Err(format!("unknown subcommand '{other}'\n\n{HELP}")),
     }
 }
@@ -54,6 +56,7 @@ fn parse_collective(s: &str) -> Result<CollectiveKind, String> {
         "all-gather" | "ag" => Ok(CollectiveKind::AllGather),
         "all-to-all" | "a2a" => Ok(CollectiveKind::AllToAll),
         "all-reduce" | "ar" => Ok(CollectiveKind::AllReduce),
+        "reduce-scatter" | "rs" => Ok(CollectiveKind::ReduceScatter),
         other => Err(format!("unknown collective '{other}'")),
     }
 }
@@ -226,9 +229,20 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
         .map(ChunkSel::parse)
         .collect::<Result<_, _>>()
         .map_err(|e| format!("--chunks: {e}"))?;
+    let e2e_specs: Vec<E2eSpec> = match args.options.get("e2e") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(E2eSpec::parse)
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--e2e: {e}"))?,
+    };
     let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
         .and_then(|p| p.with_node_counts(node_counts))
         .and_then(|p| p.with_chunk_counts(chunk_counts))
+        .and_then(|p| p.with_e2e(e2e_specs))
         .map_err(|e| e.to_string())?;
     let n_jobs = plan.job_count();
     let t0 = std::time::Instant::now();
@@ -282,6 +296,25 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
                 }
                 println!();
             }
+            // End-to-end workload axis (graph engine): one table per
+            // spec on this (machine, topology) point.
+            for (si, spec) in results.plan.e2e.iter().enumerate() {
+                let runs: Vec<_> = results
+                    .e2e_point(mi, ni, si)
+                    .into_iter()
+                    .filter_map(|o| o.result.as_ref().ok().copied())
+                    .collect();
+                report::render_graph_e2e(
+                    &format!(
+                        "e2e workload '{}': machine '{}' × {nodes} node(s)",
+                        spec.label(),
+                        mv.label
+                    ),
+                    &runs,
+                )
+                .print();
+                println!();
+            }
         }
     }
     let errs = results.errors();
@@ -296,6 +329,27 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
                 results.plan.chunk_counts[job.chunk_idx].label(),
                 results.plan.scenarios[job.scenario_idx].tag(),
                 job.strategy.name()
+            );
+        }
+    }
+    // Failed e2e workload points are dropped from their tables above —
+    // name them here so a non-JSON run cannot mistake a missing row
+    // for success (the JSON carries the {"error": ...} object).
+    let e2e_errs: Vec<&conccl::sweep::E2eOutput> = results
+        .e2e_outputs
+        .iter()
+        .filter(|o| o.result.is_err())
+        .collect();
+    if !e2e_errs.is_empty() {
+        println!("{} e2e workload point(s) failed:", e2e_errs.len());
+        for o in &e2e_errs {
+            println!(
+                "  [{} × {}n × {} × {}]: {}",
+                results.machine_label(o.machine_idx),
+                results.plan.node_counts[o.node_idx],
+                results.plan.e2e[o.spec_idx].label(),
+                o.family.name(),
+                o.result.as_ref().unwrap_err()
             );
         }
     }
@@ -315,11 +369,15 @@ fn sweep_cmd(args: &Args) -> Result<(), String> {
     }
     // Partial failure must not look like success to scripts/CI: the
     // tables and JSON above still describe what ran, but the exit
-    // status reports the failed jobs.
-    if errs.is_empty() {
+    // status reports the failed jobs (pairwise and e2e alike).
+    if errs.is_empty() && e2e_errs.is_empty() {
         Ok(())
     } else {
-        Err(format!("{} of {n_jobs} sweep jobs failed (see list above)", errs.len()))
+        Err(format!(
+            "{} of {n_jobs} sweep jobs and {} e2e point(s) failed (see list above)",
+            errs.len(),
+            e2e_errs.len()
+        ))
     }
 }
 
@@ -530,6 +588,41 @@ fn heuristics_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Run one end-to-end workload graph (multi-layer FSDP/TP schedule) on
+/// the workload-graph engine and report the e2e metrics per family.
+fn graph_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let nodes = args.opt_usize("nodes", 1)?.max(1);
+    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
+    let layers = args.opt_usize("layers", 4)?.max(1);
+    let spec_str = format!(
+        "{}:{}:{layers}:{depth}",
+        args.opt("workload", "fsdp_step"),
+        args.opt("model", "70b"),
+    );
+    let spec = E2eSpec::parse(&spec_str).map_err(|e| e.to_string())?;
+    let topo = m.topology(nodes);
+    let trace = spec.trace();
+    let families: Vec<E2eFamily> = match args.opt("family", "all").as_str() {
+        "all" => E2eFamily::lineup().to_vec(),
+        other => vec![E2eFamily::parse(other).map_err(|e| e.to_string())?],
+    };
+    let mut runs = Vec::with_capacity(families.len());
+    for fam in families {
+        runs.push(run_e2e(&m, &topo, &trace, spec.depth, fam).map_err(|e| e.to_string())?);
+    }
+    report::render_graph_e2e(
+        &format!(
+            "workload graph: {} ({} stages, prefetch depth {depth}, {nodes} node(s))",
+            spec.label(),
+            trace.stages.len()
+        ),
+        &runs,
+    )
+    .print();
+    Ok(())
+}
+
 fn e2e(args: &Args) -> Result<(), String> {
     let m = args.machine()?;
     let layers = args.opt_usize("layers", 4)?;
@@ -576,5 +669,22 @@ fn e2e(args: &Args) -> Result<(), String> {
     }
     println!();
     wire.print();
+    // The workload-graph engine's continuous timeline for the same
+    // forward trace: the prefetch window overlaps weight gathers across
+    // stage boundaries, which the per-stage replay above only prices
+    // pairwise. `conccl graph` exposes the full workload lineup.
+    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
+    let gtrace = conccl::workload::e2e::fsdp_forward_stages(&model, layers.max(1));
+    let topo = m.topology(1);
+    let mut runs = Vec::new();
+    for fam in E2eFamily::lineup() {
+        runs.push(run_e2e(&m, &topo, &gtrace, depth, fam).map_err(|e| e.to_string())?);
+    }
+    println!();
+    report::render_graph_e2e(
+        &format!("graph engine: FSDP forward × {layers} layers, prefetch depth {depth}"),
+        &runs,
+    )
+    .print();
     Ok(())
 }

@@ -26,7 +26,8 @@
 //! (`*_chunked`, the fine-grain pipeline's per-chunk batches) or not.
 
 use crate::conccl::plan::{
-    a2a_stage_bytes, allgather_hier, alltoall_hier, check_conservation, chunk_phased, PhasedPlan,
+    a2a_stage_bytes, allgather_hier, alltoall_hier, check_conservation, chunk_phased,
+    reduce_scatter_plan, PhasedPlan,
 };
 use crate::error::Error;
 use crate::gpu::memory::BufferId;
@@ -214,6 +215,94 @@ pub fn all_to_all_chunked(
             Ok(CollectiveRun {
                 time: k.time_isolated_full_on(&node.machine, &node.topo),
                 wire_bytes_per_gpu: ((n - 1) * chunk_len) as u64,
+            })
+        }
+    }
+}
+
+/// Reduce-scatter over f32 lanes (sum): `ins[g]` is `n` equal segments
+/// of f32s; afterwards `outs[g]` (one segment long) holds the
+/// elementwise sum of every GPU's segment `g`.
+///
+/// * `Backend::Cu` — classic CU kernel (RCCL-like timing); functional
+///   reduction on the host loop.
+/// * `Backend::Dma` — the offloadable half on engines: every source
+///   pushes its segment `d` into GPU `d`'s staging buffer
+///   ([`reduce_scatter_plan`], conservation-checked), then the owner
+///   reduces the staged columns on its CUs. Byte-identical to the CU
+///   backend on every topology (cross-node commands store-and-forward
+///   through the leaders).
+pub fn reduce_scatter_f32(
+    node: &mut Node,
+    ins: &[BufferId],
+    outs: &[BufferId],
+    backend: Backend,
+) -> Result<CollectiveRun, Error> {
+    let n = node.num_gpus();
+    assert_eq!(ins.len(), n);
+    assert_eq!(outs.len(), n);
+    let total_len = node.mems[0].len(ins[0]);
+    assert!(total_len % (4 * n) == 0, "input not divisible into {n} f32 segments");
+    let seg_len = total_len / n;
+    for g in 0..n {
+        assert_eq!(node.mems[g].len(ins[g]), total_len, "ragged inputs");
+        assert_eq!(node.mems[g].len(outs[g]), seg_len, "bad out size");
+    }
+    let reduce_seg = |bytes: &[u8]| -> Vec<u8> {
+        // Sum `n` staged f32 columns into one segment.
+        let lanes = seg_len / 4;
+        let mut acc = vec![0.0f32; lanes];
+        for src in 0..n {
+            let col = &bytes[src * seg_len..(src + 1) * seg_len];
+            for (i, w) in col.chunks_exact(4).enumerate() {
+                acc[i] += f32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+            }
+        }
+        acc.iter().flat_map(|v| v.to_le_bytes()).collect()
+    };
+    let kernel = crate::kernels::CollectiveKernel::new(
+        crate::config::workload::CollectiveSpec::new(
+            crate::config::workload::CollectiveKind::ReduceScatter,
+            total_len as u64,
+        ),
+    );
+    match backend {
+        Backend::Dma => {
+            let stages: Vec<BufferId> = (0..n).map(|g| node.alloc(g, total_len)).collect();
+            let plan = PhasedPlan {
+                phases: vec![reduce_scatter_plan(n, ins, &stages, seg_len)],
+            };
+            let time = run_checked(node, &plan, &stages, total_len)?;
+            for g in 0..n {
+                let staged = node.mems[g].bytes(stages[g]).to_vec();
+                let out = reduce_seg(&staged);
+                node.mems[g].write(outs[g], 0, &out);
+                node.mems[g].free(stages[g]);
+            }
+            // The owner's CU reduction is not free: one kernel launch
+            // plus an HBM-bound pass reading the staged columns and
+            // writing the reduced segment (mirrors all_reduce_f32's
+            // hybrid pricing, which also charges its CU slice).
+            let reduce_time = node.machine.kernel_launch_s
+                + (total_len + seg_len) as f64 / node.machine.hbm_bw_achievable();
+            Ok(CollectiveRun {
+                time: time + reduce_time,
+                wire_bytes_per_gpu: ((n - 1) * seg_len) as u64,
+            })
+        }
+        Backend::Cu => {
+            for g in 0..n {
+                // Assemble GPU g's column from every source's segment g.
+                let mut staged = Vec::with_capacity(total_len);
+                for src in 0..n {
+                    staged.extend_from_slice(node.mems[src].read(ins[src], g * seg_len, seg_len));
+                }
+                let out = reduce_seg(&staged);
+                node.mems[g].write(outs[g], 0, &out);
+            }
+            Ok(CollectiveRun {
+                time: kernel.time_isolated_full_on(&node.machine, &node.topo),
+                wire_bytes_per_gpu: ((n - 1) * seg_len) as u64,
             })
         }
     }
@@ -478,6 +567,66 @@ mod tests {
                 }
             }
             assert!(run.time > 0.0);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_matches_scalar_reference_on_every_topology() {
+        // Byte-check both backends against a host scalar reference on
+        // 1-, 2- and 4-node topologies (the satellite requirement for
+        // the new collective kind).
+        for (nodes, p) in [(1usize, 8usize), (2, 4), (4, 2)] {
+            for backend in [Backend::Cu, Backend::Dma] {
+                let mut nd = if nodes == 1 { node(p) } else { multi(nodes, p) };
+                let n = nd.num_gpus();
+                let lanes_per_seg = 6;
+                let seg = 4 * lanes_per_seg;
+                let vals: Vec<Vec<f32>> = (0..n)
+                    .map(|g| {
+                        (0..n * lanes_per_seg)
+                            .map(|i| (g * 100 + i) as f32 * 0.5)
+                            .collect()
+                    })
+                    .collect();
+                let ins: Vec<_> = (0..n)
+                    .map(|g| {
+                        let bytes: Vec<u8> =
+                            vals[g].iter().flat_map(|v| v.to_le_bytes()).collect();
+                        nd.alloc_init(g, &bytes)
+                    })
+                    .collect();
+                let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, seg)).collect();
+                let run = reduce_scatter_f32(&mut nd, &ins, &outs, backend).unwrap();
+                assert!(run.time > 0.0);
+                for g in 0..n {
+                    let got: Vec<f32> = nd.mems[g]
+                        .bytes(outs[g])
+                        .chunks_exact(4)
+                        .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+                        .collect();
+                    for (i, v) in got.iter().enumerate() {
+                        // Scalar reference: sum of every source's
+                        // segment-g lane i.
+                        let expect: f32 = (0..n)
+                            .map(|src| vals[src][g * lanes_per_seg + i])
+                            .sum();
+                        assert_eq!(
+                            *v, expect,
+                            "{nodes}x{p} {backend:?} gpu {g} lane {i}"
+                        );
+                    }
+                }
+                // DMA staging buffers were freed.
+                if backend == Backend::Dma {
+                    for g in 0..n {
+                        assert_eq!(
+                            nd.mems[g].footprint(),
+                            n * seg + seg,
+                            "staging not freed on gpu {g}"
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -19,12 +19,9 @@
 //!    (`base_dispatch_backlog · t_gemm`) and then runs on leaked CUs
 //!    only (`base_leak_cus`) until the GEMM drains (§V-A's motivation).
 
-use crate::conccl::DmaCollective;
-use crate::config::machine::{smoothmax, MachineConfig};
+use crate::config::machine::MachineConfig;
 use crate::error::Error;
 use crate::fabric::Topology;
-use crate::sim::fluid::StallError;
-use crate::sim::{Event, Sim, TaskSpec};
 use crate::workload::taxonomy::pct_of_ideal;
 use crate::workload::ResolvedScenario;
 
@@ -295,258 +292,20 @@ impl C3Executor {
 
     // ---- the concurrent timeline ----
 
+    /// Build the single-pair workload graph and run it on the graph
+    /// engine. The old hand-built pair timeline lived here; it is now
+    /// `sched::graph::single_pair` + `sched::graph::execute`, and
+    /// `rust/tests/graph_equiv.rs` pins the numbers against a frozen
+    /// copy of the pre-refactor implementation.
     fn simulate(
         &self,
         sc: &ResolvedScenario,
         strategy: Strategy,
         b: Baselines,
     ) -> Result<(f64, f64, f64), Error> {
-        let m = &self.m;
-        let topo = &self.topo;
-        let cus = m.cus_total();
-        let comm_need = sc.comm.cu_need(m);
-        let tg_iso = b.t_gemm_iso;
-
-        // Collective backend: typed failure (never a panic) when a
-        // non-offloadable collective meets a ConCCL strategy.
-        let dma = if strategy.comm_on_cus() {
-            None
-        } else {
-            Some(DmaCollective::try_new(sc.comm.spec)?)
-        };
-
-        // Arrival times: who is launched first (stream setup order).
-        let (gemm_arrival, comm_arrival) = match strategy {
-            Strategy::C3Base | Strategy::C3Rp { .. } => (
-                m.kernel_launch_s,
-                m.kernel_launch_s + m.coll_launch_s,
-            ),
-            Strategy::C3Sp | Strategy::C3SpRp { .. } => (
-                m.coll_launch_s + m.kernel_launch_s,
-                m.coll_launch_s,
-            ),
-            // ConCCL: CPU thread enqueues DMA commands while the GEMM
-            // launches; neither waits on the other.
-            Strategy::Conccl | Strategy::ConcclRp { .. } => {
-                let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
-                (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
-            }
-            Strategy::Serial => unreachable!("serial handled analytically"),
-            Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
-                unreachable!("chunked strategies route to sched::pipeline")
-            }
-        };
-
-        // CU grants per phase.
-        // comm CU grant: (while dispatch-backlogged, while GEMM active,
-        // after GEMM completes).
-        let (comm_backlog_cus, comm_overlap_cus, comm_solo_cus) = match strategy {
-            Strategy::C3Base => (0, m.base_leak_cus.min(comm_need), comm_need),
-            Strategy::C3Sp => (comm_need, comm_need, comm_need),
-            Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
-                let k = comm_cus.min(cus / 2);
-                (k, k, k)
-            }
-            Strategy::Conccl | Strategy::ConcclRp { .. } => (0, 0, 0),
-            Strategy::Serial => unreachable!(),
-            Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
-                unreachable!("chunked strategies route to sched::pipeline")
-            }
-        };
-        // Dispatch backlog applies only to c3_base (FIFO dispatch) and
-        // only when the GEMM's grid saturates the machine.
-        let backlog_until = match strategy {
-            Strategy::C3Base if sc.gemm.workgroups(m) > cus as u64 => {
-                comm_arrival + m.base_dispatch_backlog * tg_iso
-            }
-            _ => 0.0,
-        };
-        // GEMM CU grant while the collective holds CUs / after.
-        let gemm_cus = |comm_holds: u32, comm_done: bool| -> u32 {
-            match strategy {
-                // A CU mask (rp) persists for the whole run.
-                Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
-                    cus - comm_cus.min(cus / 2)
-                }
-                // §VI-G: remove CUs only when the one-time CU-loss
-                // slowdown table predicts a cache-behaviour speedup
-                // (memory-bound GEMMs only in practice).
-                Strategy::ConcclRp { cus_removed } => {
-                    let r = cus_removed.min(cus / 2);
-                    if !sc.gemm.is_compute_bound(m)
-                        && sc.gemm.slowdown_with_cu_loss(m, r) < 1.0
-                    {
-                        cus - r
-                    } else {
-                        cus
-                    }
-                }
-                Strategy::Conccl => cus,
-                _ => {
-                    if comm_done {
-                        cus
-                    } else {
-                        cus - comm_holds
-                    }
-                }
-            }
-        };
-
-        let pollution = if strategy.comm_on_cus() {
-            m.l2_pollution(sc.comm.spec.kind)
-        } else {
-            0.0
-        };
-        let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
-
-        // Collective wire work and HBM demand per backend.
-        let comm_hbm = match &dma {
-            Some(d) => d.hbm_traffic(m),
-            None => sc.comm.hbm_traffic(m),
-        };
-
-        // §VII-A1 residual memory-subsystem interference: each kernel's
-        // rate is shaved by the co-runner's bandwidth share (LLC port /
-        // HBM row-buffer contention that plain bandwidth accounting
-        // misses). Shares are the kernels' isolated demand fractions.
-        let mem_pen = |other_share: f64| m.mem_pen(other_share);
-        let gemm_share = sc.gemm.hbm_share(m, cus);
-        // DMA wire duration is loop-invariant (and on multi-node
-        // topologies pricing it rebuilds the hierarchical plan) —
-        // compute it once, outside the event loop.
-        let dma_wire = dma.as_ref().map(|d| d.wire_time_on(m, topo));
-        let comm_share = {
-            let t_wire = match dma_wire {
-                Some(wire) => wire,
-                None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
-            };
-            sc.comm.hbm_share_with_wire(m, t_wire)
-        };
-
-        // Build the simulation.
-        let mut sim = Sim::new();
-        let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
-        let gemm_t = sim.add_task(TaskSpec {
-            name: format!("gemm:{}", sc.scenario.gemm_tag),
-            arrival: gemm_arrival,
-            work: 1.0,
-            demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus))],
-            cap: 0.0,
-        });
-        let comm_t = sim.add_task(TaskSpec {
-            name: format!("comm:{}", sc.comm.spec.kind.name()),
-            arrival: comm_arrival,
-            work: 1.0,
-            demands: vec![(hbm, comm_hbm)],
-            cap: 0.0,
-        });
-        if backlog_until > 0.0 {
-            sim.schedule_wake(backlog_until);
-        }
-
-        let mut gemm_done = false;
-        let mut comm_done = false;
-        let mut gemm_finish = 0.0;
-        let mut comm_finish = 0.0;
-        loop {
-            // Recompute caps from the current phase.
-            let backlogged = backlog_until > 0.0 && sim.now() < backlog_until && !gemm_done;
-            let comm_holds = if comm_done || !sim.is_active(comm_t) {
-                0
-            } else if backlogged {
-                comm_backlog_cus
-            } else if !gemm_done {
-                comm_overlap_cus
-            } else {
-                comm_solo_cus
-            };
-            // GEMM cap.
-            if !gemm_done {
-                let g_cus = gemm_cus(comm_holds, comm_done).max(8);
-                let t_pure = smoothmax(sc.gemm.t_comp(m, g_cus), sc.gemm.t_mem(m, g_cus));
-                let comm_cu_active = strategy.comm_on_cus()
-                    && sim.is_active(comm_t)
-                    && comm_holds > 0
-                    && !comm_done;
-                let comm_moving = !comm_done
-                    && sim.is_active(comm_t)
-                    && (comm_holds > 0 || !strategy.comm_on_cus());
-                // Interference inflicted on the GEMM scales with the
-                // collective's *current* traffic rate: a starved
-                // collective crawling on leaked CUs barely pollutes.
-                let comm_rate_scale = if !comm_moving {
-                    0.0
-                } else if strategy.comm_on_cus() {
-                    sc.comm.bw_scale(m, comm_holds)
-                } else {
-                    1.0
-                };
-                let pol = if comm_cu_active {
-                    pollution * comm_rate_scale
-                } else {
-                    0.0
-                };
-                let mp = if comm_moving {
-                    mem_pen(comm_share * comm_rate_scale)
-                } else {
-                    0.0
-                };
-                sim.set_cap(gemm_t, (1.0 - pol) * (1.0 - mp) / t_pure);
-                sim.set_demand(gemm_t, hbm, sc.gemm.hbm_traffic(m, g_cus));
-            }
-            // Collective cap.
-            if !comm_done {
-                let gemm_moving = !gemm_done && sim.is_active(gemm_t);
-                let mp = if gemm_moving { mem_pen(gemm_share) } else { 0.0 };
-                let cap = match dma_wire {
-                    Some(wire) => {
-                        // Engine wire phase (enqueue+fetch folded into
-                        // arrival; sync appended after completion). HBM
-                        // contention still applies (§VII-A1).
-                        (1.0 - mp) / wire
-                    }
-                    None => {
-                        if comm_holds == 0 {
-                            0.0
-                        } else {
-                            let pen = if gemm_moving { co_penalty } else { 0.0 };
-                            (1.0 - pen) * (1.0 - mp) / sc.comm.t_wire_on(m, topo, comm_holds)
-                        }
-                    }
-                };
-                sim.set_cap(comm_t, cap);
-            }
-            match sim.next_event() {
-                Event::Completion(t) if t == gemm_t => {
-                    gemm_done = true;
-                    gemm_finish = sim.now();
-                }
-                Event::Completion(t) if t == comm_t => {
-                    comm_done = true;
-                    comm_finish = sim.now()
-                        + match &dma {
-                            Some(_) => m.dma_sync_s,
-                            None => 0.0,
-                        };
-                }
-                Event::Idle => break,
-                _ => {}
-            }
-            if gemm_done && comm_done {
-                break;
-            }
-        }
-        if !(gemm_done && comm_done) {
-            // Diagnosable failure: name the stalled task(s), their
-            // blockers and the sim time, so a bad sweep job fails
-            // itself instead of aborting the whole sweep.
-            return Err(Error::SimStall(StallError {
-                at: sim.now(),
-                stalled: sim.stall_report(),
-            }));
-        }
-        let total = gemm_finish.max(comm_finish);
-        Ok((total, gemm_finish, comm_finish))
+        let g = super::graph::single_pair(&self.m, &self.topo, sc, strategy, b)?;
+        let run = super::graph::execute(&self.m, &self.topo, &g)?;
+        Ok((run.total, run.gemm_finish, run.comm_finish))
     }
 }
 

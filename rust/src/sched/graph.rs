@@ -1,0 +1,1074 @@
+//! The workload-graph engine: one continuous fluid-simulator timeline
+//! for an arbitrary DAG of compute (GEMM) and communication (collective)
+//! task nodes.
+//!
+//! This unifies what used to be three hand-built timeline constructors —
+//! the whole-kernel pair executor, the chunked pipeline, and the
+//! sum-of-pairs trace replay — into a single engine:
+//!
+//! * **Nodes** carry their kernel models plus per-node strategy
+//!   annotations (CU policy, collective backend, penalty style) that the
+//!   engine applies at every event boundary, exactly as the legacy
+//!   executors did.
+//! * **Edges** are issue dependencies (`issue_deps`, with a launch lag
+//!   or a serialized CPU issue queue — the DMA enqueue thread) and
+//!   serialization dependencies (`serial_deps`, e.g. the chunk chain of
+//!   the fine-grain pipeline).
+//! * **Resources**: all nodes share achievable HBM bandwidth; DMA
+//!   collectives additionally demand *SDMA engine occupancy*
+//!   ([`crate::gpu::sdma::engine_demand`]) on a finite `sdma` fluid
+//!   resource, so two concurrent DMA collectives on one GPU slow each
+//!   other (a single collective is never engine-bound — its own rate cap
+//!   binds first — which keeps single-pair graphs numerically identical
+//!   to the pre-refactor executor; `rust/tests/graph_equiv.rs` pins
+//!   that equivalence against a frozen reference implementation).
+//!
+//! [`single_pair`] and [`chunked`] are the graph builders the
+//! [`super::C3Executor`] and `sched::pipeline` now delegate to; the
+//! multi-layer FSDP/TP builders live in `workload::e2e`.
+
+use crate::config::machine::{smoothmax, MachineConfig};
+use crate::config::workload::CollectiveSpec;
+use crate::conccl::DmaCollective;
+use crate::error::Error;
+use crate::fabric::Topology;
+use crate::gpu::sdma::engine_demand;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::sim::fluid::StallError;
+use crate::sim::{Event, Sim, TaskSpec};
+use crate::workload::ResolvedScenario;
+
+use super::executor::Baselines;
+use super::pipeline::chunk_sizes;
+use super::strategy::Strategy;
+
+/// Index of a node within a [`Graph`].
+pub type NodeId = usize;
+
+/// Absolute tolerance on "has this node's issue time been reached"
+/// comparisons (matches the legacy pipeline's ready-time epsilon).
+const ISSUE_EPS: f64 = 1e-18;
+
+/// How a node's §VII-A1 interference penalties are combined from its
+/// co-runners.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PenaltyStyle {
+    /// Whole-kernel executor style: each co-running collective's
+    /// contribution is scaled by its *current* traffic-rate scale (a
+    /// starved collective crawling on leaked CUs barely pollutes).
+    RateScaled,
+    /// Chunked-pipeline style: whole-kernel penalty terms shrunk by the
+    /// alignment survival factor `MachineConfig::chunk_align(k)`.
+    Aligned(f64),
+}
+
+/// CU allocation policy of a compute node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CuPolicy {
+    /// All CUs minus whatever active CU-collective nodes currently hold.
+    Residual,
+    /// A fixed grant for the whole run (an rp-style CU mask persists
+    /// even after the collective completes).
+    Fixed(u32),
+}
+
+/// A compute (GEMM) node.
+#[derive(Debug, Clone)]
+pub struct GemmWork {
+    /// Kernel priced for compute time (a tiled sub-kernel when chunked).
+    pub comp: GemmKernel,
+    /// Parent kernel for memory-side pricing (LLC working set persists
+    /// across chunk boundaries, so memory time/traffic are prorated
+    /// from the whole kernel rather than re-derived per sub-shape).
+    pub mem: GemmKernel,
+    /// Memory proration fraction (1.0 for a whole kernel).
+    pub frac: f64,
+    /// HBM-bandwidth share this GEMM inflicts on co-running collectives.
+    pub share: f64,
+    pub cu_policy: CuPolicy,
+    pub pen_style: PenaltyStyle,
+}
+
+/// Collective execution backend of a comm node.
+#[derive(Debug, Clone, Copy)]
+pub enum CommBackend {
+    /// CU-resident (RCCL-like) kernel: CU grants per phase, plus the
+    /// c3_base dispatch-backlog window.
+    Cu {
+        /// CUs held while dispatch-backlogged (c3_base leakage).
+        backlog_cus: u32,
+        /// CUs held while any compute node is unfinished.
+        overlap_cus: u32,
+        /// CUs held once all compute has drained.
+        solo_cus: u32,
+        /// Absolute sim time until which the dispatch backlog lasts
+        /// (0 = no backlog).
+        backlog_until: f64,
+        /// Fixed wire time (the chunked pipeline prices chunks at the
+        /// full CU need); `None` re-prices from the current CU grant.
+        wire_fixed: Option<f64>,
+    },
+    /// SDMA engines: precomputed wire-phase duration plus the engine
+    /// occupancy demanded from the shared `sdma` fluid resource. Like
+    /// every fluid demand this is *per unit work* (engine-seconds are
+    /// conserved), so a collective throttled by HBM interference also
+    /// draws engines more slowly — engine contention is understated
+    /// when heavy compute co-runs, a known limit of the fluid
+    /// abstraction (see EXPERIMENTS.md).
+    Dma { wire: f64, engines: f64 },
+}
+
+/// A communication (collective) node.
+#[derive(Debug, Clone)]
+pub struct CommWork {
+    pub kernel: CollectiveKernel,
+    pub backend: CommBackend,
+    /// HBM bytes moved per unit work.
+    pub hbm: f64,
+    /// HBM-bandwidth share this collective inflicts on co-runners.
+    pub share: f64,
+    /// L1/L2 pollution inflicted on co-running GEMMs while CU-resident.
+    pub pollution: f64,
+    /// Bandwidth derate suffered while a GEMM co-runs (CU backend).
+    pub co_penalty: f64,
+    /// CPU-side completion sync appended to the reported finish
+    /// (`dma_sync_s` for DMA batches; dependents wait for it).
+    pub sync: f64,
+    pub pen_style: PenaltyStyle,
+}
+
+/// What a node computes.
+#[derive(Debug, Clone)]
+pub enum Work {
+    Gemm(GemmWork),
+    Comm(CommWork),
+}
+
+/// When a node may begin making progress.
+#[derive(Debug, Clone, Copy)]
+pub enum Ready {
+    /// Root node with an absolute arrival time (stream setup order).
+    At(f64),
+    /// Ready `lag` after the last issue dependency completes (kernel /
+    /// collective launch latency).
+    AfterDeps { lag: f64 },
+    /// Issue goes through a serialized CPU queue (the DMA enqueue
+    /// thread): `start = max(queue_free, deps_done)`, the queue is busy
+    /// for `hold` (the per-packet enqueue batch), and the node is ready
+    /// `post` after that (engine fetch).
+    Queue { queue: usize, hold: f64, post: f64 },
+}
+
+/// One node of a workload graph.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub label: String,
+    pub work: Work,
+    /// Dependencies whose completion triggers issue (edges use the
+    /// *reported* finish, i.e. including a DMA collective's CPU sync).
+    pub issue_deps: Vec<NodeId>,
+    /// Dependencies that must merely have finished before this node can
+    /// progress (chain serialization; raw sim finish, no launch lag).
+    pub serial_deps: Vec<NodeId>,
+    pub ready: Ready,
+}
+
+/// A workload graph: a DAG of task nodes (edges point backward — every
+/// dependency id is smaller than the dependent's id).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl Graph {
+    /// Append a node, returning its id.
+    pub fn push(&mut self, spec: NodeSpec) -> NodeId {
+        self.nodes.push(spec);
+        self.nodes.len() - 1
+    }
+}
+
+/// Result of executing a workload graph.
+#[derive(Debug, Clone)]
+pub struct GraphRun {
+    /// Per-node issue (ready) times.
+    pub issue: Vec<f64>,
+    /// Per-node reported finish times (a DMA collective's includes its
+    /// CPU sync).
+    pub finish: Vec<f64>,
+    /// End-to-end makespan (max reported finish).
+    pub total: f64,
+    /// Last compute completion.
+    pub gemm_finish: f64,
+    /// Last collective completion (incl. sync).
+    pub comm_finish: f64,
+    /// Communication time not hidden under any compute interval.
+    pub exposed_comm: f64,
+    /// Time covered by neither compute nor communication (launch gaps,
+    /// dependency stalls).
+    pub bubble: f64,
+    /// Fraction of achievable HBM byte-capacity the run consumed.
+    pub hbm_occupancy: f64,
+    /// Fraction of SDMA engine-seconds the run consumed.
+    pub sdma_occupancy: f64,
+}
+
+/// Per-iteration phase state of one collective node.
+#[derive(Debug, Clone, Copy)]
+struct CommPhase {
+    moving: bool,
+    is_cu: bool,
+    holds: u32,
+    scale: f64,
+}
+
+fn ready_time(ready: Ready, t_deps: f64, queue_free: &mut [f64]) -> f64 {
+    match ready {
+        Ready::At(t) => t,
+        Ready::AfterDeps { lag } => t_deps + lag,
+        Ready::Queue { queue, hold, post } => {
+            let start = queue_free[queue].max(t_deps);
+            queue_free[queue] = start + hold;
+            queue_free[queue] + post
+        }
+    }
+}
+
+fn union_intervals(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.retain(|&(a, b)| b > a);
+    iv.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+fn measure(iv: &[(f64, f64)]) -> f64 {
+    iv.iter().map(|&(a, b)| b - a).sum()
+}
+
+fn intersect_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let (mut i, mut j, mut s) = (0usize, 0usize, 0.0f64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            s += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    s
+}
+
+/// Execute a workload graph on the fluid simulator: one continuous
+/// timeline, per-node strategy annotations applied at every event
+/// boundary, HBM and SDMA-engine occupancy shared across all concurrent
+/// nodes. Returns a typed [`Error::SimStall`] (never a panic) when a
+/// node cannot finish.
+pub fn execute(m: &MachineConfig, topo: &Topology, g: &Graph) -> Result<GraphRun, Error> {
+    let n = g.nodes.len();
+    assert!(n > 0, "empty workload graph");
+    let cus = m.cus_total();
+
+    let mut sim = Sim::new();
+    let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
+    let sdma = sim.add_resource("sdma", m.sdma_engines.max(1) as f64);
+
+    let mut queues = 0usize;
+    for (i, spec) in g.nodes.iter().enumerate() {
+        for &d in spec.issue_deps.iter().chain(spec.serial_deps.iter()) {
+            assert!(d < i, "graph edges must point backward (node {i} depends on {d})");
+        }
+        if let Ready::Queue { queue, .. } = spec.ready {
+            queues = queues.max(queue + 1);
+        }
+        if matches!(spec.ready, Ready::At(_)) {
+            assert!(spec.issue_deps.is_empty(), "At-rooted node {i} cannot have issue deps");
+        }
+    }
+    let mut queue_free = vec![0.0f64; queues];
+
+    for (i, spec) in g.nodes.iter().enumerate() {
+        let arrival = match spec.ready {
+            Ready::At(t) => t,
+            _ => 0.0,
+        };
+        let demands = match &spec.work {
+            Work::Gemm(gw) => vec![(hbm, gw.mem.hbm_traffic(m, cus) * gw.frac)],
+            Work::Comm(cw) => {
+                let mut d = vec![(hbm, cw.hbm)];
+                if let CommBackend::Dma { wire, engines } = cw.backend {
+                    d.push((sdma, engines * wire));
+                }
+                d
+            }
+        };
+        let tid = sim.add_task(TaskSpec {
+            name: spec.label.clone(),
+            arrival,
+            work: 1.0,
+            demands,
+            cap: 0.0,
+        });
+        debug_assert_eq!(tid, i);
+        if let Work::Comm(cw) = &spec.work {
+            if let CommBackend::Cu { backlog_until, .. } = cw.backend {
+                if backlog_until > 0.0 {
+                    sim.schedule_wake(backlog_until);
+                }
+            }
+        }
+    }
+
+    let mut finished: Vec<Option<f64>> = vec![None; n];
+    let mut reported: Vec<f64> = vec![0.0; n];
+    let mut issue: Vec<Option<f64>> = vec![None; n];
+    // Resolve ready times of root nodes (dep-gated roots get a wake at
+    // their issue time; At-rooted nodes get the Sim arrival event).
+    for (i, spec) in g.nodes.iter().enumerate() {
+        match spec.ready {
+            Ready::At(t) => issue[i] = Some(t),
+            _ if spec.issue_deps.is_empty() => {
+                let r = ready_time(spec.ready, 0.0, &mut queue_free);
+                issue[i] = Some(r);
+                sim.schedule_wake(r.max(0.0));
+            }
+            _ => {}
+        }
+    }
+
+    let mut done = 0usize;
+    // Per-event scratch (reused: this loop is the sweep's hot path).
+    let mut running: Vec<bool> = vec![false; n];
+    let mut phases: Vec<Option<CommPhase>> = vec![None; n];
+    loop {
+        let now = sim.now();
+        let gemm_unfinished = g
+            .nodes
+            .iter()
+            .zip(finished.iter())
+            .any(|(s, f)| matches!(s.work, Work::Gemm(_)) && f.is_none());
+
+        // Which nodes may progress right now.
+        for (i, spec) in g.nodes.iter().enumerate() {
+            running[i] = if finished[i].is_some() {
+                false
+            } else {
+                match spec.ready {
+                    Ready::At(_) => sim.is_active(i),
+                    _ => {
+                        issue[i].is_some_and(|r| now + ISSUE_EPS >= r)
+                            && spec.serial_deps.iter().all(|&d| finished[d].is_some())
+                    }
+                }
+            };
+        }
+
+        // Per-collective phase state (CU holds, traffic-rate scale).
+        for (i, spec) in g.nodes.iter().enumerate() {
+            let Work::Comm(cw) = &spec.work else {
+                phases[i] = None;
+                continue;
+            };
+            if finished[i].is_some() {
+                phases[i] = Some(CommPhase {
+                    moving: false,
+                    is_cu: false,
+                    holds: 0,
+                    scale: 0.0,
+                });
+                continue;
+            }
+            let (is_cu, holds) = match cw.backend {
+                CommBackend::Cu {
+                    backlog_cus,
+                    overlap_cus,
+                    solo_cus,
+                    backlog_until,
+                    ..
+                } => {
+                    let h = if !running[i] {
+                        0
+                    } else if backlog_until > 0.0 && now < backlog_until && gemm_unfinished {
+                        backlog_cus
+                    } else if gemm_unfinished {
+                        overlap_cus
+                    } else {
+                        solo_cus
+                    };
+                    (true, h)
+                }
+                CommBackend::Dma { .. } => (false, 0),
+            };
+            let moving = running[i] && (!is_cu || holds > 0);
+            let scale = if !moving {
+                0.0
+            } else if is_cu {
+                cw.kernel.bw_scale(m, holds)
+            } else {
+                1.0
+            };
+            phases[i] = Some(CommPhase {
+                moving,
+                is_cu,
+                holds,
+                scale,
+            });
+        }
+        let held_cus: u32 = phases.iter().flatten().map(|p| p.holds).sum();
+
+        // Compute-node caps.
+        for (i, spec) in g.nodes.iter().enumerate() {
+            let Work::Gemm(gw) = &spec.work else { continue };
+            if finished[i].is_some() {
+                continue;
+            }
+            let g_cus = match gw.cu_policy {
+                CuPolicy::Fixed(k) => k,
+                CuPolicy::Residual => cus.saturating_sub(held_cus),
+            }
+            .max(8);
+            let t_pure = smoothmax(gw.comp.t_comp(m, g_cus), gw.mem.t_mem(m, g_cus) * gw.frac);
+            let mut pol_sum = 0.0;
+            let mut share_sum = 0.0;
+            for (j, p) in phases.iter().enumerate() {
+                let Some(p) = p else { continue };
+                if !p.moving {
+                    continue;
+                }
+                let Work::Comm(cw) = &g.nodes[j].work else { unreachable!() };
+                match gw.pen_style {
+                    PenaltyStyle::RateScaled => {
+                        share_sum += cw.share * p.scale;
+                        if p.is_cu {
+                            pol_sum += cw.pollution * p.scale;
+                        }
+                    }
+                    PenaltyStyle::Aligned(_) => {
+                        share_sum += cw.share;
+                        if p.is_cu {
+                            pol_sum += cw.pollution;
+                        }
+                    }
+                }
+            }
+            let (pol, mp) = match gw.pen_style {
+                PenaltyStyle::RateScaled => (pol_sum, m.mem_pen(share_sum)),
+                PenaltyStyle::Aligned(a) => (pol_sum * a, m.mem_pen(share_sum) * a),
+            };
+            let cap = (1.0 - pol) * (1.0 - mp) / t_pure;
+            if matches!(spec.ready, Ready::At(_)) || running[i] {
+                sim.set_cap(i, cap);
+                sim.set_demand(i, hbm, gw.mem.hbm_traffic(m, g_cus) * gw.frac);
+            } else {
+                sim.set_cap(i, 0.0);
+            }
+        }
+
+        // Collective-node caps.
+        let mut gshare_sum = 0.0;
+        let mut any_gemm_moving = false;
+        for (j, spec) in g.nodes.iter().enumerate() {
+            if let Work::Gemm(gw) = &spec.work {
+                if finished[j].is_none() && running[j] {
+                    gshare_sum += gw.share;
+                    any_gemm_moving = true;
+                }
+            }
+        }
+        for (i, spec) in g.nodes.iter().enumerate() {
+            let Work::Comm(cw) = &spec.work else { continue };
+            if finished[i].is_some() {
+                continue;
+            }
+            let Some(p) = phases[i] else { unreachable!() };
+            let (mp, pen) = match cw.pen_style {
+                PenaltyStyle::RateScaled => (
+                    m.mem_pen(gshare_sum),
+                    if any_gemm_moving { cw.co_penalty } else { 0.0 },
+                ),
+                PenaltyStyle::Aligned(a) => (
+                    m.mem_pen(gshare_sum) * a,
+                    if any_gemm_moving { cw.co_penalty * a } else { 0.0 },
+                ),
+            };
+            let cap = match cw.backend {
+                CommBackend::Dma { wire, .. } => (1.0 - mp) / wire,
+                CommBackend::Cu { wire_fixed, .. } => {
+                    if p.holds == 0 {
+                        0.0
+                    } else {
+                        let w = match wire_fixed {
+                            Some(w) => w,
+                            None => cw.kernel.t_wire_on(m, topo, p.holds),
+                        };
+                        (1.0 - pen) * (1.0 - mp) / w
+                    }
+                }
+            };
+            match spec.ready {
+                Ready::At(_) => sim.set_cap(i, cap),
+                _ => sim.set_cap(i, if running[i] { cap } else { 0.0 }),
+            }
+        }
+
+        match sim.next_event() {
+            Event::Completion(i) => {
+                finished[i] = Some(sim.now());
+                reported[i] = sim.now()
+                    + match &g.nodes[i].work {
+                        Work::Comm(cw) => cw.sync,
+                        Work::Gemm(_) => 0.0,
+                    };
+                done += 1;
+                if done == n {
+                    break;
+                }
+                // Resolve newly-unblocked dependents in ascending id
+                // order (keeps CPU-queue transactions deterministic).
+                for j in (i + 1)..n {
+                    let spec_j = &g.nodes[j];
+                    if issue[j].is_some()
+                        || spec_j.issue_deps.is_empty()
+                        || !spec_j.issue_deps.contains(&i)
+                        || !spec_j.issue_deps.iter().all(|&d| finished[d].is_some())
+                    {
+                        continue;
+                    }
+                    let t_deps = spec_j
+                        .issue_deps
+                        .iter()
+                        .fold(0.0f64, |a, &d| a.max(reported[d]));
+                    let r = ready_time(spec_j.ready, t_deps, &mut queue_free);
+                    issue[j] = Some(r);
+                    sim.schedule_wake(r.max(sim.now()));
+                }
+            }
+            Event::Idle => break,
+            _ => {}
+        }
+    }
+    if done < n {
+        return Err(Error::SimStall(StallError {
+            at: sim.now(),
+            stalled: sim.stall_report(),
+        }));
+    }
+
+    // Aggregate metrics.
+    let finish_raw: Vec<f64> = finished.iter().map(|f| f.expect("all nodes finished")).collect();
+    let issue_t: Vec<f64> = issue.iter().map(|r| r.unwrap_or(0.0).max(0.0)).collect();
+    let total = reported.iter().cloned().fold(0.0, f64::max);
+    let mut gemm_finish = 0.0f64;
+    let mut comm_finish = 0.0f64;
+    let mut gemm_iv = Vec::new();
+    let mut comm_iv = Vec::new();
+    let mut hbm_bytes = 0.0f64;
+    let mut engine_secs = 0.0f64;
+    for (i, spec) in g.nodes.iter().enumerate() {
+        match &spec.work {
+            Work::Gemm(gw) => {
+                gemm_finish = gemm_finish.max(reported[i]);
+                gemm_iv.push((issue_t[i], finish_raw[i]));
+                hbm_bytes += gw.mem.hbm_traffic(m, cus) * gw.frac;
+            }
+            Work::Comm(cw) => {
+                comm_finish = comm_finish.max(reported[i]);
+                comm_iv.push((issue_t[i], finish_raw[i]));
+                hbm_bytes += cw.hbm;
+                if let CommBackend::Dma { wire, engines } = cw.backend {
+                    engine_secs += engines * wire;
+                }
+            }
+        }
+    }
+    let gemm_u = union_intervals(gemm_iv.clone());
+    let comm_u = union_intervals(comm_iv.clone());
+    let mut all_iv = gemm_iv;
+    all_iv.extend(comm_iv);
+    let all_u = union_intervals(all_iv);
+    let exposed_comm = (measure(&comm_u) - intersect_measure(&comm_u, &gemm_u)).max(0.0);
+    let bubble = (total - measure(&all_u)).max(0.0);
+    let hbm_occupancy = if total > 0.0 {
+        (hbm_bytes / (m.hbm_bw_achievable() * total)).min(1.0)
+    } else {
+        0.0
+    };
+    let sdma_occupancy = if total > 0.0 {
+        (engine_secs / (m.sdma_engines.max(1) as f64 * total)).min(1.0)
+    } else {
+        0.0
+    };
+    Ok(GraphRun {
+        issue: issue_t,
+        finish: reported,
+        total,
+        gemm_finish,
+        comm_finish,
+        exposed_comm,
+        bubble,
+        hbm_occupancy,
+        sdma_occupancy,
+    })
+}
+
+// ---- graph builders for the legacy timelines ----
+
+/// Build the single-pair graph of one C3 scenario under a whole-kernel
+/// strategy — the pre-refactor `C3Executor` timeline as a 2-node graph.
+/// The derivations (arrivals, CU phase grants, dispatch backlog, wire
+/// times, §VII-A1 shares) are byte-for-byte the legacy executor's, so
+/// the engine reproduces its numbers exactly.
+pub fn single_pair(
+    m: &MachineConfig,
+    topo: &Topology,
+    sc: &ResolvedScenario,
+    strategy: Strategy,
+    b: Baselines,
+) -> Result<Graph, Error> {
+    let cus = m.cus_total();
+    let comm_need = sc.comm.cu_need(m);
+    let tg_iso = b.t_gemm_iso;
+
+    // Collective backend: typed failure (never a panic) when a
+    // non-offloadable collective meets a ConCCL strategy.
+    let dma = if strategy.comm_on_cus() {
+        None
+    } else {
+        Some(DmaCollective::try_new(sc.comm.spec)?)
+    };
+
+    // Arrival times: who is launched first (stream setup order).
+    let (gemm_arrival, comm_arrival) = match strategy {
+        Strategy::C3Base | Strategy::C3Rp { .. } => {
+            (m.kernel_launch_s, m.kernel_launch_s + m.coll_launch_s)
+        }
+        Strategy::C3Sp | Strategy::C3SpRp { .. } => {
+            (m.coll_launch_s + m.kernel_launch_s, m.coll_launch_s)
+        }
+        // ConCCL: CPU thread enqueues DMA commands while the GEMM
+        // launches; neither waits on the other.
+        Strategy::Conccl | Strategy::ConcclRp { .. } => {
+            let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
+            (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
+        }
+        Strategy::Serial => unreachable!("serial handled analytically"),
+        Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
+            unreachable!("chunked strategies route to the chunked graph builder")
+        }
+    };
+
+    // comm CU grant per phase: (while dispatch-backlogged, while any
+    // GEMM is unfinished, after compute drains).
+    let (comm_backlog_cus, comm_overlap_cus, comm_solo_cus) = match strategy {
+        Strategy::C3Base => (0, m.base_leak_cus.min(comm_need), comm_need),
+        Strategy::C3Sp => (comm_need, comm_need, comm_need),
+        Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
+            let k = comm_cus.min(cus / 2);
+            (k, k, k)
+        }
+        Strategy::Conccl | Strategy::ConcclRp { .. } => (0, 0, 0),
+        Strategy::Serial => unreachable!(),
+        Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => unreachable!(),
+    };
+    // Dispatch backlog applies only to c3_base (FIFO dispatch) and only
+    // when the GEMM's grid saturates the machine.
+    let backlog_until = match strategy {
+        Strategy::C3Base if sc.gemm.workgroups(m) > cus as u64 => {
+            comm_arrival + m.base_dispatch_backlog * tg_iso
+        }
+        _ => 0.0,
+    };
+    // GEMM CU policy (§VI-G: conccl_rp removes CUs only when the
+    // one-time CU-loss slowdown table predicts a cache speedup).
+    let cu_policy = match strategy {
+        Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
+            CuPolicy::Fixed(cus - comm_cus.min(cus / 2))
+        }
+        Strategy::ConcclRp { cus_removed } => {
+            let r = cus_removed.min(cus / 2);
+            if !sc.gemm.is_compute_bound(m) && sc.gemm.slowdown_with_cu_loss(m, r) < 1.0 {
+                CuPolicy::Fixed(cus - r)
+            } else {
+                CuPolicy::Fixed(cus)
+            }
+        }
+        Strategy::Conccl => CuPolicy::Fixed(cus),
+        _ => CuPolicy::Residual,
+    };
+
+    let pollution = if strategy.comm_on_cus() {
+        m.l2_pollution(sc.comm.spec.kind)
+    } else {
+        0.0
+    };
+    let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
+    let comm_hbm = match &dma {
+        Some(d) => d.hbm_traffic(m),
+        None => sc.comm.hbm_traffic(m),
+    };
+    let gemm_share = sc.gemm.hbm_share(m, cus);
+    // DMA wire duration is loop-invariant (and on multi-node topologies
+    // pricing it rebuilds the hierarchical plan) — computed once here.
+    let dma_wire = dma.as_ref().map(|d| d.wire_time_on(m, topo));
+    let comm_share = {
+        let t_wire = match dma_wire {
+            Some(wire) => wire,
+            None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
+        };
+        sc.comm.hbm_share_with_wire(m, t_wire)
+    };
+
+    let mut g = Graph::default();
+    g.push(NodeSpec {
+        label: format!("gemm:{}", sc.scenario.gemm_tag),
+        work: Work::Gemm(GemmWork {
+            comp: sc.gemm.clone(),
+            mem: sc.gemm.clone(),
+            frac: 1.0,
+            share: gemm_share,
+            cu_policy,
+            pen_style: PenaltyStyle::RateScaled,
+        }),
+        issue_deps: Vec::new(),
+        serial_deps: Vec::new(),
+        ready: Ready::At(gemm_arrival),
+    });
+    let backend = match dma_wire {
+        Some(wire) => CommBackend::Dma {
+            wire,
+            engines: engine_demand(m),
+        },
+        None => CommBackend::Cu {
+            backlog_cus: comm_backlog_cus,
+            overlap_cus: comm_overlap_cus,
+            solo_cus: comm_solo_cus,
+            backlog_until,
+            wire_fixed: None,
+        },
+    };
+    g.push(NodeSpec {
+        label: format!("comm:{}", sc.comm.spec.kind.name()),
+        work: Work::Comm(CommWork {
+            kernel: sc.comm,
+            backend,
+            hbm: comm_hbm,
+            share: comm_share,
+            pollution,
+            co_penalty,
+            sync: if dma.is_some() { m.dma_sync_s } else { 0.0 },
+            pen_style: PenaltyStyle::RateScaled,
+        }),
+        issue_deps: Vec::new(),
+        serial_deps: Vec::new(),
+        ready: Ready::At(comm_arrival),
+    });
+    Ok(g)
+}
+
+/// Build the k-chunk fine-grain pipeline graph of one C3 scenario —
+/// the pre-refactor `sched::pipeline` timeline as a 2k-node graph
+/// (GEMM chunk chain + issue-gated collective chunk chain). The
+/// derivations are the legacy pipeline's, so the engine reproduces its
+/// numbers exactly.
+pub fn chunked(
+    m: &MachineConfig,
+    topo: &Topology,
+    sc: &ResolvedScenario,
+    cu_backend: bool,
+    k: u32,
+) -> Result<Graph, Error> {
+    let cus = m.cus_total();
+    let comm_need = sc.comm.cu_need(m);
+
+    // Effective chunk count: never more chunks than the scenario
+    // supports (the executor pre-clamps; stay defensive).
+    let kk = k.max(2).min(sc.chunk_cap(m)).max(1) as usize;
+    let align = m.chunk_align(kk as u32);
+
+    let gemm_chunks: Vec<GemmKernel> = sc.gemm.split_m(m, kk as u32);
+    debug_assert_eq!(gemm_chunks.len(), kk);
+    // Memory-side chunk pricing is prorated from the whole kernel (the
+    // LLC keeps its panel working set across chunk boundaries); only
+    // the compute side re-quantizes its waves.
+    let whole_flops = sc.gemm.shape.flops();
+    let g_frac: Vec<f64> = gemm_chunks
+        .iter()
+        .map(|c| c.shape.flops() / whole_flops)
+        .collect();
+    let comm_specs: Vec<CollectiveSpec> = chunk_sizes(sc.comm.spec.size_bytes, kk as u32)
+        .into_iter()
+        .map(|s| CollectiveSpec::new(sc.comm.spec.kind, s))
+        .collect();
+
+    // Backend: typed failure (never a panic) when a non-offloadable
+    // collective meets the DMA pipeline.
+    let dma: Option<Vec<DmaCollective>> = if cu_backend {
+        None
+    } else {
+        Some(
+            comm_specs
+                .iter()
+                .map(|&s| DmaCollective::try_new(s))
+                .collect::<Result<Vec<_>, Error>>()?,
+        )
+    };
+
+    // Per-chunk wire times and HBM demands are loop-invariant.
+    let wire: Vec<f64> = match &dma {
+        Some(ds) => ds.iter().map(|d| d.wire_time_on(m, topo)).collect(),
+        None => comm_specs
+            .iter()
+            .map(|&s| CollectiveKernel::new(s).t_wire_on(m, topo, comm_need.max(1)))
+            .collect(),
+    };
+    let comm_hbm: Vec<f64> = comm_specs
+        .iter()
+        .map(|&s| CollectiveKernel::new(s).hbm_traffic(m))
+        .collect();
+
+    let gemm_share = sc.gemm.hbm_share(m, cus);
+    let comm_share = {
+        let whole_wire = match &dma {
+            Some(_) => DmaCollective::try_new(sc.comm.spec)?.wire_time_on(m, topo),
+            None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
+        };
+        sc.comm.hbm_share_with_wire(m, whole_wire)
+    };
+    let pollution = if cu_backend {
+        m.l2_pollution(sc.comm.spec.kind)
+    } else {
+        0.0
+    };
+    let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
+    let clamped_need = comm_need.min(cus / 2);
+    let dma_launch = m.num_gpus as f64 * m.dma_enqueue_s;
+
+    let mut g = Graph::default();
+    // GEMM chunk chain first (node ids 0..kk, matching the legacy task
+    // order), then the collective chunk chain (kk..2kk).
+    for (i, gk) in gemm_chunks.iter().enumerate() {
+        g.push(NodeSpec {
+            label: format!("gemm:{}", gk.tag),
+            work: Work::Gemm(GemmWork {
+                comp: gk.clone(),
+                mem: sc.gemm.clone(),
+                frac: g_frac[i],
+                share: gemm_share,
+                cu_policy: CuPolicy::Residual,
+                pen_style: PenaltyStyle::Aligned(align),
+            }),
+            issue_deps: if i == 0 { Vec::new() } else { vec![i - 1] },
+            serial_deps: Vec::new(),
+            ready: Ready::AfterDeps {
+                lag: m.kernel_launch_s,
+            },
+        });
+    }
+    for (i, &spec) in comm_specs.iter().enumerate() {
+        let backend = if cu_backend {
+            CommBackend::Cu {
+                backlog_cus: 0,
+                overlap_cus: clamped_need,
+                solo_cus: clamped_need,
+                backlog_until: 0.0,
+                wire_fixed: Some(wire[i]),
+            }
+        } else {
+            CommBackend::Dma {
+                wire: wire[i],
+                engines: engine_demand(m),
+            }
+        };
+        g.push(NodeSpec {
+            label: format!("comm:{}#{i}", spec.kind.name()),
+            work: Work::Comm(CommWork {
+                kernel: CollectiveKernel::new(spec),
+                backend,
+                hbm: comm_hbm[i],
+                share: comm_share,
+                pollution,
+                co_penalty,
+                sync: if dma.is_some() { m.dma_sync_s } else { 0.0 },
+                pen_style: PenaltyStyle::Aligned(align),
+            }),
+            issue_deps: vec![i],
+            serial_deps: if i == 0 { Vec::new() } else { vec![kk + i - 1] },
+            ready: if cu_backend {
+                Ready::AfterDeps {
+                    lag: m.coll_launch_s,
+                }
+            } else {
+                Ready::Queue {
+                    queue: 0,
+                    hold: dma_launch,
+                    post: m.dma_fetch_s,
+                }
+            },
+        });
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assert_rel_close;
+    use crate::config::workload::CollectiveKind;
+    use crate::util::units::MIB;
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    fn dma_node(m: &MachineConfig, topo: &Topology, bytes: u64, label: &str) -> NodeSpec {
+        let spec = CollectiveSpec::new(CollectiveKind::AllGather, bytes);
+        let d = DmaCollective::try_new(spec).unwrap();
+        let wire = d.wire_time_on(m, topo);
+        NodeSpec {
+            label: label.to_string(),
+            work: Work::Comm(CommWork {
+                kernel: CollectiveKernel::new(spec),
+                backend: CommBackend::Dma {
+                    wire,
+                    engines: engine_demand(m),
+                },
+                hbm: d.hbm_traffic(m),
+                share: CollectiveKernel::new(spec).hbm_share_with_wire(m, wire),
+                pollution: 0.0,
+                co_penalty: m.comm_co_penalty(spec.kind),
+                sync: 0.0,
+                pen_style: PenaltyStyle::RateScaled,
+            }),
+            issue_deps: Vec::new(),
+            serial_deps: Vec::new(),
+            ready: Ready::At(0.0),
+        }
+    }
+
+    #[test]
+    fn single_dma_collective_is_never_engine_bound() {
+        // The sdma fluid resource must not change a lone collective's
+        // time: its own rate cap binds first (min(num_gpus, engines)
+        // occupancy against the full engine pool).
+        let m = m();
+        let topo = Topology::fully_connected(m.num_gpus);
+        let spec = CollectiveSpec::new(CollectiveKind::AllGather, 896 * MIB);
+        let wire = DmaCollective::try_new(spec).unwrap().wire_time_on(&m, &topo);
+        let mut g = Graph::default();
+        g.push(dma_node(&m, &topo, 896 * MIB, "ag"));
+        let r = execute(&m, &topo, &g).unwrap();
+        assert_rel_close!(r.finish[0], wire, 1e-9);
+        // Even with fewer engines than peers the demand is clamped to
+        // the pool, so a lone collective still finishes at its wire time.
+        let mut small = m.clone();
+        small.sdma_engines = 3;
+        let mut g2 = Graph::default();
+        g2.push(dma_node(&small, &topo, 896 * MIB, "ag"));
+        let r2 = execute(&small, &topo, &g2).unwrap();
+        let wire2 = DmaCollective::try_new(spec).unwrap().wire_time_on(&small, &topo);
+        assert_rel_close!(r2.finish[0], wire2, 1e-9);
+    }
+
+    #[test]
+    fn concurrent_dma_collectives_contend_for_engines() {
+        // The satellite regression test: two concurrent DMA collectives
+        // on one GPU demand 2×8 = 16 engine-occupancy units against the
+        // machine's 14 SDMA engines, so max-min sharing slows each to
+        // 14/16 of its solo rate (finish stretches by 16/14).
+        let m = m();
+        let topo = Topology::fully_connected(m.num_gpus);
+        let spec = CollectiveSpec::new(CollectiveKind::AllGather, 896 * MIB);
+        let wire = DmaCollective::try_new(spec).unwrap().wire_time_on(&m, &topo);
+        let mut g = Graph::default();
+        g.push(dma_node(&m, &topo, 896 * MIB, "ag0"));
+        g.push(dma_node(&m, &topo, 896 * MIB, "ag1"));
+        let r = execute(&m, &topo, &g).unwrap();
+        let expect = wire * 16.0 / 14.0;
+        assert_rel_close!(r.finish[0], expect, 1e-9);
+        assert_rel_close!(r.finish[1], expect, 1e-9);
+        assert!(r.sdma_occupancy > 0.9, "both collectives near-saturate the engines");
+        // Three concurrent collectives contend harder still.
+        let mut g3 = Graph::default();
+        for i in 0..3 {
+            g3.push(dma_node(&m, &topo, 896 * MIB, &format!("ag{i}")));
+        }
+        let r3 = execute(&m, &topo, &g3).unwrap();
+        assert_rel_close!(r3.finish[0], wire * 24.0 / 14.0, 1e-9);
+    }
+
+    #[test]
+    fn queue_serializes_issue() {
+        // Two queue-issued DMA chunks at t=0: the second's ready time
+        // pays both enqueue batches on the shared CPU thread.
+        let m = m();
+        let topo = Topology::fully_connected(m.num_gpus);
+        let hold = m.num_gpus as f64 * m.dma_enqueue_s;
+        let mut g = Graph::default();
+        for i in 0..2 {
+            let mut n = dma_node(&m, &topo, 64 * MIB, &format!("c{i}"));
+            n.ready = Ready::Queue {
+                queue: 0,
+                hold,
+                post: m.dma_fetch_s,
+            };
+            g.push(n);
+        }
+        let r = execute(&m, &topo, &g).unwrap();
+        assert_rel_close!(r.issue[0], hold + m.dma_fetch_s, 1e-12);
+        assert_rel_close!(r.issue[1], 2.0 * hold + m.dma_fetch_s, 1e-12);
+        assert!(r.finish[1] > r.finish[0]);
+    }
+
+    #[test]
+    fn unsatisfiable_node_is_a_typed_stall() {
+        // A CU collective with zero CU grants in every phase can never
+        // progress: the engine surfaces Error::SimStall, never a panic.
+        let m = m();
+        let topo = Topology::fully_connected(m.num_gpus);
+        let spec = CollectiveSpec::new(CollectiveKind::AllGather, MIB);
+        let mut g = Graph::default();
+        g.push(NodeSpec {
+            label: "starved".into(),
+            work: Work::Comm(CommWork {
+                kernel: CollectiveKernel::new(spec),
+                backend: CommBackend::Cu {
+                    backlog_cus: 0,
+                    overlap_cus: 0,
+                    solo_cus: 0,
+                    backlog_until: 0.0,
+                    wire_fixed: None,
+                },
+                hbm: 0.0,
+                share: 0.0,
+                pollution: 0.0,
+                co_penalty: 0.0,
+                sync: 0.0,
+                pen_style: PenaltyStyle::RateScaled,
+            }),
+            issue_deps: Vec::new(),
+            serial_deps: Vec::new(),
+            ready: Ready::At(0.0),
+        });
+        let err = execute(&m, &topo, &g).unwrap_err();
+        assert!(matches!(err, Error::SimStall(_)), "{err}");
+    }
+
+    #[test]
+    fn interval_helpers_measure_correctly() {
+        let u = union_intervals(vec![(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]);
+        assert_eq!(u, vec![(0.0, 2.0), (3.0, 4.0)]);
+        assert!((measure(&u) - 3.0).abs() < 1e-12);
+        let a = union_intervals(vec![(0.0, 2.0)]);
+        let b = union_intervals(vec![(1.0, 3.0)]);
+        assert!((intersect_measure(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

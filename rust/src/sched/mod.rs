@@ -1,11 +1,14 @@
-//! The C3 scheduler: strategies (§IV-C, §V, §VI), the executor that
-//! produces concurrent timelines over the fluid simulator, and the
-//! fine-grain chunked pipeline (arXiv 2512.10236 / DMA-Latte).
+//! The C3 scheduler: strategies (§IV-C, §V, §VI), the workload-graph
+//! engine that produces concurrent timelines over the fluid simulator,
+//! and the executor / fine-grain chunked pipeline builders on top of it
+//! (arXiv 2512.10236 / DMA-Latte).
 
 pub mod executor;
+pub mod graph;
 pub mod pipeline;
 pub mod strategy;
 
 pub use executor::{Baselines, C3Executor, C3Run};
+pub use graph::{Graph, GraphRun, NodeSpec, Ready, Work};
 pub use pipeline::chunk_sizes;
 pub use strategy::{Strategy, StrategyKind};

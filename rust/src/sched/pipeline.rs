@@ -3,41 +3,28 @@
 //! Compute Communication Overlap", priced against DMA-Latte's
 //! per-packet launch costs).
 //!
-//! The whole-kernel strategies overlap one GEMM with one collective for
-//! their entire lifetimes, so both kernels pay the §VII-A1 *residual*
-//! memory-subsystem interference (`mem_interference_*`,
-//! `comm_co_penalty_*`, `gemm_l2_pollution_*`) throughout the overlap
-//! window. The chunked pipeline instead splits the GEMM into `k` tiled
-//! sub-kernels ([`GemmKernel::split_m`]) and the collective into `k`
-//! chunk transfers, and issues collective chunk `i` at GEMM chunk `i`'s
-//! completion — so it overlaps GEMM chunk `i+1` and rides the GEMM's
-//! inter-chunk HBM gaps instead of colliding with its panel-streaming
-//! bursts. Granularity buys interference relief (the surviving penalty
-//! is `MachineConfig::chunk_align(k)` of the whole-kernel value) and
-//! costs launches:
+//! The chunked pipeline splits the GEMM into `k` tiled sub-kernels
+//! ([`crate::kernels::GemmKernel::split_m`]) and the collective into
+//! `k` chunk transfers, and issues collective chunk `i` at GEMM chunk
+//! `i`'s completion — so it overlaps GEMM chunk `i+1` and rides the
+//! GEMM's inter-chunk HBM gaps instead of colliding with its
+//! panel-streaming bursts. Granularity buys interference relief (the
+//! surviving penalty is `MachineConfig::chunk_align(k)` of the
+//! whole-kernel value) and costs launches: every GEMM chunk pays
+//! `kernel_launch_s` plus wave quantization; every DMA chunk is a fresh
+//! `CommandPacket` batch serialized on the CPU enqueue thread (so small
+//! chunks go *latency-bound* exactly as DMA-Latte reports); CU-backend
+//! chunks pay `coll_launch_s` each.
 //!
-//! * every GEMM chunk pays `kernel_launch_s` plus wave quantization of
-//!   its sub-grid;
-//! * every DMA chunk is a fresh `CommandPacket` batch: the CPU thread
-//!   serializes `num_gpus · dma_enqueue_s` per chunk (and the engine
-//!   `dma_fetch_s`), so small chunks go *latency-bound* exactly as
-//!   DMA-Latte reports — naive chunking collapses below a few MiB;
-//! * CU-backend chunks pay `coll_launch_s` each.
-//!
-//! `chunks == 1` is defined as the whole-kernel strategy itself (there
-//! is no pipeline with a single chunk; the executor delegates to
-//! `c3_sp` / `conccl` exactly), which makes the swept/auto chunk count
-//! *never worse* than the unchunked strategy by construction. The
-//! timeline runs on the same fluid simulator as the whole-kernel
-//! executor — one task per chunk, caps recomputed at every event.
+//! The hand-built pipeline simulator that used to live here was folded
+//! into the workload-graph engine: `simulate_chunked` now builds the
+//! 2k-node chunk graph ([`super::graph::chunked`]) and runs it on
+//! [`super::graph::execute`]. `chunks == 1` is still defined as the
+//! whole-kernel strategy itself (the executor delegates to `c3_sp` /
+//! `conccl` exactly), which keeps the swept/auto chunk count never
+//! worse than the unchunked strategy by construction.
 
-use crate::conccl::DmaCollective;
-use crate::config::machine::smoothmax;
-use crate::config::workload::CollectiveSpec;
 use crate::error::Error;
-use crate::kernels::{CollectiveKernel, GemmKernel};
-use crate::sim::fluid::StallError;
-use crate::sim::{Event, Sim, TaskSpec};
 use crate::workload::ResolvedScenario;
 
 use super::executor::C3Executor;
@@ -61,237 +48,17 @@ pub(crate) fn simulate_chunked(
     cu_backend: bool,
     k: u32,
 ) -> Result<(f64, f64, f64), Error> {
-    let m = &exec.m;
-    let topo = &exec.topo;
-    let cus = m.cus_total();
-    let comm_need = sc.comm.cu_need(m);
-
-    // Effective chunk count: never more chunks than the scenario
-    // supports (the executor pre-clamps; stay defensive — same shared
-    // clamp, `ResolvedScenario::chunk_cap`).
-    let kk = k.max(2).min(sc.chunk_cap(m)).max(1) as usize;
-    let align = m.chunk_align(kk as u32);
-
-    let gemm_chunks: Vec<GemmKernel> = sc.gemm.split_m(m, kk as u32);
-    debug_assert_eq!(gemm_chunks.len(), kk);
-    // Memory-side chunk pricing is *prorated* from the whole kernel:
-    // the LLC keeps its panel working set across chunk boundaries (the
-    // hardware does not flush between back-to-back sub-kernels), so
-    // re-evaluating the traffic model on each sub-shape would charge
-    // every chunk a full B-panel re-stream that never happens. Only the
-    // compute side re-quantizes (partial waves per sub-grid cost full
-    // waves — the genuine dispatch price of chunking).
-    let whole_flops = sc.gemm.shape.flops();
-    let g_frac: Vec<f64> = gemm_chunks
-        .iter()
-        .map(|c| c.shape.flops() / whole_flops)
-        .collect();
-    let comm_specs: Vec<CollectiveSpec> = chunk_sizes(sc.comm.spec.size_bytes, kk as u32)
-        .into_iter()
-        .map(|s| CollectiveSpec::new(sc.comm.spec.kind, s))
-        .collect();
-
-    // Backend: typed failure (never a panic) when a non-offloadable
-    // collective meets the DMA pipeline.
-    let dma: Option<Vec<DmaCollective>> = if cu_backend {
-        None
-    } else {
-        Some(
-            comm_specs
-                .iter()
-                .map(|&s| DmaCollective::try_new(s))
-                .collect::<Result<Vec<_>, Error>>()?,
-        )
-    };
-
-    // Per-chunk wire times and HBM demands are loop-invariant.
-    let wire: Vec<f64> = match &dma {
-        Some(ds) => ds.iter().map(|d| d.wire_time_on(m, topo)).collect(),
-        None => comm_specs
-            .iter()
-            .map(|&s| CollectiveKernel::new(s).t_wire_on(m, topo, comm_need.max(1)))
-            .collect(),
-    };
-    let comm_hbm: Vec<f64> = comm_specs
-        .iter()
-        .map(|&s| CollectiveKernel::new(s).hbm_traffic(m))
-        .collect();
-
-    // Whole-kernel §VII-A1 bandwidth shares and penalty terms (the
-    // shared derivations on `GemmKernel`/`CollectiveKernel`/
-    // `MachineConfig` — identical to the whole-kernel executor, so the
-    // two simulators cannot drift apart; the share is a rate fraction,
-    // which chunking does not change).
-    let mem_pen = |other_share: f64| m.mem_pen(other_share);
-    let gemm_share = sc.gemm.hbm_share(m, cus);
-    let comm_share = {
-        let whole_wire = match &dma {
-            Some(_) => DmaCollective::try_new(sc.comm.spec)?.wire_time_on(m, topo),
-            None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
-        };
-        sc.comm.hbm_share_with_wire(m, whole_wire)
-    };
-    let pollution = if cu_backend {
-        m.l2_pollution(sc.comm.spec.kind)
-    } else {
-        0.0
-    };
-    let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
-
-    // Per-chunk issue costs. The DMA CPU enqueue thread serializes
-    // across chunks (`cpu_free` chain) — DMA-Latte's collapse mechanism;
-    // CU chunk launches are stream-ordered behind the matching GEMM
-    // chunk instead.
-    let dma_launch = m.num_gpus as f64 * m.dma_enqueue_s;
-
-    let mut sim = Sim::new();
-    let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
-    let g_tasks: Vec<usize> = gemm_chunks
-        .iter()
-        .enumerate()
-        .map(|(i, gk)| {
-            sim.add_task(TaskSpec {
-                name: format!("gemm:{}", gk.tag),
-                arrival: 0.0,
-                work: 1.0,
-                demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus) * g_frac[i])],
-                cap: 0.0,
-            })
-        })
-        .collect();
-    let c_tasks: Vec<usize> = comm_specs
-        .iter()
-        .enumerate()
-        .map(|(i, s)| {
-            sim.add_task(TaskSpec {
-                name: format!("comm:{}#{i}", s.kind.name()),
-                arrival: 0.0,
-                work: 1.0,
-                demands: vec![(hbm, comm_hbm[i])],
-                cap: 0.0,
-            })
-        })
-        .collect();
-
-    // Chain state: finish times and issue-ready times per chunk.
-    let mut g_fin: Vec<Option<f64>> = vec![None; kk];
-    let mut c_fin: Vec<Option<f64>> = vec![None; kk];
-    let mut g_ready: Vec<f64> = vec![f64::INFINITY; kk];
-    let mut c_ready: Vec<f64> = vec![f64::INFINITY; kk];
-    g_ready[0] = m.kernel_launch_s;
-    sim.schedule_wake(g_ready[0]);
-    let mut cpu_free = 0.0f64; // DMA enqueue-thread clock
-    let mut g_done = 0usize;
-    let mut c_done = 0usize;
-
-    loop {
-        let now = sim.now();
-        let eps = 1e-18;
-        let gemm_running = g_done < kk && now + eps >= g_ready[g_done];
-        let comm_running = c_done < kk && now + eps >= c_ready[c_done];
-
-        if g_done < kk {
-            let gi = g_done;
-            let g_cus = if cu_backend && comm_running {
-                cus - comm_need.min(cus / 2)
-            } else {
-                cus
-            }
-            .max(8);
-            let chunk = &gemm_chunks[gi];
-            let t_pure = smoothmax(
-                chunk.t_comp(m, g_cus),
-                sc.gemm.t_mem(m, g_cus) * g_frac[gi],
-            );
-            let pol = if cu_backend && comm_running {
-                pollution * align
-            } else {
-                0.0
-            };
-            let mp = if comm_running {
-                mem_pen(comm_share) * align
-            } else {
-                0.0
-            };
-            let cap = if gemm_running {
-                (1.0 - pol) * (1.0 - mp) / t_pure
-            } else {
-                0.0
-            };
-            sim.set_cap(g_tasks[gi], cap);
-            sim.set_demand(g_tasks[gi], hbm, sc.gemm.hbm_traffic(m, g_cus) * g_frac[gi]);
-        }
-        if c_done < kk {
-            let ci = c_done;
-            let mp = if gemm_running {
-                mem_pen(gemm_share) * align
-            } else {
-                0.0
-            };
-            let cap = if !comm_running {
-                0.0
-            } else if cu_backend {
-                let pen = if gemm_running { co_penalty * align } else { 0.0 };
-                (1.0 - pen) * (1.0 - mp) / wire[ci]
-            } else {
-                (1.0 - mp) / wire[ci]
-            };
-            sim.set_cap(c_tasks[ci], cap);
-        }
-
-        match sim.next_event() {
-            Event::Completion(t) => {
-                if g_done < kk && t == g_tasks[g_done] {
-                    let fin = sim.now();
-                    g_fin[g_done] = Some(fin);
-                    // Issue the matching collective chunk.
-                    let ci = g_done;
-                    c_ready[ci] = if cu_backend {
-                        fin + m.coll_launch_s
-                    } else {
-                        // CPU enqueue chain: n packets per chunk,
-                        // serialized on the orchestration thread, then
-                        // the engine fetch.
-                        let start = cpu_free.max(fin);
-                        cpu_free = start + dma_launch;
-                        cpu_free + m.dma_fetch_s
-                    };
-                    sim.schedule_wake(c_ready[ci].max(fin));
-                    g_done += 1;
-                    // Launch the next GEMM chunk.
-                    if g_done < kk {
-                        g_ready[g_done] = fin + m.kernel_launch_s;
-                        sim.schedule_wake(g_ready[g_done]);
-                    }
-                } else if c_done < kk && t == c_tasks[c_done] {
-                    c_fin[c_done] = Some(sim.now());
-                    c_done += 1;
-                }
-            }
-            Event::Idle => break,
-            _ => {}
-        }
-        if g_done == kk && c_done == kk {
-            break;
-        }
-    }
-    if g_done < kk || c_done < kk {
-        return Err(Error::SimStall(StallError {
-            at: sim.now(),
-            stalled: sim.stall_report(),
-        }));
-    }
-    let gemm_finish = g_fin[kk - 1].expect("all gemm chunks finished");
-    let sync = if dma.is_some() { m.dma_sync_s } else { 0.0 };
-    let comm_finish = c_fin[kk - 1].expect("all comm chunks finished") + sync;
-    Ok((gemm_finish.max(comm_finish), gemm_finish, comm_finish))
+    let g = super::graph::chunked(&exec.m, &exec.topo, sc, cu_backend, k)?;
+    let run = super::graph::execute(&exec.m, &exec.topo, &g)?;
+    Ok((run.total, run.gemm_finish, run.comm_finish))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::machine::MachineConfig;
-    use crate::config::workload::CollectiveKind;
+    use crate::config::workload::{CollectiveKind, CollectiveSpec};
+    use crate::kernels::CollectiveKernel;
     use crate::sched::Strategy;
     use crate::util::units::MIB;
     use crate::workload::scenarios::resolve_tag;

@@ -220,14 +220,17 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
 
 /// One measured matrix point extracted from a report:
 /// `machine/nodes/chunking/tag/collective/strategy` → median speedup
-/// (the chunking segment is present from schema v3 on).
+/// (the chunking segment is present from schema v3 on), or an
+/// end-to-end workload point `machine/nodes/wl=<label>/<family>` →
+/// speedup (schema v4's `workloads[]` section).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchPoint {
     pub key: String,
     pub speedup_median: f64,
 }
 
-/// Flatten a sweep report (schema version 1, 2 or 3) into bench points.
+/// Flatten a sweep report (schema version 1 through 4) into bench
+/// points.
 pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
     let machines = report
         .get("machines")
@@ -280,6 +283,25 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
                                     key: format!(
                                         "{label}/{nodes}n{chunk_seg}/{tag}/{coll}/{name}"
                                     ),
+                                    speedup_median: sp,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            // Schema v4: end-to-end workload points under the topology.
+            if let Some(wls) = t.get("workloads").and_then(Json::as_arr) {
+                for w in wls {
+                    let wl = w.get("label").and_then(Json::as_str).unwrap_or("?");
+                    let Some(Json::Obj(families)) = w.get("families") else {
+                        continue;
+                    };
+                    for (fam, v) in families {
+                        if let Some(sp) = v.get("speedup").and_then(Json::as_num) {
+                            if sp.is_finite() {
+                                out.push(BenchPoint {
+                                    key: format!("{label}/{nodes}n/wl={wl}/{fam}"),
                                     speedup_median: sp,
                                 });
                             }
@@ -550,16 +572,17 @@ mod tests {
         // The committed BENCH_baseline.json must (a) be a *seeded*
         // baseline — `--strict` in the perf-gate job fails otherwise —
         // and (b) pass the gate against a fresh run of the exact CI
-        // sweep matrix, so the workflow is green by construction until
-        // a real regression lands.
+        // sweep matrix (pair points + the e2e workload axis), so the
+        // workflow is green by construction until a real regression
+        // lands.
         let text = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_baseline.json"));
         let baseline = parse_json(text).unwrap();
         assert!(is_seeded(&baseline), "committed baseline must be seeded");
         let base_points = extract_points(&baseline).unwrap();
-        assert_eq!(base_points.len(), 144, "CI matrix coverage changed");
+        assert_eq!(base_points.len(), 162, "CI matrix coverage changed");
 
         // The CI perf-gate sweep, exactly as .github/workflows/ci.yml
-        // runs it (jitter 0, seed 24301, --chunks auto).
+        // runs it (jitter 0, seed 24301, --chunks auto, --e2e axis).
         let machines = vec![MachineVariant::base(MachineConfig::mi300x())];
         let kinds = [CollectiveKind::AllGather, CollectiveKind::AllToAll];
         let cfg = RunnerConfig {
@@ -575,11 +598,51 @@ mod tests {
             cfg,
         )
         .and_then(|p| p.with_node_counts(vec![1, 2, 4]))
+        .and_then(|p| {
+            p.with_e2e(vec![
+                crate::workload::e2e::E2eSpec::parse("fsdp_step:70b:2:2").unwrap(),
+                crate::workload::e2e::E2eSpec::parse("tp_chain:70b:2").unwrap(),
+            ])
+        })
         .unwrap();
         let report = parse_json(&execute(plan, 2).to_json()).unwrap();
         let g = gate(&baseline, &report, 0.02).unwrap();
         assert!(g.passed(), "{}", g.render(0.02));
-        assert_eq!(g.compared, 144);
+        assert_eq!(g.compared, 162);
+    }
+
+    #[test]
+    fn v4_workload_points_extract_and_gate() {
+        use crate::workload::e2e::E2eSpec;
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_e2e(vec![E2eSpec::parse("tp_chain:70b:2").unwrap()])
+        .unwrap();
+        let report = parse_json(&execute(plan, 1).to_json()).unwrap();
+        let points = extract_points(&report).unwrap();
+        // 1 pair point + 3 workload families.
+        assert_eq!(points.len(), 4);
+        let wl: Vec<&BenchPoint> =
+            points.iter().filter(|p| p.key.contains("/wl=")).collect();
+        assert_eq!(wl.len(), 3);
+        assert!(wl
+            .iter()
+            .any(|p| p.key == "mi300x-8/1n/wl=tp_chain-70b-l2-d2/dma_overlap"));
+        // Gate against itself: green.
+        assert!(gate(&report, &report, 0.02).unwrap().passed());
+        // Inflated workload floor regresses.
+        let inflated = parse_json(
+            "{\"version\":4,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[\
+             {\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\",\"scenarios\":[]}],\
+             \"workloads\":[{\"label\":\"tp_chain-70b-l2-d2\",\"families\":{\
+             \"dma_overlap\":{\"speedup\":99.0}}}]}]}]}",
+        )
+        .unwrap();
+        assert!(!gate(&inflated, &report, 0.02).unwrap().passed());
     }
 
     #[test]

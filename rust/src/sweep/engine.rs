@@ -17,6 +17,7 @@ use crate::coordinator::runner::{measure_run, Measured, RunnerConfig, ScenarioOu
 use crate::error::Error;
 use crate::sched::{Baselines, C3Executor, C3Run, Strategy, StrategyKind};
 use crate::util::rng::Rng;
+use crate::workload::e2e::{run_e2e, E2eFamily, E2eRun};
 use crate::workload::scenarios::ResolvedScenario;
 
 use super::plan::{ChunkSel, MachineVariant, SweepJob, SweepPlan};
@@ -34,6 +35,18 @@ pub struct JobOutput {
     pub result: Result<Measured, Error>,
 }
 
+/// The result of one end-to-end workload point: a graph run of one
+/// `E2eSpec` under one family on one (machine, node-count).
+#[derive(Debug, Clone)]
+pub struct E2eOutput {
+    pub machine_idx: usize,
+    pub node_idx: usize,
+    /// Index into [`SweepPlan::e2e`].
+    pub spec_idx: usize,
+    pub family: E2eFamily,
+    pub result: Result<E2eRun, Error>,
+}
+
 /// All outputs of one sweep, with enough plan context to aggregate and
 /// serialize them.
 #[derive(Debug, Clone)]
@@ -41,6 +54,10 @@ pub struct SweepResults {
     pub plan: SweepPlan,
     /// Outputs sorted by job id (dense: `outputs[id].job.id == id`).
     pub outputs: Vec<JobOutput>,
+    /// End-to-end workload-axis outputs, in
+    /// machine → node-count → spec → family order (empty unless the
+    /// plan carries an e2e axis).
+    pub e2e_outputs: Vec<E2eOutput>,
     /// Memoized baselines, `[machine_idx][node_idx][scenario_idx]`.
     pub baselines: Vec<Vec<Vec<Baselines>>>,
     /// Worker threads actually used.
@@ -113,9 +130,33 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
         v.sort_by_key(|o| o.job.id);
         v
     };
+    // End-to-end workload axis: deterministic graph runs (no
+    // measurement protocol — the graph engine is noise-free), a few
+    // points per sweep, evaluated inline after the pair matrix.
+    let mut e2e_outputs = Vec::with_capacity(
+        plan.machines.len() * plan.node_counts.len() * plan.e2e.len() * E2eFamily::lineup().len(),
+    );
+    for (mi, mv) in plan.machines.iter().enumerate() {
+        for (ni, &nodes) in plan.node_counts.iter().enumerate() {
+            let topo = mv.machine.topology(nodes);
+            for (si, spec) in plan.e2e.iter().enumerate() {
+                let trace = spec.trace();
+                for family in E2eFamily::lineup() {
+                    e2e_outputs.push(E2eOutput {
+                        machine_idx: mi,
+                        node_idx: ni,
+                        spec_idx: si,
+                        family,
+                        result: run_e2e(&mv.machine, &topo, &trace, spec.depth, family),
+                    });
+                }
+            }
+        }
+    }
     SweepResults {
         plan,
         outputs,
+        e2e_outputs,
         baselines,
         threads_used: n_threads,
     }
@@ -212,6 +253,23 @@ impl SweepResults {
         let ki = self.plan.strategies.iter().position(|&k| k == kind)?;
         self.outputs
             .get(self.plan.job_id(machine_idx, node_idx, chunk_idx, scenario_idx, ki))
+    }
+
+    /// End-to-end outputs of one (machine, node-count, spec) point, in
+    /// family-lineup order — the one selection predicate every consumer
+    /// (tables, JSON) routes through.
+    pub fn e2e_point(
+        &self,
+        machine_idx: usize,
+        node_idx: usize,
+        spec_idx: usize,
+    ) -> Vec<&E2eOutput> {
+        self.e2e_outputs
+            .iter()
+            .filter(|o| {
+                o.machine_idx == machine_idx && o.node_idx == node_idx && o.spec_idx == spec_idx
+            })
+            .collect()
     }
 
     /// Job errors, flattened for reporting.
@@ -432,6 +490,42 @@ mod tests {
             total(0, 1, StrategyKind::ConcclChunked)
                 <= total(0, 1, StrategyKind::Conccl) + 1e-12
         );
+    }
+
+    #[test]
+    fn e2e_axis_runs_per_machine_and_topology() {
+        use crate::workload::e2e::E2eSpec;
+        let m = MachineConfig::mi300x();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap()
+        .with_e2e(vec![E2eSpec::parse("fsdp_forward:70b:2:2").unwrap()])
+        .unwrap();
+        let res = execute(plan, 1);
+        // 1 machine × 2 node counts × 1 spec × 3 families.
+        assert_eq!(res.e2e_outputs.len(), 6);
+        assert!(res.e2e_outputs.iter().all(|o| o.result.is_ok()));
+        let at1 = res.e2e_point(0, 0, 0);
+        assert_eq!(at1.len(), 3);
+        let get = |ni: usize, f: E2eFamily| {
+            res.e2e_point(0, ni, 0)
+                .into_iter()
+                .find(|o| o.family == f)
+                .unwrap()
+                .result
+                .clone()
+                .unwrap()
+        };
+        // Serial is the identity; DMA overlap beats it on one node.
+        assert!((get(0, E2eFamily::Serial).speedup - 1.0).abs() < 1e-12);
+        assert!(get(0, E2eFamily::DmaOverlap).speedup > 1.0);
+        // The NIC lengthens the 2-node step.
+        assert!(get(1, E2eFamily::DmaOverlap).total > get(0, E2eFamily::DmaOverlap).total);
     }
 
     #[test]

@@ -54,11 +54,14 @@ impl SweepResults {
     /// contract; the schema is versioned for downstream tooling
     /// (version 2 added the per-machine `topologies` nesting for the
     /// node-count axis; version 3 nests `chunkings` under each topology
-    /// for the chunk-count axis and records per-strategy `chunks`).
+    /// for the chunk-count axis and records per-strategy `chunks`;
+    /// version 4 adds the per-topology `workloads[]` section for the
+    /// end-to-end graph workload axis — present only when the plan
+    /// carries e2e specs, so pairwise-only reports keep their shape).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":3,");
+        s.push_str("{\"version\":4,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -185,7 +188,61 @@ impl SweepResults {
                     }
                     s.push('}');
                 }
-                s.push_str("]}");
+                s.push(']');
+                // End-to-end workload axis (schema v4): graph-engine
+                // metrics per spec × family, nested under the topology.
+                if !self.plan.e2e.is_empty() {
+                    s.push_str(",\"workloads\":[");
+                    for (si, spec) in self.plan.e2e.iter().enumerate() {
+                        if si > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(
+                            s,
+                            "{{\"name\":\"{}\",\"model\":\"{}\",\"layers\":{},\"depth\":{},\
+                             \"label\":\"{}\",\"families\":{{",
+                            spec.kind.name(),
+                            spec.model_tag,
+                            spec.layers,
+                            spec.depth,
+                            escape(&spec.label())
+                        );
+                        let mut first = true;
+                        for out in self.e2e_point(mi, ni, si) {
+                            if !first {
+                                s.push(',');
+                            }
+                            first = false;
+                            let _ = write!(s, "\"{}\":", out.family.name());
+                            match &out.result {
+                                Ok(r) => {
+                                    let _ = write!(
+                                        s,
+                                        "{{\"total_s\":{},\"serial_s\":{},\"speedup\":{},\
+                                         \"exposed_comm_s\":{},\"bubble_s\":{},\
+                                         \"hbm_occupancy\":{},\"sdma_occupancy\":{},\
+                                         \"graph_nodes\":{}}}",
+                                        num(r.total),
+                                        num(r.serial),
+                                        num(r.speedup),
+                                        num(r.exposed_comm),
+                                        num(r.bubble),
+                                        num(r.hbm_occupancy),
+                                        num(r.sdma_occupancy),
+                                        r.graph_nodes
+                                    );
+                                }
+                                Err(e) => {
+                                    let _ =
+                                        write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
+                                }
+                            }
+                        }
+                        s.push_str("}}");
+                    }
+                    s.push(']');
+                }
+                s.push('}');
             }
             s.push_str("]}");
         }
@@ -223,8 +280,10 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":3,"));
+        assert!(j.starts_with("{\"version\":4,"));
         assert!(j.contains("\"topologies\":[{\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\","));
+        // No e2e axis -> no workloads section (pairwise shape kept).
+        assert!(!j.contains("\"workloads\""));
         assert!(j.contains("\"tag\":\"mb1_896M\""));
         assert!(j.contains("\"conccl\":{\"total_s\":"));
         assert!(j.contains("\"collective\":\"all-gather\""));
@@ -270,6 +329,35 @@ mod tests {
         assert!(j.contains("{\"nodes\":2,"));
         let open = j.matches('{').count();
         assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
+    }
+
+    #[test]
+    fn e2e_workloads_nest_per_topology() {
+        use crate::workload::e2e::E2eSpec;
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap()
+        .with_e2e(vec![E2eSpec::parse("fsdp_step:70b:2:2").unwrap()])
+        .unwrap();
+        let j = execute(plan, 1).to_json();
+        assert!(j.starts_with("{\"version\":4,"));
+        assert_eq!(j.matches("\"workloads\":[").count(), 2, "one per topology");
+        assert!(j.contains("\"name\":\"fsdp_step\",\"model\":\"70b\",\"layers\":2,\"depth\":2"));
+        assert!(j.contains("\"label\":\"fsdp_step-70b-l2-d2\""));
+        for fam in ["serial", "cu_overlap", "dma_overlap"] {
+            assert!(j.contains(&format!("\"{fam}\":{{\"total_s\":")), "{fam}");
+        }
+        assert!(j.contains("\"exposed_comm_s\":"));
+        assert!(j.contains("\"sdma_occupancy\":"));
+        let open = j.matches('{').count();
+        assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
+        // Still parseable by our own reader.
+        assert!(crate::sweep::parse_json(&j).is_ok());
     }
 
     #[test]

@@ -35,5 +35,7 @@ pub mod json;
 pub mod plan;
 
 pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
-pub use engine::{default_threads, execute, outcome_lineup, suite_outcomes, JobOutput, SweepResults};
+pub use engine::{
+    default_threads, execute, outcome_lineup, suite_outcomes, E2eOutput, JobOutput, SweepResults,
+};
 pub use plan::{job_seed, parse_variants, ChunkSel, MachineVariant, SweepJob, SweepPlan};

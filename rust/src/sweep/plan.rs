@@ -13,6 +13,7 @@ use crate::coordinator::runner::RunnerConfig;
 use crate::error::Error;
 use crate::sched::StrategyKind;
 use crate::util::rng::SplitMix64;
+use crate::workload::e2e::E2eSpec;
 use crate::workload::scenarios::{self, ResolvedScenario, TABLE2};
 
 /// One machine configuration under evaluation, with a report label.
@@ -147,6 +148,12 @@ pub struct SweepPlan {
     /// Chunk-count axis for the chunked pipeline strategies (default
     /// one `Auto` entry: the per-scenario swept-best chunk count).
     pub chunk_counts: Vec<ChunkSel>,
+    /// End-to-end workload axis: every entry is evaluated per
+    /// (machine, node-count) under the three e2e families
+    /// (serial / cu_overlap / dma_overlap) on the workload-graph
+    /// engine, alongside — not multiplying — the pairwise matrix.
+    /// Empty by default (pairwise sweeps only).
+    pub e2e: Vec<E2eSpec>,
     pub scenarios: Vec<ResolvedScenario>,
     pub strategies: Vec<StrategyKind>,
     pub cfg: RunnerConfig,
@@ -164,10 +171,26 @@ impl SweepPlan {
             machines,
             node_counts: vec![1],
             chunk_counts: vec![ChunkSel::Auto],
+            e2e: Vec::new(),
             scenarios,
             strategies,
             cfg,
         }
+    }
+
+    /// Replace the end-to-end workload axis. Rejects duplicate specs
+    /// (duplicate labels would alias JSON entries and gate keys).
+    pub fn with_e2e(mut self, specs: Vec<E2eSpec>) -> Result<SweepPlan, Error> {
+        for (i, s) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|p| p.label() == s.label()) {
+                return Err(Error::Config(format!(
+                    "duplicate e2e workload '{}'",
+                    s.label()
+                )));
+            }
+        }
+        self.e2e = specs;
+        Ok(self)
     }
 
     /// Replace the node-count axis. Rejects empty lists, zero counts
@@ -466,6 +489,25 @@ mod tests {
         assert!(base.clone().with_node_counts(vec![]).is_err());
         assert!(base.clone().with_node_counts(vec![0]).is_err());
         assert!(base.with_node_counts(vec![2, 2]).is_err());
+    }
+
+    #[test]
+    fn e2e_axis_validates_and_rides_alongside() {
+        let p = SweepPlan::table2(MachineConfig::mi300x(), cfg())
+            .with_e2e(vec![
+                E2eSpec::parse("fsdp_step:70b:2:2").unwrap(),
+                E2eSpec::parse("tp_chain:70b:2").unwrap(),
+            ])
+            .unwrap();
+        // The e2e axis does not multiply the pairwise job matrix.
+        assert_eq!(p.job_count(), 270);
+        assert_eq!(p.e2e.len(), 2);
+        // Duplicate labels are rejected.
+        let dup = SweepPlan::table2(MachineConfig::mi300x(), cfg()).with_e2e(vec![
+            E2eSpec::parse("tp_chain:70b:2").unwrap(),
+            E2eSpec::parse("tp_chain:70b:2:2").unwrap(),
+        ]);
+        assert!(dup.is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Workload generation: LLaMA-derived GEMMs (Table I), the C3 scenario
 //! suite (Table II), and the taxonomy engine (§III).
 
+pub mod e2e;
 pub mod llama;
 pub mod scenarios;
 pub mod taxonomy;

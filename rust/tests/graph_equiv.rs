@@ -1,0 +1,562 @@
+//! Equivalence suite for the workload-graph refactor: the graph-built
+//! single-pair and chunked timelines must reproduce the pre-refactor
+//! executor/pipeline numbers to ≤1e-9 relative on every Table II
+//! scenario × strategy × 1/2/4-node topology.
+//!
+//! The `reference` module below is a *frozen verbatim copy* of the
+//! hand-built timelines the refactor deleted from production code
+//! (`sched/executor.rs::simulate` and `sched/pipeline.rs::
+//! simulate_chunked` as of the pre-graph commit), kept here — and only
+//! here — so behavior preservation stays provable, not just asserted
+//! once. If the graph engine and this reference ever disagree, the
+//! refactor broke semantics; if a deliberate model change lands, update
+//! the reference copy alongside it.
+
+use conccl::config::machine::MachineConfig;
+use conccl::config::workload::CollectiveKind;
+use conccl::error::Error;
+use conccl::sched::{Baselines, C3Executor, Strategy};
+use conccl::workload::scenarios::{resolve, TABLE2};
+
+/// Frozen pre-refactor timeline implementations (public-API port of the
+/// deleted private functions; every formula and event-loop decision is
+/// unchanged).
+mod reference {
+    use conccl::conccl::DmaCollective;
+    use conccl::config::machine::{smoothmax, MachineConfig};
+    use conccl::config::workload::CollectiveSpec;
+    use conccl::error::Error;
+    use conccl::fabric::Topology;
+    use conccl::kernels::{CollectiveKernel, GemmKernel};
+    use conccl::sched::{chunk_sizes, Baselines, Strategy};
+    use conccl::sim::{Event, Sim, StallError, TaskSpec};
+    use conccl::workload::ResolvedScenario;
+
+    pub fn simulate_pair(
+        m: &MachineConfig,
+        topo: &Topology,
+        sc: &ResolvedScenario,
+        strategy: Strategy,
+        b: Baselines,
+    ) -> Result<(f64, f64, f64), Error> {
+        let cus = m.cus_total();
+        let comm_need = sc.comm.cu_need(m);
+        let tg_iso = b.t_gemm_iso;
+
+        let dma = if strategy.comm_on_cus() {
+            None
+        } else {
+            Some(DmaCollective::try_new(sc.comm.spec)?)
+        };
+
+        let (gemm_arrival, comm_arrival) = match strategy {
+            Strategy::C3Base | Strategy::C3Rp { .. } => {
+                (m.kernel_launch_s, m.kernel_launch_s + m.coll_launch_s)
+            }
+            Strategy::C3Sp | Strategy::C3SpRp { .. } => {
+                (m.coll_launch_s + m.kernel_launch_s, m.coll_launch_s)
+            }
+            Strategy::Conccl | Strategy::ConcclRp { .. } => {
+                let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
+                (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
+            }
+            Strategy::Serial => unreachable!("serial handled analytically"),
+            Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
+                unreachable!("chunked strategies use simulate_chunked")
+            }
+        };
+
+        let (comm_backlog_cus, comm_overlap_cus, comm_solo_cus) = match strategy {
+            Strategy::C3Base => (0, m.base_leak_cus.min(comm_need), comm_need),
+            Strategy::C3Sp => (comm_need, comm_need, comm_need),
+            Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
+                let k = comm_cus.min(cus / 2);
+                (k, k, k)
+            }
+            Strategy::Conccl | Strategy::ConcclRp { .. } => (0, 0, 0),
+            Strategy::Serial => unreachable!(),
+            Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => unreachable!(),
+        };
+        let backlog_until = match strategy {
+            Strategy::C3Base if sc.gemm.workgroups(m) > cus as u64 => {
+                comm_arrival + m.base_dispatch_backlog * tg_iso
+            }
+            _ => 0.0,
+        };
+        let gemm_cus = |comm_holds: u32, comm_done: bool| -> u32 {
+            match strategy {
+                Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => {
+                    cus - comm_cus.min(cus / 2)
+                }
+                Strategy::ConcclRp { cus_removed } => {
+                    let r = cus_removed.min(cus / 2);
+                    if !sc.gemm.is_compute_bound(m) && sc.gemm.slowdown_with_cu_loss(m, r) < 1.0
+                    {
+                        cus - r
+                    } else {
+                        cus
+                    }
+                }
+                Strategy::Conccl => cus,
+                _ => {
+                    if comm_done {
+                        cus
+                    } else {
+                        cus - comm_holds
+                    }
+                }
+            }
+        };
+
+        let pollution = if strategy.comm_on_cus() {
+            m.l2_pollution(sc.comm.spec.kind)
+        } else {
+            0.0
+        };
+        let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
+        let comm_hbm = match &dma {
+            Some(d) => d.hbm_traffic(m),
+            None => sc.comm.hbm_traffic(m),
+        };
+        let mem_pen = |other_share: f64| m.mem_pen(other_share);
+        let gemm_share = sc.gemm.hbm_share(m, cus);
+        let dma_wire = dma.as_ref().map(|d| d.wire_time_on(m, topo));
+        let comm_share = {
+            let t_wire = match dma_wire {
+                Some(wire) => wire,
+                None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
+            };
+            sc.comm.hbm_share_with_wire(m, t_wire)
+        };
+
+        let mut sim = Sim::new();
+        let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
+        let gemm_t = sim.add_task(TaskSpec {
+            name: format!("gemm:{}", sc.scenario.gemm_tag),
+            arrival: gemm_arrival,
+            work: 1.0,
+            demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus))],
+            cap: 0.0,
+        });
+        let comm_t = sim.add_task(TaskSpec {
+            name: format!("comm:{}", sc.comm.spec.kind.name()),
+            arrival: comm_arrival,
+            work: 1.0,
+            demands: vec![(hbm, comm_hbm)],
+            cap: 0.0,
+        });
+        if backlog_until > 0.0 {
+            sim.schedule_wake(backlog_until);
+        }
+
+        let mut gemm_done = false;
+        let mut comm_done = false;
+        let mut gemm_finish = 0.0;
+        let mut comm_finish = 0.0;
+        loop {
+            let backlogged = backlog_until > 0.0 && sim.now() < backlog_until && !gemm_done;
+            let comm_holds = if comm_done || !sim.is_active(comm_t) {
+                0
+            } else if backlogged {
+                comm_backlog_cus
+            } else if !gemm_done {
+                comm_overlap_cus
+            } else {
+                comm_solo_cus
+            };
+            if !gemm_done {
+                let g_cus = gemm_cus(comm_holds, comm_done).max(8);
+                let t_pure = smoothmax(sc.gemm.t_comp(m, g_cus), sc.gemm.t_mem(m, g_cus));
+                let comm_cu_active = strategy.comm_on_cus()
+                    && sim.is_active(comm_t)
+                    && comm_holds > 0
+                    && !comm_done;
+                let comm_moving = !comm_done
+                    && sim.is_active(comm_t)
+                    && (comm_holds > 0 || !strategy.comm_on_cus());
+                let comm_rate_scale = if !comm_moving {
+                    0.0
+                } else if strategy.comm_on_cus() {
+                    sc.comm.bw_scale(m, comm_holds)
+                } else {
+                    1.0
+                };
+                let pol = if comm_cu_active {
+                    pollution * comm_rate_scale
+                } else {
+                    0.0
+                };
+                let mp = if comm_moving {
+                    mem_pen(comm_share * comm_rate_scale)
+                } else {
+                    0.0
+                };
+                sim.set_cap(gemm_t, (1.0 - pol) * (1.0 - mp) / t_pure);
+                sim.set_demand(gemm_t, hbm, sc.gemm.hbm_traffic(m, g_cus));
+            }
+            if !comm_done {
+                let gemm_moving = !gemm_done && sim.is_active(gemm_t);
+                let mp = if gemm_moving { mem_pen(gemm_share) } else { 0.0 };
+                let cap = match dma_wire {
+                    Some(wire) => (1.0 - mp) / wire,
+                    None => {
+                        if comm_holds == 0 {
+                            0.0
+                        } else {
+                            let pen = if gemm_moving { co_penalty } else { 0.0 };
+                            (1.0 - pen) * (1.0 - mp) / sc.comm.t_wire_on(m, topo, comm_holds)
+                        }
+                    }
+                };
+                sim.set_cap(comm_t, cap);
+            }
+            match sim.next_event() {
+                Event::Completion(t) if t == gemm_t => {
+                    gemm_done = true;
+                    gemm_finish = sim.now();
+                }
+                Event::Completion(t) if t == comm_t => {
+                    comm_done = true;
+                    comm_finish = sim.now()
+                        + match &dma {
+                            Some(_) => m.dma_sync_s,
+                            None => 0.0,
+                        };
+                }
+                Event::Idle => break,
+                _ => {}
+            }
+            if gemm_done && comm_done {
+                break;
+            }
+        }
+        if !(gemm_done && comm_done) {
+            return Err(Error::SimStall(StallError {
+                at: sim.now(),
+                stalled: sim.stall_report(),
+            }));
+        }
+        let total = gemm_finish.max(comm_finish);
+        Ok((total, gemm_finish, comm_finish))
+    }
+
+    pub fn simulate_chunked(
+        m: &MachineConfig,
+        topo: &Topology,
+        sc: &ResolvedScenario,
+        cu_backend: bool,
+        k: u32,
+    ) -> Result<(f64, f64, f64), Error> {
+        let cus = m.cus_total();
+        let comm_need = sc.comm.cu_need(m);
+
+        let kk = k.max(2).min(sc.chunk_cap(m)).max(1) as usize;
+        let align = m.chunk_align(kk as u32);
+
+        let gemm_chunks: Vec<GemmKernel> = sc.gemm.split_m(m, kk as u32);
+        let whole_flops = sc.gemm.shape.flops();
+        let g_frac: Vec<f64> = gemm_chunks
+            .iter()
+            .map(|c| c.shape.flops() / whole_flops)
+            .collect();
+        let comm_specs: Vec<CollectiveSpec> = chunk_sizes(sc.comm.spec.size_bytes, kk as u32)
+            .into_iter()
+            .map(|s| CollectiveSpec::new(sc.comm.spec.kind, s))
+            .collect();
+
+        let dma: Option<Vec<DmaCollective>> = if cu_backend {
+            None
+        } else {
+            Some(
+                comm_specs
+                    .iter()
+                    .map(|&s| DmaCollective::try_new(s))
+                    .collect::<Result<Vec<_>, Error>>()?,
+            )
+        };
+
+        let wire: Vec<f64> = match &dma {
+            Some(ds) => ds.iter().map(|d| d.wire_time_on(m, topo)).collect(),
+            None => comm_specs
+                .iter()
+                .map(|&s| CollectiveKernel::new(s).t_wire_on(m, topo, comm_need.max(1)))
+                .collect(),
+        };
+        let comm_hbm: Vec<f64> = comm_specs
+            .iter()
+            .map(|&s| CollectiveKernel::new(s).hbm_traffic(m))
+            .collect();
+
+        let mem_pen = |other_share: f64| m.mem_pen(other_share);
+        let gemm_share = sc.gemm.hbm_share(m, cus);
+        let comm_share = {
+            let whole_wire = match &dma {
+                Some(_) => DmaCollective::try_new(sc.comm.spec)?.wire_time_on(m, topo),
+                None => sc.comm.t_wire_on(m, topo, comm_need.max(1)),
+            };
+            sc.comm.hbm_share_with_wire(m, whole_wire)
+        };
+        let pollution = if cu_backend {
+            m.l2_pollution(sc.comm.spec.kind)
+        } else {
+            0.0
+        };
+        let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
+
+        let dma_launch = m.num_gpus as f64 * m.dma_enqueue_s;
+
+        let mut sim = Sim::new();
+        let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
+        let g_tasks: Vec<usize> = gemm_chunks
+            .iter()
+            .enumerate()
+            .map(|(i, gk)| {
+                sim.add_task(TaskSpec {
+                    name: format!("gemm:{}", gk.tag),
+                    arrival: 0.0,
+                    work: 1.0,
+                    demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus) * g_frac[i])],
+                    cap: 0.0,
+                })
+            })
+            .collect();
+        let c_tasks: Vec<usize> = comm_specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                sim.add_task(TaskSpec {
+                    name: format!("comm:{}#{i}", s.kind.name()),
+                    arrival: 0.0,
+                    work: 1.0,
+                    demands: vec![(hbm, comm_hbm[i])],
+                    cap: 0.0,
+                })
+            })
+            .collect();
+
+        let mut g_fin: Vec<Option<f64>> = vec![None; kk];
+        let mut c_fin: Vec<Option<f64>> = vec![None; kk];
+        let mut g_ready: Vec<f64> = vec![f64::INFINITY; kk];
+        let mut c_ready: Vec<f64> = vec![f64::INFINITY; kk];
+        g_ready[0] = m.kernel_launch_s;
+        sim.schedule_wake(g_ready[0]);
+        let mut cpu_free = 0.0f64;
+        let mut g_done = 0usize;
+        let mut c_done = 0usize;
+
+        loop {
+            let now = sim.now();
+            let eps = 1e-18;
+            let gemm_running = g_done < kk && now + eps >= g_ready[g_done];
+            let comm_running = c_done < kk && now + eps >= c_ready[c_done];
+
+            if g_done < kk {
+                let gi = g_done;
+                let g_cus = if cu_backend && comm_running {
+                    cus - comm_need.min(cus / 2)
+                } else {
+                    cus
+                }
+                .max(8);
+                let chunk = &gemm_chunks[gi];
+                let t_pure = smoothmax(
+                    chunk.t_comp(m, g_cus),
+                    sc.gemm.t_mem(m, g_cus) * g_frac[gi],
+                );
+                let pol = if cu_backend && comm_running {
+                    pollution * align
+                } else {
+                    0.0
+                };
+                let mp = if comm_running {
+                    mem_pen(comm_share) * align
+                } else {
+                    0.0
+                };
+                let cap = if gemm_running {
+                    (1.0 - pol) * (1.0 - mp) / t_pure
+                } else {
+                    0.0
+                };
+                sim.set_cap(g_tasks[gi], cap);
+                sim.set_demand(g_tasks[gi], hbm, sc.gemm.hbm_traffic(m, g_cus) * g_frac[gi]);
+            }
+            if c_done < kk {
+                let ci = c_done;
+                let mp = if gemm_running {
+                    mem_pen(gemm_share) * align
+                } else {
+                    0.0
+                };
+                let cap = if !comm_running {
+                    0.0
+                } else if cu_backend {
+                    let pen = if gemm_running { co_penalty * align } else { 0.0 };
+                    (1.0 - pen) * (1.0 - mp) / wire[ci]
+                } else {
+                    (1.0 - mp) / wire[ci]
+                };
+                sim.set_cap(c_tasks[ci], cap);
+            }
+
+            match sim.next_event() {
+                Event::Completion(t) => {
+                    if g_done < kk && t == g_tasks[g_done] {
+                        let fin = sim.now();
+                        g_fin[g_done] = Some(fin);
+                        let ci = g_done;
+                        c_ready[ci] = if cu_backend {
+                            fin + m.coll_launch_s
+                        } else {
+                            let start = cpu_free.max(fin);
+                            cpu_free = start + dma_launch;
+                            cpu_free + m.dma_fetch_s
+                        };
+                        sim.schedule_wake(c_ready[ci].max(fin));
+                        g_done += 1;
+                        if g_done < kk {
+                            g_ready[g_done] = fin + m.kernel_launch_s;
+                            sim.schedule_wake(g_ready[g_done]);
+                        }
+                    } else if c_done < kk && t == c_tasks[c_done] {
+                        c_fin[c_done] = Some(sim.now());
+                        c_done += 1;
+                    }
+                }
+                Event::Idle => break,
+                _ => {}
+            }
+            if g_done == kk && c_done == kk {
+                break;
+            }
+        }
+        if g_done < kk || c_done < kk {
+            return Err(Error::SimStall(StallError {
+                at: sim.now(),
+                stalled: sim.stall_report(),
+            }));
+        }
+        let gemm_finish = g_fin[kk - 1].expect("all gemm chunks finished");
+        let sync = if dma.is_some() { m.dma_sync_s } else { 0.0 };
+        let comm_finish = c_fin[kk - 1].expect("all comm chunks finished") + sync;
+        Ok((gemm_finish.max(comm_finish), gemm_finish, comm_finish))
+    }
+}
+
+fn assert_rel(a: f64, b: f64, ctx: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    assert!(
+        (a - b).abs() / denom <= 1e-9,
+        "{ctx}: graph {a:.17e} vs reference {b:.17e} (rel {:.3e})",
+        (a - b).abs() / denom
+    );
+}
+
+fn pair_strategies(comm_need: u32) -> Vec<Strategy> {
+    vec![
+        Strategy::C3Base,
+        Strategy::C3Sp,
+        Strategy::C3Rp { comm_cus: 8 },
+        Strategy::C3Rp { comm_cus: 32 },
+        Strategy::C3Rp { comm_cus: 128 },
+        Strategy::C3SpRp { comm_cus: comm_need },
+        Strategy::Conccl,
+        Strategy::ConcclRp { cus_removed: 8 },
+    ]
+}
+
+#[test]
+fn graph_single_pair_matches_frozen_reference_everywhere() {
+    // Every Table II scenario × both studied collectives × every
+    // whole-kernel strategy × 1/2/4 nodes: ≤1e-9 relative on total,
+    // gemm finish and comm finish.
+    let m = MachineConfig::mi300x();
+    for nodes in [1usize, 2, 4] {
+        let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
+        for kind in CollectiveKind::studied() {
+            for row in &TABLE2 {
+                let sc = resolve(row, kind);
+                let b: Baselines = exec.baselines(&sc);
+                for strat in pair_strategies(sc.comm.cu_need(&m)) {
+                    let ctx = format!("{}/{}/{}n/{}", sc.tag(), kind.name(), nodes, strat.name());
+                    let got = exec
+                        .try_run_with_baselines(&sc, strat, b)
+                        .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                    let (total, gf, cf) =
+                        reference::simulate_pair(&exec.m, &exec.topo, &sc, strat, b)
+                            .unwrap_or_else(|e| panic!("{ctx}: reference: {e}"));
+                    assert_rel(got.total, total, &format!("{ctx} total"));
+                    assert_rel(got.gemm_finish, gf, &format!("{ctx} gemm_finish"));
+                    assert_rel(got.comm_finish, cf, &format!("{ctx} comm_finish"));
+                }
+                // Serial stays the analytic identity.
+                let serial = exec.try_run_with_baselines(&sc, Strategy::Serial, b).unwrap();
+                assert_rel(serial.total, b.serial(), &format!("{} serial", sc.tag()));
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_chunked_matches_frozen_reference_everywhere() {
+    // The chunked pipeline graphs: both backends × k ∈ {2, 5, 8} ×
+    // every scenario × 1/2/4 nodes.
+    let m = MachineConfig::mi300x();
+    for nodes in [1usize, 2, 4] {
+        let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
+        for kind in CollectiveKind::studied() {
+            for row in &TABLE2 {
+                let sc = resolve(row, kind);
+                let b = exec.baselines(&sc);
+                for k in [2u32, 5, 8] {
+                    for cu_backend in [false, true] {
+                        let strat = if cu_backend {
+                            Strategy::C3Chunked { chunks: k }
+                        } else {
+                            Strategy::ConcclChunked { chunks: k }
+                        };
+                        let ctx = format!(
+                            "{}/{}/{}n/{} k={k}",
+                            sc.tag(),
+                            kind.name(),
+                            nodes,
+                            strat.name()
+                        );
+                        let got = exec
+                            .try_run_with_baselines(&sc, strat, b)
+                            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                        let (total, gf, cf) =
+                            reference::simulate_chunked(&exec.m, &exec.topo, &sc, cu_backend, k)
+                                .unwrap_or_else(|e| panic!("{ctx}: reference: {e}"));
+                        assert_rel(got.total, total, &format!("{ctx} total"));
+                        assert_rel(got.gemm_finish, gf, &format!("{ctx} gemm_finish"));
+                        assert_rel(got.comm_finish, cf, &format!("{ctx} comm_finish"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn non_offloadable_kinds_fail_identically() {
+    // All-reduce and reduce-scatter meet ConCCL strategies with the
+    // same typed error on both implementations.
+    let m = MachineConfig::mi300x();
+    let exec = C3Executor::new(m.clone());
+    for kind in [CollectiveKind::AllReduce, CollectiveKind::ReduceScatter] {
+        let sc = {
+            let mut s = resolve(&TABLE2[0], CollectiveKind::AllGather);
+            s.comm = conccl::kernels::CollectiveKernel::new(
+                conccl::config::workload::CollectiveSpec::new(kind, s.comm.spec.size_bytes),
+            );
+            s.scenario.comm = s.comm.spec;
+            s
+        };
+        let b = exec.baselines(&sc);
+        let got = exec.try_run_with_baselines(&sc, Strategy::Conccl, b);
+        let reference = reference::simulate_pair(&exec.m, &exec.topo, &sc, Strategy::Conccl, b);
+        assert!(matches!(got, Err(Error::NotDmaOffloadable(_))), "{got:?}");
+        assert!(matches!(reference, Err(Error::NotDmaOffloadable(_))));
+    }
+}
