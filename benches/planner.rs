@@ -1,0 +1,61 @@
+//! Planner lineup bench: the `auto` e2e family against the fixed
+//! families (serial / cu_overlap / dma_overlap) over the CI sweep
+//! matrix's e2e specs, on 1- and 2-node topologies — the graph-level
+//! analog of `heuristic_accuracy` (how much per-node strategy
+//! selection buys over the best uniform stamp), plus a wall-clock
+//! measurement of one full planner evaluation (its candidate lineup is
+//! ~8 graph simulations). Runs under `CONCCL_BENCH_SMOKE=1` in the CI
+//! `bench-smoke` job like every other bench.
+
+use conccl::config::MachineConfig;
+use conccl::util::bench::Bencher;
+use conccl::util::table::{f as fnum, speedup, Table};
+use conccl::workload::e2e::{run_e2e, run_e2e_planned, E2eFamily, E2eSpec};
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let mut b = Bencher::from_args();
+    b.section("planner: auto vs fixed e2e families");
+
+    let specs = ["fsdp_step:70b:2:2", "tp_chain:70b:2", "fsdp_step:405b:2:2"];
+    let mut t = Table::new(vec![
+        "spec", "nodes", "serial", "cu", "dma", "auto", "plan", "gain%",
+    ])
+    .title("auto vs best fixed family (gain = auto over best fixed)")
+    .left_cols(2);
+    for spec_str in specs {
+        let spec = E2eSpec::parse(spec_str).expect("bench spec");
+        let trace = spec.trace();
+        for nodes in [1usize, 2] {
+            let topo = m.topology(nodes);
+            let run = |fam| run_e2e(&m, &topo, &trace, spec.depth, fam).expect("family run");
+            let serial = run(E2eFamily::Serial);
+            let cu = run(E2eFamily::CuOverlap);
+            let dma = run(E2eFamily::DmaOverlap);
+            let (auto, plan) = run_e2e_planned(&m, &topo, &trace, spec.depth, E2eFamily::Auto)
+                .expect("planner run");
+            let best_fixed = serial.total.min(cu.total).min(dma.total);
+            t.row(vec![
+                spec.label(),
+                nodes.to_string(),
+                speedup(serial.speedup),
+                speedup(cu.speedup),
+                speedup(dma.speedup),
+                speedup(auto.speedup),
+                plan.as_ref().map(|p| p.strategy.to_string()).unwrap_or_default(),
+                fnum((best_fixed / auto.total - 1.0) * 100.0, 2),
+            ]);
+        }
+    }
+    t.print();
+
+    // Wall-clock: one full auto evaluation (cost model + candidate
+    // lineup + argmin) on the heaviest matrix point.
+    let spec = E2eSpec::parse("fsdp_step:405b:2:2").unwrap();
+    let trace = spec.trace();
+    let topo = m.topology(2);
+    b.bench("planner_auto_fsdp_step_405b_2n", || {
+        run_e2e_planned(&m, &topo, &trace, spec.depth, E2eFamily::Auto).unwrap()
+    });
+    b.finish();
+}

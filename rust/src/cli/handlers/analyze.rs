@@ -1,0 +1,143 @@
+//! `conccl characterize` / `report` / `conccl-bw` / `heuristics`:
+//! table & figure regeneration plus heuristic-accuracy comparisons.
+
+use crate::cli::Args;
+use crate::config::workload::CollectiveKind;
+use crate::coordinator::{report, run_suite, taxonomy_divergences, RunnerConfig};
+use crate::heuristics::{self, SlowdownTable};
+use crate::sched::{C3Executor, Strategy};
+use crate::util::table::{f as fnum, Table};
+use crate::util::units::MIB;
+use crate::workload::scenarios::{resolve, TABLE2};
+
+pub(crate) fn characterize(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    report::render_table1(&m).print();
+    println!();
+    report::render_table2(&m).print();
+    println!();
+    report::render_fig5a(&m, &[0, 8, 16, 32, 64, 96, 128]).print();
+    println!();
+    let sizes = [896 * MIB, 3328 * MIB, 13 * 1024 * MIB];
+    report::render_fig5bc(&m, CollectiveKind::AllGather, &sizes, &[8, 16, 32, 64, 128]).print();
+    println!();
+    report::render_fig5bc(&m, CollectiveKind::AllToAll, &sizes, &[8, 16, 32, 64, 128]).print();
+    println!();
+    report::render_fig6(&m, &[896 * MIB, 3328 * MIB]).print();
+    Ok(())
+}
+
+pub(crate) fn full_report(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let jitter: f64 = args
+        .opt("jitter", "0.01")
+        .parse()
+        .map_err(|e| format!("--jitter: {e}"))?;
+    let cfg = RunnerConfig {
+        jitter,
+        ..RunnerConfig::default()
+    };
+    let outs = run_suite(&m, &crate::workload::scenarios::suite(), &cfg);
+    report::render_fig7(&outs).print();
+    println!();
+    report::render_fig8(&outs).print();
+    println!();
+    report::render_fig10(&outs).print();
+    let div = taxonomy_divergences(&m, &outs);
+    if !div.is_empty() {
+        println!("\ntaxonomy divergences (paper label vs our models):");
+        for (tag, paper, ours) in div {
+            println!("  {tag}: paper {} / computed {}", paper.name(), ours.name());
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn conccl_bw(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let sizes: Vec<u64> = [1, 4, 8, 16, 32, 64, 128, 256, 896, 2048, 8192, 20480]
+        .iter()
+        .map(|mb| mb * MIB)
+        .collect();
+    report::render_fig9(&m, &sizes).print();
+    Ok(())
+}
+
+pub(crate) fn heuristics_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let table = SlowdownTable::build(&m);
+    let exec = C3Executor::new(m.clone());
+    let mut t = Table::new(vec![
+        "scenario", "collective", "heuristic", "sweep-best", "match", "loss%",
+    ])
+    .title("§V-C RP heuristic vs exhaustive sweep")
+    .left_cols(2);
+    let mut matches = 0;
+    let mut worst_loss: f64 = 0.0;
+    let mut n = 0;
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            let sc = resolve(row, kind);
+            let k_h = heuristics::recommend(&m, &table, &sc);
+            let (best, k_b) = exec.run_rp_sweep(&sc);
+            let r_h = exec.run_rp_at(&sc, k_h);
+            let loss = (r_h.total / best.total - 1.0) * 100.0;
+            let is_match = k_h == k_b || loss < 0.1;
+            matches += is_match as usize;
+            worst_loss = worst_loss.max(loss);
+            n += 1;
+            t.row(vec![
+                sc.tag(),
+                kind.name().to_string(),
+                k_h.to_string(),
+                k_b.to_string(),
+                if is_match { "yes" } else { "no" }.to_string(),
+                fnum(loss, 2),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "heuristic optimal for {matches}/{n} scenarios; worst loss {worst_loss:.2}% \
+         (paper: 24/30, <=1.5%)"
+    );
+    let sp_ok = TABLE2.iter().all(|row| {
+        let sc = resolve(row, CollectiveKind::AllGather);
+        heuristics::comm_first(&m, &sc.gemm, &sc.comm)
+    });
+    println!("SP heuristic schedules communication first for all scenarios: {sp_ok}");
+
+    // Chunk-count tuner vs the exhaustive chunk sweep (the granularity
+    // analog of the rp comparison above), on the ConCCL pipeline.
+    let mut ct = Table::new(vec![
+        "scenario", "collective", "heuristic k", "sweep-best k", "match", "loss%",
+    ])
+    .title("chunk auto-tuner vs exhaustive chunk sweep (conccl_chunked)")
+    .left_cols(2);
+    let mut c_matches = 0;
+    let mut c_worst: f64 = 0.0;
+    for kind in CollectiveKind::studied() {
+        for row in &TABLE2 {
+            let sc = resolve(row, kind);
+            let k_h = heuristics::recommend_chunks(&m, &sc, true);
+            let at_h = exec.run(&sc, Strategy::ConcclChunked { chunks: k_h });
+            let (best, k_b) = exec.run_chunk_sweep(&sc, true);
+            let loss = (at_h.total / best.total - 1.0) * 100.0;
+            let is_match = k_h == k_b || loss < 0.1;
+            c_matches += is_match as usize;
+            c_worst = c_worst.max(loss);
+            ct.row(vec![
+                sc.tag(),
+                kind.name().to_string(),
+                k_h.to_string(),
+                k_b.to_string(),
+                if is_match { "yes" } else { "no" }.to_string(),
+                fnum(loss, 2),
+            ]);
+        }
+    }
+    println!();
+    ct.print();
+    println!("chunk tuner optimal for {c_matches}/{n} scenarios; worst loss {c_worst:.2}%");
+    Ok(())
+}

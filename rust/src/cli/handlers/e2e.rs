@@ -1,0 +1,133 @@
+//! `conccl e2e` / `conccl graph`: multi-layer end-to-end schedules on
+//! the workload-graph engine (FSDP trace replay, workload families,
+//! the planner-driven `auto` family with its plan summary).
+
+use crate::cli::Args;
+use crate::coordinator::report;
+use crate::kernels::CollectiveKernel;
+use crate::sched::Strategy;
+use crate::util::table::{f as fnum, speedup, Table};
+use crate::util::units::fmt_seconds;
+use crate::workload::e2e::{run_e2e_planned, E2eFamily, E2eSpec};
+use crate::workload::llama::LlamaConfig;
+use crate::workload::trace::{fsdp_forward_trace, replay};
+
+/// Run one end-to-end workload graph (multi-layer FSDP/TP schedule) on
+/// the workload-graph engine and report the e2e metrics per family
+/// (plus the per-node plan table for the planner-driven family).
+pub(crate) fn graph_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let nodes = args.opt_usize("nodes", 1)?.max(1);
+    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
+    let layers = args.opt_usize("layers", 4)?.max(1);
+    let spec_str = format!(
+        "{}:{}:{layers}:{depth}",
+        args.opt("workload", "fsdp_step"),
+        args.opt("model", "70b"),
+    );
+    let spec = E2eSpec::parse(&spec_str).map_err(|e| e.to_string())?;
+    let topo = m.topology(nodes);
+    let trace = spec.trace();
+    let families: Vec<E2eFamily> = match args.opt("family", "all").as_str() {
+        "all" => E2eFamily::lineup().to_vec(),
+        other => vec![E2eFamily::parse(other).map_err(|e| e.to_string())?],
+    };
+    let mut runs = Vec::with_capacity(families.len());
+    let mut plans = Vec::new();
+    for fam in families {
+        let (run, plan) =
+            run_e2e_planned(&m, &topo, &trace, spec.depth, fam).map_err(|e| e.to_string())?;
+        runs.push(run);
+        if let Some(p) = plan {
+            plans.push(p);
+        }
+    }
+    report::render_graph_e2e(
+        &format!(
+            "workload graph: {} ({} stages, prefetch depth {depth}, {nodes} node(s))",
+            spec.label(),
+            trace.stages.len()
+        ),
+        &runs,
+    )
+    .print();
+    for p in &plans {
+        println!();
+        report::render_plan_summary(&format!("auto plan for {}", spec.label()), p).print();
+    }
+    Ok(())
+}
+
+pub(crate) fn e2e(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let layers = args.opt_usize("layers", 4)?;
+    let model = match args.opt("model", "70b").as_str() {
+        "70b" => LlamaConfig::llama70b(),
+        "405b" => LlamaConfig::llama405b(),
+        other => return Err(format!("unknown model '{other}'")),
+    };
+    let trace = fsdp_forward_trace(&model, layers);
+    let mut t = Table::new(vec!["strategy", "step time", "speedup", "%ideal"]).left_cols(1).title(format!(
+        "FSDP forward, {} × {layers} layers ({} C3 stages)",
+        model.name,
+        trace.stages.len()
+    ));
+    for strat in [
+        Strategy::Serial,
+        Strategy::C3Base,
+        Strategy::C3Sp,
+        Strategy::Conccl,
+        Strategy::ConcclRp { cus_removed: 8 },
+        // Auto-tuned chunked pipeline, per stage (chunks: 0 = auto).
+        Strategy::ConcclChunked { chunks: 0 },
+    ] {
+        let r = replay(&m, &trace, strat);
+        t.row(vec![
+            strat.name().to_string(),
+            fmt_seconds(r.total),
+            speedup(r.speedup()),
+            fnum(r.pct_ideal(), 1),
+        ]);
+    }
+    t.print();
+    // Isolated comparison of CU vs DMA collectives on this trace.
+    let mut wire = Table::new(vec!["stage", "gather", "rccl", "conccl"]).left_cols(2);
+    for s in trace.stages.iter().take(2) {
+        let dma = crate::conccl::DmaCollective::try_new(s.gather.spec)
+            .map_err(|e| e.to_string())?;
+        wire.row(vec![
+            s.label.clone(),
+            s.gather.spec.size_tag(),
+            fmt_seconds(CollectiveKernel::new(s.gather.spec).time_isolated_full(&m)),
+            fmt_seconds(dma.time_isolated(&m)),
+        ]);
+    }
+    println!();
+    wire.print();
+    // The workload-graph engine's continuous timeline for the same
+    // forward trace: the prefetch window overlaps weight gathers across
+    // stage boundaries, which the per-stage replay above only prices
+    // pairwise. `conccl graph` exposes the full workload lineup; the
+    // `auto` row is the per-node planner with its plan table below.
+    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
+    let gtrace = crate::workload::e2e::fsdp_forward_stages(&model, layers.max(1));
+    let topo = m.topology(1);
+    let mut runs = Vec::new();
+    let mut plan = None;
+    for fam in E2eFamily::lineup() {
+        let (run, p) = run_e2e_planned(&m, &topo, &gtrace, depth, fam).map_err(|e| e.to_string())?;
+        runs.push(run);
+        plan = plan.or(p);
+    }
+    println!();
+    report::render_graph_e2e(
+        &format!("graph engine: FSDP forward × {layers} layers, prefetch depth {depth}"),
+        &runs,
+    )
+    .print();
+    if let Some(p) = &plan {
+        println!();
+        report::render_plan_summary("auto plan", p).print();
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Subcommand handlers: the dispatch table and one module per
+//! subcommand group, so `main.rs` stays a thin parse → dispatch shell.
+//!
+//! Every handler takes the parsed [`Args`] and returns
+//! `Result<(), String>`; the binary maps `Err` to a non-zero exit.
+
+mod analyze;
+mod e2e;
+mod run;
+mod sweep;
+
+use crate::cli::{Args, HELP};
+use crate::config::workload::CollectiveKind;
+use crate::sched::Strategy;
+use crate::workload::scenarios::resolve_tag;
+use crate::workload::ResolvedScenario;
+
+/// Route a parsed command line to its handler.
+pub fn dispatch(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "characterize" => analyze::characterize(args),
+        "run" => run::run_one(args),
+        "sweep" => sweep::sweep_cmd(args),
+        "bench-gate" => sweep::bench_gate(args),
+        "rp-sweep" => run::rp_sweep(args),
+        "report" => analyze::full_report(args),
+        "conccl-bw" => analyze::conccl_bw(args),
+        "heuristics" => analyze::heuristics_cmd(args),
+        "e2e" => e2e::e2e(args),
+        "graph" => e2e::graph_cmd(args),
+        other => Err(format!("unknown subcommand '{other}'\n\n{HELP}")),
+    }
+}
+
+/// Parse a collective name shared by several subcommands.
+pub(crate) fn parse_collective(s: &str) -> Result<CollectiveKind, String> {
+    match s {
+        "all-gather" | "ag" => Ok(CollectiveKind::AllGather),
+        "all-to-all" | "a2a" => Ok(CollectiveKind::AllToAll),
+        "all-reduce" | "ar" => Ok(CollectiveKind::AllReduce),
+        "reduce-scatter" | "rs" => Ok(CollectiveKind::ReduceScatter),
+        other => Err(format!("unknown collective '{other}'")),
+    }
+}
+
+pub(crate) fn parse_strategy(s: &str, comm_need: u32) -> Result<Strategy, String> {
+    Strategy::parse(s, comm_need).map_err(|e| e.to_string())
+}
+
+pub(crate) fn find_scenario(tag: &str, kind: CollectiveKind) -> Result<ResolvedScenario, String> {
+    resolve_tag(tag, kind).map_err(|e| e.to_string())
+}
+
+/// Split a comma-separated option; "all" or empty means "everything".
+pub(crate) fn csv_list(opt: &str) -> Vec<&str> {
+    if opt == "all" || opt.trim().is_empty() {
+        Vec::new()
+    } else {
+        opt.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_rejects_unknown_subcommand() {
+        let args = Args {
+            subcommand: "warp".into(),
+            ..Args::default()
+        };
+        let err = dispatch(&args).unwrap_err();
+        assert!(err.contains("unknown subcommand 'warp'"));
+    }
+
+    #[test]
+    fn collective_aliases_parse() {
+        assert_eq!(parse_collective("ag").unwrap(), CollectiveKind::AllGather);
+        assert_eq!(parse_collective("rs").unwrap(), CollectiveKind::ReduceScatter);
+        assert!(parse_collective("warp").is_err());
+    }
+
+    #[test]
+    fn csv_list_semantics() {
+        assert!(csv_list("all").is_empty());
+        assert!(csv_list("  ").is_empty());
+        assert_eq!(csv_list("a, b,,c"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,119 @@
+//! `conccl run` / `conccl rp-sweep`: single-scenario execution.
+
+use crate::cli::Args;
+use crate::heuristics;
+use crate::sched::{C3Executor, Strategy};
+use crate::util::table::{f as fnum, speedup, Table};
+use crate::util::units::fmt_seconds;
+
+use super::{find_scenario, parse_collective, parse_strategy};
+
+pub(crate) fn run_one(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
+    let sc = find_scenario(&args.opt("scenario", "mb1_896M"), kind)?;
+    let nodes = args.opt_usize("nodes", 1)?.max(1);
+    let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
+    let mut strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
+    // --chunks auto|N applies to the chunked pipeline strategies: auto
+    // asks the runtime-style heuristic (heuristics::chunk) on the
+    // paper's single node — the regime it is calibrated for — and the
+    // topology-aware exhaustive chunk sweep on multi-node topologies
+    // (the heuristic's rooflines know nothing about the NIC, where
+    // chunking's win shrinks); a number pins the count (clamped to
+    // what the scenario supports).
+    let mut chunk_note = String::new();
+    // The multi-node auto path already simulates every candidate; keep
+    // its winning run instead of re-simulating the same point.
+    let mut swept_run = None;
+    if strat.is_chunked() {
+        let dma = !strat.comm_on_cus();
+        let k = match args.opt("chunks", "auto").as_str() {
+            "auto" if nodes <= 1 => {
+                let k = heuristics::recommend_chunks(&exec.m, &sc, dma);
+                chunk_note = format!("{k} (auto-tuned)");
+                k
+            }
+            "auto" => {
+                let (run, k) = exec
+                    .try_run_chunk_sweep_with(&sc, dma, exec.baselines(&sc))
+                    .map_err(|e| e.to_string())?;
+                chunk_note = format!("{k} (swept, {nodes}-node topology)");
+                swept_run = Some(run);
+                k
+            }
+            other => {
+                let k: u32 = other.parse().map_err(|e| format!("--chunks: {e}"))?;
+                if k == 0 {
+                    return Err("--chunks: chunk count must be >= 1 (or 'auto')".into());
+                }
+                let k = exec.clamp_chunks(&sc, k);
+                chunk_note = k.to_string();
+                k
+            }
+        };
+        strat = match strat {
+            Strategy::C3Chunked { .. } => Strategy::C3Chunked { chunks: k },
+            Strategy::ConcclChunked { .. } => Strategy::ConcclChunked { chunks: k },
+            other => other,
+        };
+    } else if args.options.contains_key("chunks") {
+        // Silently ignoring --chunks would misreport the measurement.
+        return Err(format!(
+            "--chunks applies to the chunked pipeline strategies \
+             (c3_chunked, conccl_chunked), not '{}'",
+            strat.name()
+        ));
+    }
+    let r = match swept_run {
+        Some(run) => run,
+        None => exec.try_run(&sc, strat).map_err(|e| e.to_string())?,
+    };
+    let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!(
+        "{} × {} under {} ({nodes} node(s))",
+        sc.tag(),
+        kind.name(),
+        strat.name()
+    ));
+    if !chunk_note.is_empty() {
+        t.row(vec!["chunks".to_string(), chunk_note]);
+    }
+    t.row(vec!["serial".to_string(), fmt_seconds(r.serial)]);
+    t.row(vec!["concurrent".to_string(), fmt_seconds(r.total)]);
+    t.row(vec!["gemm finish".to_string(), fmt_seconds(r.gemm_finish)]);
+    t.row(vec!["comm finish".to_string(), fmt_seconds(r.comm_finish)]);
+    t.row(vec!["ideal speedup".to_string(), speedup(r.ideal)]);
+    t.row(vec!["attained speedup".to_string(), speedup(r.speedup)]);
+    t.row(vec!["% of ideal".to_string(), fnum(r.pct_ideal, 1)]);
+    t.print();
+    Ok(())
+}
+
+/// The original single-scenario c3_rp CU-reservation sweep.
+pub(crate) fn rp_sweep(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
+    let sc = find_scenario(&args.opt("scenario", "cb1_896M"), kind)?;
+    let exec = C3Executor::new(m);
+    let mut t = Table::new(vec!["comm CUs", "total", "speedup", "%ideal"])
+        .title(format!("c3_rp sweep: {} × {}", sc.tag(), kind.name()));
+    for k in exec.m.rp_candidates() {
+        let r = exec.run(&sc, Strategy::C3Rp { comm_cus: k });
+        t.row(vec![
+            k.to_string(),
+            fmt_seconds(r.total),
+            speedup(r.speedup),
+            fnum(r.pct_ideal, 1),
+        ]);
+    }
+    let (best, k) = exec.run_rp_sweep(&sc);
+    t.rule();
+    t.row(vec![
+        format!("best={k}"),
+        fmt_seconds(best.total),
+        speedup(best.speedup),
+        fnum(best.pct_ideal, 1),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! `conccl sweep` / `conccl bench-gate`: the parallel scenario-sweep
+//! engine and the CI perf-regression gate.
+
+use crate::cli::Args;
+use crate::config::workload::CollectiveKind;
+use crate::coordinator::{headline, report, RunnerConfig};
+use crate::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVariant, SweepPlan};
+use crate::util::table::{speedup, Table};
+use crate::util::units::fmt_seconds;
+use crate::workload::e2e::{E2eFamily, E2eSpec};
+
+use super::{csv_list, parse_collective};
+
+/// The parallel scenario-sweep engine: {scenarios × strategies ×
+/// machine configs} evaluated concurrently, reported as tables + JSON.
+pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
+    // The pre-rename `sweep` took --scenario/--strategy (singular);
+    // silently ignoring those would run a completely different
+    // computation, so reject them loudly.
+    if args.options.contains_key("scenario") {
+        return Err(
+            "`sweep` takes --scenarios (plural, comma-separated); for the single-scenario \
+             CU-reservation sweep use `conccl rp-sweep --scenario ...`"
+                .into(),
+        );
+    }
+    if args.options.contains_key("strategy") {
+        return Err("`sweep` takes --strategies (plural, comma-separated)".into());
+    }
+    let m = args.machine()?;
+    let jitter: f64 = args
+        .opt("jitter", "0")
+        .parse()
+        .map_err(|e| format!("--jitter: {e}"))?;
+    let seed: u64 = args
+        .opt("seed", "24301")
+        .parse()
+        .map_err(|e| format!("--seed: {e}"))?;
+    let cfg = RunnerConfig {
+        jitter,
+        seed,
+        ..RunnerConfig::default()
+    };
+    let kind_opt = args.opt("collective", "both");
+    let kinds: Vec<CollectiveKind> = match kind_opt.as_str() {
+        "both" | "all" => CollectiveKind::studied().to_vec(),
+        other => vec![parse_collective(other)?],
+    };
+    let strat_opt = args.opt("strategies", "all");
+    let strategy_names: Vec<&str> = csv_list(&strat_opt);
+    let scen_opt = args.opt("scenarios", "all");
+    let scenario_tags: Vec<&str> = csv_list(&scen_opt);
+    let mut machines = vec![MachineVariant::base(m.clone())];
+    if let Some(spec) = args.options.get("variants") {
+        machines.extend(parse_variants(&m, spec).map_err(|e| e.to_string())?);
+    }
+    let threads = args.opt_usize("threads", 0)?;
+    let node_counts: Vec<usize> = args
+        .opt("nodes", "1")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|e| format!("--nodes: {e}")))
+        .collect::<Result<_, _>>()?;
+    let chunk_counts: Vec<ChunkSel> = args
+        .opt("chunks", "auto")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(ChunkSel::parse)
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("--chunks: {e}"))?;
+    let e2e_specs: Vec<E2eSpec> = match args.options.get("e2e") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(E2eSpec::parse)
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--e2e: {e}"))?,
+    };
+    let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
+        .and_then(|p| p.with_node_counts(node_counts))
+        .and_then(|p| p.with_chunk_counts(chunk_counts))
+        .and_then(|p| p.with_e2e(e2e_specs))
+        .map_err(|e| e.to_string())?;
+    let n_jobs = plan.job_count();
+    let t0 = std::time::Instant::now();
+    let results = execute_sweep(plan, threads);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    for (mi, mv) in results.plan.machines.iter().enumerate() {
+        for (ni, &nodes) in results.plan.node_counts.iter().enumerate() {
+            for (ci, &chunks) in results.plan.chunk_counts.iter().enumerate() {
+                let mut headers: Vec<String> =
+                    vec!["scenario".to_string(), "collective".to_string()];
+                headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
+                let mut t = Table::new(headers).left_cols(2).title(format!(
+                    "sweep: machine '{}' × {nodes} node(s) × chunks={} — median-speedup per strategy",
+                    mv.label,
+                    chunks.label()
+                ));
+                for (si, sc) in results.plan.scenarios.iter().enumerate() {
+                    let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
+                    for (ki, _) in results.plan.strategies.iter().enumerate() {
+                        let out = &results.outputs[results.plan.job_id(mi, ni, ci, si, ki)];
+                        row.push(match &out.result {
+                            Ok(meas) => match (out.rp_cus, out.chunks_used) {
+                                (Some(k), _) => format!("{} @{k}CU", speedup(meas.speedup_median)),
+                                (None, Some(k)) => {
+                                    format!("{} @{k}ch", speedup(meas.speedup_median))
+                                }
+                                (None, None) => speedup(meas.speedup_median),
+                            },
+                            Err(_) => "ERR".to_string(),
+                        });
+                    }
+                    t.row(row);
+                }
+                t.print();
+                if let Ok(outs) = results.to_scenario_outcomes(mi, ni, ci) {
+                    let h = headline(&outs);
+                    let p = |k: &str| h.per_strategy[k].1;
+                    println!(
+                        "machine '{}' × {nodes} node(s) × chunks={}: avg %ideal — base {:.0}, \
+                         sp {:.0}, rp {:.0}, best {:.0}, conccl {:.0}, conccl_rp {:.0}",
+                        mv.label,
+                        chunks.label(),
+                        p("c3_base"),
+                        p("c3_sp"),
+                        p("c3_rp"),
+                        p("c3_best"),
+                        p("conccl"),
+                        p("conccl_rp")
+                    );
+                }
+                println!();
+            }
+            // End-to-end workload axis (graph engine): one table per
+            // spec on this (machine, topology) point, plus the planner
+            // family's per-node plan summary.
+            for (si, spec) in results.plan.e2e.iter().enumerate() {
+                let point = results.e2e_point(mi, ni, si);
+                let runs: Vec<_> = point
+                    .iter()
+                    .filter_map(|o| o.result.as_ref().ok().copied())
+                    .collect();
+                report::render_graph_e2e(
+                    &format!(
+                        "e2e workload '{}': machine '{}' × {nodes} node(s)",
+                        spec.label(),
+                        mv.label
+                    ),
+                    &runs,
+                )
+                .print();
+                for o in &point {
+                    if let (E2eFamily::Auto, Some(plan)) = (o.family, &o.plan) {
+                        report::render_plan_summary(&format!("auto plan '{}'", spec.label()), plan)
+                            .print();
+                    }
+                }
+                println!();
+            }
+        }
+    }
+    let errs = results.errors();
+    if !errs.is_empty() {
+        println!("{} job(s) failed (sweep continued without them):", errs.len());
+        for (job, e) in &errs {
+            println!(
+                "  job {} [{} × {}n × {}ch × {} × {}]: {e}",
+                job.id,
+                results.machine_label(job.machine_idx),
+                results.plan.node_counts[job.node_idx],
+                results.plan.chunk_counts[job.chunk_idx].label(),
+                results.plan.scenarios[job.scenario_idx].tag(),
+                job.strategy.name()
+            );
+        }
+    }
+    // Failed e2e workload points are dropped from their tables above —
+    // name them here so a non-JSON run cannot mistake a missing row
+    // for success (the JSON carries the {"error": ...} object).
+    let e2e_errs: Vec<&crate::sweep::E2eOutput> = results
+        .e2e_outputs
+        .iter()
+        .filter(|o| o.result.is_err())
+        .collect();
+    if !e2e_errs.is_empty() {
+        println!("{} e2e workload point(s) failed:", e2e_errs.len());
+        for o in &e2e_errs {
+            println!(
+                "  [{} × {}n × {} × {}]: {}",
+                results.machine_label(o.machine_idx),
+                results.plan.node_counts[o.node_idx],
+                results.plan.e2e[o.spec_idx].label(),
+                o.family.name(),
+                o.result.as_ref().unwrap_err()
+            );
+        }
+    }
+    println!(
+        "{n_jobs} jobs on {} worker thread(s) in {}",
+        results.threads_used,
+        fmt_seconds(elapsed)
+    );
+    if let Some(path) = args.options.get("json") {
+        let j = results.to_json();
+        if path == "-" {
+            println!("{j}");
+        } else {
+            std::fs::write(path, &j).map_err(|e| format!("--json {path}: {e}"))?;
+            println!("wrote JSON report to {path}");
+        }
+    }
+    // Partial failure must not look like success to scripts/CI: the
+    // tables and JSON above still describe what ran, but the exit
+    // status reports the failed jobs (pairwise and e2e alike).
+    if errs.is_empty() && e2e_errs.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} of {n_jobs} sweep jobs and {} e2e point(s) failed (see list above)",
+            errs.len(),
+            e2e_errs.len()
+        ))
+    }
+}
+
+/// CI perf-regression gate: compare a fresh `sweep --json` report
+/// against the checked-in baseline; non-zero exit on any >tolerance
+/// median-speedup regression. Without `--strict` a `{"seeded":false}`
+/// baseline passes with seeding instructions (bootstrap mode, useful
+/// locally); with `--strict` — what CI uses — an unseeded baseline is
+/// a hard failure, so the gate can never pass vacuously.
+pub(crate) fn bench_gate(args: &Args) -> Result<(), String> {
+    let baseline_path = args.opt("baseline", "BENCH_baseline.json");
+    let report_path = args
+        .options
+        .get("report")
+        .ok_or("bench-gate needs --report <sweep --json output>")?;
+    let tolerance: f64 = args
+        .opt("tolerance", "0.02")
+        .parse()
+        .map_err(|e| format!("--tolerance: {e}"))?;
+    let read = |p: &str| -> Result<crate::sweep::Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        crate::sweep::parse_json(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let report = read(report_path)?;
+    if !crate::sweep::is_seeded(&baseline) {
+        let points = crate::sweep::extract_points(&report)?;
+        println!(
+            "bench-gate: baseline '{baseline_path}' is not seeded yet; {} point(s) measured.",
+            points.len()
+        );
+        println!(
+            "  To seed the bench trajectory, commit the fresh report as {baseline_path}:\n  \
+             cp {report_path} {baseline_path}"
+        );
+        // --strict: an unseeded/bootstrap baseline is a FAILURE, not a
+        // pass — CI must gate against real numbers.
+        if args.flag("strict") {
+            return Err(format!(
+                "--strict: baseline '{baseline_path}' is not seeded; seed it and re-run"
+            ));
+        }
+        return Ok(());
+    }
+    let gate = crate::sweep::gate(&baseline, &report, tolerance)?;
+    print!("{}", gate.render(tolerance));
+    if gate.passed() {
+        Ok(())
+    } else {
+        Err(format!(
+            "perf gate failed: {} regression(s), {} missing point(s)",
+            gate.regressions.len(),
+            gate.missing.len()
+        ))
+    }
+}

@@ -1,4 +1,6 @@
-//! Command-line interface (hand-rolled — no `clap` offline).
+//! Command-line interface (hand-rolled — no `clap` offline): argv
+//! parsing ([`Args`]), the help text, and the per-subcommand
+//! [`handlers`] the binary dispatches into.
 //!
 //! ```text
 //! conccl <subcommand> [--set machine.key=value ...] [options]
@@ -12,8 +14,11 @@
 //!   heuristics     §V-C heuristic vs exhaustive sweep (30 scenarios)
 //!   e2e            FSDP trace replay (simulated MI300X timeline)
 //!   graph          end-to-end workload graph (multi-layer FSDP/TP) on
-//!                  the workload-graph engine
+//!                  the workload-graph engine, incl. the planner-driven
+//!                  `auto` family
 //! ```
+
+pub mod handlers;
 
 use std::collections::BTreeMap;
 
@@ -126,10 +131,12 @@ SUBCOMMANDS
                             engine's continuous-timeline comparison
   graph --workload fsdp_forward|fsdp_step|tp_chain [--model 70b|405b]
       [--layers 4] [--prefetch-depth 2] [--nodes N]
-      [--family all|serial|cu|dma]
+      [--family all|serial|cu|dma|auto]
                             one end-to-end workload graph: multi-layer
                             FSDP/TP schedule on the graph engine, with
-                            exposed-comm / bubble / occupancy metrics
+                            exposed-comm / bubble / occupancy metrics;
+                            'auto' runs the per-node planner and prints
+                            its backend/CUs/chunks plan table
   help                      this text
 
 SWEEP OPTIONS (conccl sweep)
@@ -148,9 +155,11 @@ SWEEP OPTIONS (conccl sweep)
                             winning k); numbers pin the count
   --e2e spec,spec           end-to-end workload axis, evaluated per
                             (machine, node-count) on the graph engine
-                            under serial/cu_overlap/dma_overlap; spec =
+                            under serial/cu_overlap/dma_overlap/auto
+                            (auto = per-node planner; its winning plan
+                            is printed and recorded in the JSON); spec =
                             workload[:model[:layers[:depth]]], e.g.
-                            fsdp_step:70b:4:2 (JSON schema v4
+                            fsdp_step:70b:4:2 (JSON schema v5
                             workloads[] section, gated by bench-gate)
   --variants l:k=v;k=v,...  extra machine variants derived from the base
                             machine (label:field=value;field=value)

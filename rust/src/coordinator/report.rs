@@ -36,6 +36,35 @@ pub fn render_graph_e2e(title: &str, runs: &[crate::workload::e2e::E2eRun]) -> T
     t
 }
 
+/// Plan-summary table for the planner-driven `auto` family: one row per
+/// graph node with the backend / CU / chunk decisions the
+/// [`crate::sched::Planner`] committed to (rendered alongside the
+/// family time columns by `conccl graph`, `conccl e2e` and the sweep).
+pub fn render_plan_summary(title: &str, plan: &crate::sched::PlanSummary) -> Table {
+    let mut t = Table::new(vec!["node", "kind", "backend", "CUs", "chunks"])
+        .title(format!(
+            "{title} — plan '{}' ({} candidate(s) simulated)",
+            plan.strategy, plan.candidates
+        ))
+        .left_cols(3);
+    for n in &plan.nodes {
+        t.row(vec![
+            n.label.clone(),
+            n.role.to_string(),
+            n.backend.to_string(),
+            if n.role == "gemm" && n.cus == 0 {
+                "residual".to_string()
+            } else if n.backend == "dma" {
+                "-".to_string()
+            } else {
+                n.cus.to_string()
+            },
+            n.chunks.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Table I: the GEMMs under study, with our measured-model intensity and
 /// classification.
 pub fn render_table1(m: &MachineConfig) -> Table {
@@ -293,16 +322,24 @@ mod tests {
 
     #[test]
     fn graph_e2e_table_renders_one_row_per_family() {
-        use crate::workload::e2e::{fsdp_forward_stages, run_e2e, E2eFamily};
+        use crate::workload::e2e::{fsdp_forward_stages, run_e2e_planned, E2eFamily};
         use crate::workload::llama::LlamaConfig;
         let m = MachineConfig::mi300x();
         let topo = m.topology(1);
         let t = fsdp_forward_stages(&LlamaConfig::llama70b(), 2);
-        let runs: Vec<_> = E2eFamily::lineup()
-            .into_iter()
-            .map(|fam| run_e2e(&m, &topo, &t, 2, fam).unwrap())
-            .collect();
-        assert_eq!(render_graph_e2e("e2e", &runs).len(), 3);
+        let mut runs = Vec::new();
+        let mut plan = None;
+        for fam in E2eFamily::lineup() {
+            let (r, p) = run_e2e_planned(&m, &topo, &t, 2, fam).unwrap();
+            runs.push(r);
+            plan = plan.or(p);
+        }
+        assert_eq!(render_graph_e2e("e2e", &runs).len(), 4);
+        // The auto row's plan renders one row per graph node.
+        let plan = plan.expect("auto family carries a plan");
+        let pt = render_plan_summary("e2e", &plan);
+        assert_eq!(pt.len(), plan.nodes.len());
+        assert!(pt.render().contains(plan.strategy));
     }
 
     #[test]

@@ -20,62 +20,22 @@
 //! overlap gain — the property test below pins that invariant, and a
 //! second test checks the projection against the simulator's swept-best
 //! on all 30 Table II combinations.
+//!
+//! The projection math lives in [`super::cost`] (shared with the rp
+//! heuristic and the graph-level planner); this module keeps the public
+//! tuner entry points as thin shims over it.
 
 use crate::config::machine::MachineConfig;
-use crate::heuristics::rp::{roofline_comm_time, roofline_gemm_time};
 use crate::workload::ResolvedScenario;
+
+use super::cost;
 
 /// Projected pipeline makespan at `k` chunks (seconds; deliberately
 /// cruder than the fluid simulator — this is what a runtime computes at
 /// launch time). `dma_backend` selects ConCCL chunk batches vs CU
 /// collective chunks.
-pub fn project_total(
-    m: &MachineConfig,
-    sc: &ResolvedScenario,
-    dma_backend: bool,
-    k: u32,
-) -> f64 {
-    let tg = roofline_gemm_time(m, &sc.gemm);
-    let tc = roofline_comm_time(m, &sc.comm);
-    // Profiled bandwidth shares (the one-time-per-GPU counter read;
-    // same derivation as the simulator — `GemmKernel::hbm_share`).
-    let g_share = sc.gemm.hbm_share(m, m.cus_total());
-    let c_share = sc
-        .comm
-        .hbm_share_with_wire(m, sc.comm.t_wire(m, sc.comm.cu_need(m)));
-    let dg = (m.mem_interference_coeff * c_share).min(m.mem_interference_cap);
-    let dc = (m.mem_interference_coeff * g_share).min(m.mem_interference_cap);
-    let issue = if dma_backend {
-        m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s
-    } else {
-        m.coll_launch_s
-    };
-    // Interference acts only over the co-run window (min of the two).
-    let overlap_g = (tc / tg).min(1.0);
-    let overlap_c = (tg / tc).min(1.0);
-    if k <= 1 {
-        // Whole-kernel overlap: both kernels start together.
-        let gemm_end = tg * (1.0 + dg * overlap_g);
-        let comm_end = tc * (1.0 + dc * overlap_c);
-        return gemm_end.max(comm_end);
-    }
-    let kf = k as f64;
-    let a = m.chunk_align(k);
-    // DMA-Latte: chunks whose wire time is below the issue latency
-    // expose every per-chunk enqueue batch; otherwise issue pipelines
-    // behind the previous chunk's wire and only one exposure remains.
-    let wire_chunk = tc / kf;
-    let issue_total = if wire_chunk < issue { kf * issue } else { issue };
-    let gemm_end = tg * (1.0 + dg * a * overlap_g) + kf * m.kernel_launch_s;
-    // The collective chain is issue-gated on the GEMM chain: chunk `i`
-    // waits for GEMM chunk `i`, so the *last* collective chunk cannot
-    // start before the whole GEMM is done (it has no GEMM chunk `i+1`
-    // left to overlap) — and the chain as a whole runs no faster than
-    // its inflated wire time after the one-chunk fill bubble.
-    let comm_end = (gemm_end + wire_chunk)
-        .max(gemm_end / kf + tc * (1.0 + dc * a * overlap_c))
-        + issue_total;
-    gemm_end.max(comm_end)
+pub fn project_total(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bool, k: u32) -> f64 {
+    cost::project_chunked(m, sc, dma_backend, k)
 }
 
 /// Recommend a chunk count for a scenario: argmin of the projection
@@ -83,16 +43,7 @@ pub fn project_total(
 /// count (launches are pure risk; take the conservative granularity —
 /// the same tie rule as `recommend_conccl_rp`).
 pub fn recommend_chunks(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bool) -> u32 {
-    let max_k = sc.chunk_cap(m);
-    let mut best = (f64::INFINITY, 1u32);
-    for k in m.chunk_candidates() {
-        let k = k.min(max_k);
-        let t = project_total(m, sc, dma_backend, k);
-        if t < best.0 * (1.0 - 1e-9) {
-            best = (t, k);
-        }
-    }
-    best.1
+    cost::recommend_chunks(m, sc, dma_backend)
 }
 
 #[cfg(test)]

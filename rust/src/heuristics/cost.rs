@@ -1,0 +1,445 @@
+//! The shared runtime cost model (§V-C's launch-time estimators, in one
+//! place).
+//!
+//! The three heuristics used to each carry a private copy of the math a
+//! runtime evaluates at launch time: `rp.rs` owned the 70%-efficiency
+//! rooflines and the one-time CU-slowdown lookup table, `chunk.rs`
+//! re-derived the rooflines plus the §VII-A1 interference terms and the
+//! per-packet issue latencies, and `sp.rs` kept its own
+//! workgroup-count ordering proxy. A graph-level planner
+//! ([`crate::sched::policy`]) needs *all* of those answers about *every*
+//! node of a workload graph, so the shared math lives here:
+//!
+//! * free functions with the heuristics' original signatures (the
+//!   public `rp::recommend` / `chunk::recommend_chunks` /
+//!   `sp::comm_first` entry points are now thin shims over these — the
+//!   PR-3 property tests pin that the numbers did not move);
+//! * [`CostModel`] — the table + topology bundled and built **once per
+//!   `(MachineConfig, Topology)`**, which is how a per-node planner
+//!   prices hundreds of decisions without re-profiling per node.
+//!
+//! The cost model is deliberately cruder than the fluid simulator: it is
+//! what the paper's runtime could compute from one-time profiles and
+//! peak-throughput rooflines (§V-C "we simply focus on peak compute,
+//! memory and network throughputs and assume 70% efficiency").
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{CollectiveKind, CollectiveSpec};
+use crate::fabric::Topology;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::util::units::MIB;
+use crate::workload::llama::gemm_by_tag;
+use crate::workload::ResolvedScenario;
+
+use super::sp::{launch_order, LaunchInfo};
+
+/// The one-time-per-GPU slowdown lookup table (§V-C step 1).
+#[derive(Debug, Clone)]
+pub struct SlowdownTable {
+    /// Candidate CU reservations for the collective (powers of two).
+    pub candidates: Vec<u32>,
+    /// GEMM slowdown when losing `candidates[i]` CUs, for
+    /// [compute-bound, memory-bound] representative kernels.
+    pub gemm_cb: Vec<f64>,
+    pub gemm_mb: Vec<f64>,
+    /// Collective slowdown when *assigned* `candidates[i]` CUs
+    /// (bandwidth-bound representative; latency-bound sizes are listed
+    /// too for completeness but never picked by Table II scenarios).
+    pub ag_bw: Vec<f64>,
+    pub a2a_bw: Vec<f64>,
+    pub ag_lat: Vec<f64>,
+    pub a2a_lat: Vec<f64>,
+}
+
+impl SlowdownTable {
+    /// Build the table by "profiling" the representative kernels (the
+    /// analytic models stand in for the rocprof runs a real runtime
+    /// would do once per GPU).
+    pub fn build(m: &MachineConfig) -> SlowdownTable {
+        let candidates = m.rp_candidates();
+        let cb = gemm_by_tag("cb1").expect("cb representative");
+        let mb = gemm_by_tag("mb1").expect("mb representative");
+        let mk = |kind: CollectiveKind, size: u64| CollectiveKernel::new(CollectiveSpec::new(kind, size));
+        // Bandwidth-bound representatives: 896 MiB; latency-bound: 1 MiB.
+        let ag_b = mk(CollectiveKind::AllGather, 896 * MIB);
+        let a2a_b = mk(CollectiveKind::AllToAll, 896 * MIB);
+        let ag_l = mk(CollectiveKind::AllGather, MIB);
+        let a2a_l = mk(CollectiveKind::AllToAll, MIB);
+        // The collective rows are profiled WITH a background GEMM
+        // running (the C3-relevant condition): the measured slowdown
+        // folds in the co-run bandwidth derate, not just the CU knee.
+        // Without this the heuristic under-allocates CUs to G-long
+        // collectives and loses up to ~35% — a real runtime profiles
+        // the condition it schedules for.
+        let ag_co = 1.0 / (1.0 - m.comm_co_penalty_ag);
+        let a2a_co = 1.0 / (1.0 - m.comm_co_penalty_a2a);
+        SlowdownTable {
+            gemm_cb: candidates.iter().map(|&k| cb.slowdown_with_cu_loss(m, k)).collect(),
+            gemm_mb: candidates.iter().map(|&k| mb.slowdown_with_cu_loss(m, k)).collect(),
+            ag_bw: candidates.iter().map(|&k| ag_b.slowdown_with_cus(m, k) * ag_co).collect(),
+            a2a_bw: candidates.iter().map(|&k| a2a_b.slowdown_with_cus(m, k) * a2a_co).collect(),
+            ag_lat: candidates.iter().map(|&k| ag_l.slowdown_with_cus(m, k) * ag_co).collect(),
+            a2a_lat: candidates.iter().map(|&k| a2a_l.slowdown_with_cus(m, k) * a2a_co).collect(),
+            candidates,
+        }
+    }
+
+    pub(crate) fn gemm_slowdown(&self, compute_bound: bool, i: usize) -> f64 {
+        if compute_bound {
+            self.gemm_cb[i]
+        } else {
+            self.gemm_mb[i]
+        }
+    }
+
+    pub(crate) fn comm_slowdown(&self, kind: CollectiveKind, latency_bound: bool, i: usize) -> f64 {
+        match (kind, latency_bound) {
+            (CollectiveKind::AllToAll, false) => self.a2a_bw[i],
+            (CollectiveKind::AllToAll, true) => self.a2a_lat[i],
+            (_, false) => self.ag_bw[i],
+            (_, true) => self.ag_lat[i],
+        }
+    }
+}
+
+/// Roofline kernel times at the heuristic's 70% efficiency (§V-C: "we
+/// simply focus on peak compute, memory and network throughputs and
+/// assume 70% efficiency").
+pub fn roofline_gemm_time(m: &MachineConfig, g: &GemmKernel) -> f64 {
+    let e = m.roofline_eff;
+    (g.shape.flops() / (m.peak_flops_bf16 * e)).max(g.shape.min_bytes() / (m.hbm_bw * e))
+}
+
+/// Roofline collective time (network-only, single-node fabric).
+pub fn roofline_comm_time(m: &MachineConfig, c: &CollectiveKernel) -> f64 {
+    c.per_link_bytes(m) / (m.link_bw * m.roofline_eff)
+}
+
+/// Topology-aware roofline collective time: the single-node fabric term
+/// plus, on a multi-node topology, the NIC serialization quantum at the
+/// same 70% roofline efficiency (the runtime knows its NIC's line rate
+/// the same way it knows the fabric's — and it is the *topology's* NIC
+/// that gets priced, matching what the graph engine simulates even for
+/// topologies built directly rather than via `MachineConfig::topology`).
+/// Reduces to [`roofline_comm_time`] on one node.
+pub fn roofline_comm_time_on(m: &MachineConfig, topo: &Topology, c: &CollectiveKernel) -> f64 {
+    let intra = roofline_comm_time(m, c);
+    match topo.num_nodes() {
+        0 | 1 => intra,
+        _ => intra + c.per_nic_bytes(topo) / (topo.nic_bw() * m.roofline_eff),
+    }
+}
+
+/// Per-collective issue latency of a backend: the CPU-side cost a
+/// runtime pays before the transfer can move bytes. DMA: one command
+/// packet per destination serialized on the enqueue thread plus the
+/// engine fetch (Fig 3 steps 1–3); CU: the collective kernel launch.
+pub fn issue_latency(m: &MachineConfig, dma_backend: bool) -> f64 {
+    if dma_backend {
+        m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s
+    } else {
+        m.coll_launch_s
+    }
+}
+
+/// §V-C step 2: recommend a CU reservation for the collective of a C3
+/// scenario — roofline times scaled by the table's slowdowns, pick the
+/// split minimizing `max(t_gemm, t_comm)`.
+pub fn recommend_cus(m: &MachineConfig, table: &SlowdownTable, sc: &ResolvedScenario) -> u32 {
+    let tg0 = roofline_gemm_time(m, &sc.gemm);
+    let tc0 = roofline_comm_time(m, &sc.comm);
+    let cb = sc.gemm.is_compute_bound(m);
+    let lat = sc.comm.is_latency_bound(m);
+    let mut best = (f64::INFINITY, table.candidates[0]);
+    for (i, &k) in table.candidates.iter().enumerate() {
+        let tg = tg0 * table.gemm_slowdown(cb, i);
+        let tc = tc0 * table.comm_slowdown(sc.comm.spec.kind, lat, i);
+        let obj = tg.max(tc);
+        if obj < best.0 {
+            best = (obj, k);
+        }
+    }
+    best.1
+}
+
+/// §VI-G: the ConCCL-rp variant — only the mb-GEMM CU-loss row is
+/// needed; remove CUs only if the table predicts a cache speedup.
+/// Returns the number of CUs to take from the GEMM (0 = none).
+pub fn recommend_cu_shed(m: &MachineConfig, table: &SlowdownTable, g: &GemmKernel) -> u32 {
+    if g.is_compute_bound(m) {
+        return 0;
+    }
+    // Find the best (lowest) mb slowdown < 1, then prefer the SMALLEST
+    // removal within noise of it (0.2%) — removing CUs is free upside
+    // only while the cache effect holds, so take the conservative k.
+    let best = table.gemm_mb.iter().cloned().fold(1.0f64, f64::min);
+    if best >= 1.0 {
+        return 0;
+    }
+    for (i, &k) in table.candidates.iter().enumerate() {
+        if table.gemm_mb[i] <= best + 0.002 {
+            return k;
+        }
+    }
+    0
+}
+
+/// Projected chunked-pipeline makespan at `k` chunks (seconds;
+/// deliberately cruder than the fluid simulator — this is what a
+/// runtime computes at launch time). `dma_backend` selects ConCCL chunk
+/// batches vs CU collective chunks.
+pub fn project_chunked(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bool, k: u32) -> f64 {
+    let tg = roofline_gemm_time(m, &sc.gemm);
+    let tc = roofline_comm_time(m, &sc.comm);
+    // Profiled bandwidth shares (the one-time-per-GPU counter read;
+    // same derivation as the simulator — `GemmKernel::hbm_share`).
+    let g_share = sc.gemm.hbm_share(m, m.cus_total());
+    let c_share = sc
+        .comm
+        .hbm_share_with_wire(m, sc.comm.t_wire(m, sc.comm.cu_need(m)));
+    let dg = (m.mem_interference_coeff * c_share).min(m.mem_interference_cap);
+    let dc = (m.mem_interference_coeff * g_share).min(m.mem_interference_cap);
+    let issue = issue_latency(m, dma_backend);
+    // Interference acts only over the co-run window (min of the two).
+    let overlap_g = (tc / tg).min(1.0);
+    let overlap_c = (tg / tc).min(1.0);
+    if k <= 1 {
+        // Whole-kernel overlap: both kernels start together.
+        let gemm_end = tg * (1.0 + dg * overlap_g);
+        let comm_end = tc * (1.0 + dc * overlap_c);
+        return gemm_end.max(comm_end);
+    }
+    let kf = k as f64;
+    let a = m.chunk_align(k);
+    // DMA-Latte: chunks whose wire time is below the issue latency
+    // expose every per-chunk enqueue batch; otherwise issue pipelines
+    // behind the previous chunk's wire and only one exposure remains.
+    let wire_chunk = tc / kf;
+    let issue_total = if wire_chunk < issue { kf * issue } else { issue };
+    let gemm_end = tg * (1.0 + dg * a * overlap_g) + kf * m.kernel_launch_s;
+    // The collective chain is issue-gated on the GEMM chain: chunk `i`
+    // waits for GEMM chunk `i`, so the *last* collective chunk cannot
+    // start before the whole GEMM is done (it has no GEMM chunk `i+1`
+    // left to overlap) — and the chain as a whole runs no faster than
+    // its inflated wire time after the one-chunk fill bubble.
+    let comm_end = (gemm_end + wire_chunk)
+        .max(gemm_end / kf + tc * (1.0 + dc * a * overlap_c))
+        + issue_total;
+    gemm_end.max(comm_end)
+}
+
+/// [`recommend_chunks`] under an explicit chunk-count cap. The
+/// pairwise pipeline caps at [`ResolvedScenario::chunk_cap`] (GEMM
+/// M-splitability and payload bytes); a consumer that chunks only the
+/// collective — the graph-level planner, whose stage GEMMs stay whole —
+/// passes a bytes-only cap instead.
+pub fn recommend_chunks_capped(
+    m: &MachineConfig,
+    sc: &ResolvedScenario,
+    dma_backend: bool,
+    max_k: u32,
+) -> u32 {
+    let max_k = max_k.max(1);
+    let mut best = (f64::INFINITY, 1u32);
+    for k in m.chunk_candidates() {
+        let k = k.min(max_k);
+        let t = project_chunked(m, sc, dma_backend, k);
+        if t < best.0 * (1.0 - 1e-9) {
+            best = (t, k);
+        }
+    }
+    best.1
+}
+
+/// Recommend a chunk count for a scenario: argmin of the projection
+/// over the machine's candidates, ties broken toward the *smaller*
+/// count (launches are pure risk; take the conservative granularity —
+/// the same tie rule as [`recommend_cu_shed`]).
+pub fn recommend_chunks(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bool) -> u32 {
+    recommend_chunks_capped(m, sc, dma_backend, sc.chunk_cap(m))
+}
+
+/// Should the collective be scheduled before the GEMM? The §V-C
+/// launch-latency ordering: the kernel with the strictly smaller
+/// workgroup count (the CU-requirement / dispatch-cost proxy) launches
+/// first; ties keep the GEMM's slot (a runtime must not reorder kernels
+/// it has no signal to reorder). [`super::sp::comm_first`] is the
+/// public shim over this.
+pub fn comm_first(m: &MachineConfig, g: &GemmKernel, c: &CollectiveKernel) -> bool {
+    let order = launch_order(&[LaunchInfo::of_gemm(m, g), LaunchInfo::of_collective(m, c)]);
+    order[0] == 1
+}
+
+/// The cost model a per-node planner prices every decision from: the
+/// one-time slowdown table plus the evaluation topology, built **once
+/// per `(MachineConfig, Topology)`** and then queried per node.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub m: MachineConfig,
+    pub topo: Topology,
+    pub table: SlowdownTable,
+}
+
+impl CostModel {
+    /// Build the model (profiles the slowdown table once).
+    pub fn new(m: &MachineConfig, topo: &Topology) -> CostModel {
+        CostModel {
+            m: m.clone(),
+            topo: *topo,
+            table: SlowdownTable::build(m),
+        }
+    }
+
+    /// 70%-efficiency roofline GEMM time.
+    pub fn gemm_roofline(&self, g: &GemmKernel) -> f64 {
+        roofline_gemm_time(&self.m, g)
+    }
+
+    /// Topology-aware 70%-efficiency roofline collective time.
+    pub fn comm_roofline(&self, c: &CollectiveKernel) -> f64 {
+        roofline_comm_time_on(&self.m, &self.topo, c)
+    }
+
+    /// Per-collective issue latency of a backend (DMA enqueue chain +
+    /// fetch vs CU kernel launch).
+    pub fn issue_latency(&self, dma_backend: bool) -> f64 {
+        issue_latency(&self.m, dma_backend)
+    }
+
+    /// §V-C CU reservation for a (GEMM, collective) pair.
+    pub fn recommend_cus(&self, sc: &ResolvedScenario) -> u32 {
+        recommend_cus(&self.m, &self.table, sc)
+    }
+
+    /// §VI-G CUs to shed from a GEMM under DMA offload (0 = none).
+    pub fn recommend_cu_shed(&self, g: &GemmKernel) -> u32 {
+        recommend_cu_shed(&self.m, &self.table, g)
+    }
+
+    /// Chunk count for a (GEMM, collective) pair on a backend.
+    pub fn recommend_chunks(&self, sc: &ResolvedScenario, dma_backend: bool) -> u32 {
+        recommend_chunks(&self.m, sc, dma_backend)
+    }
+
+    /// Chunk count for a *collective-only* chunking (the planner's
+    /// case: stage GEMMs stay whole, so only the payload bounds the
+    /// granularity).
+    pub fn recommend_comm_chunks(&self, sc: &ResolvedScenario, dma_backend: bool) -> u32 {
+        let cap = sc.comm.spec.size_bytes.min(u32::MAX as u64) as u32;
+        recommend_chunks_capped(&self.m, sc, dma_backend, cap)
+    }
+
+    /// Projected chunked makespan (the tuner's objective).
+    pub fn project_chunked(&self, sc: &ResolvedScenario, dma_backend: bool, k: u32) -> f64 {
+        project_chunked(&self.m, sc, dma_backend, k)
+    }
+
+    /// Launch-latency issue order for a stage's pair.
+    pub fn comm_first(&self, g: &GemmKernel, c: &CollectiveKernel) -> bool {
+        comm_first(&self.m, g, c)
+    }
+
+    /// SDMA-engine occupancy one in-flight DMA collective demands.
+    pub fn engine_demand(&self) -> f64 {
+        crate::gpu::sdma::engine_demand(&self.m)
+    }
+
+    /// Does a window of `concurrent` simultaneously in-flight DMA
+    /// collectives oversubscribe the GPU's engines? (The planner's
+    /// split-the-pools trigger: beyond this point every additional DMA
+    /// collective slows all of them, while the CU pool sits idle.)
+    pub fn engines_oversubscribed(&self, concurrent: usize) -> bool {
+        concurrent as f64 * self.engine_demand() > self.m.sdma_engines.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::{chunk, rp};
+    use crate::workload::scenarios::{resolve, TABLE2};
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    #[test]
+    fn shims_agree_with_cost_model() {
+        // The refactor contract: rp/chunk/sp keep their signatures but
+        // the numbers come from here — both paths must agree exactly.
+        let m = m();
+        let cm = CostModel::new(&m, &Topology::fully_connected(m.num_gpus));
+        for kind in CollectiveKind::studied() {
+            for row in &TABLE2 {
+                let sc = resolve(row, kind);
+                assert_eq!(rp::recommend(&m, &cm.table, &sc), cm.recommend_cus(&sc));
+                for dma in [true, false] {
+                    assert_eq!(chunk::recommend_chunks(&m, &sc, dma), cm.recommend_chunks(&sc, dma));
+                    // The pairwise tuner is the capped form at the
+                    // pairwise cap (GEMM M-splitability included).
+                    assert_eq!(
+                        chunk::recommend_chunks(&m, &sc, dma),
+                        recommend_chunks_capped(&m, &sc, dma, sc.chunk_cap(&m))
+                    );
+                    for k in [1u32, 4, 16] {
+                        assert_eq!(
+                            chunk::project_total(&m, &sc, dma, k),
+                            cm.project_chunked(&sc, dma, k)
+                        );
+                    }
+                }
+                assert_eq!(
+                    crate::heuristics::sp::comm_first(&m, &sc.gemm, &sc.comm),
+                    cm.comm_first(&sc.gemm, &sc.comm)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topology_aware_roofline_adds_the_nic_term() {
+        let m = m();
+        let c = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 896 * MIB));
+        let t1 = roofline_comm_time_on(&m, &m.topology(1), &c);
+        assert_eq!(t1, roofline_comm_time(&m, &c), "single node must match the legacy roofline");
+        let t2 = roofline_comm_time_on(&m, &m.topology(2), &c);
+        assert!(t2 > t1, "the NIC quantum must lengthen the roofline");
+        // The added term is exactly the NIC bytes at roofline efficiency.
+        let nic = c.per_nic_bytes(&m.topology(2)) / (m.nic_bw * m.roofline_eff);
+        assert!((t2 - t1 - nic).abs() < 1e-15);
+    }
+
+    #[test]
+    fn issue_latency_matches_backend_costs() {
+        let m = m();
+        assert_eq!(issue_latency(&m, false), m.coll_launch_s);
+        assert_eq!(
+            issue_latency(&m, true),
+            m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s
+        );
+        // On this machine DMA issue costs more than a CU launch — the
+        // Fig 9 latency-bound regime the planner prices per node.
+        assert!(issue_latency(&m, true) > issue_latency(&m, false));
+    }
+
+    #[test]
+    fn engine_oversubscription_trigger() {
+        let m = m();
+        let cm = CostModel::new(&m, &Topology::fully_connected(m.num_gpus));
+        // One in-flight collective (8 occupancy vs 14 engines): fine.
+        assert!(!cm.engines_oversubscribed(1));
+        // Two oversubscribe (16 > 14) — the split-pool trigger.
+        assert!(cm.engines_oversubscribed(2));
+        assert!(cm.engines_oversubscribed(4));
+    }
+
+    #[test]
+    fn cost_model_builds_once_per_machine_topology() {
+        let m = m();
+        let cm = CostModel::new(&m, &m.topology(2));
+        let direct = SlowdownTable::build(&m);
+        assert_eq!(cm.table.candidates, direct.candidates);
+        assert_eq!(cm.table.gemm_mb, direct.gemm_mb);
+        assert_eq!(cm.topo.num_nodes(), 2);
+    }
+}

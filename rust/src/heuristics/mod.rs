@@ -2,11 +2,19 @@
 //! schedule prioritization by workgroup count, resource partitioning
 //! via a one-time slowdown lookup table + 70%-efficiency rooflines, and
 //! the chunk-count auto-tuner for the chunked C3 pipeline.
+//!
+//! The shared roofline / slowdown / launch-latency math lives in
+//! [`cost`] — one [`CostModel`] per `(MachineConfig, Topology)` — and
+//! the per-question entry points (`rp`, `sp`, `chunk`) are thin shims
+//! over it. `sched::policy` builds a per-node plan for whole workload
+//! graphs from the same model.
 
 pub mod chunk;
+pub mod cost;
 pub mod rp;
 pub mod sp;
 
 pub use chunk::{project_total, recommend_chunks};
+pub use cost::CostModel;
 pub use rp::{recommend, recommend_conccl_rp, SlowdownTable};
 pub use sp::{comm_first, launch_order, LaunchInfo};

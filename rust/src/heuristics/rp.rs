@@ -15,143 +15,37 @@
 //! The paper reports the heuristic picks the sweep-optimal allocation
 //! for 24 of 30 scenarios and loses ≤1.5% otherwise; the
 //! `heuristic_accuracy` bench regenerates that comparison.
+//!
+//! The table/roofline math itself lives in [`super::cost`] (shared with
+//! the chunk tuner and the graph-level planner); this module keeps the
+//! public rp entry points as thin shims over it.
 
 use crate::config::machine::MachineConfig;
-use crate::config::workload::{CollectiveKind, CollectiveSpec};
-use crate::kernels::{CollectiveKernel, GemmKernel};
-use crate::util::units::MIB;
-use crate::workload::llama::gemm_by_tag;
+use crate::kernels::GemmKernel;
 use crate::workload::ResolvedScenario;
 
-/// The one-time-per-GPU slowdown lookup table.
-#[derive(Debug, Clone)]
-pub struct SlowdownTable {
-    /// Candidate CU reservations for the collective (powers of two).
-    pub candidates: Vec<u32>,
-    /// GEMM slowdown when losing `candidates[i]` CUs, for
-    /// [compute-bound, memory-bound] representative kernels.
-    pub gemm_cb: Vec<f64>,
-    pub gemm_mb: Vec<f64>,
-    /// Collective slowdown when *assigned* `candidates[i]` CUs
-    /// (bandwidth-bound representative; latency-bound sizes are listed
-    /// too for completeness but never picked by Table II scenarios).
-    pub ag_bw: Vec<f64>,
-    pub a2a_bw: Vec<f64>,
-    pub ag_lat: Vec<f64>,
-    pub a2a_lat: Vec<f64>,
-}
+use super::cost;
 
-impl SlowdownTable {
-    /// Build the table by "profiling" the representative kernels (the
-    /// analytic models stand in for the rocprof runs a real runtime
-    /// would do once per GPU).
-    pub fn build(m: &MachineConfig) -> SlowdownTable {
-        let candidates = m.rp_candidates();
-        let cb = gemm_by_tag("cb1").expect("cb representative");
-        let mb = gemm_by_tag("mb1").expect("mb representative");
-        let mk = |kind: CollectiveKind, size: u64| CollectiveKernel::new(CollectiveSpec::new(kind, size));
-        // Bandwidth-bound representatives: 896 MiB; latency-bound: 1 MiB.
-        let ag_b = mk(CollectiveKind::AllGather, 896 * MIB);
-        let a2a_b = mk(CollectiveKind::AllToAll, 896 * MIB);
-        let ag_l = mk(CollectiveKind::AllGather, MIB);
-        let a2a_l = mk(CollectiveKind::AllToAll, MIB);
-        // The collective rows are profiled WITH a background GEMM
-        // running (the C3-relevant condition): the measured slowdown
-        // folds in the co-run bandwidth derate, not just the CU knee.
-        // Without this the heuristic under-allocates CUs to G-long
-        // collectives and loses up to ~35% — a real runtime profiles
-        // the condition it schedules for.
-        let ag_co = 1.0 / (1.0 - m.comm_co_penalty_ag);
-        let a2a_co = 1.0 / (1.0 - m.comm_co_penalty_a2a);
-        SlowdownTable {
-            gemm_cb: candidates.iter().map(|&k| cb.slowdown_with_cu_loss(m, k)).collect(),
-            gemm_mb: candidates.iter().map(|&k| mb.slowdown_with_cu_loss(m, k)).collect(),
-            ag_bw: candidates.iter().map(|&k| ag_b.slowdown_with_cus(m, k) * ag_co).collect(),
-            a2a_bw: candidates.iter().map(|&k| a2a_b.slowdown_with_cus(m, k) * a2a_co).collect(),
-            ag_lat: candidates.iter().map(|&k| ag_l.slowdown_with_cus(m, k) * ag_co).collect(),
-            a2a_lat: candidates.iter().map(|&k| a2a_l.slowdown_with_cus(m, k) * a2a_co).collect(),
-            candidates,
-        }
-    }
-
-    fn gemm_slowdown(&self, compute_bound: bool, i: usize) -> f64 {
-        if compute_bound {
-            self.gemm_cb[i]
-        } else {
-            self.gemm_mb[i]
-        }
-    }
-
-    fn comm_slowdown(&self, kind: CollectiveKind, latency_bound: bool, i: usize) -> f64 {
-        match (kind, latency_bound) {
-            (CollectiveKind::AllToAll, false) => self.a2a_bw[i],
-            (CollectiveKind::AllToAll, true) => self.a2a_lat[i],
-            (_, false) => self.ag_bw[i],
-            (_, true) => self.ag_lat[i],
-        }
-    }
-}
-
-/// Roofline kernel times at the heuristic's 70% efficiency (§V-C: "we
-/// simply focus on peak compute, memory and network throughputs and
-/// assume 70% efficiency").
-pub fn roofline_gemm_time(m: &MachineConfig, g: &GemmKernel) -> f64 {
-    let e = m.roofline_eff;
-    (g.shape.flops() / (m.peak_flops_bf16 * e)).max(g.shape.min_bytes() / (m.hbm_bw * e))
-}
-
-/// Roofline collective time (network-only).
-pub fn roofline_comm_time(m: &MachineConfig, c: &CollectiveKernel) -> f64 {
-    c.per_link_bytes(m) / (m.link_bw * m.roofline_eff)
-}
+pub use super::cost::{roofline_comm_time, roofline_gemm_time, SlowdownTable};
 
 /// Recommend a CU reservation for the collective in a C3 scenario.
 pub fn recommend(m: &MachineConfig, table: &SlowdownTable, sc: &ResolvedScenario) -> u32 {
-    let tg0 = roofline_gemm_time(m, &sc.gemm);
-    let tc0 = roofline_comm_time(m, &sc.comm);
-    let cb = sc.gemm.is_compute_bound(m);
-    let lat = sc.comm.is_latency_bound(m);
-    let mut best = (f64::INFINITY, table.candidates[0]);
-    for (i, &k) in table.candidates.iter().enumerate() {
-        let tg = tg0 * table.gemm_slowdown(cb, i);
-        let tc = tc0 * table.comm_slowdown(sc.comm.spec.kind, lat, i);
-        let obj = tg.max(tc);
-        if obj < best.0 {
-            best = (obj, k);
-        }
-    }
-    best.1
+    cost::recommend_cus(m, table, sc)
 }
 
 /// §VI-G: the ConCCL-rp variant of the heuristic — only the mb-GEMM
 /// CU-loss row is needed; remove CUs only if the table predicts a
 /// speedup. Returns the number of CUs to take from the GEMM (0 = none).
 pub fn recommend_conccl_rp(m: &MachineConfig, table: &SlowdownTable, g: &GemmKernel) -> u32 {
-    if g.is_compute_bound(m) {
-        return 0;
-    }
-    // Find the best (lowest) mb slowdown < 1, then prefer the SMALLEST
-    // removal within noise of it (0.2%) — removing CUs is free upside
-    // only while the cache effect holds, so take the conservative k.
-    let best = table
-        .gemm_mb
-        .iter()
-        .cloned()
-        .fold(1.0f64, f64::min);
-    if best >= 1.0 {
-        return 0;
-    }
-    for (i, &k) in table.candidates.iter().enumerate() {
-        if table.gemm_mb[i] <= best + 0.002 {
-            return k;
-        }
-    }
-    0
+    cost::recommend_cu_shed(m, table, g)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::workload::{CollectiveKind, CollectiveSpec};
+    use crate::util::units::MIB;
+    use crate::workload::llama::gemm_by_tag;
     use crate::workload::scenarios::{resolve, TABLE2};
 
     fn m() -> MachineConfig {

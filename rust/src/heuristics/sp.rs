@@ -5,7 +5,10 @@
 //! the runtime can employ scheduling order in the order of resource
 //! requirements (number of workgroups), low to high."
 //!
-//! Generalizes to any number of kernels (§VII-B1).
+//! Generalizes to any number of kernels (§VII-B1). The two-kernel
+//! decision ([`comm_first`]) is a shim over
+//! [`super::cost::comm_first`] — the same launch-latency ordering the
+//! [`super::cost::CostModel`] hands the graph-level planner.
 
 use crate::config::machine::MachineConfig;
 use crate::kernels::{CollectiveKernel, GemmKernel};
@@ -48,8 +51,7 @@ pub fn launch_order(kernels: &[LaunchInfo]) -> Vec<usize> {
 /// The two-kernel special case the paper evaluates: should the
 /// collective be scheduled before the GEMM?
 pub fn comm_first(m: &MachineConfig, g: &GemmKernel, c: &CollectiveKernel) -> bool {
-    let order = launch_order(&[LaunchInfo::of_gemm(m, g), LaunchInfo::of_collective(m, c)]);
-    order[0] == 1
+    super::cost::comm_first(m, g, c)
 }
 
 #[cfg(test)]
@@ -129,5 +131,104 @@ mod tests {
         }
         let order = launch_order(&infos);
         assert_eq!(*order.last().unwrap(), 0, "GEMM launches last");
+    }
+
+    #[test]
+    fn prop_launch_order_is_a_stable_ascending_permutation() {
+        // The satellite property tests: for arbitrary workgroup vectors,
+        // `launch_order` (a) returns a permutation of 0..n, (b) orders
+        // workgroup counts ascending, and (c) breaks ties by input
+        // position (stability) — so re-ordering is fully determined by
+        // the counts and never invents priority.
+        use crate::util::prop::forall;
+        forall("launch_order is a stable ascending permutation", 80, |rng| {
+            // Pack: element count, value range, RNG stream seed.
+            (rng.i64_in(1, 24), rng.i64_in(1, 6), rng.i64_in(0, i64::MAX / 2))
+        })
+        .check(|&(n, span, seed)| {
+            // Small value spans force many ties (the stability stressor).
+            let mut state = seed as u64;
+            let mut next = || {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                state >> 33
+            };
+            let ks: Vec<LaunchInfo> = (0..n)
+                .map(|i| LaunchInfo {
+                    name: format!("k{i}"),
+                    workgroups: next() % (span as u64 * 32 + 1),
+                })
+                .collect();
+            let order = launch_order(&ks);
+            // (a) permutation.
+            let mut seen = vec![false; ks.len()];
+            for &i in &order {
+                if i >= ks.len() || seen[i] {
+                    return Err(format!("not a permutation: {order:?}"));
+                }
+                seen[i] = true;
+            }
+            if order.len() != ks.len() {
+                return Err(format!("length changed: {} vs {}", order.len(), ks.len()));
+            }
+            // (b) ascending; (c) ties keep input order.
+            for w in order.windows(2) {
+                let (a, b) = (&ks[w[0]], &ks[w[1]]);
+                if a.workgroups > b.workgroups {
+                    return Err(format!("descending pair {w:?}: {} > {}", a.workgroups, b.workgroups));
+                }
+                if a.workgroups == b.workgroups && w[0] > w[1] {
+                    return Err(format!("unstable tie {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_comm_first_agrees_with_cost_model() {
+        // The sp decision must be exactly the CostModel's launch-latency
+        // ordering — one source of truth for the planner and the
+        // pairwise heuristic alike (strictly-smaller workgroup count
+        // launches first; ties keep the GEMM's slot).
+        use crate::heuristics::cost::CostModel;
+        use crate::util::prop::forall;
+        let m = MachineConfig::mi300x();
+        let cm = CostModel::new(&m, &crate::fabric::Topology::fully_connected(m.num_gpus));
+        forall("comm_first == CostModel::comm_first", 80, |rng| {
+            // (GEMM M-units, GEMM N-units, payload MiB; parity = kind).
+            (rng.i64_in(1, 64), rng.i64_in(1, 64), rng.i64_in(1, 4096))
+        })
+        .check(|&(mu, nu, mb)| {
+            let g = GemmKernel::new(
+                "p",
+                crate::config::workload::GemmShape::bf16(
+                    mu.clamp(1, 64) as usize * 128,
+                    nu.clamp(1, 64) as usize * 128,
+                    1024,
+                ),
+            );
+            let kind = if mb % 2 == 0 {
+                CollectiveKind::AllGather
+            } else {
+                CollectiveKind::AllToAll
+            };
+            let c = CollectiveKernel::new(CollectiveSpec::new(kind, mb.clamp(1, 4096) as u64 * MIB));
+            let sp = comm_first(&m, &g, &c);
+            let cost = cm.comm_first(&g, &c);
+            if sp != cost {
+                return Err(format!(
+                    "sp={sp} cost={cost} for gemm {}wg vs comm {}cu",
+                    g.workgroups(&m),
+                    c.cu_need(&m)
+                ));
+            }
+            // And both must equal the strict workgroup comparison the
+            // launch-latency terms encode.
+            let expect = (c.cu_need(&m) as u64) < g.workgroups(&m);
+            if sp != expect {
+                return Err(format!("decision diverged from the workgroup proxy: {sp} vs {expect}"));
+            }
+            Ok(())
+        });
     }
 }

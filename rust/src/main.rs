@@ -1,20 +1,9 @@
-//! `conccl` — leader entrypoint / CLI for the C3 + ConCCL system.
-//!
-//! See `cli::HELP` (or `conccl help`) for the subcommand reference.
+//! `conccl` — leader entrypoint for the C3 + ConCCL system: a thin
+//! argv parser → dispatcher shell. All subcommand logic lives in
+//! `conccl::cli::handlers` (one module per subcommand group); see
+//! `cli::HELP` (or `conccl help`) for the subcommand reference.
 
-use conccl::cli::{Args, HELP};
-use conccl::config::workload::CollectiveKind;
-use conccl::coordinator::{headline, report, run_suite, taxonomy_divergences, RunnerConfig};
-use conccl::heuristics::{self, SlowdownTable};
-use conccl::kernels::CollectiveKernel;
-use conccl::sched::{C3Executor, Strategy};
-use conccl::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVariant, SweepPlan};
-use conccl::util::table::{f as fnum, speedup, Table};
-use conccl::util::units::{fmt_seconds, MIB};
-use conccl::workload::e2e::{run_e2e, E2eFamily, E2eSpec};
-use conccl::workload::llama::LlamaConfig;
-use conccl::workload::scenarios::{resolve, resolve_tag, suite, TABLE2};
-use conccl::workload::trace::{fsdp_forward_trace, replay};
+use conccl::cli::{handlers, Args, HELP};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -25,666 +14,8 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if let Err(e) = dispatch(&args) {
+    if let Err(e) = handlers::dispatch(&args) {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
-}
-
-fn dispatch(args: &Args) -> Result<(), String> {
-    match args.subcommand.as_str() {
-        "help" | "--help" | "-h" => {
-            print!("{HELP}");
-            Ok(())
-        }
-        "characterize" => characterize(args),
-        "run" => run_one(args),
-        "sweep" => sweep_cmd(args),
-        "bench-gate" => bench_gate(args),
-        "rp-sweep" => rp_sweep(args),
-        "report" => full_report(args),
-        "conccl-bw" => conccl_bw(args),
-        "heuristics" => heuristics_cmd(args),
-        "e2e" => e2e(args),
-        "graph" => graph_cmd(args),
-        other => Err(format!("unknown subcommand '{other}'\n\n{HELP}")),
-    }
-}
-
-fn parse_collective(s: &str) -> Result<CollectiveKind, String> {
-    match s {
-        "all-gather" | "ag" => Ok(CollectiveKind::AllGather),
-        "all-to-all" | "a2a" => Ok(CollectiveKind::AllToAll),
-        "all-reduce" | "ar" => Ok(CollectiveKind::AllReduce),
-        "reduce-scatter" | "rs" => Ok(CollectiveKind::ReduceScatter),
-        other => Err(format!("unknown collective '{other}'")),
-    }
-}
-
-fn parse_strategy(s: &str, comm_need: u32) -> Result<Strategy, String> {
-    Strategy::parse(s, comm_need).map_err(|e| e.to_string())
-}
-
-fn find_scenario(
-    tag: &str,
-    kind: CollectiveKind,
-) -> Result<conccl::workload::ResolvedScenario, String> {
-    resolve_tag(tag, kind).map_err(|e| e.to_string())
-}
-
-fn characterize(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    report::render_table1(&m).print();
-    println!();
-    report::render_table2(&m).print();
-    println!();
-    report::render_fig5a(&m, &[0, 8, 16, 32, 64, 96, 128]).print();
-    println!();
-    let sizes = [896 * MIB, 3328 * MIB, 13 * 1024 * MIB];
-    report::render_fig5bc(&m, CollectiveKind::AllGather, &sizes, &[8, 16, 32, 64, 128]).print();
-    println!();
-    report::render_fig5bc(&m, CollectiveKind::AllToAll, &sizes, &[8, 16, 32, 64, 128]).print();
-    println!();
-    report::render_fig6(&m, &[896 * MIB, 3328 * MIB]).print();
-    Ok(())
-}
-
-fn run_one(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
-    let sc = find_scenario(&args.opt("scenario", "mb1_896M"), kind)?;
-    let nodes = args.opt_usize("nodes", 1)?.max(1);
-    let exec = C3Executor::with_topology(m.clone(), m.topology(nodes));
-    let mut strat = parse_strategy(&args.opt("strategy", "conccl"), sc.comm.cu_need(&exec.m))?;
-    // --chunks auto|N applies to the chunked pipeline strategies: auto
-    // asks the runtime-style heuristic (heuristics::chunk) on the
-    // paper's single node — the regime it is calibrated for — and the
-    // topology-aware exhaustive chunk sweep on multi-node topologies
-    // (the heuristic's rooflines know nothing about the NIC, where
-    // chunking's win shrinks); a number pins the count (clamped to
-    // what the scenario supports).
-    let mut chunk_note = String::new();
-    // The multi-node auto path already simulates every candidate; keep
-    // its winning run instead of re-simulating the same point.
-    let mut swept_run = None;
-    if strat.is_chunked() {
-        let dma = !strat.comm_on_cus();
-        let k = match args.opt("chunks", "auto").as_str() {
-            "auto" if nodes <= 1 => {
-                let k = heuristics::recommend_chunks(&exec.m, &sc, dma);
-                chunk_note = format!("{k} (auto-tuned)");
-                k
-            }
-            "auto" => {
-                let (run, k) = exec
-                    .try_run_chunk_sweep_with(&sc, dma, exec.baselines(&sc))
-                    .map_err(|e| e.to_string())?;
-                chunk_note = format!("{k} (swept, {nodes}-node topology)");
-                swept_run = Some(run);
-                k
-            }
-            other => {
-                let k: u32 = other.parse().map_err(|e| format!("--chunks: {e}"))?;
-                if k == 0 {
-                    return Err("--chunks: chunk count must be >= 1 (or 'auto')".into());
-                }
-                let k = exec.clamp_chunks(&sc, k);
-                chunk_note = k.to_string();
-                k
-            }
-        };
-        strat = match strat {
-            Strategy::C3Chunked { .. } => Strategy::C3Chunked { chunks: k },
-            Strategy::ConcclChunked { .. } => Strategy::ConcclChunked { chunks: k },
-            other => other,
-        };
-    } else if args.options.contains_key("chunks") {
-        // Silently ignoring --chunks would misreport the measurement.
-        return Err(format!(
-            "--chunks applies to the chunked pipeline strategies \
-             (c3_chunked, conccl_chunked), not '{}'",
-            strat.name()
-        ));
-    }
-    let r = match swept_run {
-        Some(run) => run,
-        None => exec.try_run(&sc, strat).map_err(|e| e.to_string())?,
-    };
-    let mut t = Table::new(vec!["metric", "value"]).left_cols(2).title(format!(
-        "{} × {} under {} ({nodes} node(s))",
-        sc.tag(),
-        kind.name(),
-        strat.name()
-    ));
-    if !chunk_note.is_empty() {
-        t.row(vec!["chunks".to_string(), chunk_note]);
-    }
-    t.row(vec!["serial".to_string(), fmt_seconds(r.serial)]);
-    t.row(vec!["concurrent".to_string(), fmt_seconds(r.total)]);
-    t.row(vec!["gemm finish".to_string(), fmt_seconds(r.gemm_finish)]);
-    t.row(vec!["comm finish".to_string(), fmt_seconds(r.comm_finish)]);
-    t.row(vec!["ideal speedup".to_string(), speedup(r.ideal)]);
-    t.row(vec!["attained speedup".to_string(), speedup(r.speedup)]);
-    t.row(vec!["% of ideal".to_string(), fnum(r.pct_ideal, 1)]);
-    t.print();
-    Ok(())
-}
-
-/// The parallel scenario-sweep engine: {scenarios × strategies ×
-/// machine configs} evaluated concurrently, reported as tables + JSON.
-fn sweep_cmd(args: &Args) -> Result<(), String> {
-    // The pre-rename `sweep` took --scenario/--strategy (singular);
-    // silently ignoring those would run a completely different
-    // computation, so reject them loudly.
-    if args.options.contains_key("scenario") {
-        return Err(
-            "`sweep` takes --scenarios (plural, comma-separated); for the single-scenario \
-             CU-reservation sweep use `conccl rp-sweep --scenario ...`"
-                .into(),
-        );
-    }
-    if args.options.contains_key("strategy") {
-        return Err("`sweep` takes --strategies (plural, comma-separated)".into());
-    }
-    let m = args.machine()?;
-    let jitter: f64 = args
-        .opt("jitter", "0")
-        .parse()
-        .map_err(|e| format!("--jitter: {e}"))?;
-    let seed: u64 = args
-        .opt("seed", "24301")
-        .parse()
-        .map_err(|e| format!("--seed: {e}"))?;
-    let cfg = RunnerConfig {
-        jitter,
-        seed,
-        ..RunnerConfig::default()
-    };
-    let kind_opt = args.opt("collective", "both");
-    let kinds: Vec<CollectiveKind> = match kind_opt.as_str() {
-        "both" | "all" => CollectiveKind::studied().to_vec(),
-        other => vec![parse_collective(other)?],
-    };
-    let strat_opt = args.opt("strategies", "all");
-    let strategy_names: Vec<&str> = csv_list(&strat_opt);
-    let scen_opt = args.opt("scenarios", "all");
-    let scenario_tags: Vec<&str> = csv_list(&scen_opt);
-    let mut machines = vec![MachineVariant::base(m.clone())];
-    if let Some(spec) = args.options.get("variants") {
-        machines.extend(parse_variants(&m, spec).map_err(|e| e.to_string())?);
-    }
-    let threads = args.opt_usize("threads", 0)?;
-    let node_counts: Vec<usize> = args
-        .opt("nodes", "1")
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(|s| s.parse::<usize>().map_err(|e| format!("--nodes: {e}")))
-        .collect::<Result<_, _>>()?;
-    let chunk_counts: Vec<ChunkSel> = args
-        .opt("chunks", "auto")
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(ChunkSel::parse)
-        .collect::<Result<_, _>>()
-        .map_err(|e| format!("--chunks: {e}"))?;
-    let e2e_specs: Vec<E2eSpec> = match args.options.get("e2e") {
-        None => Vec::new(),
-        Some(spec) => spec
-            .split(',')
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
-            .map(E2eSpec::parse)
-            .collect::<Result<_, _>>()
-            .map_err(|e| format!("--e2e: {e}"))?,
-    };
-    let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
-        .and_then(|p| p.with_node_counts(node_counts))
-        .and_then(|p| p.with_chunk_counts(chunk_counts))
-        .and_then(|p| p.with_e2e(e2e_specs))
-        .map_err(|e| e.to_string())?;
-    let n_jobs = plan.job_count();
-    let t0 = std::time::Instant::now();
-    let results = execute_sweep(plan, threads);
-    let elapsed = t0.elapsed().as_secs_f64();
-
-    for (mi, mv) in results.plan.machines.iter().enumerate() {
-        for (ni, &nodes) in results.plan.node_counts.iter().enumerate() {
-            for (ci, &chunks) in results.plan.chunk_counts.iter().enumerate() {
-                let mut headers: Vec<String> =
-                    vec!["scenario".to_string(), "collective".to_string()];
-                headers.extend(results.plan.strategies.iter().map(|k| k.name().to_string()));
-                let mut t = Table::new(headers).left_cols(2).title(format!(
-                    "sweep: machine '{}' × {nodes} node(s) × chunks={} — median-speedup per strategy",
-                    mv.label,
-                    chunks.label()
-                ));
-                for (si, sc) in results.plan.scenarios.iter().enumerate() {
-                    let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
-                    for (ki, _) in results.plan.strategies.iter().enumerate() {
-                        let out = &results.outputs[results.plan.job_id(mi, ni, ci, si, ki)];
-                        row.push(match &out.result {
-                            Ok(meas) => match (out.rp_cus, out.chunks_used) {
-                                (Some(k), _) => format!("{} @{k}CU", speedup(meas.speedup_median)),
-                                (None, Some(k)) => {
-                                    format!("{} @{k}ch", speedup(meas.speedup_median))
-                                }
-                                (None, None) => speedup(meas.speedup_median),
-                            },
-                            Err(_) => "ERR".to_string(),
-                        });
-                    }
-                    t.row(row);
-                }
-                t.print();
-                if let Ok(outs) = results.to_scenario_outcomes(mi, ni, ci) {
-                    let h = headline(&outs);
-                    let p = |k: &str| h.per_strategy[k].1;
-                    println!(
-                        "machine '{}' × {nodes} node(s) × chunks={}: avg %ideal — base {:.0}, \
-                         sp {:.0}, rp {:.0}, best {:.0}, conccl {:.0}, conccl_rp {:.0}",
-                        mv.label,
-                        chunks.label(),
-                        p("c3_base"),
-                        p("c3_sp"),
-                        p("c3_rp"),
-                        p("c3_best"),
-                        p("conccl"),
-                        p("conccl_rp")
-                    );
-                }
-                println!();
-            }
-            // End-to-end workload axis (graph engine): one table per
-            // spec on this (machine, topology) point.
-            for (si, spec) in results.plan.e2e.iter().enumerate() {
-                let runs: Vec<_> = results
-                    .e2e_point(mi, ni, si)
-                    .into_iter()
-                    .filter_map(|o| o.result.as_ref().ok().copied())
-                    .collect();
-                report::render_graph_e2e(
-                    &format!(
-                        "e2e workload '{}': machine '{}' × {nodes} node(s)",
-                        spec.label(),
-                        mv.label
-                    ),
-                    &runs,
-                )
-                .print();
-                println!();
-            }
-        }
-    }
-    let errs = results.errors();
-    if !errs.is_empty() {
-        println!("{} job(s) failed (sweep continued without them):", errs.len());
-        for (job, e) in &errs {
-            println!(
-                "  job {} [{} × {}n × {}ch × {} × {}]: {e}",
-                job.id,
-                results.machine_label(job.machine_idx),
-                results.plan.node_counts[job.node_idx],
-                results.plan.chunk_counts[job.chunk_idx].label(),
-                results.plan.scenarios[job.scenario_idx].tag(),
-                job.strategy.name()
-            );
-        }
-    }
-    // Failed e2e workload points are dropped from their tables above —
-    // name them here so a non-JSON run cannot mistake a missing row
-    // for success (the JSON carries the {"error": ...} object).
-    let e2e_errs: Vec<&conccl::sweep::E2eOutput> = results
-        .e2e_outputs
-        .iter()
-        .filter(|o| o.result.is_err())
-        .collect();
-    if !e2e_errs.is_empty() {
-        println!("{} e2e workload point(s) failed:", e2e_errs.len());
-        for o in &e2e_errs {
-            println!(
-                "  [{} × {}n × {} × {}]: {}",
-                results.machine_label(o.machine_idx),
-                results.plan.node_counts[o.node_idx],
-                results.plan.e2e[o.spec_idx].label(),
-                o.family.name(),
-                o.result.as_ref().unwrap_err()
-            );
-        }
-    }
-    println!(
-        "{n_jobs} jobs on {} worker thread(s) in {}",
-        results.threads_used,
-        fmt_seconds(elapsed)
-    );
-    if let Some(path) = args.options.get("json") {
-        let j = results.to_json();
-        if path == "-" {
-            println!("{j}");
-        } else {
-            std::fs::write(path, &j).map_err(|e| format!("--json {path}: {e}"))?;
-            println!("wrote JSON report to {path}");
-        }
-    }
-    // Partial failure must not look like success to scripts/CI: the
-    // tables and JSON above still describe what ran, but the exit
-    // status reports the failed jobs (pairwise and e2e alike).
-    if errs.is_empty() && e2e_errs.is_empty() {
-        Ok(())
-    } else {
-        Err(format!(
-            "{} of {n_jobs} sweep jobs and {} e2e point(s) failed (see list above)",
-            errs.len(),
-            e2e_errs.len()
-        ))
-    }
-}
-
-/// CI perf-regression gate: compare a fresh `sweep --json` report
-/// against the checked-in baseline; non-zero exit on any >tolerance
-/// median-speedup regression. Without `--strict` a `{"seeded":false}`
-/// baseline passes with seeding instructions (bootstrap mode, useful
-/// locally); with `--strict` — what CI uses — an unseeded baseline is
-/// a hard failure, so the gate can never pass vacuously.
-fn bench_gate(args: &Args) -> Result<(), String> {
-    let baseline_path = args.opt("baseline", "BENCH_baseline.json");
-    let report_path = args
-        .options
-        .get("report")
-        .ok_or("bench-gate needs --report <sweep --json output>")?;
-    let tolerance: f64 = args
-        .opt("tolerance", "0.02")
-        .parse()
-        .map_err(|e| format!("--tolerance: {e}"))?;
-    let read = |p: &str| -> Result<conccl::sweep::Json, String> {
-        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
-        conccl::sweep::parse_json(&text).map_err(|e| format!("{p}: {e}"))
-    };
-    let baseline = read(&baseline_path)?;
-    let report = read(report_path)?;
-    if !conccl::sweep::is_seeded(&baseline) {
-        let points = conccl::sweep::extract_points(&report)?;
-        println!(
-            "bench-gate: baseline '{baseline_path}' is not seeded yet; {} point(s) measured.",
-            points.len()
-        );
-        println!(
-            "  To seed the bench trajectory, commit the fresh report as {baseline_path}:\n  \
-             cp {report_path} {baseline_path}"
-        );
-        // --strict: an unseeded/bootstrap baseline is a FAILURE, not a
-        // pass — CI must gate against real numbers.
-        if args.flag("strict") {
-            return Err(format!(
-                "--strict: baseline '{baseline_path}' is not seeded; seed it and re-run"
-            ));
-        }
-        return Ok(());
-    }
-    let gate = conccl::sweep::gate(&baseline, &report, tolerance)?;
-    print!("{}", gate.render(tolerance));
-    if gate.passed() {
-        Ok(())
-    } else {
-        Err(format!(
-            "perf gate failed: {} regression(s), {} missing point(s)",
-            gate.regressions.len(),
-            gate.missing.len()
-        ))
-    }
-}
-
-/// Split a comma-separated option; "all" or empty means "everything".
-fn csv_list(opt: &str) -> Vec<&str> {
-    if opt == "all" || opt.trim().is_empty() {
-        Vec::new()
-    } else {
-        opt.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
-    }
-}
-
-/// The original single-scenario c3_rp CU-reservation sweep.
-fn rp_sweep(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let kind = parse_collective(&args.opt("collective", "all-gather"))?;
-    let sc = find_scenario(&args.opt("scenario", "cb1_896M"), kind)?;
-    let exec = C3Executor::new(m);
-    let mut t = Table::new(vec!["comm CUs", "total", "speedup", "%ideal"])
-        .title(format!("c3_rp sweep: {} × {}", sc.tag(), kind.name()));
-    for k in exec.m.rp_candidates() {
-        let r = exec.run(&sc, Strategy::C3Rp { comm_cus: k });
-        t.row(vec![
-            k.to_string(),
-            fmt_seconds(r.total),
-            speedup(r.speedup),
-            fnum(r.pct_ideal, 1),
-        ]);
-    }
-    let (best, k) = exec.run_rp_sweep(&sc);
-    t.rule();
-    t.row(vec![
-        format!("best={k}"),
-        fmt_seconds(best.total),
-        speedup(best.speedup),
-        fnum(best.pct_ideal, 1),
-    ]);
-    t.print();
-    Ok(())
-}
-
-fn full_report(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let jitter: f64 = args
-        .opt("jitter", "0.01")
-        .parse()
-        .map_err(|e| format!("--jitter: {e}"))?;
-    let cfg = RunnerConfig {
-        jitter,
-        ..RunnerConfig::default()
-    };
-    let outs = run_suite(&m, &suite(), &cfg);
-    report::render_fig7(&outs).print();
-    println!();
-    report::render_fig8(&outs).print();
-    println!();
-    report::render_fig10(&outs).print();
-    let div = taxonomy_divergences(&m, &outs);
-    if !div.is_empty() {
-        println!("\ntaxonomy divergences (paper label vs our models):");
-        for (tag, paper, ours) in div {
-            println!("  {tag}: paper {} / computed {}", paper.name(), ours.name());
-        }
-    }
-    Ok(())
-}
-
-fn conccl_bw(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let sizes: Vec<u64> = [1, 4, 8, 16, 32, 64, 128, 256, 896, 2048, 8192, 20480]
-        .iter()
-        .map(|mb| mb * MIB)
-        .collect();
-    report::render_fig9(&m, &sizes).print();
-    Ok(())
-}
-
-fn heuristics_cmd(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let table = SlowdownTable::build(&m);
-    let exec = C3Executor::new(m.clone());
-    let mut t = Table::new(vec![
-        "scenario", "collective", "heuristic", "sweep-best", "match", "loss%",
-    ])
-    .title("§V-C RP heuristic vs exhaustive sweep")
-    .left_cols(2);
-    let mut matches = 0;
-    let mut worst_loss: f64 = 0.0;
-    let mut n = 0;
-    for kind in CollectiveKind::studied() {
-        for row in &TABLE2 {
-            let sc = resolve(row, kind);
-            let k_h = heuristics::recommend(&m, &table, &sc);
-            let (best, k_b) = exec.run_rp_sweep(&sc);
-            let r_h = exec.run_rp_at(&sc, k_h);
-            let loss = (r_h.total / best.total - 1.0) * 100.0;
-            let is_match = k_h == k_b || loss < 0.1;
-            matches += is_match as usize;
-            worst_loss = worst_loss.max(loss);
-            n += 1;
-            t.row(vec![
-                sc.tag(),
-                kind.name().to_string(),
-                k_h.to_string(),
-                k_b.to_string(),
-                if is_match { "yes" } else { "no" }.to_string(),
-                fnum(loss, 2),
-            ]);
-        }
-    }
-    t.print();
-    println!(
-        "heuristic optimal for {matches}/{n} scenarios; worst loss {worst_loss:.2}% \
-         (paper: 24/30, <=1.5%)"
-    );
-    let sp_ok = TABLE2.iter().all(|row| {
-        let sc = resolve(row, CollectiveKind::AllGather);
-        heuristics::comm_first(&m, &sc.gemm, &sc.comm)
-    });
-    println!("SP heuristic schedules communication first for all scenarios: {sp_ok}");
-
-    // Chunk-count tuner vs the exhaustive chunk sweep (the granularity
-    // analog of the rp comparison above), on the ConCCL pipeline.
-    let mut ct = Table::new(vec![
-        "scenario", "collective", "heuristic k", "sweep-best k", "match", "loss%",
-    ])
-    .title("chunk auto-tuner vs exhaustive chunk sweep (conccl_chunked)")
-    .left_cols(2);
-    let mut c_matches = 0;
-    let mut c_worst: f64 = 0.0;
-    for kind in CollectiveKind::studied() {
-        for row in &TABLE2 {
-            let sc = resolve(row, kind);
-            let k_h = heuristics::recommend_chunks(&m, &sc, true);
-            let at_h = exec.run(&sc, Strategy::ConcclChunked { chunks: k_h });
-            let (best, k_b) = exec.run_chunk_sweep(&sc, true);
-            let loss = (at_h.total / best.total - 1.0) * 100.0;
-            let is_match = k_h == k_b || loss < 0.1;
-            c_matches += is_match as usize;
-            c_worst = c_worst.max(loss);
-            ct.row(vec![
-                sc.tag(),
-                kind.name().to_string(),
-                k_h.to_string(),
-                k_b.to_string(),
-                if is_match { "yes" } else { "no" }.to_string(),
-                fnum(loss, 2),
-            ]);
-        }
-    }
-    println!();
-    ct.print();
-    println!("chunk tuner optimal for {c_matches}/{n} scenarios; worst loss {c_worst:.2}%");
-    Ok(())
-}
-
-/// Run one end-to-end workload graph (multi-layer FSDP/TP schedule) on
-/// the workload-graph engine and report the e2e metrics per family.
-fn graph_cmd(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let nodes = args.opt_usize("nodes", 1)?.max(1);
-    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
-    let layers = args.opt_usize("layers", 4)?.max(1);
-    let spec_str = format!(
-        "{}:{}:{layers}:{depth}",
-        args.opt("workload", "fsdp_step"),
-        args.opt("model", "70b"),
-    );
-    let spec = E2eSpec::parse(&spec_str).map_err(|e| e.to_string())?;
-    let topo = m.topology(nodes);
-    let trace = spec.trace();
-    let families: Vec<E2eFamily> = match args.opt("family", "all").as_str() {
-        "all" => E2eFamily::lineup().to_vec(),
-        other => vec![E2eFamily::parse(other).map_err(|e| e.to_string())?],
-    };
-    let mut runs = Vec::with_capacity(families.len());
-    for fam in families {
-        runs.push(run_e2e(&m, &topo, &trace, spec.depth, fam).map_err(|e| e.to_string())?);
-    }
-    report::render_graph_e2e(
-        &format!(
-            "workload graph: {} ({} stages, prefetch depth {depth}, {nodes} node(s))",
-            spec.label(),
-            trace.stages.len()
-        ),
-        &runs,
-    )
-    .print();
-    Ok(())
-}
-
-fn e2e(args: &Args) -> Result<(), String> {
-    let m = args.machine()?;
-    let layers = args.opt_usize("layers", 4)?;
-    let model = match args.opt("model", "70b").as_str() {
-        "70b" => LlamaConfig::llama70b(),
-        "405b" => LlamaConfig::llama405b(),
-        other => return Err(format!("unknown model '{other}'")),
-    };
-    let trace = fsdp_forward_trace(&model, layers);
-    let mut t = Table::new(vec!["strategy", "step time", "speedup", "%ideal"]).left_cols(1).title(format!(
-        "FSDP forward, {} × {layers} layers ({} C3 stages)",
-        model.name,
-        trace.stages.len()
-    ));
-    for strat in [
-        Strategy::Serial,
-        Strategy::C3Base,
-        Strategy::C3Sp,
-        Strategy::Conccl,
-        Strategy::ConcclRp { cus_removed: 8 },
-        // Auto-tuned chunked pipeline, per stage (chunks: 0 = auto).
-        Strategy::ConcclChunked { chunks: 0 },
-    ] {
-        let r = replay(&m, &trace, strat);
-        t.row(vec![
-            strat.name().to_string(),
-            fmt_seconds(r.total),
-            speedup(r.speedup()),
-            fnum(r.pct_ideal(), 1),
-        ]);
-    }
-    t.print();
-    // Isolated comparison of CU vs DMA collectives on this trace.
-    let mut wire = Table::new(vec!["stage", "gather", "rccl", "conccl"]).left_cols(2);
-    for s in trace.stages.iter().take(2) {
-        let dma = conccl::conccl::DmaCollective::try_new(s.gather.spec)
-            .map_err(|e| e.to_string())?;
-        wire.row(vec![
-            s.label.clone(),
-            s.gather.spec.size_tag(),
-            fmt_seconds(CollectiveKernel::new(s.gather.spec).time_isolated_full(&m)),
-            fmt_seconds(dma.time_isolated(&m)),
-        ]);
-    }
-    println!();
-    wire.print();
-    // The workload-graph engine's continuous timeline for the same
-    // forward trace: the prefetch window overlaps weight gathers across
-    // stage boundaries, which the per-stage replay above only prices
-    // pairwise. `conccl graph` exposes the full workload lineup.
-    let depth = args.opt_usize("prefetch-depth", 2)?.max(1);
-    let gtrace = conccl::workload::e2e::fsdp_forward_stages(&model, layers.max(1));
-    let topo = m.topology(1);
-    let mut runs = Vec::new();
-    for fam in E2eFamily::lineup() {
-        runs.push(run_e2e(&m, &topo, &gtrace, depth, fam).map_err(|e| e.to_string())?);
-    }
-    println!();
-    report::render_graph_e2e(
-        &format!("graph engine: FSDP forward × {layers} layers, prefetch depth {depth}"),
-        &runs,
-    )
-    .print();
-    Ok(())
 }

@@ -1,14 +1,17 @@
 //! The C3 scheduler: strategies (§IV-C, §V, §VI), the workload-graph
 //! engine that produces concurrent timelines over the fluid simulator,
-//! and the executor / fine-grain chunked pipeline builders on top of it
-//! (arXiv 2512.10236 / DMA-Latte).
+//! the executor / fine-grain chunked pipeline builders on top of it
+//! (arXiv 2512.10236 / DMA-Latte), and the cost-model-driven per-node
+//! planner ([`policy`]) behind `E2eFamily::Auto`.
 
 pub mod executor;
 pub mod graph;
 pub mod pipeline;
+pub mod policy;
 pub mod strategy;
 
 pub use executor::{Baselines, C3Executor, C3Run};
 pub use graph::{Graph, GraphRun, NodeSpec, Ready, Work};
 pub use pipeline::chunk_sizes;
+pub use policy::{PlanBackend, PlanNode, PlanSummary, Planner, StagePlan};
 pub use strategy::{Strategy, StrategyKind};

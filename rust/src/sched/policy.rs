@@ -1,0 +1,566 @@
+//! The per-node C3 planner: a cost-model-driven policy layer over the
+//! workload-graph engine.
+//!
+//! The pairwise heuristics each answer one question about one isolated
+//! (GEMM, collective) pair; the PR-4 e2e families stamp one uniform
+//! answer onto every node of a workload graph. This module closes the
+//! gap the paper's §V-C/§VI-G runtime argument leaves open: walk an
+//! [`E2eTrace`] and decide **per node** —
+//!
+//! * **backend** — offloadable collectives go to the SDMA engines,
+//!   reduce-scatters stay on CUs (the §VII-A2 hybrid), *and* when the
+//!   prefetch window keeps more concurrent DMA collectives in flight
+//!   than the GPU has engines
+//!   ([`CostModel::engines_oversubscribed`]), the planner splits the
+//!   window's gathers across both pools instead of piling them onto
+//!   one (the engines and the collective CUs are disjoint resources —
+//!   exactly the complementary-resource argument of §V-A, applied
+//!   between two *communication* backends);
+//! * **CU partition** — CU-resident collectives get their §V-C
+//!   reservation ([`CostModel::recommend_cus`]) and memory-bound GEMMs
+//!   shed the §VI-G cache-dip CUs ([`CostModel::recommend_cu_shed`]);
+//! * **granularity** — each DMA gather gets the chunk tuner's count
+//!   ([`CostModel::recommend_chunks`]);
+//! * **issue order** — per-stage priority from the workgroup proxy
+//!   ([`CostModel::comm_first`]).
+//!
+//! The cost model *proposes*; the graph engine *disposes*: every
+//! proposal (plus the fixed-family stamps and a fully serialized
+//! chain) is simulated and the best timeline wins — the same sweep
+//! protocol the executor already applies to rp reservations and chunk
+//! counts (§V-B), lifted to whole-graph plans. Because the candidate
+//! set always contains the serialized chain and both fixed overlap
+//! families, `E2eFamily::Auto` can never lose to any of them — by
+//! construction, not by tuning.
+
+use crate::config::machine::MachineConfig;
+use crate::error::Error;
+use crate::fabric::Topology;
+use crate::heuristics::CostModel;
+use crate::kernels::CollectiveKernel;
+use crate::sched::graph;
+use crate::workload::e2e::{
+    build_graph_planned, build_serial_chain, serial_total, E2eFamily, E2eKind, E2eRun, E2eStage,
+    E2eTrace,
+};
+use crate::workload::ResolvedScenario;
+
+/// Execution backend of one collective node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanBackend {
+    /// SDMA engines (ConCCL).
+    Dma,
+    /// CU-resident (RCCL-like) kernel.
+    Cu,
+}
+
+impl PlanBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanBackend::Dma => "dma",
+            PlanBackend::Cu => "cu",
+        }
+    }
+}
+
+/// Plan of one collective node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollPlan {
+    pub backend: PlanBackend,
+    /// CU grant while resident (CU backend; ignored for DMA).
+    pub cus: u32,
+    /// Chunk count (1 = whole kernel).
+    pub chunks: u32,
+}
+
+/// Per-stage node annotations the graph builder consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StagePlan {
+    pub gather: Option<CollPlan>,
+    pub reduce: Option<CollPlan>,
+    /// Fixed CU grant for the stage's GEMM (`None` = residual policy).
+    pub gemm_cus: Option<u32>,
+    /// §V-C issue order: `true` enqueues the gather before the GEMM
+    /// launch; `false` (a GEMM with fewer workgroups than the
+    /// collective's CU need) makes the gather's launch wait out the
+    /// GEMM's launch slot (`workload::e2e::build_graph_planned` adds
+    /// `kernel_launch_s` to its ready lag).
+    pub comm_first: bool,
+}
+
+/// One fully annotated plan candidate.
+#[derive(Debug, Clone)]
+pub struct PlanCandidate {
+    pub name: &'static str,
+    pub stages: Vec<StagePlan>,
+}
+
+/// One row of the rendered plan summary (one graph node's decisions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanNode {
+    pub label: String,
+    /// `gather` / `gemm` / `reduce`.
+    pub role: &'static str,
+    /// `dma` / `cu` (GEMMs report `cu`).
+    pub backend: &'static str,
+    /// CU grant (collectives: reservation; GEMMs: fixed grant, 0 =
+    /// residual).
+    pub cus: u32,
+    /// Chunk count (compute nodes report 1).
+    pub chunks: u32,
+}
+
+/// The winning plan of one `E2eFamily::Auto` evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSummary {
+    /// Name of the winning candidate (e.g. `split-even`).
+    pub strategy: &'static str,
+    /// How many candidate plans were simulated.
+    pub candidates: usize,
+    pub nodes: Vec<PlanNode>,
+}
+
+/// The one per-stage `StagePlan` constructor every stamp and candidate
+/// shares: whole-kernel collectives at their full CU need,
+/// reduce-scatters pinned to CUs (never DMA-offloadable — the §VII-A2
+/// hybrid), residual GEMMs, comm-first issue order. The gather backend
+/// comes from `gather_backend(gather_index, kernel)` (consulted only
+/// for offloadable kinds).
+fn stamp_stages<F: FnMut(usize, &CollectiveKernel) -> PlanBackend>(
+    m: &MachineConfig,
+    trace: &E2eTrace,
+    mut gather_backend: F,
+) -> Vec<StagePlan> {
+    let mut gi = 0usize;
+    trace
+        .stages
+        .iter()
+        .map(|stage| {
+            let gather = stage.gather.as_ref().map(|k| {
+                let backend = if k.spec.kind.dma_offloadable() {
+                    gather_backend(gi, k)
+                } else {
+                    PlanBackend::Cu
+                };
+                gi += 1;
+                CollPlan {
+                    backend,
+                    cus: k.cu_need(m),
+                    chunks: 1,
+                }
+            });
+            StagePlan {
+                gather,
+                reduce: stage.reduce.as_ref().map(|k| CollPlan {
+                    backend: PlanBackend::Cu,
+                    cus: k.cu_need(m),
+                    chunks: 1,
+                }),
+                gemm_cus: None,
+                comm_first: true,
+            }
+        })
+        .collect()
+}
+
+/// Uniform per-stage annotations of a fixed overlap family — the
+/// "whole-graph family stamp" the planner generalizes. `build_graph`
+/// routes fixed families through this, so the stamp and the planner
+/// share one graph builder. (The stamp keeps `comm_first = true`
+/// unconditionally: it must reproduce the pre-planner family numbers
+/// bit-for-bit; the planner's derived candidates overwrite the
+/// ordering from the cost model via `Planner::apply_comm_first`.)
+pub fn family_stages(m: &MachineConfig, trace: &E2eTrace, family: E2eFamily) -> Vec<StagePlan> {
+    let dma = family == E2eFamily::DmaOverlap;
+    stamp_stages(m, trace, |_, _| {
+        if dma {
+            PlanBackend::Dma
+        } else {
+            PlanBackend::Cu
+        }
+    })
+}
+
+/// The per-node planner: one [`CostModel`] per `(machine, topology)`,
+/// reused across every stage decision and candidate.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    pub cost: CostModel,
+}
+
+impl Planner {
+    /// Build the planner (profiles the cost model's slowdown table
+    /// once).
+    pub fn new(m: &MachineConfig, topo: &Topology) -> Planner {
+        Planner {
+            cost: CostModel::new(m, topo),
+        }
+    }
+
+    fn m(&self) -> &MachineConfig {
+        &self.cost.m
+    }
+
+    /// The isolated (GEMM, collective) pair scenario the pairwise
+    /// heuristics price a stage's decision from.
+    fn pair(&self, stage: &E2eStage, kernel: &CollectiveKernel) -> ResolvedScenario {
+        ResolvedScenario {
+            scenario: crate::config::workload::C3Scenario {
+                gemm_tag: stage.gemm.tag.clone(),
+                gemm: stage.gemm.shape,
+                comm: kernel.spec,
+                source: crate::config::workload::Source::Synthetic,
+            },
+            gemm: stage.gemm.clone(),
+            comm: *kernel,
+            paper_type: crate::workload::taxonomy::C3Type::GLong,
+        }
+    }
+
+    /// Largest number of weight gathers the dependency structure lets
+    /// run concurrently: the prefetch window for FSDP traces, 1 for the
+    /// TP chain (activation gathers serialize on the previous GEMM).
+    pub fn max_inflight_gathers(&self, trace: &E2eTrace, depth: usize) -> usize {
+        let gathers = trace.stages.iter().filter(|s| s.gather.is_some()).count();
+        match trace.kind {
+            E2eKind::TpChain => 1.min(gathers),
+            _ => (trace.stages_per_layer * depth.max(1)).min(gathers),
+        }
+    }
+
+    /// Overwrite every stage's issue-order bit with the cost model's
+    /// launch-latency decision — applied to each *derived* candidate
+    /// (the pure family stamps keep comm-first to stay bit-identical
+    /// with the pre-planner families). In the graph model a GEMM-first
+    /// ordering is a pure defer on the gather, so the comm-first stamps
+    /// double as the ordering control: if a derived plan would win on
+    /// backends/grants but lose on its ordering, the argmin falls back
+    /// to the stamp rather than shipping the handicap.
+    fn apply_comm_first(&self, trace: &E2eTrace, stages: &mut [StagePlan]) {
+        for (sp, stage) in stages.iter_mut().zip(&trace.stages) {
+            sp.comm_first = stage
+                .gather
+                .as_ref()
+                .map(|k| self.cost.comm_first(&stage.gemm, k))
+                .unwrap_or(false);
+        }
+    }
+
+    /// Stage plans with the gather backends chosen by a pool-assignment
+    /// rule (`assign(gather_index) -> backend`); reduces stay on CUs,
+    /// chunks default to whole kernels, issue order from the cost
+    /// model.
+    fn assigned_stages<F: FnMut(usize) -> PlanBackend>(
+        &self,
+        trace: &E2eTrace,
+        mut assign: F,
+    ) -> Vec<StagePlan> {
+        let mut stages = stamp_stages(self.m(), trace, |gi, _| assign(gi));
+        self.apply_comm_first(trace, &mut stages);
+        stages
+    }
+
+    /// The candidate plan lineup for one trace: the fixed-family stamps
+    /// plus every cost-model proposal that applies to this trace's
+    /// regime. (The serialized chain rides separately in
+    /// [`Planner::run_auto`] — its dependency structure is not a
+    /// per-stage annotation.)
+    pub fn candidates(&self, trace: &E2eTrace, depth: usize) -> Vec<PlanCandidate> {
+        let m = self.m();
+        let mut out = Vec::new();
+        out.push(PlanCandidate {
+            name: "cu-uniform",
+            stages: family_stages(m, trace, E2eFamily::CuOverlap),
+        });
+        out.push(PlanCandidate {
+            name: "dma-hybrid",
+            stages: family_stages(m, trace, E2eFamily::DmaOverlap),
+        });
+
+        // §V-C CU reservations for CU-resident collectives instead of
+        // the blanket full-need grant.
+        let mut rp_stages = family_stages(m, trace, E2eFamily::CuOverlap);
+        self.apply_comm_first(trace, &mut rp_stages);
+        let mut rp_differs = false;
+        for (si, (sp, stage)) in rp_stages.iter_mut().zip(&trace.stages).enumerate() {
+            if let (Some(cp), Some(k)) = (&mut sp.gather, &stage.gather) {
+                let rec = self.cost.recommend_cus(&self.pair(stage, k));
+                if rec != cp.cus {
+                    cp.cus = rec;
+                    rp_differs = true;
+                }
+            }
+            if let (Some(cp), Some(k)) = (&mut sp.reduce, &stage.reduce) {
+                // A reduce issues after its own GEMM, so the compute it
+                // actually co-runs with is the *next* stage's — price
+                // the reservation against that pairing.
+                let co_stage = trace.stages.get(si + 1).unwrap_or(stage);
+                let rec = self.cost.recommend_cus(&self.pair(co_stage, k));
+                if rec != cp.cus {
+                    cp.cus = rec;
+                    rp_differs = true;
+                }
+            }
+        }
+        if rp_differs {
+            out.push(PlanCandidate { name: "cu-rp", stages: rp_stages });
+        }
+
+        // Pool splitting: only when the window genuinely oversubscribes
+        // the SDMA engines (otherwise a lone DMA collective is never
+        // engine-bound and the hybrid stamp already covers it).
+        if self.cost.engines_oversubscribed(self.max_inflight_gathers(trace, depth)) {
+            out.push(PlanCandidate {
+                name: "split-even",
+                stages: self.assigned_stages(trace, |gi| {
+                    if gi % 2 == 0 { PlanBackend::Dma } else { PlanBackend::Cu }
+                }),
+            });
+            out.push(PlanCandidate {
+                name: "split-odd",
+                stages: self.assigned_stages(trace, |gi| {
+                    if gi % 2 == 1 { PlanBackend::Dma } else { PlanBackend::Cu }
+                }),
+            });
+            out.push(PlanCandidate {
+                name: "split-thirds",
+                stages: self.assigned_stages(trace, |gi| {
+                    if gi % 3 == 0 { PlanBackend::Dma } else { PlanBackend::Cu }
+                }),
+            });
+        }
+
+        // Chunked-DMA gathers where the tuner projects a win. The
+        // proposal is priced on the pairwise co-chunked projection —
+        // deliberately conservative for the e2e graph, whose stage
+        // GEMMs stay whole; the simulated argmin, not the projection,
+        // decides whether the chunking actually pays.
+        let mut chunked = family_stages(m, trace, E2eFamily::DmaOverlap);
+        self.apply_comm_first(trace, &mut chunked);
+        let mut any_chunked = false;
+        for (sp, stage) in chunked.iter_mut().zip(&trace.stages) {
+            if let (Some(cp), Some(k)) = (&mut sp.gather, &stage.gather) {
+                if cp.backend == PlanBackend::Dma {
+                    let rec = self.cost.recommend_comm_chunks(&self.pair(stage, k), true);
+                    if rec >= 2 {
+                        cp.chunks = rec;
+                        any_chunked = true;
+                    }
+                }
+            }
+        }
+        if any_chunked {
+            out.push(PlanCandidate { name: "dma-chunked", stages: chunked });
+        }
+
+        // §VI-G cache-dip CU shedding on memory-bound GEMMs under DMA
+        // offload.
+        let mut trimmed = family_stages(m, trace, E2eFamily::DmaOverlap);
+        self.apply_comm_first(trace, &mut trimmed);
+        let mut any_trim = false;
+        for (sp, stage) in trimmed.iter_mut().zip(&trace.stages) {
+            let shed = self.cost.recommend_cu_shed(&stage.gemm);
+            if shed > 0 {
+                sp.gemm_cus = Some(m.cus_total().saturating_sub(shed).max(8));
+                any_trim = true;
+            }
+        }
+        if any_trim {
+            out.push(PlanCandidate { name: "dma-trim", stages: trimmed });
+        }
+
+        out
+    }
+
+    /// Evaluate `E2eFamily::Auto`: simulate the serialized chain, both
+    /// fixed overlap stamps and every cost-model proposal on the graph
+    /// engine, keep the best timeline, and return it with the winning
+    /// plan. Never worse than serial / cu_overlap / dma_overlap by
+    /// construction.
+    ///
+    /// The fixed stamps are deliberately re-simulated even when the
+    /// caller (the sweep's family lineup) has already run them: the
+    /// candidate set stays self-contained and auditable, and the cost —
+    /// a handful of sub-millisecond graph runs per e2e point — is noise
+    /// next to the pairwise job matrix.
+    pub fn run_auto(
+        &self,
+        trace: &E2eTrace,
+        depth: usize,
+    ) -> Result<(E2eRun, PlanSummary), Error> {
+        let m = self.m();
+        let topo = &self.cost.topo;
+        let serial = serial_total(m, topo, trace);
+
+        // The "do not overlap" bound seeds the argmin.
+        let chain = build_serial_chain(m, topo, trace)?;
+        let chain_run = graph::execute(m, topo, &chain)?;
+        let chain_stages = family_stages(m, trace, E2eFamily::CuOverlap);
+        let mut n_candidates = 1usize;
+        let mut best: (graph::GraphRun, usize, &'static str, Vec<StagePlan>) =
+            (chain_run, chain.nodes.len(), "serial-chain", chain_stages);
+        for cand in self.candidates(trace, depth) {
+            let g = build_graph_planned(m, topo, trace, depth, &cand.stages)?;
+            let run = graph::execute(m, topo, &g)?;
+            n_candidates += 1;
+            if run.total < best.0.total {
+                best = (run, g.nodes.len(), cand.name, cand.stages);
+            }
+        }
+        let (run, graph_nodes, name, stages) = best;
+        let e2e = E2eRun {
+            family: E2eFamily::Auto,
+            total: run.total,
+            serial,
+            speedup: serial / run.total,
+            exposed_comm: run.exposed_comm,
+            bubble: run.bubble,
+            hbm_occupancy: run.hbm_occupancy,
+            sdma_occupancy: run.sdma_occupancy,
+            graph_nodes,
+        };
+        Ok((e2e, self.summarize(trace, name, n_candidates, &stages)))
+    }
+
+    /// Flatten a winning plan into per-node records for tables/JSON.
+    fn summarize(
+        &self,
+        trace: &E2eTrace,
+        strategy: &'static str,
+        candidates: usize,
+        stages: &[StagePlan],
+    ) -> PlanSummary {
+        let mut nodes = Vec::new();
+        for (stage, sp) in trace.stages.iter().zip(stages) {
+            if let (Some(_), Some(cp)) = (&stage.gather, &sp.gather) {
+                nodes.push(PlanNode {
+                    label: format!("{}/gather", stage.label),
+                    role: "gather",
+                    backend: cp.backend.name(),
+                    cus: if cp.backend == PlanBackend::Cu { cp.cus } else { 0 },
+                    chunks: cp.chunks,
+                });
+            }
+            nodes.push(PlanNode {
+                label: format!("{}/gemm", stage.label),
+                role: "gemm",
+                backend: "cu",
+                cus: sp.gemm_cus.unwrap_or(0),
+                chunks: 1,
+            });
+            if let (Some(_), Some(cp)) = (&stage.reduce, &sp.reduce) {
+                nodes.push(PlanNode {
+                    label: format!("{}/reduce", stage.label),
+                    role: "reduce",
+                    backend: cp.backend.name(),
+                    cus: cp.cus,
+                    chunks: cp.chunks,
+                });
+            }
+        }
+        PlanSummary {
+            strategy,
+            candidates,
+            nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::e2e::{fsdp_step_stages, tp_chain_stages};
+    use crate::workload::llama::LlamaConfig;
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    #[test]
+    fn family_stamps_are_uniform_and_hybrid() {
+        let m = m();
+        let t = fsdp_step_stages(&LlamaConfig::llama70b(), 2);
+        let dma = family_stages(&m, &t, E2eFamily::DmaOverlap);
+        assert_eq!(dma.len(), t.stages.len());
+        // Every offloadable gather on DMA; every reduce pinned to CUs.
+        for sp in &dma {
+            assert_eq!(sp.gather.unwrap().backend, PlanBackend::Dma);
+            if let Some(r) = sp.reduce {
+                assert_eq!(r.backend, PlanBackend::Cu);
+                assert_eq!(r.cus, m.rs_cu_need);
+            }
+        }
+        let cu = family_stages(&m, &t, E2eFamily::CuOverlap);
+        assert!(cu.iter().all(|sp| sp.gather.unwrap().backend == PlanBackend::Cu));
+    }
+
+    #[test]
+    fn window_detection_respects_dependency_structure() {
+        let p = Planner::new(&m(), &m().topology(1));
+        let fsdp = fsdp_step_stages(&LlamaConfig::llama70b(), 2);
+        // FSDP window = stages_per_layer * depth.
+        assert_eq!(p.max_inflight_gathers(&fsdp, 2), 4);
+        assert_eq!(p.max_inflight_gathers(&fsdp, 1), 2);
+        // TP activations serialize on the previous GEMM: never > 1.
+        let tp = tp_chain_stages(&LlamaConfig::llama70b(), 4);
+        assert_eq!(p.max_inflight_gathers(&tp, 2), 1);
+    }
+
+    #[test]
+    fn candidate_lineup_matches_the_regime() {
+        let m = m();
+        let p = Planner::new(&m, &m.topology(1));
+        // FSDP window 4 oversubscribes 14 engines (4x8 = 32): the pool
+        // splits are proposed.
+        let fsdp = fsdp_step_stages(&LlamaConfig::llama70b(), 2);
+        let names: Vec<&str> = p.candidates(&fsdp, 2).iter().map(|c| c.name).collect();
+        assert!(names.contains(&"cu-uniform") && names.contains(&"dma-hybrid"));
+        assert!(names.contains(&"split-even") && names.contains(&"split-odd"));
+        // mb1 sheds CUs under DMA offload (§VI-G), so the trim rides.
+        assert!(names.contains(&"dma-trim"));
+        // TP chain: one gather in flight — no pool split to propose.
+        let tp = tp_chain_stages(&LlamaConfig::llama70b(), 2);
+        let tp_names: Vec<&str> = p.candidates(&tp, 2).iter().map(|c| c.name).collect();
+        assert!(!tp_names.iter().any(|n| n.starts_with("split")));
+        assert!(tp_names.contains(&"cu-uniform") && tp_names.contains(&"dma-hybrid"));
+    }
+
+    #[test]
+    fn split_assignment_alternates_pools() {
+        let m = m();
+        let p = Planner::new(&m, &m.topology(2));
+        let fsdp = fsdp_step_stages(&LlamaConfig::llama70b(), 2);
+        let cands = p.candidates(&fsdp, 2);
+        let split = cands.iter().find(|c| c.name == "split-even").unwrap();
+        let backends: Vec<PlanBackend> =
+            split.stages.iter().map(|sp| sp.gather.unwrap().backend).collect();
+        // Gathers alternate DMA/CU starting from DMA...
+        for (i, b) in backends.iter().enumerate() {
+            let expect = if i % 2 == 0 { PlanBackend::Dma } else { PlanBackend::Cu };
+            assert_eq!(*b, expect, "gather {i}");
+        }
+        // ... and every reduce still rides CUs (the hybrid is preserved
+        // under every candidate).
+        for c in &cands {
+            for sp in &c.stages {
+                if let Some(r) = sp.reduce {
+                    assert_eq!(r.backend, PlanBackend::Cu, "{}", c.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn comm_first_is_recorded_per_stage() {
+        let m = m();
+        let p = Planner::new(&m, &m.topology(1));
+        let fsdp = fsdp_step_stages(&LlamaConfig::llama70b(), 1);
+        for c in p.candidates(&fsdp, 2) {
+            if c.name.starts_with("split") {
+                // All Table-I-sized GEMMs dwarf the collectives'
+                // workgroup needs: comm launches first on every stage.
+                assert!(c.stages.iter().all(|sp| sp.comm_first));
+            }
+        }
+    }
+}

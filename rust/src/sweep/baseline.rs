@@ -222,7 +222,8 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
 /// `machine/nodes/chunking/tag/collective/strategy` → median speedup
 /// (the chunking segment is present from schema v3 on), or an
 /// end-to-end workload point `machine/nodes/wl=<label>/<family>` →
-/// speedup (schema v4's `workloads[]` section).
+/// speedup (schema v4's `workloads[]` section; v5 adds the `auto`
+/// family, whose nested `plan` record is metadata the gate ignores).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchPoint {
     pub key: String,
@@ -579,7 +580,7 @@ mod tests {
         let baseline = parse_json(text).unwrap();
         assert!(is_seeded(&baseline), "committed baseline must be seeded");
         let base_points = extract_points(&baseline).unwrap();
-        assert_eq!(base_points.len(), 162, "CI matrix coverage changed");
+        assert_eq!(base_points.len(), 180, "CI matrix coverage changed");
 
         // The CI perf-gate sweep, exactly as .github/workflows/ci.yml
         // runs it (jitter 0, seed 24301, --chunks auto, --e2e axis).
@@ -602,13 +603,14 @@ mod tests {
             p.with_e2e(vec![
                 crate::workload::e2e::E2eSpec::parse("fsdp_step:70b:2:2").unwrap(),
                 crate::workload::e2e::E2eSpec::parse("tp_chain:70b:2").unwrap(),
+                crate::workload::e2e::E2eSpec::parse("fsdp_step:405b:2:2").unwrap(),
             ])
         })
         .unwrap();
         let report = parse_json(&execute(plan, 2).to_json()).unwrap();
         let g = gate(&baseline, &report, 0.02).unwrap();
         assert!(g.passed(), "{}", g.render(0.02));
-        assert_eq!(g.compared, 162);
+        assert_eq!(g.compared, 180);
     }
 
     #[test]
@@ -624,14 +626,20 @@ mod tests {
         .unwrap();
         let report = parse_json(&execute(plan, 1).to_json()).unwrap();
         let points = extract_points(&report).unwrap();
-        // 1 pair point + 3 workload families.
-        assert_eq!(points.len(), 4);
+        // 1 pair point + 4 workload families (v5 adds `auto`).
+        assert_eq!(points.len(), 5);
         let wl: Vec<&BenchPoint> =
             points.iter().filter(|p| p.key.contains("/wl=")).collect();
-        assert_eq!(wl.len(), 3);
+        assert_eq!(wl.len(), 4);
         assert!(wl
             .iter()
             .any(|p| p.key == "mi300x-8/1n/wl=tp_chain-70b-l2-d2/dma_overlap"));
+        // The planner family gates like any other; its nested plan
+        // record does not leak into the key space.
+        assert!(wl
+            .iter()
+            .any(|p| p.key == "mi300x-8/1n/wl=tp_chain-70b-l2-d2/auto"));
+        assert!(points.iter().all(|p| !p.key.contains("plan")));
         // Gate against itself: green.
         assert!(gate(&report, &report, 0.02).unwrap().passed());
         // Inflated workload floor regresses.

@@ -15,9 +15,9 @@ use std::sync::Mutex;
 use crate::config::machine::MachineConfig;
 use crate::coordinator::runner::{measure_run, Measured, RunnerConfig, ScenarioOutcome};
 use crate::error::Error;
-use crate::sched::{Baselines, C3Executor, C3Run, Strategy, StrategyKind};
+use crate::sched::{Baselines, C3Executor, C3Run, PlanSummary, Planner, Strategy, StrategyKind};
 use crate::util::rng::Rng;
-use crate::workload::e2e::{run_e2e, E2eFamily, E2eRun};
+use crate::workload::e2e::{run_e2e_planned_with, E2eFamily, E2eRun};
 use crate::workload::scenarios::ResolvedScenario;
 
 use super::plan::{ChunkSel, MachineVariant, SweepJob, SweepPlan};
@@ -45,6 +45,9 @@ pub struct E2eOutput {
     pub spec_idx: usize,
     pub family: E2eFamily,
     pub result: Result<E2eRun, Error>,
+    /// Per-node decisions of the planner-driven family (`auto` only;
+    /// fixed families carry none).
+    pub plan: Option<PlanSummary>,
 }
 
 /// All outputs of one sweep, with enough plan context to aggregate and
@@ -139,15 +142,25 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
     for (mi, mv) in plan.machines.iter().enumerate() {
         for (ni, &nodes) in plan.node_counts.iter().enumerate() {
             let topo = mv.machine.topology(nodes);
+            // One planner — one cost-model profile — per (machine,
+            // topology), shared across every spec's `auto` evaluation.
+            let planner = (!plan.e2e.is_empty()).then(|| Planner::new(&mv.machine, &topo));
             for (si, spec) in plan.e2e.iter().enumerate() {
                 let trace = spec.trace();
                 for family in E2eFamily::lineup() {
+                    let planner = planner.as_ref().expect("planner built when e2e axis is set");
+                    let (result, fam_plan) =
+                        match run_e2e_planned_with(planner, &trace, spec.depth, family) {
+                            Ok((run, p)) => (Ok(run), p),
+                            Err(e) => (Err(e), None),
+                        };
                     e2e_outputs.push(E2eOutput {
                         machine_idx: mi,
                         node_idx: ni,
                         spec_idx: si,
                         family,
-                        result: run_e2e(&mv.machine, &topo, &trace, spec.depth, family),
+                        result,
+                        plan: fam_plan,
                     });
                 }
             }
@@ -507,11 +520,11 @@ mod tests {
         .with_e2e(vec![E2eSpec::parse("fsdp_forward:70b:2:2").unwrap()])
         .unwrap();
         let res = execute(plan, 1);
-        // 1 machine × 2 node counts × 1 spec × 3 families.
-        assert_eq!(res.e2e_outputs.len(), 6);
+        // 1 machine × 2 node counts × 1 spec × 4 families.
+        assert_eq!(res.e2e_outputs.len(), 8);
         assert!(res.e2e_outputs.iter().all(|o| o.result.is_ok()));
         let at1 = res.e2e_point(0, 0, 0);
-        assert_eq!(at1.len(), 3);
+        assert_eq!(at1.len(), 4);
         let get = |ni: usize, f: E2eFamily| {
             res.e2e_point(0, ni, 0)
                 .into_iter()
@@ -526,6 +539,17 @@ mod tests {
         assert!(get(0, E2eFamily::DmaOverlap).speedup > 1.0);
         // The NIC lengthens the 2-node step.
         assert!(get(1, E2eFamily::DmaOverlap).total > get(0, E2eFamily::DmaOverlap).total);
+        // The planner family is never worse than any fixed family at
+        // either topology, and only it carries a plan.
+        for ni in 0..2 {
+            let auto = get(ni, E2eFamily::Auto);
+            for f in [E2eFamily::Serial, E2eFamily::CuOverlap, E2eFamily::DmaOverlap] {
+                assert!(auto.total <= get(ni, f).total * (1.0 + 1e-9), "{}n vs {}", ni + 1, f.name());
+            }
+            for o in res.e2e_point(0, ni, 0) {
+                assert_eq!(o.plan.is_some(), o.family == E2eFamily::Auto);
+            }
+        }
     }
 
     #[test]

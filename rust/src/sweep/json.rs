@@ -57,11 +57,14 @@ impl SweepResults {
     /// for the chunk-count axis and records per-strategy `chunks`;
     /// version 4 adds the per-topology `workloads[]` section for the
     /// end-to-end graph workload axis — present only when the plan
-    /// carries e2e specs, so pairwise-only reports keep their shape).
+    /// carries e2e specs, so pairwise-only reports keep their shape;
+    /// version 5 adds the `auto` family with its per-node `plan`
+    /// record — winning strategy plus one backend/CUs/chunks entry per
+    /// graph node).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":4,");
+        s.push_str("{\"version\":5,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -189,7 +192,7 @@ impl SweepResults {
                     s.push('}');
                 }
                 s.push(']');
-                // End-to-end workload axis (schema v4): graph-engine
+                // End-to-end workload axis (schema v4+): graph-engine
                 // metrics per spec × family, nested under the topology.
                 if !self.plan.e2e.is_empty() {
                     s.push_str(",\"workloads\":[");
@@ -221,7 +224,7 @@ impl SweepResults {
                                         "{{\"total_s\":{},\"serial_s\":{},\"speedup\":{},\
                                          \"exposed_comm_s\":{},\"bubble_s\":{},\
                                          \"hbm_occupancy\":{},\"sdma_occupancy\":{},\
-                                         \"graph_nodes\":{}}}",
+                                         \"graph_nodes\":{}",
                                         num(r.total),
                                         num(r.serial),
                                         num(r.speedup),
@@ -231,6 +234,33 @@ impl SweepResults {
                                         num(r.sdma_occupancy),
                                         r.graph_nodes
                                     );
+                                    // Schema v5: the planner family
+                                    // records its winning per-node plan.
+                                    if let Some(p) = &out.plan {
+                                        let _ = write!(
+                                            s,
+                                            ",\"plan\":{{\"strategy\":\"{}\",\"candidates\":{},\"nodes\":[",
+                                            escape(p.strategy),
+                                            p.candidates
+                                        );
+                                        for (pi, n) in p.nodes.iter().enumerate() {
+                                            if pi > 0 {
+                                                s.push(',');
+                                            }
+                                            let _ = write!(
+                                                s,
+                                                "{{\"label\":\"{}\",\"role\":\"{}\",\"backend\":\"{}\",\
+                                                 \"cus\":{},\"chunks\":{}}}",
+                                                escape(&n.label),
+                                                n.role,
+                                                n.backend,
+                                                n.cus,
+                                                n.chunks
+                                            );
+                                        }
+                                        s.push_str("]}");
+                                    }
+                                    s.push('}');
                                 }
                                 Err(e) => {
                                     let _ =
@@ -280,7 +310,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":4,"));
+        assert!(j.starts_with("{\"version\":5,"));
         assert!(j.contains("\"topologies\":[{\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\","));
         // No e2e axis -> no workloads section (pairwise shape kept).
         assert!(!j.contains("\"workloads\""));
@@ -345,15 +375,21 @@ mod tests {
         .with_e2e(vec![E2eSpec::parse("fsdp_step:70b:2:2").unwrap()])
         .unwrap();
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":4,"));
+        assert!(j.starts_with("{\"version\":5,"));
         assert_eq!(j.matches("\"workloads\":[").count(), 2, "one per topology");
         assert!(j.contains("\"name\":\"fsdp_step\",\"model\":\"70b\",\"layers\":2,\"depth\":2"));
         assert!(j.contains("\"label\":\"fsdp_step-70b-l2-d2\""));
-        for fam in ["serial", "cu_overlap", "dma_overlap"] {
+        for fam in ["serial", "cu_overlap", "dma_overlap", "auto"] {
             assert!(j.contains(&format!("\"{fam}\":{{\"total_s\":")), "{fam}");
         }
         assert!(j.contains("\"exposed_comm_s\":"));
         assert!(j.contains("\"sdma_occupancy\":"));
+        // Schema v5: the auto family records its per-node plan; fixed
+        // families do not.
+        assert_eq!(j.matches("\"plan\":{\"strategy\":\"").count(), 2, "one plan per topology");
+        assert!(j.contains("\"role\":\"gather\""));
+        assert!(j.contains("\"role\":\"reduce\""));
+        assert!(j.contains("\"backend\":\"cu\""));
         let open = j.matches('{').count();
         assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
         // Still parseable by our own reader.

@@ -24,7 +24,11 @@
 //! for the GPU's finite SDMA engines (the `sdma` fluid resource) and
 //! for HBM bandwidth; the run reports end-to-end metrics the pairwise
 //! path could not: exposed-communication time, bubble time, and
-//! per-resource occupancy.
+//! per-resource occupancy. The `auto` family replaces the uniform
+//! family stamp with per-node annotations from the cost-model-driven
+//! planner ([`crate::sched::policy`]): the graph builder here consumes
+//! [`crate::sched::policy::StagePlan`]s, so the fixed families and the
+//! planner share one construction.
 
 use crate::conccl::DmaCollective;
 use crate::config::machine::MachineConfig;
@@ -189,6 +193,12 @@ pub enum E2eFamily {
     /// Overlapped, offloadable collectives on DMA engines (ConCCL);
     /// reduce-scatters stay on CUs (§VII-A2 hybrid).
     DmaOverlap,
+    /// Per-node plan from the cost-model-driven planner
+    /// ([`crate::sched::policy::Planner`]): backend / CU partition /
+    /// chunk count / issue order decided per graph node, validated
+    /// against the fixed families on the graph engine (never worse by
+    /// construction).
+    Auto,
 }
 
 impl E2eFamily {
@@ -197,12 +207,18 @@ impl E2eFamily {
             E2eFamily::Serial => "serial",
             E2eFamily::CuOverlap => "cu_overlap",
             E2eFamily::DmaOverlap => "dma_overlap",
+            E2eFamily::Auto => "auto",
         }
     }
 
-    /// The three families every e2e point is evaluated under.
-    pub fn lineup() -> [E2eFamily; 3] {
-        [E2eFamily::Serial, E2eFamily::CuOverlap, E2eFamily::DmaOverlap]
+    /// The four families every e2e point is evaluated under.
+    pub fn lineup() -> [E2eFamily; 4] {
+        [
+            E2eFamily::Serial,
+            E2eFamily::CuOverlap,
+            E2eFamily::DmaOverlap,
+            E2eFamily::Auto,
+        ]
     }
 
     /// Parse a CLI family name; `Err` (never a panic) on unknowns.
@@ -211,20 +227,25 @@ impl E2eFamily {
             "serial" => Ok(E2eFamily::Serial),
             "cu" | "cu_overlap" => Ok(E2eFamily::CuOverlap),
             "dma" | "dma_overlap" | "conccl" => Ok(E2eFamily::DmaOverlap),
+            "auto" | "planner" => Ok(E2eFamily::Auto),
             other => Err(Error::Config(format!(
-                "unknown e2e family '{other}' (expected serial, cu_overlap, dma_overlap)"
+                "unknown e2e family '{other}' (expected serial, cu_overlap, dma_overlap, auto)"
             ))),
         }
     }
 }
 
 /// Build a comm node for an e2e graph (executor-style derivations:
-/// wire, HBM demand, §VII-A1 share, engine occupancy).
+/// wire, HBM demand, §VII-A1 share, engine occupancy). `cu_grant` is
+/// the CU reservation while resident on the CU backend (the planner's
+/// §V-C pick; the family stamps pass the kernel's full need, which
+/// reproduces the pre-planner numbers exactly).
 fn comm_node(
     m: &MachineConfig,
     topo: &Topology,
     kernel: CollectiveKernel,
     dma: bool,
+    cu_grant: u32,
 ) -> Result<(Work, Ready), Error> {
     let kind = kernel.spec.kind;
     if dma {
@@ -251,15 +272,15 @@ fn comm_node(
             },
         ))
     } else {
-        let need = kernel.cu_need(m);
-        let wire = kernel.t_wire_on(m, topo, need.max(1));
+        let grant = cu_grant.max(1);
+        let wire = kernel.t_wire_on(m, topo, grant);
         Ok((
             Work::Comm(CommWork {
                 kernel,
                 backend: CommBackend::Cu {
-                    backlog_cus: need,
-                    overlap_cus: need,
-                    solo_cus: need,
+                    backlog_cus: grant,
+                    overlap_cus: grant,
+                    solo_cus: grant,
                     backlog_until: 0.0,
                     wire_fixed: None,
                 },
@@ -277,33 +298,129 @@ fn comm_node(
     }
 }
 
-/// Build the workload graph of an e2e trace under an overlap family.
-/// `depth` is the prefetch window in *layers*: up to
-/// `depth × stages_per_layer` stages' weight gathers may be in flight
-/// ahead of the compute consuming them (a stage's weights are freed
-/// when its GEMM completes, which opens the slot for the gather
-/// `window` stages later). TP-chain gathers carry a data dependency on
-/// the previous GEMM instead — activations cannot be prefetched.
-pub fn build_graph(
+/// Delay a comm node's issue by `defer` seconds (the §V-C ordering
+/// decision: when the plan schedules the GEMM first, the collective's
+/// launch/enqueue waits out the GEMM's launch slot on the CPU).
+fn defer_ready(ready: Ready, defer: f64) -> Ready {
+    if defer <= 0.0 {
+        return ready;
+    }
+    match ready {
+        Ready::AfterDeps { lag } => Ready::AfterDeps { lag: lag + defer },
+        Ready::Queue { queue, hold, post } => Ready::Queue {
+            queue,
+            hold: hold + defer,
+            post,
+        },
+        other => other,
+    }
+}
+
+/// Append one planned collective to the graph: a single comm node, or —
+/// when the plan asks for `chunks >= 2` — a serialized chunk chain
+/// (per-chunk transfers riding the shared enqueue queue, §VII-A1
+/// interference relieved by `MachineConfig::chunk_align` exactly as in
+/// the pairwise chunked pipeline). `defer` delays the (first) issue —
+/// the plan's `comm_first = false` case. Returns the node id
+/// dependents wait on (the last chunk).
+#[allow(clippy::too_many_arguments)]
+fn push_planned_comm(
+    g: &mut Graph,
+    m: &MachineConfig,
+    topo: &Topology,
+    label: &str,
+    kernel: &CollectiveKernel,
+    plan: crate::sched::policy::CollPlan,
+    issue_deps: Vec<usize>,
+    defer: f64,
+) -> Result<usize, Error> {
+    use crate::sched::policy::PlanBackend;
+    let dma = plan.backend == PlanBackend::Dma && kernel.spec.kind.dma_offloadable();
+    // Defensive clamps mirroring the pairwise chunked path: at least
+    // one byte per chunk, never beyond the machine's candidate cap.
+    let k = plan
+        .chunks
+        .min(m.max_chunks.max(1))
+        .min(kernel.spec.size_bytes.min(u32::MAX as u64) as u32)
+        .max(1);
+    if k <= 1 {
+        let (work, ready) = comm_node(m, topo, *kernel, dma, plan.cus)?;
+        return Ok(g.push(NodeSpec {
+            label: label.to_string(),
+            work,
+            issue_deps,
+            serial_deps: Vec::new(),
+            ready: defer_ready(ready, defer),
+        }));
+    }
+    let align = m.chunk_align(k);
+    // The §VII-A1 share a collective inflicts is derived from its
+    // whole-kernel wire time (chunks are a scheduling decision, not a
+    // bandwidth decision) — same derivation as `sched::graph::chunked`.
+    let whole_wire = if dma {
+        DmaCollective::try_new(kernel.spec)?.wire_time_on(m, topo)
+    } else {
+        kernel.t_wire_on(m, topo, plan.cus.max(1))
+    };
+    let share = kernel.hbm_share_with_wire(m, whole_wire);
+    let mut last = None;
+    for (ci, sz) in crate::sched::chunk_sizes(kernel.spec.size_bytes, k)
+        .into_iter()
+        .enumerate()
+    {
+        let chunk = CollectiveKernel::new(CollectiveSpec::new(kernel.spec.kind, sz));
+        let (mut work, ready) = comm_node(m, topo, chunk, dma, plan.cus)?;
+        if let Work::Comm(cw) = &mut work {
+            cw.pen_style = PenaltyStyle::Aligned(align);
+            cw.share = share;
+        }
+        let serial_deps = match last {
+            Some(prev) => vec![prev],
+            None => Vec::new(),
+        };
+        // Only the first chunk waits out a GEMM-first launch slot; the
+        // rest pipeline behind it.
+        let ready = if ci == 0 { defer_ready(ready, defer) } else { ready };
+        last = Some(g.push(NodeSpec {
+            label: format!("{label}#{ci}"),
+            work,
+            issue_deps: issue_deps.clone(),
+            serial_deps,
+            ready,
+        }));
+    }
+    Ok(last.expect("chunk chain is non-empty"))
+}
+
+/// Build the workload graph of an e2e trace from **per-stage planner
+/// annotations** ([`crate::sched::policy::StagePlan`]): collective
+/// backend, CU grants, chunk counts and GEMM CU policy are read from
+/// the plan instead of a uniform family stamp. `depth` is the prefetch
+/// window in *layers*: up to `depth × stages_per_layer` stages' weight
+/// gathers may be in flight ahead of the compute consuming them (a
+/// stage's weights are freed when its GEMM completes, which opens the
+/// slot for the gather `window` stages later). TP-chain gathers carry a
+/// data dependency on the previous GEMM instead — activations cannot
+/// be prefetched.
+pub fn build_graph_planned(
     m: &MachineConfig,
     topo: &Topology,
     trace: &E2eTrace,
     depth: usize,
-    family: E2eFamily,
+    stages: &[crate::sched::policy::StagePlan],
 ) -> Result<Graph, Error> {
-    assert!(
-        family != E2eFamily::Serial,
-        "the serial family is priced analytically (sum of isolated times)"
+    assert_eq!(
+        stages.len(),
+        trace.stages.len(),
+        "plan must annotate every stage"
     );
     let cus = m.cus_total();
-    let dma = family == E2eFamily::DmaOverlap;
     let window = trace.stages_per_layer * depth.max(1);
     let mut g = Graph::default();
     let mut gemm_ids: Vec<usize> = Vec::with_capacity(trace.stages.len());
-    for (s, stage) in trace.stages.iter().enumerate() {
-        let gather_id = match &stage.gather {
-            None => None,
-            Some(k) => {
+    for (s, (stage, plan)) in trace.stages.iter().zip(stages).enumerate() {
+        let gather_id = match (&stage.gather, plan.gather) {
+            (Some(k), Some(cp)) => {
                 let issue_deps = match trace.kind {
                     // Activation dependency: the previous layer must
                     // have computed before its output can be gathered.
@@ -321,15 +438,30 @@ pub fn build_graph(
                         None => Vec::new(),
                     },
                 };
-                let (work, ready) =
-                    comm_node(m, topo, *k, dma && k.spec.kind.dma_offloadable())?;
-                Some(g.push(NodeSpec {
-                    label: format!("{}/gather", stage.label),
-                    work,
+                // §V-C issue order: when the plan schedules the GEMM
+                // first (tiny compute, `comm_first = false`), the
+                // gather's launch waits out the GEMM's launch slot.
+                let defer = if plan.comm_first { 0.0 } else { m.kernel_launch_s };
+                Some(push_planned_comm(
+                    &mut g,
+                    m,
+                    topo,
+                    &format!("{}/gather", stage.label),
+                    k,
+                    cp,
                     issue_deps,
-                    serial_deps: Vec::new(),
-                    ready,
-                }))
+                    defer,
+                )?)
+            }
+            (None, None) => None,
+            // A plan that annotates a collective the trace lacks (or
+            // vice versa) must fail loudly — silently dropping the node
+            // would report a bogusly fast timeline.
+            _ => {
+                return Err(Error::Config(format!(
+                    "plan/trace mismatch at stage '{}': gather presence differs",
+                    stage.label
+                )))
             }
         };
         let mut deps = Vec::new();
@@ -339,6 +471,10 @@ pub fn build_graph(
         if let Some(gid) = gather_id {
             deps.push(gid);
         }
+        let cu_policy = match plan.gemm_cus {
+            Some(k) => CuPolicy::Fixed(k.max(8)),
+            None => CuPolicy::Residual,
+        };
         let gemm_id = g.push(NodeSpec {
             label: format!("{}/gemm", stage.label),
             work: Work::Gemm(GemmWork {
@@ -346,7 +482,7 @@ pub fn build_graph(
                 mem: stage.gemm.clone(),
                 frac: 1.0,
                 share: stage.gemm.hbm_share(m, cus),
-                cu_policy: CuPolicy::Residual,
+                cu_policy,
                 pen_style: PenaltyStyle::RateScaled,
             }),
             issue_deps: deps,
@@ -356,17 +492,104 @@ pub fn build_graph(
             },
         });
         gemm_ids.push(gemm_id);
-        if let Some(k) = &stage.reduce {
-            // Reduce-scatter is never DMA-offloadable: CUs even under
-            // the ConCCL family (the §VII-A2 hybrid).
-            let (work, ready) = comm_node(m, topo, *k, false)?;
-            g.push(NodeSpec {
-                label: format!("{}/reduce", stage.label),
+        match (&stage.reduce, plan.reduce) {
+            (Some(k), Some(cp)) => {
+                // Reduce-scatter is never DMA-offloadable: the planner
+                // pins it to CUs (§VII-A2 hybrid) and the builder
+                // enforces it. (It already issues after its GEMM, so
+                // the stage's comm-first decision does not apply here.)
+                push_planned_comm(
+                    &mut g,
+                    m,
+                    topo,
+                    &format!("{}/reduce", stage.label),
+                    k,
+                    cp,
+                    vec![gemm_id],
+                    0.0,
+                )?;
+            }
+            (None, None) => {}
+            _ => {
+                return Err(Error::Config(format!(
+                    "plan/trace mismatch at stage '{}': reduce presence differs",
+                    stage.label
+                )))
+            }
+        }
+    }
+    Ok(g)
+}
+
+/// Build the workload graph of an e2e trace under a fixed overlap
+/// family: the uniform whole-graph stamp, expressed as planner
+/// annotations ([`crate::sched::policy::family_stages`]) so the stamp
+/// and the per-node planner share one builder.
+pub fn build_graph(
+    m: &MachineConfig,
+    topo: &Topology,
+    trace: &E2eTrace,
+    depth: usize,
+    family: E2eFamily,
+) -> Result<Graph, Error> {
+    assert!(
+        matches!(family, E2eFamily::CuOverlap | E2eFamily::DmaOverlap),
+        "build_graph takes a fixed overlap family (serial is analytic; auto runs the planner)"
+    );
+    let stages = crate::sched::policy::family_stages(m, trace, family);
+    build_graph_planned(m, topo, trace, depth, &stages)
+}
+
+/// Fully serialized all-CU chain of a trace: every node issue-depends
+/// on its predecessor, so nothing overlaps and the timeline reproduces
+/// [`serial_total`] exactly (same launch lags, same isolated rates).
+/// This is the planner's "do not overlap at all" candidate — it bounds
+/// `E2eFamily::Auto` at the serial baseline even in regimes where every
+/// overlap family loses (deep NIC-bound topologies).
+pub fn build_serial_chain(
+    m: &MachineConfig,
+    topo: &Topology,
+    trace: &E2eTrace,
+) -> Result<Graph, Error> {
+    let mut g = Graph::default();
+    let mut prev: Option<usize> = None;
+    let chain = |prev: &Option<usize>| prev.map(|p| vec![p]).unwrap_or_default();
+    for stage in &trace.stages {
+        if let Some(k) = &stage.gather {
+            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m))?;
+            prev = Some(g.push(NodeSpec {
+                label: format!("{}/gather", stage.label),
                 work,
-                issue_deps: vec![gemm_id],
+                issue_deps: chain(&prev),
                 serial_deps: Vec::new(),
                 ready,
-            });
+            }));
+        }
+        prev = Some(g.push(NodeSpec {
+            label: format!("{}/gemm", stage.label),
+            work: Work::Gemm(GemmWork {
+                comp: stage.gemm.clone(),
+                mem: stage.gemm.clone(),
+                frac: 1.0,
+                share: stage.gemm.hbm_share(m, m.cus_total()),
+                cu_policy: CuPolicy::Residual,
+                pen_style: PenaltyStyle::RateScaled,
+            }),
+            issue_deps: chain(&prev),
+            serial_deps: Vec::new(),
+            ready: Ready::AfterDeps {
+                lag: m.kernel_launch_s,
+            },
+        }));
+        if let Some(k) = &stage.reduce {
+            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m))?;
+            prev = Some(g.push(NodeSpec {
+                label: format!("{}/reduce", stage.label),
+                work,
+                issue_deps: chain(&prev),
+                serial_deps: Vec::new(),
+                ready,
+            }));
         }
     }
     Ok(g)
@@ -452,6 +675,39 @@ pub struct E2eRun {
     pub graph_nodes: usize,
 }
 
+/// [`run_e2e_planned`] with a caller-provided planner — THE one Auto
+/// dispatch site (the sweep engine reuses one planner, and thus one
+/// cost-model profile, per (machine, topology) across its whole e2e
+/// axis). The planner carries its machine and topology.
+pub fn run_e2e_planned_with(
+    planner: &crate::sched::Planner,
+    trace: &E2eTrace,
+    depth: usize,
+    family: E2eFamily,
+) -> Result<(E2eRun, Option<crate::sched::PlanSummary>), Error> {
+    if family == E2eFamily::Auto {
+        let (run, plan) = planner.run_auto(trace, depth)?;
+        return Ok((run, Some(plan)));
+    }
+    run_e2e(&planner.cost.m, &planner.cost.topo, trace, depth, family).map(|r| (r, None))
+}
+
+/// Evaluate one trace under one family at one prefetch depth,
+/// returning the plan summary alongside the run when the family is
+/// planner-driven (`Auto`); fixed families carry no plan.
+pub fn run_e2e_planned(
+    m: &MachineConfig,
+    topo: &Topology,
+    trace: &E2eTrace,
+    depth: usize,
+    family: E2eFamily,
+) -> Result<(E2eRun, Option<crate::sched::PlanSummary>), Error> {
+    if family == E2eFamily::Auto {
+        return run_e2e_planned_with(&crate::sched::Planner::new(m, topo), trace, depth, family);
+    }
+    run_e2e(m, topo, trace, depth, family).map(|r| (r, None))
+}
+
 /// Evaluate one trace under one family at one prefetch depth.
 pub fn run_e2e(
     m: &MachineConfig,
@@ -460,6 +716,11 @@ pub fn run_e2e(
     depth: usize,
     family: E2eFamily,
 ) -> Result<E2eRun, Error> {
+    if family == E2eFamily::Auto {
+        // The planner path lives in `run_e2e_planned_with` (which only
+        // calls back here for fixed families — no recursion).
+        return run_e2e_planned(m, topo, trace, depth, family).map(|(run, _)| run);
+    }
     let serial = serial_total(m, topo, trace);
     if family == E2eFamily::Serial {
         let comm: f64 = trace
@@ -768,6 +1029,136 @@ mod tests {
         assert!(E2eSpec::parse("fsdp_step:70b:4:2:9").is_err());
         // Family parsing.
         assert_eq!(E2eFamily::parse("dma").unwrap(), E2eFamily::DmaOverlap);
+        assert_eq!(E2eFamily::parse("auto").unwrap(), E2eFamily::Auto);
         assert!(E2eFamily::parse("x").is_err());
+        // The lineup carries all four families, auto last (tables and
+        // JSON list the planner row after the fixed baselines).
+        assert_eq!(E2eFamily::lineup().len(), 4);
+        assert_eq!(*E2eFamily::lineup().last().unwrap(), E2eFamily::Auto);
+    }
+
+    #[test]
+    fn serial_chain_reproduces_serial_total() {
+        // The planner's "do not overlap" candidate must price exactly
+        // like the analytic serial baseline: same launch lags, same
+        // isolated rates, nothing concurrent.
+        let m = m();
+        let t = fsdp_step_stages(&LlamaConfig::llama70b(), 2);
+        for nodes in [1usize, 2] {
+            let topo = m.topology(nodes);
+            let g = build_serial_chain(&m, &topo, &t).unwrap();
+            let run = crate::sched::graph::execute(&m, &topo, &g).unwrap();
+            let serial = serial_total(&m, &topo, &t);
+            assert!(
+                (run.total - serial).abs() / serial < 1e-9,
+                "{nodes}n: chain {} vs serial {}",
+                run.total,
+                serial
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_plan_is_a_typed_error() {
+        // A plan that drops a collective the trace carries must fail
+        // loudly, never silently simulate a faster timeline.
+        let m = m();
+        let topo = topo1(&m);
+        let t = fsdp_step_stages(&LlamaConfig::llama70b(), 1);
+        let mut no_gather = crate::sched::policy::family_stages(&m, &t, E2eFamily::DmaOverlap);
+        no_gather[0].gather = None;
+        assert!(matches!(
+            build_graph_planned(&m, &topo, &t, 2, &no_gather),
+            Err(Error::Config(_))
+        ));
+        let mut no_reduce = crate::sched::policy::family_stages(&m, &t, E2eFamily::DmaOverlap);
+        no_reduce[2].reduce = None; // bwd-mlp carries a reduce-scatter
+        assert!(matches!(
+            build_graph_planned(&m, &topo, &t, 2, &no_reduce),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn comm_first_decision_delays_the_gather_launch() {
+        // The §V-C ordering decision is consumed by the builder: a
+        // GEMM-first plan defers the gather's launch by the GEMM's
+        // launch slot. Needs a GEMM smaller than the collective's
+        // workgroup need — the one case the workgroup proxy orders
+        // compute first.
+        let m = m();
+        let topo = topo1(&m);
+        let trace = E2eTrace {
+            kind: E2eKind::FsdpForward,
+            model: "synthetic",
+            stages_per_layer: 1,
+            stages: vec![E2eStage {
+                label: "s0".into(),
+                gemm: GemmKernel::new(
+                    "tiny",
+                    crate::config::workload::GemmShape::bf16(128, 128, 128),
+                ),
+                gather: Some(ag(64 * crate::util::units::MIB)),
+                reduce: None,
+            }],
+        };
+        let planner = crate::sched::Planner::new(&m, &topo);
+        assert!(
+            !planner.cost.comm_first(&trace.stages[0].gemm, &trace.stages[0].gather.unwrap()),
+            "a 1-workgroup GEMM must launch before a 32-CU gather"
+        );
+        let mut stages = crate::sched::policy::family_stages(&m, &trace, E2eFamily::CuOverlap);
+        let comm_first = graph::execute(
+            &m,
+            &topo,
+            &build_graph_planned(&m, &topo, &trace, 1, &stages).unwrap(),
+        )
+        .unwrap();
+        stages[0].comm_first = false;
+        let gemm_first = graph::execute(
+            &m,
+            &topo,
+            &build_graph_planned(&m, &topo, &trace, 1, &stages).unwrap(),
+        )
+        .unwrap();
+        // Node 0 is the gather: its issue slips by exactly one kernel
+        // launch, and the stage stretches with it.
+        assert!(
+            (gemm_first.issue[0] - comm_first.issue[0] - m.kernel_launch_s).abs() < 1e-12
+        );
+        assert!(gemm_first.total > comm_first.total);
+    }
+
+    #[test]
+    fn auto_family_never_loses_and_reports_a_plan() {
+        let m = m();
+        let topo = topo1(&m);
+        let t = fsdp_forward_stages(&LlamaConfig::llama70b(), 2);
+        let (auto, plan) = run_e2e_planned(&m, &topo, &t, 2, E2eFamily::Auto).unwrap();
+        let plan = plan.expect("auto carries a plan");
+        assert_eq!(auto.family, E2eFamily::Auto);
+        // Never worse than any fixed family (argmin by construction).
+        for fam in [E2eFamily::Serial, E2eFamily::CuOverlap, E2eFamily::DmaOverlap] {
+            let fixed = run_e2e(&m, &topo, &t, 2, fam).unwrap();
+            assert!(
+                auto.total <= fixed.total * (1.0 + 1e-9),
+                "auto {:.4}ms vs {} {:.4}ms",
+                auto.total * 1e3,
+                fam.name(),
+                fixed.total * 1e3
+            );
+        }
+        assert!(auto.speedup >= 1.0 - 1e-9, "auto bounded by the serial chain");
+        // The plan names its winning strategy and annotates every node.
+        assert!(plan.candidates >= 4, "chain + stamps + proposals");
+        assert_eq!(plan.nodes.len(), 2 * t.stages.len(), "gather + gemm per stage");
+        assert!(plan.nodes.iter().all(|n| !n.backend.is_empty()));
+        // Fixed families carry no plan.
+        let (_, none) = run_e2e_planned(&m, &topo, &t, 2, E2eFamily::DmaOverlap).unwrap();
+        assert!(none.is_none());
+        // Planner runs are deterministic: same inputs, same plan.
+        let (auto2, plan2) = run_e2e_planned(&m, &topo, &t, 2, E2eFamily::Auto).unwrap();
+        assert_eq!(auto.total, auto2.total);
+        assert_eq!(plan.strategy, plan2.unwrap().strategy);
     }
 }
