@@ -19,10 +19,10 @@ fn main() {
         let r = sim.add_resource("hbm", 4.5e12);
         for i in 0..8 {
             sim.add_task(TaskSpec {
-                name: String::new(),
+                name: None,
                 arrival: i as f64 * 1e-4,
                 work: 1.0,
-                demands: vec![(r, (i + 1) as f64 * 1e9)],
+                demands: &[(r, (i + 1) as f64 * 1e9)],
                 cap: 1.0 / (1e-3 * (i + 1) as f64),
             });
         }

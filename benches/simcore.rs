@@ -1,0 +1,63 @@
+//! Simulator-core wall-clock benches — the data-oriented refactor's
+//! before/after yardstick (EXPERIMENTS.md, "Profiling the simulator"):
+//! a single-pair graph execution, a chunked k=8 pipeline, and the full
+//! fsdp_step auto-planner lineup three ways — cold-sequential (the
+//! pre-refactor evaluation shape), memoized-sequential, and
+//! memoized-parallel (the default worker pool).
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::sched::graph::{chunked, execute, single_pair};
+use conccl::sched::{C3Executor, Planner, Strategy};
+use conccl::util::bench::Bencher;
+use conccl::workload::e2e::{build_graph_planned, build_serial_chain, E2eSpec};
+use conccl::workload::scenarios::{resolve, TABLE2};
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let mut b = Bencher::from_args().iters(3, 10);
+    b.section("simcore: graph-engine hot paths");
+
+    let exec = C3Executor::new(m.clone());
+    let sc = resolve(&TABLE2[0], CollectiveKind::AllGather);
+    let bl = exec.baselines(&sc);
+    let topo = m.topology(1);
+
+    b.bench("graph_single_pair_build_and_execute", || {
+        let g = single_pair(&m, &topo, &sc, Strategy::C3Sp, bl).unwrap();
+        execute(&m, &topo, &g).unwrap().total
+    });
+    b.bench("graph_chunked_k8_build_and_execute", || {
+        let g = chunked(&m, &topo, &sc, false, 8).unwrap();
+        execute(&m, &topo, &g).unwrap().total
+    });
+
+    // The auto-planner lineup over a 4-layer LLaMA-70B fsdp_step trace:
+    // serial chain + every cost-model candidate. "cold" replays the
+    // pre-refactor evaluation shape — every candidate graph rebuilt
+    // with its own wire pricing and simulated from t=0, sequentially —
+    // so the seq/pool variants measure exactly what the shared pricing
+    // memo, prefix-memoized resumption and the worker pool buy.
+    let spec = E2eSpec::parse("fsdp_step:70b:4:2").unwrap();
+    let trace = spec.trace();
+    let planner = Planner::new(&m, &topo);
+    let planner_seq = planner.clone().with_threads(1);
+    b.bench("planner_auto_fsdp_step_70b_l4_cold", || {
+        let chain = build_serial_chain(&m, &topo, &trace).unwrap();
+        let mut best = execute(&m, &topo, &chain).unwrap().total;
+        for cand in planner.candidates(&trace, spec.depth) {
+            let g = build_graph_planned(&m, &topo, &trace, spec.depth, &cand.stages).unwrap();
+            let t = execute(&m, &topo, &g).unwrap().total;
+            if t < best {
+                best = t;
+            }
+        }
+        best
+    });
+    b.bench("planner_auto_fsdp_step_70b_l4_memo_seq", || {
+        planner_seq.run_auto(&trace, spec.depth).unwrap().0.total
+    });
+    b.bench("planner_auto_fsdp_step_70b_l4_memo_pool", || {
+        planner.run_auto(&trace, spec.depth).unwrap().0.total
+    });
+    b.finish();
+}

@@ -157,7 +157,7 @@ impl C3Executor {
                     };
                     self.simulate(sc, base, b)?
                 } else {
-                    super::pipeline::simulate_chunked(self, sc, strategy.comm_on_cus(), k)?
+                    super::graph::simulate_chunked(self, sc, strategy.comm_on_cus(), k)?
                 }
             }
             _ => self.simulate(sc, strategy, b)?,

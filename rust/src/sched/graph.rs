@@ -24,8 +24,24 @@
 //!   that equivalence against a frozen reference implementation).
 //!
 //! [`single_pair`] and [`chunked`] are the graph builders the
-//! [`super::C3Executor`] and `sched::pipeline` now delegate to; the
-//! multi-layer FSDP/TP builders live in `workload::e2e`.
+//! [`super::C3Executor`] delegates to (the former `sched::pipeline`
+//! module was folded in here — [`chunk_sizes`] and [`simulate_chunked`]
+//! are its surviving entry points); the multi-layer FSDP/TP builders
+//! live in `workload::e2e`.
+//!
+//! ## Prefix-memoized re-simulation
+//!
+//! Planner candidates over the same trace differ only in per-stage
+//! [`StagePlan`](super::policy::StagePlan) stamps, so two candidate
+//! graphs typically agree on a long node prefix. [`execute_recording`]
+//! captures a resumable [`EngineSnapshot`] after every completion
+//! event; [`execute_resuming`] replays a later candidate from the
+//! deepest snapshot whose `touched_max` (the highest node id whose
+//! issue has been resolved, bounding every queue transaction and wake
+//! the snapshot's state depends on) lies strictly inside the shared
+//! prefix. The resumed timeline is bit-identical to a from-scratch
+//! simulation — `rust/tests/graph_equiv.rs` pins that equivalence at
+//! 1e-9 alongside the frozen-reference suite.
 
 use crate::config::machine::{smoothmax, MachineConfig};
 use crate::config::workload::CollectiveSpec;
@@ -34,12 +50,10 @@ use crate::error::Error;
 use crate::fabric::Topology;
 use crate::gpu::sdma::engine_demand;
 use crate::kernels::{CollectiveKernel, GemmKernel};
-use crate::sim::fluid::StallError;
-use crate::sim::{Event, Sim, TaskSpec};
+use crate::sim::{Event, ResourceId, Sim, StallError, TaskId, TaskSpec};
 use crate::workload::ResolvedScenario;
 
-use super::executor::Baselines;
-use super::pipeline::chunk_sizes;
+use super::executor::{Baselines, C3Executor};
 use super::strategy::Strategy;
 
 /// Index of a node within a [`Graph`].
@@ -268,356 +282,627 @@ fn intersect_measure(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
     s
 }
 
+/// A resumable checkpoint of the graph engine, captured after a
+/// completion event by [`execute_recording`].
+///
+/// `touched_max` is the highest node id whose issue time has been
+/// resolved so far. Because issue resolution is the only way a node
+/// transacts on a CPU queue, schedules a wake, or starts moving, every
+/// piece of checkpoint state — fluid task progress, queue-free times,
+/// pending wakes, finish times — depends only on nodes `0..=touched_max`
+/// (plus the inert, cap-0 suffix tasks, which are identical for any
+/// graph agreeing on the prefix). That makes the checkpoint a valid
+/// resume point for any graph whose nodes `0..=touched_max` match the
+/// recorded one.
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    sim: Sim,
+    finished: Vec<Option<f64>>,
+    reported: Vec<f64>,
+    issue: Vec<Option<f64>>,
+    queue_free: Vec<f64>,
+    done: usize,
+    touched_max: usize,
+}
+
+/// The checkpoint trail of one recorded execution, consumed by
+/// [`execute_resuming`] to replay a shared graph prefix instead of
+/// re-simulating it from t=0.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixTimeline {
+    snapshots: Vec<EngineSnapshot>,
+}
+
+impl PrefixTimeline {
+    /// Number of recorded checkpoints (one per non-final completion).
+    pub fn len(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snapshots.is_empty()
+    }
+}
+
+/// Append node `i`'s fluid task (demand rows, arrival, cap 0 — the
+/// controller grants rates at event boundaries).
+fn add_node_task(
+    sim: &mut Sim,
+    m: &MachineConfig,
+    cus: u32,
+    hbm: ResourceId,
+    sdma: ResourceId,
+    spec: &NodeSpec,
+) -> TaskId {
+    let arrival = match spec.ready {
+        Ready::At(t) => t,
+        _ => 0.0,
+    };
+    match &spec.work {
+        Work::Gemm(gw) => sim.add_task(TaskSpec {
+            name: None,
+            arrival,
+            work: 1.0,
+            demands: &[(hbm, gw.mem.hbm_traffic(m, cus) * gw.frac)],
+            cap: 0.0,
+        }),
+        Work::Comm(cw) => match cw.backend {
+            CommBackend::Dma { wire, engines } => sim.add_task(TaskSpec {
+                name: None,
+                arrival,
+                work: 1.0,
+                demands: &[(hbm, cw.hbm), (sdma, engines * wire)],
+                cap: 0.0,
+            }),
+            CommBackend::Cu { .. } => sim.add_task(TaskSpec {
+                name: None,
+                arrival,
+                work: 1.0,
+                demands: &[(hbm, cw.hbm)],
+                cap: 0.0,
+            }),
+        },
+    }
+}
+
+/// The graph-execution engine: fluid sim plus controller state, split
+/// out of the old monolithic `execute` so a run can be checkpointed and
+/// resumed (prefix memoization across planner candidates).
+struct Engine<'a> {
+    m: &'a MachineConfig,
+    topo: &'a Topology,
+    g: &'a Graph,
+    cus: u32,
+    hbm: ResourceId,
+    sdma: ResourceId,
+    sim: Sim,
+    finished: Vec<Option<f64>>,
+    reported: Vec<f64>,
+    issue: Vec<Option<f64>>,
+    queue_free: Vec<f64>,
+    done: usize,
+    touched_max: usize,
+    // Per-event scratch (reused: this loop is the sweep's hot path).
+    running: Vec<bool>,
+    phases: Vec<Option<CommPhase>>,
+    /// Per-node CU-backend wire time at the last-seen CU grant. Each
+    /// node only ever sees a couple of distinct grants, and re-pricing
+    /// a collective per event rebuilds the hierarchical plan on
+    /// multi-node topologies.
+    wire_cache: Vec<Option<(u32, f64)>>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(m: &'a MachineConfig, topo: &'a Topology, g: &'a Graph) -> Engine<'a> {
+        let n = g.nodes.len();
+        assert!(n > 0, "empty workload graph");
+        let cus = m.cus_total();
+
+        let mut sim = Sim::new();
+        let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
+        let sdma = sim.add_resource("sdma", m.sdma_engines.max(1) as f64);
+
+        let mut queues = 0usize;
+        for (i, spec) in g.nodes.iter().enumerate() {
+            for &d in spec.issue_deps.iter().chain(spec.serial_deps.iter()) {
+                assert!(d < i, "graph edges must point backward (node {i} depends on {d})");
+            }
+            if let Ready::Queue { queue, .. } = spec.ready {
+                queues = queues.max(queue + 1);
+            }
+            if matches!(spec.ready, Ready::At(_)) {
+                assert!(spec.issue_deps.is_empty(), "At-rooted node {i} cannot have issue deps");
+            }
+        }
+        let mut queue_free = vec![0.0f64; queues];
+
+        for (i, spec) in g.nodes.iter().enumerate() {
+            let tid = add_node_task(&mut sim, m, cus, hbm, sdma, spec);
+            debug_assert_eq!(tid, i);
+            if let Work::Comm(cw) = &spec.work {
+                if let CommBackend::Cu { backlog_until, .. } = cw.backend {
+                    if backlog_until > 0.0 {
+                        sim.schedule_wake(backlog_until);
+                    }
+                }
+            }
+        }
+
+        let mut issue: Vec<Option<f64>> = vec![None; n];
+        let mut touched_max = 0usize;
+        // Resolve ready times of root nodes (dep-gated roots get a wake
+        // at their issue time; At-rooted nodes get the Sim arrival
+        // event).
+        for (i, spec) in g.nodes.iter().enumerate() {
+            match spec.ready {
+                Ready::At(t) => {
+                    issue[i] = Some(t);
+                    touched_max = i;
+                }
+                _ if spec.issue_deps.is_empty() => {
+                    let r = ready_time(spec.ready, 0.0, &mut queue_free);
+                    issue[i] = Some(r);
+                    sim.schedule_wake(r.max(0.0));
+                    touched_max = i;
+                }
+                _ => {}
+            }
+        }
+
+        Engine {
+            m,
+            topo,
+            g,
+            cus,
+            hbm,
+            sdma,
+            sim,
+            finished: vec![None; n],
+            reported: vec![0.0; n],
+            issue,
+            queue_free,
+            done: 0,
+            touched_max,
+            running: vec![false; n],
+            phases: vec![None; n],
+            wire_cache: vec![None; n],
+        }
+    }
+
+    /// Rebuild an engine mid-run from a checkpoint recorded on a graph
+    /// that agrees with `g` on nodes `0..boundary` (and the caller has
+    /// verified `snap.touched_max < boundary`): the checkpoint's fluid
+    /// tasks past the boundary are dropped and `g`'s own suffix nodes
+    /// are appended as fresh, inert (cap-0) tasks.
+    fn from_snapshot(
+        m: &'a MachineConfig,
+        topo: &'a Topology,
+        g: &'a Graph,
+        snap: &EngineSnapshot,
+        boundary: usize,
+    ) -> Engine<'a> {
+        let n = g.nodes.len();
+        let cus = m.cus_total();
+        debug_assert!(snap.touched_max < boundary && boundary <= n);
+
+        let mut sim = snap.sim.clone();
+        sim.truncate_tasks(boundary);
+        let (hbm, sdma) = (0, 1);
+        for (i, spec) in g.nodes.iter().enumerate().skip(boundary) {
+            debug_assert!(
+                !spec.issue_deps.is_empty() && !matches!(spec.ready, Ready::At(_)),
+                "resume suffix node {i} must be dependency-gated"
+            );
+            let tid = add_node_task(&mut sim, m, cus, hbm, sdma, spec);
+            debug_assert_eq!(tid, i);
+        }
+
+        let mut finished = snap.finished.clone();
+        finished.truncate(boundary);
+        finished.resize(n, None);
+        let mut reported = snap.reported.clone();
+        reported.truncate(boundary);
+        reported.resize(n, 0.0);
+        let mut issue = snap.issue.clone();
+        issue.truncate(boundary);
+        issue.resize(n, None);
+
+        let mut queues = snap.queue_free.len();
+        for spec in &g.nodes {
+            if let Ready::Queue { queue, .. } = spec.ready {
+                queues = queues.max(queue + 1);
+            }
+        }
+        let mut queue_free = snap.queue_free.clone();
+        queue_free.resize(queues, 0.0);
+
+        Engine {
+            m,
+            topo,
+            g,
+            cus,
+            hbm,
+            sdma,
+            sim,
+            finished,
+            reported,
+            issue,
+            queue_free,
+            done: snap.done,
+            touched_max: snap.touched_max,
+            running: vec![false; n],
+            phases: vec![None; n],
+            wire_cache: vec![None; n],
+        }
+    }
+
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            sim: self.sim.clone(),
+            finished: self.finished.clone(),
+            reported: self.reported.clone(),
+            issue: self.issue.clone(),
+            queue_free: self.queue_free.clone(),
+            done: self.done,
+            touched_max: self.touched_max,
+        }
+    }
+
+    /// Drive the event loop to completion. `observe` is called after
+    /// every non-final completion event (the recording hook).
+    fn run<F: FnMut(&Engine<'a>)>(&mut self, mut observe: F) -> Result<(), Error> {
+        let (m, topo, g) = (self.m, self.topo, self.g);
+        let n = g.nodes.len();
+        let cus = self.cus;
+        let hbm = self.hbm;
+        loop {
+            let now = self.sim.now();
+            let gemm_unfinished = g
+                .nodes
+                .iter()
+                .zip(self.finished.iter())
+                .any(|(s, f)| matches!(s.work, Work::Gemm(_)) && f.is_none());
+
+            // Which nodes may progress right now.
+            for (i, spec) in g.nodes.iter().enumerate() {
+                self.running[i] = if self.finished[i].is_some() {
+                    false
+                } else {
+                    match spec.ready {
+                        Ready::At(_) => self.sim.is_active(i),
+                        _ => {
+                            self.issue[i].is_some_and(|r| now + ISSUE_EPS >= r)
+                                && spec.serial_deps.iter().all(|&d| self.finished[d].is_some())
+                        }
+                    }
+                };
+            }
+
+            // Per-collective phase state (CU holds, traffic-rate scale).
+            for (i, spec) in g.nodes.iter().enumerate() {
+                let Work::Comm(cw) = &spec.work else {
+                    self.phases[i] = None;
+                    continue;
+                };
+                if self.finished[i].is_some() {
+                    self.phases[i] = Some(CommPhase {
+                        moving: false,
+                        is_cu: false,
+                        holds: 0,
+                        scale: 0.0,
+                    });
+                    continue;
+                }
+                let (is_cu, holds) = match cw.backend {
+                    CommBackend::Cu {
+                        backlog_cus,
+                        overlap_cus,
+                        solo_cus,
+                        backlog_until,
+                        ..
+                    } => {
+                        let h = if !self.running[i] {
+                            0
+                        } else if backlog_until > 0.0 && now < backlog_until && gemm_unfinished {
+                            backlog_cus
+                        } else if gemm_unfinished {
+                            overlap_cus
+                        } else {
+                            solo_cus
+                        };
+                        (true, h)
+                    }
+                    CommBackend::Dma { .. } => (false, 0),
+                };
+                let moving = self.running[i] && (!is_cu || holds > 0);
+                let scale = if !moving {
+                    0.0
+                } else if is_cu {
+                    cw.kernel.bw_scale(m, holds)
+                } else {
+                    1.0
+                };
+                self.phases[i] = Some(CommPhase {
+                    moving,
+                    is_cu,
+                    holds,
+                    scale,
+                });
+            }
+            let held_cus: u32 = self.phases.iter().flatten().map(|p| p.holds).sum();
+
+            // Compute-node caps.
+            for (i, spec) in g.nodes.iter().enumerate() {
+                let Work::Gemm(gw) = &spec.work else { continue };
+                if self.finished[i].is_some() {
+                    continue;
+                }
+                let g_cus = match gw.cu_policy {
+                    CuPolicy::Fixed(k) => k,
+                    CuPolicy::Residual => cus.saturating_sub(held_cus),
+                }
+                .max(8);
+                let t_pure = smoothmax(gw.comp.t_comp(m, g_cus), gw.mem.t_mem(m, g_cus) * gw.frac);
+                let mut pol_sum = 0.0;
+                let mut share_sum = 0.0;
+                for (j, p) in self.phases.iter().enumerate() {
+                    let Some(p) = p else { continue };
+                    if !p.moving {
+                        continue;
+                    }
+                    let Work::Comm(cw) = &g.nodes[j].work else { unreachable!() };
+                    match gw.pen_style {
+                        PenaltyStyle::RateScaled => {
+                            share_sum += cw.share * p.scale;
+                            if p.is_cu {
+                                pol_sum += cw.pollution * p.scale;
+                            }
+                        }
+                        PenaltyStyle::Aligned(_) => {
+                            share_sum += cw.share;
+                            if p.is_cu {
+                                pol_sum += cw.pollution;
+                            }
+                        }
+                    }
+                }
+                let (pol, mp) = match gw.pen_style {
+                    PenaltyStyle::RateScaled => (pol_sum, m.mem_pen(share_sum)),
+                    PenaltyStyle::Aligned(a) => (pol_sum * a, m.mem_pen(share_sum) * a),
+                };
+                let cap = (1.0 - pol) * (1.0 - mp) / t_pure;
+                if matches!(spec.ready, Ready::At(_)) || self.running[i] {
+                    self.sim.set_cap(i, cap);
+                    self.sim.set_demand(i, hbm, gw.mem.hbm_traffic(m, g_cus) * gw.frac);
+                } else {
+                    self.sim.set_cap(i, 0.0);
+                }
+            }
+
+            // Collective-node caps.
+            let mut gshare_sum = 0.0;
+            let mut any_gemm_moving = false;
+            for (j, spec) in g.nodes.iter().enumerate() {
+                if let Work::Gemm(gw) = &spec.work {
+                    if self.finished[j].is_none() && self.running[j] {
+                        gshare_sum += gw.share;
+                        any_gemm_moving = true;
+                    }
+                }
+            }
+            for (i, spec) in g.nodes.iter().enumerate() {
+                let Work::Comm(cw) = &spec.work else { continue };
+                if self.finished[i].is_some() {
+                    continue;
+                }
+                let Some(p) = self.phases[i] else { unreachable!() };
+                let (mp, pen) = match cw.pen_style {
+                    PenaltyStyle::RateScaled => (
+                        m.mem_pen(gshare_sum),
+                        if any_gemm_moving { cw.co_penalty } else { 0.0 },
+                    ),
+                    PenaltyStyle::Aligned(a) => (
+                        m.mem_pen(gshare_sum) * a,
+                        if any_gemm_moving { cw.co_penalty * a } else { 0.0 },
+                    ),
+                };
+                let cap = match cw.backend {
+                    CommBackend::Dma { wire, .. } => (1.0 - mp) / wire,
+                    CommBackend::Cu { wire_fixed, .. } => {
+                        if p.holds == 0 {
+                            0.0
+                        } else {
+                            let w = match wire_fixed {
+                                Some(w) => w,
+                                None => match self.wire_cache[i] {
+                                    Some((h, w)) if h == p.holds => w,
+                                    _ => {
+                                        let w = cw.kernel.t_wire_on(m, topo, p.holds);
+                                        self.wire_cache[i] = Some((p.holds, w));
+                                        w
+                                    }
+                                },
+                            };
+                            (1.0 - pen) * (1.0 - mp) / w
+                        }
+                    }
+                };
+                match spec.ready {
+                    Ready::At(_) => self.sim.set_cap(i, cap),
+                    _ => self.sim.set_cap(i, if self.running[i] { cap } else { 0.0 }),
+                }
+            }
+
+            match self.sim.next_event() {
+                Event::Completion(i) => {
+                    let t = self.sim.now();
+                    self.finished[i] = Some(t);
+                    self.reported[i] = t
+                        + match &g.nodes[i].work {
+                            Work::Comm(cw) => cw.sync,
+                            Work::Gemm(_) => 0.0,
+                        };
+                    self.done += 1;
+                    if self.done == n {
+                        break;
+                    }
+                    // Resolve newly-unblocked dependents in ascending
+                    // id order (keeps CPU-queue transactions
+                    // deterministic).
+                    for j in (i + 1)..n {
+                        let spec_j = &g.nodes[j];
+                        if self.issue[j].is_some()
+                            || spec_j.issue_deps.is_empty()
+                            || !spec_j.issue_deps.contains(&i)
+                            || !spec_j.issue_deps.iter().all(|&d| self.finished[d].is_some())
+                        {
+                            continue;
+                        }
+                        let t_deps = spec_j
+                            .issue_deps
+                            .iter()
+                            .fold(0.0f64, |a, &d| a.max(self.reported[d]));
+                        let r = ready_time(spec_j.ready, t_deps, &mut self.queue_free);
+                        self.issue[j] = Some(r);
+                        self.touched_max = self.touched_max.max(j);
+                        self.sim.schedule_wake(r.max(t));
+                    }
+                    observe(self);
+                }
+                Event::Idle => break,
+                _ => {}
+            }
+        }
+        if self.done < n {
+            return Err(Error::SimStall(StallError {
+                at: self.sim.now(),
+                stalled: self
+                    .sim
+                    .stall_report_named(|t| g.nodes.get(t).map(|s| s.label.clone())),
+            }));
+        }
+        Ok(())
+    }
+
+    /// Aggregate metrics of a completed run.
+    fn into_run(self) -> GraphRun {
+        let (m, g) = (self.m, self.g);
+        let finish_raw: Vec<f64> =
+            self.finished.iter().map(|f| f.expect("all nodes finished")).collect();
+        let issue_t: Vec<f64> = self.issue.iter().map(|r| r.unwrap_or(0.0).max(0.0)).collect();
+        let reported = self.reported;
+        let total = reported.iter().cloned().fold(0.0, f64::max);
+        let mut gemm_finish = 0.0f64;
+        let mut comm_finish = 0.0f64;
+        let mut gemm_iv = Vec::new();
+        let mut comm_iv = Vec::new();
+        let mut hbm_bytes = 0.0f64;
+        let mut engine_secs = 0.0f64;
+        for (i, spec) in g.nodes.iter().enumerate() {
+            match &spec.work {
+                Work::Gemm(gw) => {
+                    gemm_finish = gemm_finish.max(reported[i]);
+                    gemm_iv.push((issue_t[i], finish_raw[i]));
+                    hbm_bytes += gw.mem.hbm_traffic(m, self.cus) * gw.frac;
+                }
+                Work::Comm(cw) => {
+                    comm_finish = comm_finish.max(reported[i]);
+                    comm_iv.push((issue_t[i], finish_raw[i]));
+                    hbm_bytes += cw.hbm;
+                    if let CommBackend::Dma { wire, engines } = cw.backend {
+                        engine_secs += engines * wire;
+                    }
+                }
+            }
+        }
+        let gemm_u = union_intervals(gemm_iv.clone());
+        let comm_u = union_intervals(comm_iv.clone());
+        let mut all_iv = gemm_iv;
+        all_iv.extend(comm_iv);
+        let all_u = union_intervals(all_iv);
+        let exposed_comm = (measure(&comm_u) - intersect_measure(&comm_u, &gemm_u)).max(0.0);
+        let bubble = (total - measure(&all_u)).max(0.0);
+        let hbm_occupancy = if total > 0.0 {
+            (hbm_bytes / (m.hbm_bw_achievable() * total)).min(1.0)
+        } else {
+            0.0
+        };
+        let sdma_occupancy = if total > 0.0 {
+            (engine_secs / (m.sdma_engines.max(1) as f64 * total)).min(1.0)
+        } else {
+            0.0
+        };
+        GraphRun {
+            issue: issue_t,
+            finish: reported,
+            total,
+            gemm_finish,
+            comm_finish,
+            exposed_comm,
+            bubble,
+            hbm_occupancy,
+            sdma_occupancy,
+        }
+    }
+}
+
 /// Execute a workload graph on the fluid simulator: one continuous
 /// timeline, per-node strategy annotations applied at every event
 /// boundary, HBM and SDMA-engine occupancy shared across all concurrent
 /// nodes. Returns a typed [`Error::SimStall`] (never a panic) when a
 /// node cannot finish.
 pub fn execute(m: &MachineConfig, topo: &Topology, g: &Graph) -> Result<GraphRun, Error> {
-    let n = g.nodes.len();
-    assert!(n > 0, "empty workload graph");
-    let cus = m.cus_total();
+    let mut e = Engine::new(m, topo, g);
+    e.run(|_| {})?;
+    Ok(e.into_run())
+}
 
-    let mut sim = Sim::new();
-    let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
-    let sdma = sim.add_resource("sdma", m.sdma_engines.max(1) as f64);
+/// Like [`execute`], but also record a [`PrefixTimeline`] of resumable
+/// checkpoints that later candidate graphs sharing a node prefix can
+/// continue from via [`execute_resuming`].
+pub fn execute_recording(
+    m: &MachineConfig,
+    topo: &Topology,
+    g: &Graph,
+) -> Result<(GraphRun, PrefixTimeline), Error> {
+    let mut snapshots = Vec::new();
+    let mut e = Engine::new(m, topo, g);
+    e.run(|eng| snapshots.push(eng.snapshot()))?;
+    Ok((e.into_run(), PrefixTimeline { snapshots }))
+}
 
-    let mut queues = 0usize;
-    for (i, spec) in g.nodes.iter().enumerate() {
-        for &d in spec.issue_deps.iter().chain(spec.serial_deps.iter()) {
-            assert!(d < i, "graph edges must point backward (node {i} depends on {d})");
-        }
-        if let Ready::Queue { queue, .. } = spec.ready {
-            queues = queues.max(queue + 1);
-        }
-        if matches!(spec.ready, Ready::At(_)) {
-            assert!(spec.issue_deps.is_empty(), "At-rooted node {i} cannot have issue deps");
-        }
-    }
-    let mut queue_free = vec![0.0f64; queues];
-
-    for (i, spec) in g.nodes.iter().enumerate() {
-        let arrival = match spec.ready {
-            Ready::At(t) => t,
-            _ => 0.0,
-        };
-        let demands = match &spec.work {
-            Work::Gemm(gw) => vec![(hbm, gw.mem.hbm_traffic(m, cus) * gw.frac)],
-            Work::Comm(cw) => {
-                let mut d = vec![(hbm, cw.hbm)];
-                if let CommBackend::Dma { wire, engines } = cw.backend {
-                    d.push((sdma, engines * wire));
-                }
-                d
-            }
-        };
-        let tid = sim.add_task(TaskSpec {
-            name: spec.label.clone(),
-            arrival,
-            work: 1.0,
-            demands,
-            cap: 0.0,
-        });
-        debug_assert_eq!(tid, i);
-        if let Work::Comm(cw) = &spec.work {
-            if let CommBackend::Cu { backlog_until, .. } = cw.backend {
-                if backlog_until > 0.0 {
-                    sim.schedule_wake(backlog_until);
-                }
-            }
-        }
-    }
-
-    let mut finished: Vec<Option<f64>> = vec![None; n];
-    let mut reported: Vec<f64> = vec![0.0; n];
-    let mut issue: Vec<Option<f64>> = vec![None; n];
-    // Resolve ready times of root nodes (dep-gated roots get a wake at
-    // their issue time; At-rooted nodes get the Sim arrival event).
-    for (i, spec) in g.nodes.iter().enumerate() {
-        match spec.ready {
-            Ready::At(t) => issue[i] = Some(t),
-            _ if spec.issue_deps.is_empty() => {
-                let r = ready_time(spec.ready, 0.0, &mut queue_free);
-                issue[i] = Some(r);
-                sim.schedule_wake(r.max(0.0));
-            }
-            _ => {}
-        }
-    }
-
-    let mut done = 0usize;
-    // Per-event scratch (reused: this loop is the sweep's hot path).
-    let mut running: Vec<bool> = vec![false; n];
-    let mut phases: Vec<Option<CommPhase>> = vec![None; n];
-    loop {
-        let now = sim.now();
-        let gemm_unfinished = g
-            .nodes
-            .iter()
-            .zip(finished.iter())
-            .any(|(s, f)| matches!(s.work, Work::Gemm(_)) && f.is_none());
-
-        // Which nodes may progress right now.
-        for (i, spec) in g.nodes.iter().enumerate() {
-            running[i] = if finished[i].is_some() {
-                false
-            } else {
-                match spec.ready {
-                    Ready::At(_) => sim.is_active(i),
-                    _ => {
-                        issue[i].is_some_and(|r| now + ISSUE_EPS >= r)
-                            && spec.serial_deps.iter().all(|&d| finished[d].is_some())
-                    }
-                }
-            };
-        }
-
-        // Per-collective phase state (CU holds, traffic-rate scale).
-        for (i, spec) in g.nodes.iter().enumerate() {
-            let Work::Comm(cw) = &spec.work else {
-                phases[i] = None;
-                continue;
-            };
-            if finished[i].is_some() {
-                phases[i] = Some(CommPhase {
-                    moving: false,
-                    is_cu: false,
-                    holds: 0,
-                    scale: 0.0,
-                });
-                continue;
-            }
-            let (is_cu, holds) = match cw.backend {
-                CommBackend::Cu {
-                    backlog_cus,
-                    overlap_cus,
-                    solo_cus,
-                    backlog_until,
-                    ..
-                } => {
-                    let h = if !running[i] {
-                        0
-                    } else if backlog_until > 0.0 && now < backlog_until && gemm_unfinished {
-                        backlog_cus
-                    } else if gemm_unfinished {
-                        overlap_cus
-                    } else {
-                        solo_cus
-                    };
-                    (true, h)
-                }
-                CommBackend::Dma { .. } => (false, 0),
-            };
-            let moving = running[i] && (!is_cu || holds > 0);
-            let scale = if !moving {
-                0.0
-            } else if is_cu {
-                cw.kernel.bw_scale(m, holds)
-            } else {
-                1.0
-            };
-            phases[i] = Some(CommPhase {
-                moving,
-                is_cu,
-                holds,
-                scale,
-            });
-        }
-        let held_cus: u32 = phases.iter().flatten().map(|p| p.holds).sum();
-
-        // Compute-node caps.
-        for (i, spec) in g.nodes.iter().enumerate() {
-            let Work::Gemm(gw) = &spec.work else { continue };
-            if finished[i].is_some() {
-                continue;
-            }
-            let g_cus = match gw.cu_policy {
-                CuPolicy::Fixed(k) => k,
-                CuPolicy::Residual => cus.saturating_sub(held_cus),
-            }
-            .max(8);
-            let t_pure = smoothmax(gw.comp.t_comp(m, g_cus), gw.mem.t_mem(m, g_cus) * gw.frac);
-            let mut pol_sum = 0.0;
-            let mut share_sum = 0.0;
-            for (j, p) in phases.iter().enumerate() {
-                let Some(p) = p else { continue };
-                if !p.moving {
-                    continue;
-                }
-                let Work::Comm(cw) = &g.nodes[j].work else { unreachable!() };
-                match gw.pen_style {
-                    PenaltyStyle::RateScaled => {
-                        share_sum += cw.share * p.scale;
-                        if p.is_cu {
-                            pol_sum += cw.pollution * p.scale;
-                        }
-                    }
-                    PenaltyStyle::Aligned(_) => {
-                        share_sum += cw.share;
-                        if p.is_cu {
-                            pol_sum += cw.pollution;
-                        }
-                    }
-                }
-            }
-            let (pol, mp) = match gw.pen_style {
-                PenaltyStyle::RateScaled => (pol_sum, m.mem_pen(share_sum)),
-                PenaltyStyle::Aligned(a) => (pol_sum * a, m.mem_pen(share_sum) * a),
-            };
-            let cap = (1.0 - pol) * (1.0 - mp) / t_pure;
-            if matches!(spec.ready, Ready::At(_)) || running[i] {
-                sim.set_cap(i, cap);
-                sim.set_demand(i, hbm, gw.mem.hbm_traffic(m, g_cus) * gw.frac);
-            } else {
-                sim.set_cap(i, 0.0);
-            }
-        }
-
-        // Collective-node caps.
-        let mut gshare_sum = 0.0;
-        let mut any_gemm_moving = false;
-        for (j, spec) in g.nodes.iter().enumerate() {
-            if let Work::Gemm(gw) = &spec.work {
-                if finished[j].is_none() && running[j] {
-                    gshare_sum += gw.share;
-                    any_gemm_moving = true;
-                }
-            }
-        }
-        for (i, spec) in g.nodes.iter().enumerate() {
-            let Work::Comm(cw) = &spec.work else { continue };
-            if finished[i].is_some() {
-                continue;
-            }
-            let Some(p) = phases[i] else { unreachable!() };
-            let (mp, pen) = match cw.pen_style {
-                PenaltyStyle::RateScaled => (
-                    m.mem_pen(gshare_sum),
-                    if any_gemm_moving { cw.co_penalty } else { 0.0 },
-                ),
-                PenaltyStyle::Aligned(a) => (
-                    m.mem_pen(gshare_sum) * a,
-                    if any_gemm_moving { cw.co_penalty * a } else { 0.0 },
-                ),
-            };
-            let cap = match cw.backend {
-                CommBackend::Dma { wire, .. } => (1.0 - mp) / wire,
-                CommBackend::Cu { wire_fixed, .. } => {
-                    if p.holds == 0 {
-                        0.0
-                    } else {
-                        let w = match wire_fixed {
-                            Some(w) => w,
-                            None => cw.kernel.t_wire_on(m, topo, p.holds),
-                        };
-                        (1.0 - pen) * (1.0 - mp) / w
-                    }
-                }
-            };
-            match spec.ready {
-                Ready::At(_) => sim.set_cap(i, cap),
-                _ => sim.set_cap(i, if running[i] { cap } else { 0.0 }),
-            }
-        }
-
-        match sim.next_event() {
-            Event::Completion(i) => {
-                finished[i] = Some(sim.now());
-                reported[i] = sim.now()
-                    + match &g.nodes[i].work {
-                        Work::Comm(cw) => cw.sync,
-                        Work::Gemm(_) => 0.0,
-                    };
-                done += 1;
-                if done == n {
-                    break;
-                }
-                // Resolve newly-unblocked dependents in ascending id
-                // order (keeps CPU-queue transactions deterministic).
-                for j in (i + 1)..n {
-                    let spec_j = &g.nodes[j];
-                    if issue[j].is_some()
-                        || spec_j.issue_deps.is_empty()
-                        || !spec_j.issue_deps.contains(&i)
-                        || !spec_j.issue_deps.iter().all(|&d| finished[d].is_some())
-                    {
-                        continue;
-                    }
-                    let t_deps = spec_j
-                        .issue_deps
-                        .iter()
-                        .fold(0.0f64, |a, &d| a.max(reported[d]));
-                    let r = ready_time(spec_j.ready, t_deps, &mut queue_free);
-                    issue[j] = Some(r);
-                    sim.schedule_wake(r.max(sim.now()));
-                }
-            }
-            Event::Idle => break,
-            _ => {}
-        }
-    }
-    if done < n {
-        return Err(Error::SimStall(StallError {
-            at: sim.now(),
-            stalled: sim.stall_report(),
-        }));
-    }
-
-    // Aggregate metrics.
-    let finish_raw: Vec<f64> = finished.iter().map(|f| f.expect("all nodes finished")).collect();
-    let issue_t: Vec<f64> = issue.iter().map(|r| r.unwrap_or(0.0).max(0.0)).collect();
-    let total = reported.iter().cloned().fold(0.0, f64::max);
-    let mut gemm_finish = 0.0f64;
-    let mut comm_finish = 0.0f64;
-    let mut gemm_iv = Vec::new();
-    let mut comm_iv = Vec::new();
-    let mut hbm_bytes = 0.0f64;
-    let mut engine_secs = 0.0f64;
-    for (i, spec) in g.nodes.iter().enumerate() {
-        match &spec.work {
-            Work::Gemm(gw) => {
-                gemm_finish = gemm_finish.max(reported[i]);
-                gemm_iv.push((issue_t[i], finish_raw[i]));
-                hbm_bytes += gw.mem.hbm_traffic(m, cus) * gw.frac;
-            }
-            Work::Comm(cw) => {
-                comm_finish = comm_finish.max(reported[i]);
-                comm_iv.push((issue_t[i], finish_raw[i]));
-                hbm_bytes += cw.hbm;
-                if let CommBackend::Dma { wire, engines } = cw.backend {
-                    engine_secs += engines * wire;
-                }
-            }
-        }
-    }
-    let gemm_u = union_intervals(gemm_iv.clone());
-    let comm_u = union_intervals(comm_iv.clone());
-    let mut all_iv = gemm_iv;
-    all_iv.extend(comm_iv);
-    let all_u = union_intervals(all_iv);
-    let exposed_comm = (measure(&comm_u) - intersect_measure(&comm_u, &gemm_u)).max(0.0);
-    let bubble = (total - measure(&all_u)).max(0.0);
-    let hbm_occupancy = if total > 0.0 {
-        (hbm_bytes / (m.hbm_bw_achievable() * total)).min(1.0)
-    } else {
-        0.0
+/// Execute `g`, resuming from the deepest checkpoint of `prior` whose
+/// touched state lies strictly inside `boundary` — the number of
+/// leading nodes on which `g` and the recorded graph agree exactly.
+/// Falls back to a full [`execute`] when no checkpoint qualifies (e.g.
+/// the graphs diverge before the first completion) or when a suffix
+/// node is a root (its init-time queue transaction would have preceded
+/// every checkpoint). Numerically identical to `execute(m, topo, g)`.
+pub fn execute_resuming(
+    m: &MachineConfig,
+    topo: &Topology,
+    g: &Graph,
+    prior: &PrefixTimeline,
+    boundary: usize,
+) -> Result<GraphRun, Error> {
+    let boundary = boundary.min(g.nodes.len());
+    let snap = prior
+        .snapshots
+        .iter()
+        .rev()
+        .find(|s| s.touched_max < boundary && boundary <= s.sim.num_tasks());
+    let Some(snap) = snap else {
+        return execute(m, topo, g);
     };
-    let sdma_occupancy = if total > 0.0 {
-        (engine_secs / (m.sdma_engines.max(1) as f64 * total)).min(1.0)
-    } else {
-        0.0
-    };
-    Ok(GraphRun {
-        issue: issue_t,
-        finish: reported,
-        total,
-        gemm_finish,
-        comm_finish,
-        exposed_comm,
-        bubble,
-        hbm_occupancy,
-        sdma_occupancy,
-    })
+    let suffix_rooted = g.nodes[boundary..]
+        .iter()
+        .any(|s| s.issue_deps.is_empty() || matches!(s.ready, Ready::At(_)));
+    if suffix_rooted {
+        return execute(m, topo, g);
+    }
+    let mut e = Engine::from_snapshot(m, topo, g, snap, boundary);
+    e.run(|_| {})?;
+    Ok(e.into_run())
 }
 
 // ---- graph builders for the legacy timelines ----
@@ -774,11 +1059,48 @@ pub fn single_pair(
     Ok(g)
 }
 
+/// Split a collective payload into `k` near-equal chunk sizes that sum
+/// exactly to `total`.
+pub fn chunk_sizes(total: u64, k: u32) -> Vec<u64> {
+    let k = k.max(1) as u64;
+    (0..k)
+        .map(|i| total * (i + 1) / k - total * i / k)
+        .collect()
+}
+
+/// Simulate the fine-grain chunked C3 pipeline (the follow-up direction
+/// of arXiv 2512.10236, priced against DMA-Latte's per-packet launch
+/// costs) for one scenario at `k >= 2` chunks: build the 2k-node chunk
+/// graph ([`chunked`]) and run it on [`execute`]. `cu_backend` selects
+/// CU-collective chunks (`c3_chunked`) vs DMA chunk batches
+/// (`conccl_chunked`). Returns `(total, gemm_finish, comm_finish)` like
+/// the whole-kernel timeline. `chunks == 1` is still defined as the
+/// whole-kernel strategy itself (the executor delegates to `c3_sp` /
+/// `conccl` exactly), which keeps the swept/auto chunk count never
+/// worse than the unchunked strategy by construction.
+pub(crate) fn simulate_chunked(
+    exec: &C3Executor,
+    sc: &ResolvedScenario,
+    cu_backend: bool,
+    k: u32,
+) -> Result<(f64, f64, f64), Error> {
+    let g = chunked(&exec.m, &exec.topo, sc, cu_backend, k)?;
+    let run = execute(&exec.m, &exec.topo, &g)?;
+    Ok((run.total, run.gemm_finish, run.comm_finish))
+}
+
 /// Build the k-chunk fine-grain pipeline graph of one C3 scenario —
 /// the pre-refactor `sched::pipeline` timeline as a 2k-node graph
 /// (GEMM chunk chain + issue-gated collective chunk chain). The
 /// derivations are the legacy pipeline's, so the engine reproduces its
-/// numbers exactly.
+/// numbers exactly: the pipeline splits the GEMM into `k` tiled
+/// sub-kernels ([`crate::kernels::GemmKernel::split_m`]) and the
+/// collective into `k` chunk transfers, issuing collective chunk `i` at
+/// GEMM chunk `i`'s completion — granularity buys interference relief
+/// (the surviving penalty is `MachineConfig::chunk_align(k)` of the
+/// whole-kernel value) and costs launches (every DMA chunk is a fresh
+/// `CommandPacket` batch serialized on the CPU enqueue thread, so small
+/// chunks go latency-bound exactly as DMA-Latte reports).
 pub fn chunked(
     m: &MachineConfig,
     topo: &Topology,
@@ -1070,5 +1392,115 @@ mod tests {
         let a = union_intervals(vec![(0.0, 2.0)]);
         let b = union_intervals(vec![(1.0, 3.0)]);
         assert!((intersect_measure(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resumed_execution_is_bit_identical() {
+        // Record a chunk-pipeline run, then resume the same graph from
+        // its checkpoint trail at every boundary: the resumed timeline
+        // must reproduce the from-scratch numbers exactly. Boundary 0
+        // exercises the full-fallback path.
+        let e = exec();
+        let sc = resolve_tag("cb5_13G", CollectiveKind::AllGather).unwrap();
+        let g = chunked(&e.m, &e.topo, &sc, false, 8).unwrap();
+        let (full, timeline) = execute_recording(&e.m, &e.topo, &g).unwrap();
+        assert!(!timeline.is_empty(), "a 16-node run records checkpoints");
+        let baseline = execute(&e.m, &e.topo, &g).unwrap();
+        assert_eq!(full.total.to_bits(), baseline.total.to_bits());
+        for boundary in [0, g.nodes.len() / 2, g.nodes.len()] {
+            let r = execute_resuming(&e.m, &e.topo, &g, &timeline, boundary).unwrap();
+            assert_eq!(
+                r.total.to_bits(),
+                baseline.total.to_bits(),
+                "boundary {boundary} diverged"
+            );
+            for (a, b) in r.finish.iter().zip(baseline.finish.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "boundary {boundary} finish diverged");
+            }
+        }
+    }
+
+    // ---- tests carried over from the folded sched::pipeline module ----
+
+    use crate::sched::Strategy as S;
+    use crate::workload::scenarios::resolve_tag;
+
+    fn exec() -> C3Executor {
+        C3Executor::new(MachineConfig::mi300x())
+    }
+
+    #[test]
+    fn chunk_sizes_sum_exactly() {
+        for (total, k) in [(896 * MIB, 8u32), (7, 3), (1, 1), (13 * 1024 * MIB, 16)] {
+            let v = chunk_sizes(total, k);
+            assert_eq!(v.len(), k as usize);
+            assert_eq!(v.iter().sum::<u64>(), total);
+            let (lo, hi) = (v.iter().min().unwrap(), v.iter().max().unwrap());
+            assert!(hi - lo <= 1, "uneven split {v:?}");
+        }
+    }
+
+    #[test]
+    fn pipeline_timeline_is_well_formed() {
+        let e = exec();
+        let sc = resolve_tag("mb2_26.5G", CollectiveKind::AllGather).unwrap();
+        let (total, g, c) = simulate_chunked(&e, &sc, false, 8).unwrap();
+        assert!(total > 0.0 && g > 0.0 && c > 0.0);
+        assert!((total - g.max(c)).abs() < 1e-15);
+        // The collective is gated on the first GEMM chunk: it cannot
+        // finish before that chunk's pure-compute time.
+        let first = sc.gemm.split_m(&e.m, 8)[0].t_comp(&e.m, e.m.cus_total());
+        assert!(c > first, "comm finished before the first GEMM chunk: {c} vs {first}");
+        // And the whole thing can't beat the ideal lower bound.
+        let b = e.baselines(&sc);
+        assert!(total >= b.t_gemm_iso.max(b.t_comm_iso) * 0.999);
+    }
+
+    #[test]
+    fn latency_bound_chunks_collapse_like_dma_latte() {
+        // A small payload (4 MiB) chunked 16 ways pays 16 CPU enqueue
+        // batches; the pipeline must be clearly worse than whole-kernel
+        // ConCCL there (the DMA-Latte result the auto-tuner prices).
+        let e = exec();
+        let mut sc = resolve_tag("cb1_896M", CollectiveKind::AllGather).unwrap();
+        sc.comm = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 4 * MIB));
+        sc.scenario.comm = sc.comm.spec;
+        let whole = e.run(&sc, S::Conccl);
+        let (chunk_total, _, chunk_comm) = simulate_chunked(&e, &sc, false, 16).unwrap();
+        // The comm pipeline trails the GEMM (issue gated per chunk), so
+        // its finish moves past the whole-kernel collective's.
+        assert!(
+            chunk_comm > whole.comm_finish,
+            "chunked comm {chunk_comm} should trail whole-kernel {}",
+            whole.comm_finish
+        );
+        assert!(chunk_total + 1e-12 >= whole.total);
+    }
+
+    #[test]
+    fn more_chunks_reduce_interference_on_gc_equal() {
+        // On a GC-equal scenario the surviving interference shrinks with
+        // granularity: k=16 beats k=2.
+        let e = exec();
+        let sc = resolve_tag("cb5_13G", CollectiveKind::AllGather).unwrap();
+        let (t2, _, _) = simulate_chunked(&e, &sc, false, 2).unwrap();
+        let (t16, _, _) = simulate_chunked(&e, &sc, false, 16).unwrap();
+        assert!(t16 < t2, "k=16 ({t16}) should beat k=2 ({t2}) on GC-equal");
+    }
+
+    #[test]
+    fn cu_backend_pipeline_runs_and_holds_cus() {
+        let e = exec();
+        let sc = resolve_tag("cb5_13G", CollectiveKind::AllToAll).unwrap();
+        let (total, g, c) = simulate_chunked(&e, &sc, true, 8).unwrap();
+        assert!(total > 0.0 && g > 0.0 && c > 0.0);
+        // All-reduce on the DMA pipeline is a typed error.
+        let ar = resolve_tag("cb5_13G", CollectiveKind::AllReduce).unwrap();
+        assert!(matches!(
+            simulate_chunked(&e, &ar, false, 8),
+            Err(Error::NotDmaOffloadable(_))
+        ));
+        // ... but fine on the CU pipeline.
+        assert!(simulate_chunked(&e, &ar, true, 8).is_ok());
     }
 }

@@ -1,17 +1,17 @@
 //! The C3 scheduler: strategies (§IV-C, §V, §VI), the workload-graph
-//! engine that produces concurrent timelines over the fluid simulator,
-//! the executor / fine-grain chunked pipeline builders on top of it
-//! (arXiv 2512.10236 / DMA-Latte), and the cost-model-driven per-node
-//! planner ([`policy`]) behind `E2eFamily::Auto`.
+//! engine that produces concurrent timelines over the fluid simulator
+//! (including the fine-grain chunked pipeline builders, arXiv
+//! 2512.10236 / DMA-Latte, and prefix-memoized candidate
+//! re-simulation), the executor on top of it, and the
+//! cost-model-driven per-node planner ([`policy`]) behind
+//! `E2eFamily::Auto`.
 
 pub mod executor;
 pub mod graph;
-pub mod pipeline;
 pub mod policy;
 pub mod strategy;
 
 pub use executor::{Baselines, C3Executor, C3Run};
-pub use graph::{Graph, GraphRun, NodeSpec, Ready, Work};
-pub use pipeline::chunk_sizes;
+pub use graph::{chunk_sizes, Graph, GraphRun, NodeSpec, PrefixTimeline, Ready, Work};
 pub use policy::{PlanBackend, PlanNode, PlanSummary, Planner, StagePlan};
 pub use strategy::{Strategy, StrategyKind};

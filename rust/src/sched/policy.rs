@@ -39,9 +39,10 @@ use crate::fabric::Topology;
 use crate::heuristics::CostModel;
 use crate::kernels::CollectiveKernel;
 use crate::sched::graph;
+use crate::util::pool;
 use crate::workload::e2e::{
-    build_graph_planned, build_serial_chain, serial_total, E2eFamily, E2eKind, E2eRun, E2eStage,
-    E2eTrace,
+    build_graph_planned_with, build_serial_chain_with, serial_total, CommPricer, E2eFamily,
+    E2eKind, E2eRun, E2eStage, E2eTrace, PlannedGraph,
 };
 use crate::workload::ResolvedScenario;
 
@@ -181,11 +182,24 @@ pub fn family_stages(m: &MachineConfig, trace: &E2eTrace, family: E2eFamily) -> 
     })
 }
 
+/// Number of leading stages on which two per-stage plans agree. Over
+/// those stages the candidates' graphs are byte-identical node for node
+/// ([`crate::workload::e2e::PlannedGraph::stage_nodes`] maps the stage
+/// count to the node prefix), which is exactly the prefix a memoized
+/// re-simulation ([`graph::execute_resuming`]) may skip.
+pub fn common_prefix_stages(a: &[StagePlan], b: &[StagePlan]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
 /// The per-node planner: one [`CostModel`] per `(machine, topology)`,
 /// reused across every stage decision and candidate.
 #[derive(Debug, Clone)]
 pub struct Planner {
     pub cost: CostModel,
+    /// Worker threads for the parallel candidate evaluation in
+    /// [`Planner::run_auto`] (`1` = fully inline). The result is
+    /// byte-identical at any width — this knob only trades wall clock.
+    pub threads: usize,
 }
 
 impl Planner {
@@ -194,7 +208,21 @@ impl Planner {
     pub fn new(m: &MachineConfig, topo: &Topology) -> Planner {
         Planner {
             cost: CostModel::new(m, topo),
+            // The candidate lineup tops out around eight graphs and two
+            // of them are simulated inline as recordings, so a handful
+            // of workers already saturates the fan-out.
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(4),
         }
+    }
+
+    /// Override the candidate-evaluation thread count (benchmarks pin
+    /// sequential vs parallel this way).
+    pub fn with_threads(mut self, threads: usize) -> Planner {
+        self.threads = threads.max(1);
+        self
     }
 
     fn m(&self) -> &MachineConfig {
@@ -383,6 +411,17 @@ impl Planner {
     /// candidate set stays self-contained and auditable, and the cost —
     /// a handful of sub-millisecond graph runs per e2e point — is noise
     /// next to the pairwise job matrix.
+    ///
+    /// Evaluation is prefix-memoized and parallel: all candidate graphs
+    /// are built first (sequentially — they share one wire-pricing
+    /// memo), the two family poles are simulated inline with prefix
+    /// checkpoints recorded, and every remaining candidate resumes from
+    /// the deepest checkpoint preceding its first planned deviation, on
+    /// a worker pool. Which checkpoint a candidate resumes from depends
+    /// only on the stamps — never on timing or thread schedule — and a
+    /// resumed timeline is bit-identical to a cold run, so the argmin
+    /// (first strictly-smaller total wins, in candidate order) produces
+    /// byte-identical output at any thread count.
     pub fn run_auto(
         &self,
         trace: &E2eTrace,
@@ -392,19 +431,59 @@ impl Planner {
         let topo = &self.cost.topo;
         let serial = serial_total(m, topo, trace);
 
+        // Build every graph up front: the builds share one pricing
+        // memo (collective wire time is the expensive derivation), and
+        // the simulations below only ever read the graphs.
+        let mut pricer = CommPricer::new();
+        let chain = build_serial_chain_with(m, topo, trace, &mut pricer)?;
+        let cands = self.candidates(trace, depth);
+        let built: Vec<PlannedGraph> = cands
+            .iter()
+            .map(|c| build_graph_planned_with(m, topo, trace, depth, &c.stages, &mut pricer))
+            .collect::<Result<_, _>>()?;
+
         // The "do not overlap" bound seeds the argmin.
-        let chain = build_serial_chain(m, topo, trace)?;
         let chain_run = graph::execute(m, topo, &chain)?;
+
+        // Simulate the two family poles (always candidates 0 and 1:
+        // cu-uniform and dma-hybrid) inline, recording prefix
+        // checkpoints — every other candidate is a per-stage deviation
+        // from one of them, so it can resume mid-timeline instead of
+        // replaying the shared prefix.
+        let n_rec = cands.len().min(2);
+        let mut timelines: Vec<graph::PrefixTimeline> = Vec::with_capacity(n_rec);
+        let mut runs: Vec<Option<graph::GraphRun>> = vec![None; cands.len()];
+        for i in 0..n_rec {
+            let (run, tl) = graph::execute_recording(m, topo, &built[i].graph)?;
+            runs[i] = Some(run);
+            timelines.push(tl);
+        }
+        let rest = pool::run_indexed(cands.len() - n_rec, self.threads, |j| {
+            let i = n_rec + j;
+            // Deepest shared prefix wins; ties resolve to the later
+            // recording — a fixed rule, so the pick is deterministic.
+            let (r, boundary) = (0..n_rec)
+                .map(|r| {
+                    let s = common_prefix_stages(&cands[r].stages, &cands[i].stages);
+                    (r, built[i].stage_nodes[s])
+                })
+                .max_by_key(|&(_, b)| b)
+                .unwrap_or((0, 0));
+            graph::execute_resuming(m, topo, &built[i].graph, &timelines[r], boundary)
+        });
+        for (j, r) in rest.into_iter().enumerate() {
+            runs[n_rec + j] = Some(r?);
+        }
+
         let chain_stages = family_stages(m, trace, E2eFamily::CuOverlap);
         let mut n_candidates = 1usize;
         let mut best: (graph::GraphRun, usize, &'static str, Vec<StagePlan>) =
             (chain_run, chain.nodes.len(), "serial-chain", chain_stages);
-        for cand in self.candidates(trace, depth) {
-            let g = build_graph_planned(m, topo, trace, depth, &cand.stages)?;
-            let run = graph::execute(m, topo, &g)?;
+        for (i, cand) in cands.into_iter().enumerate() {
+            let run = runs[i].take().expect("every candidate was simulated");
             n_candidates += 1;
             if run.total < best.0.total {
-                best = (run, g.nodes.len(), cand.name, cand.stages);
+                best = (run, built[i].graph.nodes.len(), cand.name, cand.stages);
             }
         }
         let (run, graph_nodes, name, stages) = best;

@@ -11,20 +11,40 @@
 //! earliest task completion / arrival / scheduled wake.
 //!
 //! This is a processor-sharing fluid approximation of the real node:
-//! O((tasks + resources) · events), deterministic, and accurate for the
-//! coarse-grained kernel overlap the paper studies (kernels run for
-//! milliseconds; interference is a bandwidth/occupancy phenomenon, not a
-//! cycle-level one).
+//! deterministic, and accurate for the coarse-grained kernel overlap the
+//! paper studies (kernels run for milliseconds; interference is a
+//! bandwidth/occupancy phenomenon, not a cycle-level one).
+//!
+//! # Data layout (hot path)
+//!
+//! The simulator is the innermost loop of the planner and the sweep, so
+//! per-task state is kept *data-oriented*:
+//!
+//! - Hot scalar fields (`remaining`, `caps`, `rates`, `arrival`) live in
+//!   parallel struct-of-arrays vectors, so the max-min filling rounds
+//!   and the horizon scan stream over dense `f64` lanes.
+//! - Demands live in one flat CSR-style arena (`dem_off`/`dem_res`/
+//!   `dem_amt`) — [`add_task`](Sim::add_task) copies a borrowed slice in,
+//!   so building a task allocates nothing per task beyond the arena tail.
+//! - Names are optional interned ids ([`Sim::intern`]); the event loop
+//!   never touches a `String`. Stall diagnostics ([`Blocker`]) are kept
+//!   as data and formatted lazily, only when an error is displayed.
+//! - The event loop maintains *incremental* task sets across events: a
+//!   `pending` set (not yet arrived) and an `active` set (started,
+//!   unfinished). Each event costs O(active + pending), not O(all
+//!   tasks), and rate recomputes only stream over `active`.
 //!
 //! The simulator itself knows nothing about GPUs: CU policies, launch
 //! latencies and interference penalties are applied by the caller (the
-//! C3 executor in `sched/`) between events via [`Sim::set_cap`] /
-//! [`Sim::set_demand`].
+//! workload-graph engine in `sched/`) between events via
+//! [`Sim::set_cap`] / [`Sim::set_demand`].
 
 /// Index of a resource registered with [`Sim::add_resource`].
 pub type ResourceId = usize;
 /// Index of a task registered with [`Sim::add_task`].
 pub type TaskId = usize;
+/// Interned diagnostic-name id (see [`Sim::intern`]).
+pub type NameId = u32;
 
 /// Tolerance for "work is finished" / "resource is saturated" decisions.
 const EPS: f64 = 1e-12;
@@ -37,30 +57,56 @@ pub struct Resource {
 }
 
 /// Specification of a fluid task.
-#[derive(Debug, Clone)]
-pub struct TaskSpec {
-    /// Diagnostic name.
-    pub name: String,
+///
+/// `Copy`: the demand list is borrowed, and [`Sim::add_task`] copies it
+/// into the simulator's flat demand arena — constructing and registering
+/// a task performs no per-task heap allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec<'d> {
+    /// Optional diagnostic name, interned via [`Sim::intern`]. Tasks
+    /// without one report as `task <id>` on the stall path; callers with
+    /// their own node tables can attach labels lazily through
+    /// [`Sim::stall_report_named`] instead.
+    pub name: Option<NameId>,
     /// Simulation time at which the task becomes runnable.
     pub arrival: f64,
     /// Total abstract work (normally 1.0 = "one kernel").
     pub work: f64,
     /// `(resource, units-per-unit-work)` demands. A task moving 64 GB
-    /// over HBM with work=1.0 demands `(hbm, 64e9)`.
-    pub demands: Vec<(ResourceId, f64)>,
+    /// over HBM with work=1.0 demands `(hbm, 64e9)`. Every resource the
+    /// task will ever demand must be declared here (a zero amount is
+    /// fine); [`Sim::set_demand`] updates entries in place.
+    pub demands: &'d [(ResourceId, f64)],
     /// Maximum progress rate in work-units/s (∞ allowed only if some
     /// demand bounds the task).
     pub cap: f64,
 }
 
-#[derive(Debug, Clone)]
-struct TaskState {
-    spec: TaskSpec,
-    remaining: f64,
-    cap: f64,
-    rate: f64,
-    started: Option<f64>,
-    finished: Option<f64>,
+/// Why a stalled task could not make progress. Kept as structured data;
+/// the human-readable string is built by `Display` only when an error is
+/// actually formatted (the hot path never constructs diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Blocker {
+    /// The task's arrival time was never reached.
+    NeverArrived { arrival: f64 },
+    /// The rate cap is zero: the task awaits a controller grant.
+    ZeroCap,
+    /// A demanded resource has (effectively) no capacity.
+    EmptyResource { resource: String },
+}
+
+impl std::fmt::Display for Blocker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Blocker::NeverArrived { arrival } => {
+                write!(f, "never arrived (arrival t={arrival:.3e})")
+            }
+            Blocker::ZeroCap => write!(f, "rate cap is zero (awaiting a controller grant)"),
+            Blocker::EmptyResource { resource } => {
+                write!(f, "resource '{resource}' has no capacity")
+            }
+        }
+    }
 }
 
 /// One task that could not make progress when a simulation stalled:
@@ -68,15 +114,15 @@ struct TaskState {
 #[derive(Debug, Clone, PartialEq)]
 pub struct StalledTask {
     pub task: TaskId,
-    /// Diagnostic name from the task spec.
+    /// Diagnostic name (resolved from the interner or a caller-supplied
+    /// label table when the report is built — i.e. on the error path).
     pub name: String,
     /// Remaining work fraction (1 = untouched).
     pub remaining_frac: f64,
     /// The rate cap the controller last granted.
     pub cap: f64,
-    /// Human-readable blockers: a zero cap awaiting a controller grant,
-    /// or the saturated resources the task demands.
-    pub blockers: Vec<String>,
+    /// Structured blockers; `Display` renders them human-readable.
+    pub blockers: Vec<Blocker>,
 }
 
 /// A simulation stalled: active tasks remained with zero progress rate
@@ -101,17 +147,23 @@ impl std::fmt::Display for StallError {
         for t in &self.stalled {
             write!(
                 f,
-                " [task {} '{}': {:.1}% remaining, cap {:.3e}, blocked by: {}]",
+                " [task {} '{}': {:.1}% remaining, cap {:.3e}, blocked by: ",
                 t.task,
                 t.name,
                 t.remaining_frac * 100.0,
                 t.cap,
-                if t.blockers.is_empty() {
-                    "unknown".to_string()
-                } else {
-                    t.blockers.join(", ")
-                }
             )?;
+            if t.blockers.is_empty() {
+                write!(f, "unknown")?;
+            } else {
+                for (k, b) in t.blockers.iter().enumerate() {
+                    if k > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{b}")?;
+                }
+            }
+            write!(f, "]")?;
         }
         Ok(())
     }
@@ -132,18 +184,46 @@ pub enum Event {
     Idle,
 }
 
-/// The fluid simulator. See module docs.
+/// The fluid simulator. See module docs for the data layout.
+///
+/// `Clone` is cheap-ish (a handful of flat vectors) and is what makes
+/// checkpoint/resume of a simulation possible — the workload-graph
+/// engine snapshots `Sim` mid-run to memoize shared timeline prefixes
+/// across planner candidates.
 #[derive(Debug, Clone)]
 pub struct Sim {
     time: f64,
     resources: Vec<Resource>,
-    tasks: Vec<TaskState>,
+    // ---- per-task state (struct-of-arrays; indexed by TaskId) ----
+    names: Vec<Option<NameId>>,
+    arrival: Vec<f64>,
+    work: Vec<f64>,
+    remaining: Vec<f64>,
+    caps: Vec<f64>,
+    rates: Vec<f64>,
+    started: Vec<Option<f64>>,
+    finished: Vec<Option<f64>>,
+    // ---- flat CSR demand arena: task i's demands are
+    //      (dem_res, dem_amt)[dem_off[i] .. dem_off[i+1]] ----
+    dem_off: Vec<u32>,
+    dem_res: Vec<u32>,
+    dem_amt: Vec<f64>,
+    // ---- incremental event-loop sets ----
+    /// Tasks not yet started (unsorted; scanned, |pending| ≤ n and
+    /// usually ~0 after warm-up).
+    pending: Vec<TaskId>,
+    /// Tasks started and unfinished (unsorted; all selections pick an
+    /// explicit minimum id, so the order carries no semantics).
+    active: Vec<TaskId>,
     wakes: Vec<f64>,
     rates_dirty: bool,
-    // Scratch buffers reused across events (hot path: no allocation).
+    // ---- diagnostics (cold path only) ----
+    name_table: Vec<String>,
+    // ---- scratch buffers reused across events (no allocation) ----
     scratch_frozen: Vec<bool>,
     scratch_load: Vec<f64>,
     scratch_slack: Vec<f64>,
+    scratch_touched: Vec<ResourceId>,
 }
 
 impl Sim {
@@ -152,12 +232,26 @@ impl Sim {
         Sim {
             time: 0.0,
             resources: Vec::new(),
-            tasks: Vec::new(),
+            names: Vec::new(),
+            arrival: Vec::new(),
+            work: Vec::new(),
+            remaining: Vec::new(),
+            caps: Vec::new(),
+            rates: Vec::new(),
+            started: Vec::new(),
+            finished: Vec::new(),
+            dem_off: vec![0],
+            dem_res: Vec::new(),
+            dem_amt: Vec::new(),
+            pending: Vec::new(),
+            active: Vec::new(),
             wakes: Vec::new(),
             rates_dirty: true,
+            name_table: Vec::new(),
             scratch_frozen: Vec::new(),
             scratch_load: Vec::new(),
             scratch_slack: Vec::new(),
+            scratch_touched: Vec::new(),
         }
     }
 
@@ -173,60 +267,119 @@ impl Sim {
         self.resources.len() - 1
     }
 
+    /// Intern a diagnostic name for use in [`TaskSpec::name`]. Idempotent
+    /// (the same string returns the same id). Cold path: names are only
+    /// ever read when a stall report is built.
+    pub fn intern(&mut self, name: &str) -> NameId {
+        if let Some(pos) = self.name_table.iter().position(|n| n == name) {
+            return pos as NameId;
+        }
+        self.name_table.push(name.to_string());
+        (self.name_table.len() - 1) as NameId
+    }
+
     /// Register a task; it arrives at `spec.arrival` (may be in the past,
     /// i.e. ≤ current time, in which case it is runnable immediately).
-    pub fn add_task(&mut self, spec: TaskSpec) -> TaskId {
+    pub fn add_task(&mut self, spec: TaskSpec<'_>) -> TaskId {
         assert!(spec.work >= 0.0, "negative work");
         assert!(spec.cap >= 0.0, "negative cap");
-        for &(rid, amt) in &spec.demands {
+        for &(rid, amt) in spec.demands {
             assert!(rid < self.resources.len(), "unknown resource {rid}");
             assert!(amt >= 0.0, "negative demand");
         }
-        let cap = spec.cap;
-        let remaining = spec.work;
-        self.tasks.push(TaskState {
-            spec,
-            remaining,
-            cap,
-            rate: 0.0,
-            started: None,
-            finished: None,
-        });
+        if let Some(n) = spec.name {
+            assert!((n as usize) < self.name_table.len(), "unknown name id {n}");
+        }
+        let id = self.names.len();
+        self.names.push(spec.name);
+        self.arrival.push(spec.arrival);
+        self.work.push(spec.work);
+        self.remaining.push(spec.work);
+        self.caps.push(spec.cap);
+        self.rates.push(0.0);
+        self.started.push(None);
+        self.finished.push(None);
+        for &(rid, amt) in spec.demands {
+            self.dem_res.push(rid as u32);
+            self.dem_amt.push(amt);
+        }
+        self.dem_off.push(self.dem_res.len() as u32);
         self.scratch_frozen.push(false);
+        self.pending.push(id);
         self.rates_dirty = true;
-        self.tasks.len() - 1
+        id
+    }
+
+    /// Number of tasks registered so far (task ids are `0..num_tasks()`).
+    pub fn num_tasks(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Drop every task with id ≥ `keep`, as if they had never been
+    /// added. Used by the graph engine to resume a cloned mid-run
+    /// snapshot under a different graph suffix: the shared prefix keeps
+    /// its state, the suffix is re-added. Scheduled wakes are untouched
+    /// (they are the caller's to manage). Panics if any task < `keep`
+    /// would be orphaned (ids are dense, so truncation is exact).
+    pub fn truncate_tasks(&mut self, keep: usize) {
+        assert!(keep <= self.names.len(), "truncate beyond task count");
+        self.names.truncate(keep);
+        self.arrival.truncate(keep);
+        self.work.truncate(keep);
+        self.remaining.truncate(keep);
+        self.caps.truncate(keep);
+        self.rates.truncate(keep);
+        self.started.truncate(keep);
+        self.finished.truncate(keep);
+        let tail = self.dem_off[keep] as usize;
+        self.dem_res.truncate(tail);
+        self.dem_amt.truncate(tail);
+        self.dem_off.truncate(keep + 1);
+        self.scratch_frozen.truncate(keep);
+        self.pending.retain(|&i| i < keep);
+        self.active.retain(|&i| i < keep);
+        self.rates_dirty = true;
     }
 
     /// Change a task's rate cap (e.g. its CU allocation changed).
     /// No-op (and no rate recomputation) when the cap is unchanged —
-    /// the C3 executor calls this on every event.
+    /// the graph engine calls this on every event.
     pub fn set_cap(&mut self, tid: TaskId, cap: f64) {
         assert!(cap >= 0.0);
-        if self.tasks[tid].cap == cap {
+        if self.caps[tid] == cap {
             return;
         }
-        self.tasks[tid].cap = cap;
+        self.caps[tid] = cap;
         self.rates_dirty = true;
     }
 
     /// Current rate cap of a task.
     pub fn cap(&self, tid: TaskId) -> f64 {
-        self.tasks[tid].cap
+        self.caps[tid]
     }
 
-    /// Replace a task's demand on one resource (per unit work).
+    /// Update a task's demand on one resource (per unit work). The
+    /// resource must have been declared in the task's [`TaskSpec`]
+    /// (a zero amount there is fine); updating an undeclared resource
+    /// to a non-zero demand panics, and to zero is a no-op.
     pub fn set_demand(&mut self, tid: TaskId, rid: ResourceId, per_work: f64) {
         assert!(per_work >= 0.0);
-        let t = &mut self.tasks[tid];
-        if let Some(d) = t.spec.demands.iter_mut().find(|(r, _)| *r == rid) {
-            if d.1 == per_work {
-                return; // unchanged: keep current rates valid
+        let lo = self.dem_off[tid] as usize;
+        let hi = self.dem_off[tid + 1] as usize;
+        for d in lo..hi {
+            if self.dem_res[d] as usize == rid {
+                if self.dem_amt[d] != per_work {
+                    self.dem_amt[d] = per_work;
+                    self.rates_dirty = true;
+                }
+                return;
             }
-            d.1 = per_work;
-        } else {
-            t.spec.demands.push((rid, per_work));
         }
-        self.rates_dirty = true;
+        assert!(
+            per_work == 0.0,
+            "set_demand: task {tid} never declared resource {rid}; \
+             declare a zero demand in its TaskSpec"
+        );
     }
 
     /// Schedule a wake event (control point) at absolute time `t`.
@@ -242,55 +395,47 @@ impl Sim {
 
     /// Remaining work fraction of a task (1 = untouched, 0 = done).
     pub fn remaining_frac(&self, tid: TaskId) -> f64 {
-        let t = &self.tasks[tid];
-        if t.spec.work <= 0.0 {
+        if self.work[tid] <= 0.0 {
             0.0
         } else {
-            t.remaining / t.spec.work
+            self.remaining[tid] / self.work[tid]
         }
     }
 
     /// Completion time, if the task has finished.
     pub fn finish_time(&self, tid: TaskId) -> Option<f64> {
-        self.tasks[tid].finished
+        self.finished[tid]
     }
 
     /// Start (arrival-activation) time, if the task has become runnable.
     pub fn start_time(&self, tid: TaskId) -> Option<f64> {
-        self.tasks[tid].started
+        self.started[tid]
     }
 
     /// Is the task active (arrived, unfinished)?
     pub fn is_active(&self, tid: TaskId) -> bool {
-        let t = &self.tasks[tid];
-        t.started.is_some() && t.finished.is_none()
+        self.started[tid].is_some() && self.finished[tid].is_none()
     }
 
     /// Current progress rate of a task (work-units/s) under the last
     /// computed allocation.
     pub fn rate(&self, tid: TaskId) -> f64 {
-        self.tasks[tid].rate
+        self.rates[tid]
     }
 
     fn recompute_rates(&mut self) {
-        // Max-min fair progressive filling over active tasks.
-        let n = self.tasks.len();
-        for f in self.scratch_frozen.iter_mut() {
-            *f = true;
-        }
+        // Max-min fair progressive filling over the active set. Rates of
+        // non-active tasks are maintained at 0 by the event loop
+        // (completion/truncation zero them; pending tasks start at 0).
+        self.rates_dirty = false;
         let mut any = false;
-        for i in 0..n {
-            let t = &mut self.tasks[i];
-            t.rate = 0.0;
-            let active =
-                t.finished.is_none() && t.spec.arrival <= self.time + EPS && t.remaining > EPS;
-            if active && t.cap > EPS {
-                self.scratch_frozen[i] = false;
-                any = true;
-            }
+        for &i in &self.active {
+            self.rates[i] = 0.0;
+            let participates = self.remaining[i] > EPS && self.caps[i] > EPS;
+            self.scratch_frozen[i] = !participates;
+            any |= participates;
         }
         if !any {
-            self.rates_dirty = false;
             return;
         }
         // Remaining slack per resource.
@@ -298,29 +443,41 @@ impl Sim {
             *s = r.capacity;
         }
         // Progressive filling: raise all unfrozen rates uniformly until a
-        // cap or a resource saturates; iterate.
-        for _round in 0..(n + self.resources.len() + 1) {
-            // Load per resource from unfrozen tasks.
-            for l in self.scratch_load.iter_mut() {
-                *l = 0.0;
+        // cap or a resource saturates; iterate. Each round either freezes
+        // a task or exhausts the unfrozen set, so the bound is loose.
+        for _round in 0..(self.active.len() + self.resources.len() + 1) {
+            // Load per resource from unfrozen tasks; `scratch_touched`
+            // tracks exactly the resources demanded this round so the
+            // delta/saturation checks never sweep untouched resources.
+            for &rid in &self.scratch_touched {
+                self.scratch_load[rid] = 0.0;
             }
+            self.scratch_touched.clear();
             let mut delta = f64::INFINITY;
             let mut any_unfrozen = false;
-            for i in 0..n {
+            for &i in &self.active {
                 if self.scratch_frozen[i] {
                     continue;
                 }
                 any_unfrozen = true;
-                let t = &self.tasks[i];
-                delta = delta.min(t.cap - t.rate);
-                for &(rid, amt) in &t.spec.demands {
+                delta = delta.min(self.caps[i] - self.rates[i]);
+                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                for d in lo..hi {
+                    let amt = self.dem_amt[d];
+                    if amt <= 0.0 {
+                        continue;
+                    }
+                    let rid = self.dem_res[d] as usize;
+                    if self.scratch_load[rid] == 0.0 {
+                        self.scratch_touched.push(rid);
+                    }
                     self.scratch_load[rid] += amt;
                 }
             }
             if !any_unfrozen {
                 break;
             }
-            for rid in 0..self.resources.len() {
+            for &rid in &self.scratch_touched {
                 if self.scratch_load[rid] > EPS {
                     delta = delta.min(self.scratch_slack[rid] / self.scratch_load[rid]);
                 }
@@ -328,33 +485,33 @@ impl Sim {
             debug_assert!(delta.is_finite(), "unbounded task rate: add a cap");
             let delta = delta.max(0.0);
             // Apply the uniform raise and consume slack.
-            for i in 0..n {
+            for &i in &self.active {
                 if self.scratch_frozen[i] {
                     continue;
                 }
-                self.tasks[i].rate += delta;
-                for &(rid, amt) in &self.tasks[i].spec.demands {
-                    self.scratch_slack[rid] -= amt * delta;
+                self.rates[i] += delta;
+                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                for d in lo..hi {
+                    self.scratch_slack[self.dem_res[d] as usize] -= self.dem_amt[d] * delta;
                 }
             }
             // Freeze tasks at cap or touching a saturated resource.
-            for i in 0..n {
+            for &i in &self.active {
                 if self.scratch_frozen[i] {
                     continue;
                 }
-                let t = &self.tasks[i];
-                let at_cap = t.rate >= t.cap - EPS * t.cap.max(1.0);
-                let saturated = t
-                    .spec
-                    .demands
-                    .iter()
-                    .any(|&(rid, amt)| amt > EPS && self.scratch_slack[rid] <= EPS * self.resources[rid].capacity);
+                let at_cap = self.rates[i] >= self.caps[i] - EPS * self.caps[i].max(1.0);
+                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                let saturated = (lo..hi).any(|d| {
+                    let rid = self.dem_res[d] as usize;
+                    self.dem_amt[d] > EPS
+                        && self.scratch_slack[rid] <= EPS * self.resources[rid].capacity
+                });
                 if at_cap || saturated {
                     self.scratch_frozen[i] = true;
                 }
             }
         }
-        self.rates_dirty = false;
     }
 
     /// Advance to the next event and return it. Between calls the caller
@@ -362,62 +519,73 @@ impl Sim {
     pub fn next_event(&mut self) -> Event {
         // Zero-time events first: tasks that already drained their work
         // (e.g. simultaneous completions after the last integration).
-        for i in 0..self.tasks.len() {
-            let t = &mut self.tasks[i];
-            if t.started.is_some() && t.finished.is_none() && t.remaining <= EPS {
-                t.remaining = 0.0;
-                t.finished = Some(self.time);
-                self.rates_dirty = true;
-                return Event::Completion(i);
+        // Lowest id first, matching the pre-SoA full scan.
+        let mut done: Option<usize> = None;
+        for (pos, &i) in self.active.iter().enumerate() {
+            if self.remaining[i] <= EPS && done.is_none_or(|p| i < self.active[p]) {
+                done = Some(pos);
             }
         }
-        // Then activate arrivals that are due *now*.
-        for i in 0..self.tasks.len() {
-            let t = &mut self.tasks[i];
-            if t.started.is_none() && t.finished.is_none() && t.spec.arrival <= self.time + EPS {
-                t.started = Some(self.time.max(t.spec.arrival));
-                self.rates_dirty = true;
-                // Zero-work tasks complete instantly.
-                if t.remaining <= EPS {
-                    t.finished = Some(self.time);
-                    return Event::Completion(i);
-                }
-                return Event::Arrival(i);
+        if let Some(pos) = done {
+            let i = self.active.swap_remove(pos);
+            self.remaining[i] = 0.0;
+            self.rates[i] = 0.0;
+            self.finished[i] = Some(self.time);
+            self.rates_dirty = true;
+            return Event::Completion(i);
+        }
+        // Then activate arrivals that are due *now*, lowest id first.
+        let mut due: Option<usize> = None;
+        for (pos, &i) in self.pending.iter().enumerate() {
+            if self.arrival[i] <= self.time + EPS && due.is_none_or(|p| i < self.pending[p]) {
+                due = Some(pos);
             }
+        }
+        if let Some(pos) = due {
+            let i = self.pending.swap_remove(pos);
+            self.started[i] = Some(self.time.max(self.arrival[i]));
+            self.rates_dirty = true;
+            // Zero-work tasks complete instantly.
+            if self.remaining[i] <= EPS {
+                self.finished[i] = Some(self.time);
+                return Event::Completion(i);
+            }
+            self.active.push(i);
+            return Event::Arrival(i);
         }
         if self.rates_dirty {
             self.recompute_rates();
         }
-        // Horizon candidates: completions, future arrivals, wakes.
-        let mut horizon = f64::INFINITY;
-        enum Kind {
-            None,
-            Completion(TaskId),
-            FutureArrival,
-            Wake(usize),
-        }
-        let mut kind = Kind::None;
-        for (i, t) in self.tasks.iter().enumerate() {
-            if t.finished.is_some() {
-                continue;
-            }
-            if t.started.is_some() {
-                if t.rate > EPS {
-                    let dt = t.remaining / t.rate;
-                    if self.time + dt < horizon {
-                        horizon = self.time + dt;
-                        kind = Kind::Completion(i);
-                    }
+        // Horizon candidates: completions, future arrivals, wakes. Task
+        // ties resolve to the lowest id (the pre-SoA scan order); a wake
+        // fires only if strictly earlier than every task event.
+        let mut best_t = f64::INFINITY;
+        let mut best_task = usize::MAX;
+        let mut best_is_completion = false;
+        for &i in &self.active {
+            if self.rates[i] > EPS {
+                let t = self.time + self.remaining[i] / self.rates[i];
+                if t < best_t || (t == best_t && i < best_task) {
+                    best_t = t;
+                    best_task = i;
+                    best_is_completion = true;
                 }
-            } else if t.spec.arrival < horizon {
-                horizon = t.spec.arrival;
-                kind = Kind::FutureArrival;
             }
         }
-        for (wi, &w) in self.wakes.iter().enumerate() {
+        for &i in &self.pending {
+            let a = self.arrival[i];
+            if a < best_t || (a == best_t && i < best_task) {
+                best_t = a;
+                best_task = i;
+                best_is_completion = false;
+            }
+        }
+        let mut horizon = best_t;
+        let mut wake_pos: Option<usize> = None;
+        for (pos, &w) in self.wakes.iter().enumerate() {
             if w < horizon {
                 horizon = w;
-                kind = Kind::Wake(wi);
+                wake_pos = Some(pos);
             }
         }
         if !horizon.is_finite() {
@@ -429,58 +597,83 @@ impl Sim {
         // Integrate progress to the horizon.
         let dt = horizon - self.time;
         if dt > 0.0 {
-            for t in self.tasks.iter_mut() {
-                if t.started.is_some() && t.finished.is_none() && t.rate > 0.0 {
-                    t.remaining = (t.remaining - t.rate * dt).max(0.0);
+            for &i in &self.active {
+                if self.rates[i] > 0.0 {
+                    self.remaining[i] = (self.remaining[i] - self.rates[i] * dt).max(0.0);
                 }
             }
             self.time = horizon;
         }
-        match kind {
-            Kind::Completion(i) => {
-                self.tasks[i].remaining = 0.0;
-                self.tasks[i].finished = Some(self.time);
-                self.rates_dirty = true;
-                Event::Completion(i)
-            }
-            Kind::Wake(wi) => {
-                self.wakes.swap_remove(wi);
-                self.rates_dirty = true;
-                Event::Wake(self.time)
-            }
-            Kind::FutureArrival => {
-                // Loop back through arrival activation at the new time.
-                self.next_event()
-            }
-            Kind::None => Event::Idle,
+        if let Some(pos) = wake_pos {
+            self.wakes.swap_remove(pos);
+            self.rates_dirty = true;
+            return Event::Wake(self.time);
         }
+        if best_task != usize::MAX {
+            if best_is_completion {
+                let pos = self
+                    .active
+                    .iter()
+                    .position(|&i| i == best_task)
+                    .expect("completing task is active");
+                self.active.swap_remove(pos);
+                self.remaining[best_task] = 0.0;
+                self.rates[best_task] = 0.0;
+                self.finished[best_task] = Some(self.time);
+                self.rates_dirty = true;
+                return Event::Completion(best_task);
+            }
+            // Future arrival: loop back through activation at the new time.
+            return self.next_event();
+        }
+        Event::Idle
     }
 
     /// Diagnose why unfinished tasks cannot progress right now. Used to
-    /// build [`StallError`]s; empty when every task has finished.
+    /// build [`StallError`]s; empty when every task has finished. Names
+    /// resolve from the interner, or to `task <id>`.
     pub fn stall_report(&self) -> Vec<StalledTask> {
+        self.stall_report_named(|_| None)
+    }
+
+    /// Like [`stall_report`](Sim::stall_report), but lets the caller
+    /// attach its own label per task (e.g. the graph engine's node
+    /// labels); `None` falls back to the interned name / `task <id>`.
+    pub fn stall_report_named<F>(&self, resolve: F) -> Vec<StalledTask>
+    where
+        F: Fn(TaskId) -> Option<String>,
+    {
         let mut out = Vec::new();
-        for (i, t) in self.tasks.iter().enumerate() {
-            if t.finished.is_some() {
+        for i in 0..self.num_tasks() {
+            if self.finished[i].is_some() {
                 continue;
             }
             let mut blockers = Vec::new();
-            if t.started.is_none() {
-                blockers.push(format!("never arrived (arrival t={:.3e})", t.spec.arrival));
+            if self.started[i].is_none() {
+                blockers.push(Blocker::NeverArrived {
+                    arrival: self.arrival[i],
+                });
             }
-            if t.cap <= EPS {
-                blockers.push("rate cap is zero (awaiting a controller grant)".to_string());
+            if self.caps[i] <= EPS {
+                blockers.push(Blocker::ZeroCap);
             }
-            for &(rid, amt) in &t.spec.demands {
-                if amt > EPS && self.resources[rid].capacity <= EPS {
-                    blockers.push(format!("resource '{}' has no capacity", self.resources[rid].name));
+            let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+            for d in lo..hi {
+                let rid = self.dem_res[d] as usize;
+                if self.dem_amt[d] > EPS && self.resources[rid].capacity <= EPS {
+                    blockers.push(Blocker::EmptyResource {
+                        resource: self.resources[rid].name.clone(),
+                    });
                 }
             }
+            let name = resolve(i)
+                .or_else(|| self.names[i].map(|n| self.name_table[n as usize].clone()))
+                .unwrap_or_else(|| format!("task {i}"));
             out.push(StalledTask {
                 task: i,
-                name: t.spec.name.clone(),
+                name,
                 remaining_frac: self.remaining_frac(i),
-                cap: t.cap,
+                cap: self.caps[i],
                 blockers,
             });
         }
@@ -498,9 +691,9 @@ impl Sim {
                 _ => continue,
             }
         }
-        let mut fins = Vec::with_capacity(self.tasks.len());
-        for t in &self.tasks {
-            match t.finished {
+        let mut fins = Vec::with_capacity(self.num_tasks());
+        for i in 0..self.num_tasks() {
+            match self.finished[i] {
                 Some(f) => fins.push(f),
                 None => {
                     return Err(StallError {
@@ -525,14 +718,22 @@ mod tests {
     use super::*;
     use crate::assert_rel_close;
 
-    fn task(name: &str, arrival: f64, work: f64, demands: Vec<(ResourceId, f64)>, cap: f64) -> TaskSpec {
-        TaskSpec {
-            name: name.into(),
+    fn add(
+        sim: &mut Sim,
+        name: &str,
+        arrival: f64,
+        work: f64,
+        demands: &[(ResourceId, f64)],
+        cap: f64,
+    ) -> TaskId {
+        let name = Some(sim.intern(name));
+        sim.add_task(TaskSpec {
+            name,
             arrival,
             work,
             demands,
             cap,
-        }
+        })
     }
 
     #[test]
@@ -540,7 +741,7 @@ mod tests {
         let mut sim = Sim::new();
         let _r = sim.add_resource("hbm", 100.0);
         // work 1, cap 0.5/s, demand far under capacity -> 2 s.
-        let t = sim.add_task(task("a", 0.0, 1.0, vec![(0, 10.0)], 0.5));
+        let t = add(&mut sim, "a", 0.0, 1.0, &[(0, 10.0)], 0.5);
         let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 2.0, 1e-9);
     }
@@ -550,8 +751,7 @@ mod tests {
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
         // demand 100 units/work at capacity 10/s -> rate 0.1 -> 10 s.
-        let t = sim.add_task(task("a", 0.0, 1.0, vec![(r, 100.0)], f64::INFINITY.min(1e18)));
-        sim.set_cap(t, 1e18);
+        let t = add(&mut sim, "a", 0.0, 1.0, &[(r, 100.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 10.0, 1e-9);
     }
@@ -561,8 +761,8 @@ mod tests {
         // Two identical tasks on one resource: each gets half.
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let a = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         // Alone each would take 1 s; sharing, both take 2 s.
         assert_rel_close!(fins[a], 2.0, 1e-9);
@@ -575,8 +775,8 @@ mod tests {
         // the remaining 8 -> rate 0.8.
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 0.2));
-        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let a = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 0.2);
+        let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[b], 1.25, 1e-9); // 1 / 0.8
         assert_rel_close!(fins[a], 5.0, 1e-9); // cap-bound throughout
@@ -587,8 +787,8 @@ mod tests {
         // a: work 0.5 shared phase; after a completes, b speeds up.
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let a = sim.add_task(task("a", 0.0, 0.5, vec![(r, 10.0)], 1e18));
-        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 1e18));
+        let a = add(&mut sim, "a", 0.0, 0.5, &[(r, 10.0)], 1e18);
+        let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         // Shared at rate .5 each until t=1 (a done: progress .5 each);
         // then b alone at rate 1: remaining .5 -> t=1.5.
@@ -600,8 +800,8 @@ mod tests {
     fn late_arrival_slows_first_task() {
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let b = sim.add_task(task("b", 0.5, 1.0, vec![(r, 10.0)], 1e18));
+        let a = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        let b = add(&mut sim, "b", 0.5, 1.0, &[(r, 10.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         // a alone until .5 (progress .5), then shared .5 rate: remaining
         // .5 at rate .5 -> a ends at 1.5. b: work 1 at .5 until a ends
@@ -615,13 +815,7 @@ mod tests {
         let mut sim = Sim::new();
         let fast = sim.add_resource("fast", 100.0);
         let slow = sim.add_resource("slow", 1.0);
-        let t = sim.add_task(task(
-            "a",
-            0.0,
-            1.0,
-            vec![(fast, 10.0), (slow, 2.0)],
-            1e18,
-        ));
+        let t = add(&mut sim, "a", 0.0, 1.0, &[(fast, 10.0), (slow, 2.0)], 1e18);
         let fins = sim.run_to_completion().unwrap();
         // slow allows rate 0.5; fast allows 10 -> 2 s.
         assert_rel_close!(fins[t], 2.0, 1e-9);
@@ -631,7 +825,7 @@ mod tests {
     fn wake_allows_mid_flight_cap_change() {
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let t = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 0.25));
+        let t = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 0.25);
         sim.schedule_wake(2.0);
         // Drive manually: first event is the arrival, then the wake.
         assert_eq!(sim.next_event(), Event::Arrival(t));
@@ -649,8 +843,8 @@ mod tests {
     fn zero_cap_task_waits_for_controller() {
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let a = sim.add_task(task("a", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let b = sim.add_task(task("b", 0.0, 1.0, vec![(r, 10.0)], 0.0));
+        let a = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 0.0);
         assert_eq!(sim.next_event(), Event::Arrival(a));
         assert_eq!(sim.next_event(), Event::Arrival(b));
         // b is starved (cap 0): a completes alone at t=1.
@@ -672,9 +866,40 @@ mod tests {
     fn zero_work_task_completes_at_arrival() {
         let mut sim = Sim::new();
         sim.add_resource("hbm", 1.0);
-        let t = sim.add_task(task("z", 3.0, 0.0, vec![], 1.0));
+        let t = add(&mut sim, "z", 3.0, 0.0, &[], 1.0);
         let fins = sim.run_to_completion().unwrap();
         assert_rel_close!(fins[t], 3.0, 1e-9);
+    }
+
+    #[test]
+    fn truncate_tasks_forgets_the_suffix_exactly() {
+        // Drive a 2-task sim past the first completion, truncate the
+        // second task away, re-add an identical one: the rerun must
+        // finish at the same time as an untruncated clone.
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let _a = add(&mut sim, "a", 0.0, 0.5, &[(r, 10.0)], 1e18);
+        let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        // a arrives, b arrives, a completes at t=1.
+        sim.next_event();
+        sim.next_event();
+        match sim.next_event() {
+            Event::Completion(tid) => assert_eq!(tid, 0),
+            e => panic!("{e:?}"),
+        }
+        let mut twin = sim.clone();
+        sim.truncate_tasks(1);
+        assert_eq!(sim.num_tasks(), 1);
+        let b2 = add(&mut sim, "b2", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        assert_eq!(b2, b);
+        // The re-added task restarts from full work, while the twin kept
+        // b's progress: both finish times follow from first principles.
+        let fins = sim.run_to_completion().unwrap();
+        // b2 activates at t=1 with work 1 alone at rate 1 -> t=2.
+        assert_rel_close!(fins[b2], 2.0, 1e-9);
+        let twin_fins = twin.run_to_completion().unwrap();
+        // twin's b had 0.5 progress at t=1 -> finishes at 1.5.
+        assert_rel_close!(twin_fins[b], 1.5, 1e-9);
     }
 
     #[test]
@@ -683,17 +908,35 @@ mod tests {
         // the task, its blocker, and the stall time.
         let mut sim = Sim::new();
         let r = sim.add_resource("hbm", 10.0);
-        let _a = sim.add_task(task("runs", 0.0, 1.0, vec![(r, 10.0)], 1e18));
-        let _b = sim.add_task(task("starved", 0.0, 1.0, vec![(r, 10.0)], 0.0));
+        let _a = add(&mut sim, "runs", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        let _b = add(&mut sim, "starved", 0.0, 1.0, &[(r, 10.0)], 0.0);
         let err = sim.run_to_completion().unwrap_err();
         assert_rel_close!(err.at, 1.0, 1e-9); // 'runs' finished at t=1
         assert_eq!(err.stalled.len(), 1);
         let s = &err.stalled[0];
         assert_eq!(s.name, "starved");
         assert!(s.remaining_frac > 0.99);
-        assert!(s.blockers.iter().any(|b| b.contains("cap is zero")));
+        assert!(s.blockers.contains(&Blocker::ZeroCap));
         let msg = err.to_string();
         assert!(msg.contains("starved") && msg.contains("stalled"), "{msg}");
+        assert!(msg.contains("cap is zero"), "{msg}");
+    }
+
+    #[test]
+    fn stall_report_named_prefers_caller_labels() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("hbm", 10.0);
+        let _b = sim.add_task(TaskSpec {
+            name: None,
+            arrival: 0.0,
+            work: 1.0,
+            demands: &[(r, 10.0)],
+            cap: 0.0,
+        });
+        let anon = sim.stall_report();
+        assert_eq!(anon[0].name, "task 0");
+        let named = sim.stall_report_named(|i| Some(format!("node:{i}")));
+        assert_eq!(named[0].name, "node:0");
     }
 
     #[test]
@@ -710,14 +953,16 @@ mod tests {
             let r = sim.add_resource("r", cap_r);
             for i in 0..n {
                 sim.add_task(TaskSpec {
-                    name: format!("t{i}"),
+                    name: None,
                     arrival: 0.0,
                     work: 1.0,
-                    demands: vec![(r, dscale * (i + 1) as f64)],
+                    demands: &[(r, dscale * (i + 1) as f64)],
                     cap: 1e18,
                 });
             }
-            sim.next_event(); // activate at least one
+            for _ in 0..n {
+                sim.next_event(); // n arrival activations
+            }
             while sim.rates_dirty {
                 sim.recompute_rates();
             }
@@ -740,12 +985,12 @@ mod tests {
         forall("work conservation", 40, |rng| rng.i64_in(1, 8) as u64).check(|&n| {
             let mut sim = Sim::new();
             let r = sim.add_resource("r", 10.0);
-            for i in 0..n {
+            for _ in 0..n {
                 sim.add_task(TaskSpec {
-                    name: format!("t{i}"),
+                    name: None,
                     arrival: 0.0,
                     work: 1.0,
-                    demands: vec![(r, 10.0)],
+                    demands: &[(r, 10.0)],
                     cap: 1e18,
                 });
             }

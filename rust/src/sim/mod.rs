@@ -7,4 +7,6 @@
 
 pub mod fluid;
 
-pub use fluid::{Event, Resource, ResourceId, Sim, StallError, StalledTask, TaskId, TaskSpec};
+pub use fluid::{
+    Blocker, Event, NameId, Resource, ResourceId, Sim, StallError, StalledTask, TaskId, TaskSpec,
+};

@@ -9,13 +9,11 @@
 //! * A job that fails (unknown input, stalled simulation) records a
 //!   typed [`Error`] in its slot; the rest of the sweep proceeds.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use crate::config::machine::MachineConfig;
 use crate::coordinator::runner::{measure_run, Measured, RunnerConfig, ScenarioOutcome};
 use crate::error::Error;
 use crate::sched::{Baselines, C3Executor, C3Run, PlanSummary, Planner, Strategy, StrategyKind};
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::workload::e2e::{run_e2e_planned_with, E2eFamily, E2eRun};
 use crate::workload::scenarios::ResolvedScenario;
@@ -106,33 +104,12 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
         .collect();
     let req_threads = if threads == 0 { default_threads() } else { threads };
     let n_threads = req_threads.min(jobs.len()).max(1);
-    let outputs = if n_threads <= 1 {
-        jobs.iter()
-            .map(|j| run_job(&plan, &execs, &baselines, j))
-            .collect()
-    } else {
-        let next = AtomicUsize::new(0);
-        let collected: Mutex<Vec<JobOutput>> = Mutex::new(Vec::with_capacity(jobs.len()));
-        std::thread::scope(|s| {
-            for _ in 0..n_threads {
-                let _worker = s.spawn(|| {
-                    // Work-stealing by shared counter: each worker takes
-                    // the next unclaimed job until the matrix drains.
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= jobs.len() {
-                            break;
-                        }
-                        let out = run_job(&plan, &execs, &baselines, &jobs[i]);
-                        collected.lock().unwrap().push(out);
-                    }
-                });
-            }
-        });
-        let mut v = collected.into_inner().unwrap();
-        v.sort_by_key(|o| o.job.id);
-        v
-    };
+    // Work-stealing by shared counter (each worker takes the next
+    // unclaimed job until the matrix drains), outputs reassembled in
+    // job-id order — `util::pool` owns that determinism contract now.
+    let outputs = pool::run_indexed(jobs.len(), n_threads, |i| {
+        run_job(&plan, &execs, &baselines, &jobs[i])
+    });
     // End-to-end workload axis: deterministic graph runs (no
     // measurement protocol — the graph engine is noise-free), a few
     // points per sweep, evaluated inline after the pair matrix.

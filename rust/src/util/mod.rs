@@ -1,10 +1,12 @@
 //! Foundational utilities built from scratch for the offline environment
 //! (no `rand`, `proptest`, `criterion`, `log` crates available):
 //! deterministic PRNG, statistics, unit parsing/formatting, a
-//! property-test harness, ASCII tables, a bench harness and a logger.
+//! property-test harness, ASCII tables, a bench harness, a scoped
+//! worker pool and a logger.
 
 pub mod bench;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,72 @@
+//! A shared scoped-thread fan-out helper: run `n` index-identified jobs
+//! on a small worker pool with deterministic, identity-ordered results.
+//!
+//! Both the sweep engine's pair-job matrix and the planner's candidate
+//! evaluation use this shape: workers pull job indices from a shared
+//! atomic counter (dynamic load balancing — job costs vary wildly), and
+//! the outputs are reassembled in index order afterwards, so the result
+//! is byte-identical to a sequential run no matter the thread count or
+//! scheduling interleave.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0..n)` on up to `threads` scoped workers and return the
+/// results in index order. `threads <= 1` (or `n <= 1`) degenerates to
+/// a plain sequential loop with zero thread overhead; the parallel
+/// path is observationally identical because results are reordered by
+/// job index before returning.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Sync + Fn(usize) -> T,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                out.lock().expect("pool output lock poisoned").push((i, v));
+            });
+        }
+    });
+    let mut pairs = out.into_inner().expect("pool output lock poisoned");
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_identity_ordered_at_any_width() {
+        let seq = run_indexed(17, 1, |i| i * i);
+        for threads in [2, 3, 8, 32] {
+            assert_eq!(run_indexed(17, threads, |i| i * i), seq, "{threads} threads");
+        }
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn jobs_run_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let calls = AtomicUsize::new(0);
+        let v = run_indexed(100, 7, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(v, (0..100).collect::<Vec<_>>());
+    }
+}

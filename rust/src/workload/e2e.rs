@@ -235,6 +235,57 @@ impl E2eFamily {
     }
 }
 
+/// Memoized collective wire pricing, shared across planner candidate
+/// builds. Pricing a collective on a multi-node topology rebuilds its
+/// hierarchical transfer plan, and the planner's candidates re-price
+/// the same handful of (kind, bytes) kernels dozens of times over —
+/// once per stage per candidate — so `run_auto` threads one pricer
+/// through every `build_graph_planned_with` call. Keys are
+/// `(kind, bytes)` for DMA transfers and `(kind, bytes, grant)` for CU
+/// kernels (the grant changes the wire time); at these cache sizes a
+/// linear scan beats hashing.
+#[derive(Debug, Clone, Default)]
+pub struct CommPricer {
+    dma: Vec<((CollectiveKind, u64), f64)>,
+    cu: Vec<((CollectiveKind, u64, u32), f64)>,
+}
+
+impl CommPricer {
+    /// Fresh, empty pricing memo.
+    pub fn new() -> CommPricer {
+        CommPricer::default()
+    }
+
+    /// Wire time of a DMA transfer, memoized on (kind, bytes).
+    fn dma_wire(&mut self, m: &MachineConfig, topo: &Topology, d: &DmaCollective) -> f64 {
+        let key = (d.spec.kind, d.spec.size_bytes);
+        if let Some(&(_, w)) = self.dma.iter().find(|&&(k, _)| k == key) {
+            return w;
+        }
+        let w = d.wire_time_on(m, topo);
+        self.dma.push((key, w));
+        w
+    }
+
+    /// Wire time of a CU collective at a given CU grant, memoized on
+    /// (kind, bytes, grant).
+    fn cu_wire(
+        &mut self,
+        m: &MachineConfig,
+        topo: &Topology,
+        kernel: &CollectiveKernel,
+        grant: u32,
+    ) -> f64 {
+        let key = (kernel.spec.kind, kernel.spec.size_bytes, grant);
+        if let Some(&(_, w)) = self.cu.iter().find(|&&(k, _)| k == key) {
+            return w;
+        }
+        let w = kernel.t_wire_on(m, topo, grant);
+        self.cu.push((key, w));
+        w
+    }
+}
+
 /// Build a comm node for an e2e graph (executor-style derivations:
 /// wire, HBM demand, §VII-A1 share, engine occupancy). `cu_grant` is
 /// the CU reservation while resident on the CU backend (the planner's
@@ -246,11 +297,12 @@ fn comm_node(
     kernel: CollectiveKernel,
     dma: bool,
     cu_grant: u32,
+    pricer: &mut CommPricer,
 ) -> Result<(Work, Ready), Error> {
     let kind = kernel.spec.kind;
     if dma {
         let d = DmaCollective::try_new(kernel.spec)?;
-        let wire = d.wire_time_on(m, topo);
+        let wire = pricer.dma_wire(m, topo, &d);
         Ok((
             Work::Comm(CommWork {
                 kernel,
@@ -273,7 +325,7 @@ fn comm_node(
         ))
     } else {
         let grant = cu_grant.max(1);
-        let wire = kernel.t_wire_on(m, topo, grant);
+        let wire = pricer.cu_wire(m, topo, &kernel, grant);
         Ok((
             Work::Comm(CommWork {
                 kernel,
@@ -333,6 +385,7 @@ fn push_planned_comm(
     plan: crate::sched::policy::CollPlan,
     issue_deps: Vec<usize>,
     defer: f64,
+    pricer: &mut CommPricer,
 ) -> Result<usize, Error> {
     use crate::sched::policy::PlanBackend;
     let dma = plan.backend == PlanBackend::Dma && kernel.spec.kind.dma_offloadable();
@@ -344,7 +397,7 @@ fn push_planned_comm(
         .min(kernel.spec.size_bytes.min(u32::MAX as u64) as u32)
         .max(1);
     if k <= 1 {
-        let (work, ready) = comm_node(m, topo, *kernel, dma, plan.cus)?;
+        let (work, ready) = comm_node(m, topo, *kernel, dma, plan.cus, pricer)?;
         return Ok(g.push(NodeSpec {
             label: label.to_string(),
             work,
@@ -358,9 +411,9 @@ fn push_planned_comm(
     // whole-kernel wire time (chunks are a scheduling decision, not a
     // bandwidth decision) — same derivation as `sched::graph::chunked`.
     let whole_wire = if dma {
-        DmaCollective::try_new(kernel.spec)?.wire_time_on(m, topo)
+        pricer.dma_wire(m, topo, &DmaCollective::try_new(kernel.spec)?)
     } else {
-        kernel.t_wire_on(m, topo, plan.cus.max(1))
+        pricer.cu_wire(m, topo, kernel, plan.cus.max(1))
     };
     let share = kernel.hbm_share_with_wire(m, whole_wire);
     let mut last = None;
@@ -369,7 +422,7 @@ fn push_planned_comm(
         .enumerate()
     {
         let chunk = CollectiveKernel::new(CollectiveSpec::new(kernel.spec.kind, sz));
-        let (mut work, ready) = comm_node(m, topo, chunk, dma, plan.cus)?;
+        let (mut work, ready) = comm_node(m, topo, chunk, dma, plan.cus, pricer)?;
         if let Work::Comm(cw) = &mut work {
             cw.pen_style = PenaltyStyle::Aligned(align);
             cw.share = share;
@@ -392,6 +445,23 @@ fn push_planned_comm(
     Ok(last.expect("chunk chain is non-empty"))
 }
 
+/// A planned e2e graph plus its stage→node index: `stage_nodes[s]` is
+/// the id of the first node emitted for stage `s` (nodes are emitted
+/// stage by stage, so stage `s` owns ids `stage_nodes[s]
+/// .. stage_nodes[s + 1]`), with a trailing sentinel equal to
+/// `graph.nodes.len()`. Because the builder is deterministic in the
+/// per-stage plan, two candidates whose [`StagePlan`]s agree on stages
+/// `0..s` produce byte-identical node prefixes `0..stage_nodes[s]` —
+/// the invariant the planner's prefix-memoized re-simulation
+/// ([`crate::sched::graph::execute_resuming`]) rests on.
+///
+/// [`StagePlan`]: crate::sched::policy::StagePlan
+#[derive(Debug, Clone)]
+pub struct PlannedGraph {
+    pub graph: Graph,
+    pub stage_nodes: Vec<usize>,
+}
+
 /// Build the workload graph of an e2e trace from **per-stage planner
 /// annotations** ([`crate::sched::policy::StagePlan`]): collective
 /// backend, CU grants, chunk counts and GEMM CU policy are read from
@@ -409,6 +479,21 @@ pub fn build_graph_planned(
     depth: usize,
     stages: &[crate::sched::policy::StagePlan],
 ) -> Result<Graph, Error> {
+    Ok(build_graph_planned_with(m, topo, trace, depth, stages, &mut CommPricer::new())?.graph)
+}
+
+/// [`build_graph_planned`] with a caller-owned pricing memo and the
+/// stage→node index the planner's memoized re-simulation needs. The
+/// pricer only caches pure wire-time derivations, so sharing one across
+/// candidate builds changes nothing about the produced graphs.
+pub fn build_graph_planned_with(
+    m: &MachineConfig,
+    topo: &Topology,
+    trace: &E2eTrace,
+    depth: usize,
+    stages: &[crate::sched::policy::StagePlan],
+    pricer: &mut CommPricer,
+) -> Result<PlannedGraph, Error> {
     assert_eq!(
         stages.len(),
         trace.stages.len(),
@@ -417,8 +502,10 @@ pub fn build_graph_planned(
     let cus = m.cus_total();
     let window = trace.stages_per_layer * depth.max(1);
     let mut g = Graph::default();
+    let mut stage_nodes: Vec<usize> = Vec::with_capacity(trace.stages.len() + 1);
     let mut gemm_ids: Vec<usize> = Vec::with_capacity(trace.stages.len());
     for (s, (stage, plan)) in trace.stages.iter().zip(stages).enumerate() {
+        stage_nodes.push(g.nodes.len());
         let gather_id = match (&stage.gather, plan.gather) {
             (Some(k), Some(cp)) => {
                 let issue_deps = match trace.kind {
@@ -451,6 +538,7 @@ pub fn build_graph_planned(
                     cp,
                     issue_deps,
                     defer,
+                    pricer,
                 )?)
             }
             (None, None) => None,
@@ -507,6 +595,7 @@ pub fn build_graph_planned(
                     cp,
                     vec![gemm_id],
                     0.0,
+                    pricer,
                 )?;
             }
             (None, None) => {}
@@ -518,7 +607,11 @@ pub fn build_graph_planned(
             }
         }
     }
-    Ok(g)
+    stage_nodes.push(g.nodes.len());
+    Ok(PlannedGraph {
+        graph: g,
+        stage_nodes,
+    })
 }
 
 /// Build the workload graph of an e2e trace under a fixed overlap
@@ -551,12 +644,23 @@ pub fn build_serial_chain(
     topo: &Topology,
     trace: &E2eTrace,
 ) -> Result<Graph, Error> {
+    build_serial_chain_with(m, topo, trace, &mut CommPricer::new())
+}
+
+/// [`build_serial_chain`] with a caller-owned pricing memo (shared with
+/// the overlap candidates' builds in [`crate::sched::Planner::run_auto`]).
+pub fn build_serial_chain_with(
+    m: &MachineConfig,
+    topo: &Topology,
+    trace: &E2eTrace,
+    pricer: &mut CommPricer,
+) -> Result<Graph, Error> {
     let mut g = Graph::default();
     let mut prev: Option<usize> = None;
     let chain = |prev: &Option<usize>| prev.map(|p| vec![p]).unwrap_or_default();
     for stage in &trace.stages {
         if let Some(k) = &stage.gather {
-            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m))?;
+            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m), pricer)?;
             prev = Some(g.push(NodeSpec {
                 label: format!("{}/gather", stage.label),
                 work,
@@ -582,7 +686,7 @@ pub fn build_serial_chain(
             },
         }));
         if let Some(k) = &stage.reduce {
-            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m))?;
+            let (work, ready) = comm_node(m, topo, *k, false, k.cu_need(m), pricer)?;
             prev = Some(g.push(NodeSpec {
                 label: format!("{}/reduce", stage.label),
                 work,

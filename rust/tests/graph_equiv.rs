@@ -15,12 +15,15 @@
 use conccl::config::machine::MachineConfig;
 use conccl::config::workload::CollectiveKind;
 use conccl::error::Error;
-use conccl::sched::{Baselines, C3Executor, Strategy};
+use conccl::sched::{Baselines, C3Executor, Planner, Strategy};
+use conccl::workload::e2e::{build_graph_planned, build_serial_chain, E2eSpec};
 use conccl::workload::scenarios::{resolve, TABLE2};
 
 /// Frozen pre-refactor timeline implementations (public-API port of the
 /// deleted private functions; every formula and event-loop decision is
-/// unchanged).
+/// unchanged). Task registration tracks the simulator's current
+/// data-oriented `TaskSpec` (interned names, borrowed demand slices) —
+/// purely a calling-convention change, numerically inert.
 mod reference {
     use conccl::conccl::DmaCollective;
     use conccl::config::machine::{smoothmax, MachineConfig};
@@ -131,18 +134,20 @@ mod reference {
 
         let mut sim = Sim::new();
         let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
+        let gemm_name = sim.intern(&format!("gemm:{}", sc.scenario.gemm_tag));
         let gemm_t = sim.add_task(TaskSpec {
-            name: format!("gemm:{}", sc.scenario.gemm_tag),
+            name: Some(gemm_name),
             arrival: gemm_arrival,
             work: 1.0,
-            demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus))],
+            demands: &[(hbm, sc.gemm.hbm_traffic(m, cus))],
             cap: 0.0,
         });
+        let comm_name = sim.intern(&format!("comm:{}", sc.comm.spec.kind.name()));
         let comm_t = sim.add_task(TaskSpec {
-            name: format!("comm:{}", sc.comm.spec.kind.name()),
+            name: Some(comm_name),
             arrival: comm_arrival,
             work: 1.0,
-            demands: vec![(hbm, comm_hbm)],
+            demands: &[(hbm, comm_hbm)],
             cap: 0.0,
         });
         if backlog_until > 0.0 {
@@ -311,11 +316,12 @@ mod reference {
             .iter()
             .enumerate()
             .map(|(i, gk)| {
+                let name = sim.intern(&format!("gemm:{}", gk.tag));
                 sim.add_task(TaskSpec {
-                    name: format!("gemm:{}", gk.tag),
+                    name: Some(name),
                     arrival: 0.0,
                     work: 1.0,
-                    demands: vec![(hbm, sc.gemm.hbm_traffic(m, cus) * g_frac[i])],
+                    demands: &[(hbm, sc.gemm.hbm_traffic(m, cus) * g_frac[i])],
                     cap: 0.0,
                 })
             })
@@ -324,11 +330,12 @@ mod reference {
             .iter()
             .enumerate()
             .map(|(i, s)| {
+                let name = sim.intern(&format!("comm:{}#{i}", s.kind.name()));
                 sim.add_task(TaskSpec {
-                    name: format!("comm:{}#{i}", s.kind.name()),
+                    name: Some(name),
                     arrival: 0.0,
                     work: 1.0,
-                    demands: vec![(hbm, comm_hbm[i])],
+                    demands: &[(hbm, comm_hbm[i])],
                     cap: 0.0,
                 })
             })
@@ -534,6 +541,65 @@ fn graph_chunked_matches_frozen_reference_everywhere() {
                     }
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn planner_memoized_candidates_match_cold_runs() {
+    // The planner's prefix-memoized, parallel candidate evaluation
+    // (`Planner::run_auto` recording the two family poles and resuming
+    // every other candidate from the deepest shared-prefix checkpoint)
+    // must be indistinguishable from simulating every candidate cold:
+    // same winner, winning total within 1e-9 — and in fact bit-identical,
+    // since a resumed timeline replays the exact controller decisions —
+    // at any worker-pool width.
+    let m = MachineConfig::mi300x();
+    for (spec, nodes) in [
+        ("fsdp_step:70b:2:2", 1usize),
+        ("tp_chain:70b:2", 2),
+        ("fsdp_step:405b:2:2", 2),
+    ] {
+        let spec = E2eSpec::parse(spec).unwrap();
+        let trace = spec.trace();
+        let topo = m.topology(nodes);
+        let planner = Planner::new(&m, &topo);
+
+        // Cold baseline: every candidate built and simulated from t=0,
+        // argmin with the planner's first-strictly-smaller-wins rule.
+        let chain = build_serial_chain(&m, &topo, &trace).unwrap();
+        let mut cold: Vec<(&'static str, f64)> = vec![(
+            "serial-chain",
+            conccl::sched::graph::execute(&m, &topo, &chain).unwrap().total,
+        )];
+        for cand in planner.candidates(&trace, spec.depth) {
+            let g = build_graph_planned(&m, &topo, &trace, spec.depth, &cand.stages).unwrap();
+            cold.push((
+                cand.name,
+                conccl::sched::graph::execute(&m, &topo, &g).unwrap().total,
+            ));
+        }
+        let (best_name, best_total) = cold
+            .iter()
+            .copied()
+            .reduce(|b, c| if c.1 < b.1 { c } else { b })
+            .unwrap();
+
+        for threads in [1usize, 4] {
+            let ctx = format!("{}/{}n/t{}", spec.label(), nodes, threads);
+            let (run, plan) = planner
+                .clone()
+                .with_threads(threads)
+                .run_auto(&trace, spec.depth)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_eq!(plan.strategy, best_name, "{ctx}: winner diverged");
+            assert_eq!(plan.candidates, cold.len(), "{ctx}: candidate count");
+            assert_rel(run.total, best_total, &format!("{ctx} total"));
+            assert_eq!(
+                run.total.to_bits(),
+                best_total.to_bits(),
+                "{ctx}: memoized total not bit-identical to the cold run"
+            );
         }
     }
 }
