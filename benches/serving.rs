@@ -1,0 +1,63 @@
+//! Serving traffic bench: the four serving families (serial /
+//! cu_overlap / dma_overlap / auto) under open-loop streaming traffic
+//! on the three inference workloads (tp_decode / moe_dispatch /
+//! pd_disagg) — steady-state p99 and goodput per family, plus a
+//! wall-clock measurement of one full traffic run (hundreds of decode
+//! steps through the memoized stepper, so this also exercises the
+//! `execute_resuming` checkpoint-reuse path under load). Runs under
+//! `CONCCL_BENCH_SMOKE=1` in the CI `bench-smoke` job like every other
+//! bench.
+
+use conccl::config::MachineConfig;
+use conccl::util::bench::Bencher;
+use conccl::util::table::{f as fnum, speedup, Table};
+use conccl::util::units::fmt_seconds;
+use conccl::workload::serving::ServeSpec;
+use conccl::workload::traffic::{run_serve_lineup, TrafficConfig};
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let topo = m.topology(1);
+    let mut b = Bencher::from_args();
+    b.section("serving: family lineup under open-loop traffic");
+
+    let steps = if b.smoke() { 60 } else { 200 };
+    let cfg = TrafficConfig {
+        steps,
+        ..TrafficConfig::default()
+    };
+
+    let mut t = Table::new(vec![
+        "workload", "family", "p50", "p99", "speedup", "goodput tok/s", "plan",
+    ])
+    .title(format!(
+        "steady-state serving latency ({} decode steps, rate {} req/s)",
+        steps, cfg.rate
+    ))
+    .left_cols(2);
+    for spec_str in ["tp_decode:70b", "moe_dispatch:70b", "pd_disagg:70b"] {
+        let spec = ServeSpec::parse(spec_str).expect("bench spec");
+        let lineup = run_serve_lineup(&m, &topo, spec, cfg, 24301).expect("serve lineup");
+        for r in &lineup {
+            t.row(vec![
+                spec.label(),
+                r.family.name().to_string(),
+                fmt_seconds(r.p50),
+                fmt_seconds(r.p99),
+                speedup(r.speedup),
+                fnum(r.goodput_tps, 0),
+                r.plan.unwrap_or("-").to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    // Wall-clock: one full auto-family traffic run on the KV-heavy
+    // disaggregation workload (the heaviest stepper: serial seed + four
+    // candidate classes per new batch shape, then memoized replay).
+    let spec = ServeSpec::parse("pd_disagg:70b").unwrap();
+    b.bench("serve_pd_disagg_70b_auto_lineup", || {
+        run_serve_lineup(&m, &topo, spec, cfg, 24301).unwrap()
+    });
+    b.finish();
+}

@@ -7,6 +7,7 @@
 mod analyze;
 mod e2e;
 mod run;
+mod serve;
 mod sweep;
 
 use crate::cli::{Args, HELP};
@@ -32,6 +33,7 @@ pub fn dispatch(args: &Args) -> Result<(), String> {
         "heuristics" => analyze::heuristics_cmd(args),
         "e2e" => e2e::e2e(args),
         "graph" => e2e::graph_cmd(args),
+        "serve" => serve::serve_cmd(args),
         other => Err(format!("unknown subcommand '{other}'\n\n{HELP}")),
     }
 }

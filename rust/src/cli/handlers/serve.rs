@@ -1,0 +1,88 @@
+//! `conccl serve`: the streaming inference-serving traffic engine —
+//! open-loop arrivals into the per-step decode graphs of
+//! [`crate::workload::serving`], reporting steady-state latency
+//! percentiles, goodput and engine occupancy per serving family.
+
+use crate::cli::Args;
+use crate::coordinator::report;
+use crate::workload::e2e::E2eFamily;
+use crate::workload::serving::ServeSpec;
+use crate::workload::traffic::{run_serve, run_serve_lineup, TrafficConfig};
+
+/// Run one serving workload under the traffic engine and print the
+/// family lineup (or one family with `--family`).
+pub(crate) fn serve_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let nodes = args.opt_usize("nodes", 1)?.max(1);
+    let spec =
+        ServeSpec::parse(&args.opt("workload", "tp_decode:70b")).map_err(|e| e.to_string())?;
+    let cfg = TrafficConfig {
+        rate: args.opt_f64("rate", 2000.0)?,
+        steps: args.opt_usize("steps", 200)?,
+        duration: args.opt_f64("duration", 0.0)?,
+        tokens_mean: args.opt_f64("tokens", 24.0)?,
+    };
+    cfg.validate().map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 24301)?;
+    let topo = m.topology(nodes);
+    let runs = match args.opt("family", "all").as_str() {
+        "all" => run_serve_lineup(&m, &topo, spec, cfg, seed).map_err(|e| e.to_string())?,
+        other => {
+            let family = E2eFamily::parse(other).map_err(|e| e.to_string())?;
+            vec![run_serve(&m, &topo, spec, family, cfg, seed).map_err(|e| e.to_string())?]
+        }
+    };
+    report::render_serve(
+        &format!(
+            "serving traffic: {} @ {} req/s, {} steps, seed {seed}, {nodes} node(s)",
+            spec.label(),
+            cfg.rate,
+            cfg.steps
+        ),
+        &runs,
+    )
+    .print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn serve_runs_the_lineup() {
+        assert!(serve_cmd(&args("serve --workload tp_decode:70b:2:8 --steps 40")).is_ok());
+    }
+
+    #[test]
+    fn serve_single_family_and_overrides() {
+        assert!(serve_cmd(&args(
+            "serve --workload pd:70b:2:8 --family auto --rate 1500 --steps 40 --seed 7"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors_not_panics() {
+        for bad in [
+            "serve --workload warp_decode",
+            "serve --workload tp_decode:13b",
+            "serve --workload tp_decode:70b:0",
+            "serve --workload tp_decode:70b:2:8:9",
+            "serve --rate 0",
+            "serve --rate nan --steps 10",
+            "serve --steps 0",
+            "serve --tokens 0.2",
+            "serve --duration -1",
+            "serve --family warp",
+            "serve --seed minus-one",
+        ] {
+            assert!(serve_cmd(&args(bad)).is_err(), "{bad:?} must fail cleanly");
+        }
+    }
+}

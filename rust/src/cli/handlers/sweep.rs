@@ -8,6 +8,8 @@ use crate::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVa
 use crate::util::table::{speedup, Table};
 use crate::util::units::fmt_seconds;
 use crate::workload::e2e::{E2eFamily, E2eSpec};
+use crate::workload::serving::ServeSpec;
+use crate::workload::traffic::TrafficConfig;
 
 use super::{csv_list, parse_collective};
 
@@ -80,10 +82,33 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
             .collect::<Result<_, _>>()
             .map_err(|e| format!("--e2e: {e}"))?,
     };
+    let serve_specs: Vec<ServeSpec> = match args.options.get("serve") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(ServeSpec::parse)
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--serve: {e}"))?,
+    };
+    let traffic = TrafficConfig {
+        rate: args.opt_f64("rate", 2000.0)?,
+        steps: args.opt_usize("serve-steps", 200)?,
+        tokens_mean: args.opt_f64("serve-tokens", 24.0)?,
+        duration: 0.0,
+    };
     let plan = SweepPlan::from_selection(machines, &scenario_tags, &kinds, &strategy_names, cfg)
         .and_then(|p| p.with_node_counts(node_counts))
         .and_then(|p| p.with_chunk_counts(chunk_counts))
         .and_then(|p| p.with_e2e(e2e_specs))
+        .and_then(|p| {
+            if serve_specs.is_empty() {
+                Ok(p)
+            } else {
+                p.with_serve(serve_specs, traffic)
+            }
+        })
         .map_err(|e| e.to_string())?;
     let n_jobs = plan.job_count();
     let t0 = std::time::Instant::now();
@@ -163,6 +188,25 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
                 }
                 println!();
             }
+            // Serving traffic axis: one steady-state table per spec on
+            // this (machine, topology) point.
+            for (si, spec) in results.plan.serve.iter().enumerate() {
+                let point = results.serve_point(mi, ni, si);
+                let runs: Vec<_> = point
+                    .iter()
+                    .filter_map(|o| o.result.as_ref().ok().copied())
+                    .collect();
+                report::render_serve(
+                    &format!(
+                        "serving '{}': machine '{}' × {nodes} node(s)",
+                        spec.label(),
+                        mv.label
+                    ),
+                    &runs,
+                )
+                .print();
+                println!();
+            }
         }
     }
     let errs = results.errors();
@@ -201,6 +245,25 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
             );
         }
     }
+    // Same for failed serving points.
+    let serve_errs: Vec<&crate::sweep::ServeOutput> = results
+        .serve_outputs
+        .iter()
+        .filter(|o| o.result.is_err())
+        .collect();
+    if !serve_errs.is_empty() {
+        println!("{} serving point(s) failed:", serve_errs.len());
+        for o in &serve_errs {
+            println!(
+                "  [{} × {}n × {} × {}]: {}",
+                results.machine_label(o.machine_idx),
+                results.plan.node_counts[o.node_idx],
+                results.plan.serve[o.spec_idx].label(),
+                o.family.name(),
+                o.result.as_ref().unwrap_err()
+            );
+        }
+    }
     println!(
         "{n_jobs} jobs on {} worker thread(s) in {}",
         results.threads_used,
@@ -218,13 +281,15 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
     // Partial failure must not look like success to scripts/CI: the
     // tables and JSON above still describe what ran, but the exit
     // status reports the failed jobs (pairwise and e2e alike).
-    if errs.is_empty() && e2e_errs.is_empty() {
+    if errs.is_empty() && e2e_errs.is_empty() && serve_errs.is_empty() {
         Ok(())
     } else {
         Err(format!(
-            "{} of {n_jobs} sweep jobs and {} e2e point(s) failed (see list above)",
+            "{} of {n_jobs} sweep jobs, {} e2e point(s) and {} serving point(s) failed \
+             (see list above)",
             errs.len(),
-            e2e_errs.len()
+            e2e_errs.len(),
+            serve_errs.len()
         ))
     }
 }

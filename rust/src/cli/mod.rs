@@ -16,6 +16,10 @@
 //!   graph          end-to-end workload graph (multi-layer FSDP/TP) on
 //!                  the workload-graph engine, incl. the planner-driven
 //!                  `auto` family
+//!   serve          streaming inference-serving traffic engine:
+//!                  open-loop arrivals into per-step decode graphs
+//!                  (tp_decode / moe_dispatch / pd_disagg), steady-state
+//!                  p50/p95/p99 + goodput per serving family
 //! ```
 
 pub mod handlers;
@@ -52,14 +56,13 @@ impl Args {
                 args.sets.push(v.clone());
             } else if let Some(key) = a.strip_prefix("--") {
                 // Option with a value unless followed by another flag/end.
-                let takes_value = it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false);
-                let val = if takes_value {
-                    it.next().unwrap().clone()
-                } else {
-                    "true".to_string()
+                let val = match it.peek() {
+                    Some(n) if !n.starts_with("--") => {
+                        let v = (*n).clone();
+                        it.next();
+                        v
+                    }
+                    _ => "true".to_string(),
                 };
                 args.options.insert(key.to_string(), val);
             } else {
@@ -82,6 +85,22 @@ impl Args {
         match self.options.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Float option.
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} '{v}': {e}")),
+        }
+    }
+
+    /// Unsigned 64-bit option (RNG seeds).
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} '{v}': {e}")),
         }
     }
 
@@ -137,6 +156,20 @@ SUBCOMMANDS
                             exposed-comm / bubble / occupancy metrics;
                             'auto' runs the per-node planner and prints
                             its backend/CUs/chunks plan table
+  serve --workload tp_decode|moe_dispatch|pd_disagg[:model[:layers[:batch]]]
+      [--rate 2000] [--steps 200] [--duration 0] [--tokens 24]
+      [--seed 24301] [--nodes N] [--family all|serial|cu|dma|auto]
+                            long-running serving simulation: open-loop
+                            Poisson arrivals, continuous batching up to
+                            :batch, one decode step per iteration on the
+                            graph engine; reports steady-state
+                            p50/p95/p99 request latency (exact sorted
+                            estimator), goodput and HBM/SDMA occupancy;
+                            deterministic for a fixed seed at any thread
+                            count; 'auto' plans per request class
+                            (latency-bound decode collectives vs the
+                            DMA-offloaded KV-cache ingest stream of
+                            pd_disagg)
   help                      this text
 
 SWEEP OPTIONS (conccl sweep)
@@ -161,6 +194,15 @@ SWEEP OPTIONS (conccl sweep)
                             workload[:model[:layers[:depth]]], e.g.
                             fsdp_step:70b:4:2 (JSON schema v5
                             workloads[] section, gated by bench-gate)
+  --serve spec,spec         serving axis, evaluated per (machine,
+                            node-count) by the traffic engine under the
+                            four serving families; spec =
+                            workload[:model[:layers[:batch]]], e.g.
+                            pd_disagg:70b:4:16 (JSON schema v6
+                            serving[] section, gated by bench-gate)
+  --rate R                  serving arrival rate, req/s (default 2000)
+  --serve-steps N           decode steps per serving point (default 200)
+  --serve-tokens T          mean decode length in tokens (default 24)
   --variants l:k=v;k=v,...  extra machine variants derived from the base
                             machine (label:field=value;field=value)
   --threads N               worker threads (0 = one per core)
@@ -218,5 +260,35 @@ mod tests {
     fn bad_override_surfaces_error() {
         let a = parse("report --set machine.nonexistent=1");
         assert!(a.machine().is_err());
+    }
+
+    #[test]
+    fn trailing_flag_takes_no_value() {
+        // The option-value branch must not panic when a flag is the
+        // last token (the old peek-then-unwrap shape).
+        let a = parse("serve --verbose");
+        assert!(a.flag("verbose"));
+        let b = parse("serve --rate 10 --verbose");
+        assert_eq!(b.opt("rate", ""), "10");
+        assert!(b.flag("verbose"));
+    }
+
+    #[test]
+    fn float_and_seed_options() {
+        let a = parse("serve --rate 1500.5 --seed 42");
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 1500.5);
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 42);
+        assert_eq!(a.opt_f64("missing", 3.5).unwrap(), 3.5);
+        assert_eq!(a.opt_u64("missing", 9).unwrap(), 9);
+        // Malformed values surface typed errors, never panics.
+        let bad = parse("serve --rate fast --seed minus-one");
+        assert!(bad.opt_f64("rate", 0.0).is_err());
+        assert!(bad.opt_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn missing_set_value_errors() {
+        let argv: Vec<String> = vec!["run".into(), "--set".into()];
+        assert!(Args::parse(&argv).is_err());
     }
 }

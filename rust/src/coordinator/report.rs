@@ -36,6 +36,34 @@ pub fn render_graph_e2e(title: &str, runs: &[crate::workload::e2e::E2eRun]) -> T
     t
 }
 
+/// Serving-traffic table: one row per family with the steady-state
+/// latency percentiles, goodput and occupancies of one
+/// [`crate::workload::traffic::run_serve_lineup`] run. Shared by
+/// `conccl serve` and the sweep's `--serve` axis output.
+pub fn render_serve(title: &str, runs: &[crate::workload::traffic::ServeReport]) -> Table {
+    let mut t = Table::new(vec![
+        "family", "p50", "p95", "p99", "speedup", "goodput tok/s", "done", "hbm occ%",
+        "sdma occ%", "plan",
+    ])
+    .title(title.to_string())
+    .left_cols(1);
+    for r in runs {
+        t.row(vec![
+            r.family.name().to_string(),
+            crate::util::units::fmt_seconds(r.p50),
+            crate::util::units::fmt_seconds(r.p95),
+            crate::util::units::fmt_seconds(r.p99),
+            speedup(r.speedup),
+            f(r.goodput_tps, 0),
+            format!("{}/{}", r.requests_completed, r.requests_arrived),
+            f(r.hbm_occupancy * 100.0, 1),
+            f(r.sdma_occupancy * 100.0, 1),
+            r.plan.unwrap_or("-").to_string(),
+        ]);
+    }
+    t
+}
+
 /// Plan-summary table for the planner-driven `auto` family: one row per
 /// graph node with the backend / CU / chunk decisions the
 /// [`crate::sched::Planner`] committed to (rendered alongside the
@@ -340,6 +368,22 @@ mod tests {
         let pt = render_plan_summary("e2e", &plan);
         assert_eq!(pt.len(), plan.nodes.len());
         assert!(pt.render().contains(plan.strategy));
+    }
+
+    #[test]
+    fn serve_table_renders_one_row_per_family() {
+        use crate::workload::serving::ServeSpec;
+        use crate::workload::traffic::{run_serve_lineup, TrafficConfig};
+        let m = MachineConfig::mi300x();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("tp_decode:70b:2:8").unwrap();
+        let cfg = TrafficConfig { steps: 40, ..TrafficConfig::default() };
+        let runs = run_serve_lineup(&m, &topo, spec, cfg, 24301).unwrap();
+        let t = render_serve("serve", &runs);
+        assert_eq!(t.len(), 4);
+        let rendered = t.render();
+        assert!(rendered.contains("p99"));
+        assert!(rendered.contains("auto"));
     }
 
     #[test]

@@ -351,6 +351,34 @@ impl CostModel {
     pub fn engines_oversubscribed(&self, concurrent: usize) -> bool {
         concurrent as f64 * self.engine_demand() > self.m.sdma_engines.max(1) as f64
     }
+
+    /// Backend preference for one *request-class* collective stream in a
+    /// serving schedule (the §V-A complementary-resource argument applied
+    /// between request classes, not kernels):
+    ///
+    /// * A **deadline-tolerant** bulk stream (KV-cache ingest in a
+    ///   prefill/decode split) always prefers the DMA engines when the
+    ///   collective is offloadable — comparable wire rate, zero CU theft
+    ///   and zero L2 pollution against the latency-critical decode path
+    ///   sharing the GPU.
+    /// * A **latency-critical** stream (per-token decode collectives)
+    ///   stays on whichever backend issues fastest: in the latency-bound
+    ///   regime the multi-queue DMA enqueue chain
+    ///   (`num_gpus × dma_enqueue_s + dma_fetch_s`) costs more than one
+    ///   collective kernel launch on MI300X, so tiny per-token
+    ///   collectives stay CU-resident; bandwidth-bound streams take the
+    ///   DMA engines' better wire rate.
+    ///
+    /// Returns `false` (CU) for non-offloadable kinds regardless.
+    pub fn stream_prefers_dma(&self, c: &CollectiveKernel, deadline_tolerant: bool) -> bool {
+        if !c.spec.kind.dma_offloadable() {
+            return false;
+        }
+        if deadline_tolerant {
+            return true;
+        }
+        !c.is_latency_bound(&self.m) || self.issue_latency(true) <= self.issue_latency(false)
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +459,26 @@ mod tests {
         // Two oversubscribe (16 > 14) — the split-pool trigger.
         assert!(cm.engines_oversubscribed(2));
         assert!(cm.engines_oversubscribed(4));
+    }
+
+    #[test]
+    fn stream_backend_splits_by_request_class() {
+        let m = m();
+        let cm = CostModel::new(&m, &Topology::fully_connected(m.num_gpus));
+        let tiny = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 256 * 1024));
+        let bulk = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 128 * MIB));
+        // Latency-critical tiny decode collectives stay CU-resident (the
+        // DMA enqueue chain costs more than a kernel launch here).
+        assert!(!cm.stream_prefers_dma(&tiny, false));
+        // The same payload as a deadline-tolerant background stream goes
+        // to the engines.
+        assert!(cm.stream_prefers_dma(&tiny, true));
+        // Bandwidth-bound streams prefer DMA either way.
+        assert!(cm.stream_prefers_dma(&bulk, false));
+        assert!(cm.stream_prefers_dma(&bulk, true));
+        // Reducing collectives can never leave the CUs.
+        let rs = CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::ReduceScatter, 128 * MIB));
+        assert!(!cm.stream_prefers_dma(&rs, true));
     }
 
     #[test]

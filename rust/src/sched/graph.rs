@@ -42,6 +42,34 @@
 //! prefix. The resumed timeline is bit-identical to a from-scratch
 //! simulation — `rust/tests/graph_equiv.rs` pins that equivalence at
 //! 1e-9 alongside the frozen-reference suite.
+//!
+//! # Example: one C3 pair as a 2-node graph
+//!
+//! Build the paper's basic unit — one GEMM overlapped with one
+//! collective under a whole-kernel strategy — and execute it:
+//!
+//! ```
+//! use conccl::config::machine::MachineConfig;
+//! use conccl::config::workload::CollectiveKind;
+//! use conccl::sched::graph::{execute, single_pair};
+//! use conccl::sched::{Baselines, Strategy};
+//! use conccl::workload::resolve_tag;
+//!
+//! let m = MachineConfig::mi300x();
+//! let topo = m.topology(1);
+//! let sc = resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap();
+//! let b = Baselines {
+//!     t_gemm_iso: sc.gemm.time_isolated(&m, m.cus_total()),
+//!     t_comm_iso: sc.comm.time_isolated_full_on(&m, &topo),
+//! };
+//! let g = single_pair(&m, &topo, &sc, Strategy::C3Sp, b).unwrap();
+//! assert_eq!(g.nodes.len(), 2);
+//! let run = execute(&m, &topo, &g).unwrap();
+//! // Overlap beats the serial baseline but cannot beat the ideal
+//! // bound (the longer kernel fully hiding the shorter one).
+//! assert!(run.total < b.serial());
+//! assert!(run.total >= b.t_gemm_iso.max(b.t_comm_iso) - 1e-12);
+//! ```
 
 use crate::config::machine::{smoothmax, MachineConfig};
 use crate::config::workload::CollectiveSpec;

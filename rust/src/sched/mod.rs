@@ -13,5 +13,7 @@ pub mod strategy;
 
 pub use executor::{Baselines, C3Executor, C3Run};
 pub use graph::{chunk_sizes, Graph, GraphRun, NodeSpec, PrefixTimeline, Ready, Work};
-pub use policy::{PlanBackend, PlanNode, PlanSummary, Planner, StagePlan};
+pub use policy::{
+    serve_candidates, PlanBackend, PlanNode, PlanSummary, Planner, ServeClassPlan, StagePlan,
+};
 pub use strategy::{Strategy, StrategyKind};

@@ -191,6 +191,75 @@ pub fn common_prefix_stages(a: &[StagePlan], b: &[StagePlan]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
+/// A per-**request-class** serving plan: one backend decision for the
+/// latency-critical decode-path collectives and one for the
+/// deadline-tolerant KV-cache/background stream — the serving analogue
+/// of a [`PlanCandidate`]. The two classes have complementary needs
+/// (issue latency vs bulk wire rate), so the right answer is usually
+/// *mixed*: decode stays CU-resident, the KV stream takes the otherwise
+/// idle SDMA engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeClassPlan {
+    pub name: &'static str,
+    /// Backend for the per-token decode collectives (reducing
+    /// collectives stay on CUs regardless — the builder enforces it).
+    pub decode: PlanBackend,
+    /// Backend for the KV-cache/background stream.
+    pub kv: PlanBackend,
+    /// Chunk count for the KV stream (1 = whole transfer).
+    pub kv_chunks: u32,
+}
+
+/// Candidate per-request-class plans for one serving step shape,
+/// heuristic pick first ([`CostModel::stream_prefers_dma`] orders the
+/// lineup; the traffic engine's simulate-and-argmin protocol decides).
+/// `decode` is a representative decode-path collective of the step;
+/// `kv_bytes > 0` adds the KV-stream candidates. Duplicates (e.g. when
+/// the heuristic pick coincides with a uniform stamp) are dropped, so
+/// every candidate simulated is a distinct graph.
+pub fn serve_candidates(
+    cost: &CostModel,
+    decode: &CollectiveKernel,
+    kv_bytes: u64,
+) -> Vec<ServeClassPlan> {
+    let backend = |dma: bool| if dma { PlanBackend::Dma } else { PlanBackend::Cu };
+    let dec = backend(cost.stream_prefers_dma(decode, false));
+    let mut out: Vec<ServeClassPlan> = Vec::new();
+    let mut push = |p: ServeClassPlan| {
+        if !out.iter().any(|q| (q.decode, q.kv, q.kv_chunks) == (p.decode, p.kv, p.kv_chunks)) {
+            out.push(p);
+        }
+    };
+    if kv_bytes > 0 {
+        // Per-class split first: decode per its own latency regime, the
+        // bulk stream on the engines.
+        push(ServeClassPlan { name: "kv-dma", decode: dec, kv: PlanBackend::Dma, kv_chunks: 1 });
+        // Chunked KV ingest: per-chunk DMA batches ride the shared
+        // enqueue queue, releasing SDMA occupancy between chunks.
+        push(ServeClassPlan {
+            name: "kv-dma-chunked",
+            decode: dec,
+            kv: PlanBackend::Dma,
+            kv_chunks: 4,
+        });
+    }
+    // The two uniform stamps — identical to the fixed cu_overlap /
+    // dma_overlap serving families, so auto can never lose to either.
+    push(ServeClassPlan {
+        name: "cu-uniform",
+        decode: PlanBackend::Cu,
+        kv: PlanBackend::Cu,
+        kv_chunks: 1,
+    });
+    push(ServeClassPlan {
+        name: "dma-uniform",
+        decode: PlanBackend::Dma,
+        kv: PlanBackend::Dma,
+        kv_chunks: 1,
+    });
+    out
+}
+
 /// The per-node planner: one [`CostModel`] per `(machine, topology)`,
 /// reused across every stage decision and candidate.
 #[derive(Debug, Clone)]
@@ -550,6 +619,35 @@ mod tests {
     use super::*;
     use crate::workload::e2e::{fsdp_step_stages, tp_chain_stages};
     use crate::workload::llama::LlamaConfig;
+
+    #[test]
+    fn serve_candidates_split_per_request_class() {
+        use crate::config::workload::{CollectiveKind, CollectiveSpec};
+        let m = MachineConfig::mi300x();
+        let cost = CostModel::new(&m, &m.topology(1));
+        let tiny =
+            CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, 256 * 1024));
+        // With a KV stream, the per-class split leads the lineup and the
+        // two uniform stamps are always present (so argmin over the
+        // candidates can never lose to a fixed serving family).
+        let cands = serve_candidates(&cost, &tiny, 64 << 20);
+        assert_eq!(cands[0].name, "kv-dma");
+        assert_eq!(cands[0].decode, PlanBackend::Cu, "tiny decode collectives stay CU-resident");
+        assert_eq!(cands[0].kv, PlanBackend::Dma);
+        assert!(cands.iter().any(|c| c.name == "cu-uniform"));
+        assert!(cands.iter().any(|c| c.name == "dma-uniform"));
+        assert!(cands.iter().any(|c| c.name == "kv-dma-chunked" && c.kv_chunks > 1));
+        // No duplicate (decode, kv, chunks) triples.
+        for (i, a) in cands.iter().enumerate() {
+            for b in &cands[i + 1..] {
+                assert_ne!((a.decode, a.kv, a.kv_chunks), (b.decode, b.kv, b.kv_chunks));
+            }
+        }
+        // Without a KV stream only the uniform stamps remain.
+        let no_kv = serve_candidates(&cost, &tiny, 0);
+        assert_eq!(no_kv.len(), 2);
+        assert_eq!(no_kv[0].name, "cu-uniform");
+    }
 
     fn m() -> MachineConfig {
         MachineConfig::mi300x()

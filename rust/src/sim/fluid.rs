@@ -38,6 +38,31 @@
 //! latencies and interference penalties are applied by the caller (the
 //! workload-graph engine in `sched/`) between events via
 //! [`Sim::set_cap`] / [`Sim::set_demand`].
+//!
+//! # Example: two tasks sharing one bandwidth resource
+//!
+//! Two unit-work tasks each demand the full capacity of a shared
+//! resource; max-min fair filling halves both rates while they overlap,
+//! so the pair finishes in 2 s where either alone takes 1 s:
+//!
+//! ```
+//! use conccl::sim::{Sim, TaskSpec};
+//!
+//! let mut sim = Sim::new();
+//! let bw = sim.add_resource("hbm", 1.0);
+//! for _ in 0..2 {
+//!     sim.add_task(TaskSpec {
+//!         name: None,
+//!         arrival: 0.0,
+//!         work: 1.0,
+//!         demands: &[(bw, 1.0)],
+//!         cap: f64::INFINITY,
+//!     });
+//! }
+//! let finish = sim.run_to_completion().unwrap();
+//! assert!((finish[0] - 2.0).abs() < 1e-12);
+//! assert!((finish[1] - 2.0).abs() < 1e-12);
+//! ```
 
 /// Index of a resource registered with [`Sim::add_resource`].
 pub type ResourceId = usize;

@@ -223,14 +223,17 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
 /// (the chunking segment is present from schema v3 on), or an
 /// end-to-end workload point `machine/nodes/wl=<label>/<family>` →
 /// speedup (schema v4's `workloads[]` section; v5 adds the `auto`
-/// family, whose nested `plan` record is metadata the gate ignores).
+/// family, whose nested `plan` record is metadata the gate ignores),
+/// or a serving point `machine/nodes/serve=<workload>/<family>` →
+/// p99-latency speedup over the serial chain (schema v6's `serving[]`
+/// section).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchPoint {
     pub key: String,
     pub speedup_median: f64,
 }
 
-/// Flatten a sweep report (schema version 1 through 4) into bench
+/// Flatten a sweep report (schema version 1 through 6) into bench
 /// points.
 pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
     let machines = report
@@ -303,6 +306,28 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
                             if sp.is_finite() {
                                 out.push(BenchPoint {
                                     key: format!("{label}/{nodes}n/wl={wl}/{fam}"),
+                                    speedup_median: sp,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            // Schema v6: serving traffic points under the topology —
+            // `speedup` is the family's p99-latency improvement over
+            // the serial chain, which is exactly what the gate should
+            // hold (goodput/percentile floors ride along with it).
+            if let Some(srv) = t.get("serving").and_then(Json::as_arr) {
+                for w in srv {
+                    let wl = w.get("workload").and_then(Json::as_str).unwrap_or("?");
+                    let Some(Json::Obj(families)) = w.get("families") else {
+                        continue;
+                    };
+                    for (fam, v) in families {
+                        if let Some(sp) = v.get("speedup").and_then(Json::as_num) {
+                            if sp.is_finite() {
+                                out.push(BenchPoint {
+                                    key: format!("{label}/{nodes}n/serve={wl}/{fam}"),
                                     speedup_median: sp,
                                 });
                             }
@@ -573,17 +598,18 @@ mod tests {
         // The committed BENCH_baseline.json must (a) be a *seeded*
         // baseline — `--strict` in the perf-gate job fails otherwise —
         // and (b) pass the gate against a fresh run of the exact CI
-        // sweep matrix (pair points + the e2e workload axis), so the
-        // workflow is green by construction until a real regression
-        // lands.
+        // sweep matrix (pair points + the e2e workload axis + the
+        // serving axis), so the workflow is green by construction until
+        // a real regression lands.
         let text = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_baseline.json"));
         let baseline = parse_json(text).unwrap();
         assert!(is_seeded(&baseline), "committed baseline must be seeded");
         let base_points = extract_points(&baseline).unwrap();
-        assert_eq!(base_points.len(), 180, "CI matrix coverage changed");
+        assert_eq!(base_points.len(), 204, "CI matrix coverage changed");
 
         // The CI perf-gate sweep, exactly as .github/workflows/ci.yml
-        // runs it (jitter 0, seed 24301, --chunks auto, --e2e axis).
+        // runs it (jitter 0, seed 24301, --chunks auto, --e2e axis,
+        // --serve axis at --rate 2000 --serve-steps 120).
         let machines = vec![MachineVariant::base(MachineConfig::mi300x())];
         let kinds = [CollectiveKind::AllGather, CollectiveKind::AllToAll];
         let cfg = RunnerConfig {
@@ -606,11 +632,23 @@ mod tests {
                 crate::workload::e2e::E2eSpec::parse("fsdp_step:405b:2:2").unwrap(),
             ])
         })
+        .and_then(|p| {
+            p.with_serve(
+                vec![
+                    crate::workload::serving::ServeSpec::parse("tp_decode:70b").unwrap(),
+                    crate::workload::serving::ServeSpec::parse("pd_disagg:70b").unwrap(),
+                ],
+                crate::workload::traffic::TrafficConfig {
+                    steps: 120,
+                    ..crate::workload::traffic::TrafficConfig::default()
+                },
+            )
+        })
         .unwrap();
         let report = parse_json(&execute(plan, 2).to_json()).unwrap();
         let g = gate(&baseline, &report, 0.02).unwrap();
         assert!(g.passed(), "{}", g.render(0.02));
-        assert_eq!(g.compared, 180);
+        assert_eq!(g.compared, 204);
     }
 
     #[test]
@@ -648,6 +686,50 @@ mod tests {
              {\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\",\"scenarios\":[]}],\
              \"workloads\":[{\"label\":\"tp_chain-70b-l2-d2\",\"families\":{\
              \"dma_overlap\":{\"speedup\":99.0}}}]}]}]}",
+        )
+        .unwrap();
+        assert!(!gate(&inflated, &report, 0.02).unwrap().passed());
+    }
+
+    #[test]
+    fn v6_serving_points_extract_and_gate() {
+        use crate::workload::serving::ServeSpec;
+        use crate::workload::traffic::TrafficConfig;
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_serve(
+            vec![ServeSpec::parse("pd_disagg:70b:2:8").unwrap()],
+            TrafficConfig { steps: 40, ..TrafficConfig::default() },
+        )
+        .unwrap();
+        let report = parse_json(&execute(plan, 1).to_json()).unwrap();
+        let points = extract_points(&report).unwrap();
+        // 1 pair point + 4 serving families.
+        assert_eq!(points.len(), 5);
+        let srv: Vec<&BenchPoint> =
+            points.iter().filter(|p| p.key.contains("/serve=")).collect();
+        assert_eq!(srv.len(), 4);
+        assert!(srv
+            .iter()
+            .any(|p| p.key == "mi300x-8/1n/serve=pd_disagg-70b-l2-b8/auto"));
+        // The serial chain is its own denominator.
+        let serial = srv
+            .iter()
+            .find(|p| p.key.ends_with("/serial"))
+            .expect("serial serving point");
+        assert!((serial.speedup_median - 1.0).abs() < 1e-12);
+        // Gate against itself: green.
+        assert!(gate(&report, &report, 0.02).unwrap().passed());
+        // Inflated serving floor regresses.
+        let inflated = parse_json(
+            "{\"version\":6,\"machines\":[{\"label\":\"mi300x-8\",\"topologies\":[\
+             {\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\",\"scenarios\":[]}],\
+             \"serving\":[{\"workload\":\"pd_disagg-70b-l2-b8\",\"families\":{\
+             \"auto\":{\"speedup\":99.0}}}]}]}]}",
         )
         .unwrap();
         assert!(!gate(&inflated, &report, 0.02).unwrap().passed());

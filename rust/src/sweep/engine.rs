@@ -17,8 +17,9 @@ use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::workload::e2e::{run_e2e_planned_with, E2eFamily, E2eRun};
 use crate::workload::scenarios::ResolvedScenario;
+use crate::workload::traffic::{run_serve_lineup, ServeReport};
 
-use super::plan::{ChunkSel, MachineVariant, SweepJob, SweepPlan};
+use super::plan::{job_seed, ChunkSel, MachineVariant, SweepJob, SweepPlan};
 
 /// The measured (or failed) result of one sweep job.
 #[derive(Debug, Clone)]
@@ -48,6 +49,18 @@ pub struct E2eOutput {
     pub plan: Option<PlanSummary>,
 }
 
+/// The result of one serving point: a traffic-engine run of one
+/// `ServeSpec` under one serving family on one (machine, node-count).
+#[derive(Debug, Clone)]
+pub struct ServeOutput {
+    pub machine_idx: usize,
+    pub node_idx: usize,
+    /// Index into [`SweepPlan::serve`].
+    pub spec_idx: usize,
+    pub family: E2eFamily,
+    pub result: Result<ServeReport, Error>,
+}
+
 /// All outputs of one sweep, with enough plan context to aggregate and
 /// serialize them.
 #[derive(Debug, Clone)]
@@ -59,6 +72,9 @@ pub struct SweepResults {
     /// machine → node-count → spec → family order (empty unless the
     /// plan carries an e2e axis).
     pub e2e_outputs: Vec<E2eOutput>,
+    /// Serving-axis outputs, in machine → node-count → spec → family
+    /// order (empty unless the plan carries a serving axis).
+    pub serve_outputs: Vec<ServeOutput>,
     /// Memoized baselines, `[machine_idx][node_idx][scenario_idx]`.
     pub baselines: Vec<Vec<Vec<Baselines>>>,
     /// Worker threads actually used.
@@ -143,10 +159,63 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
             }
         }
     }
+    // Serving axis: long-running traffic simulations, one lineup per
+    // (machine, node-count, spec). The traffic loop is sequential and
+    // identity-seeded, so — like the e2e axis — its outputs are
+    // byte-identical at any worker-thread count.
+    let mut serve_outputs = Vec::with_capacity(
+        plan.machines.len()
+            * plan.node_counts.len()
+            * plan.serve.len()
+            * E2eFamily::lineup().len(),
+    );
+    for (mi, mv) in plan.machines.iter().enumerate() {
+        for (ni, &nodes) in plan.node_counts.iter().enumerate() {
+            let topo = mv.machine.topology(nodes);
+            for (si, spec) in plan.serve.iter().enumerate() {
+                let seed = job_seed(
+                    plan.cfg.seed,
+                    &mv.label,
+                    &nodes.to_string(),
+                    "serve",
+                    &spec.label(),
+                    "arrivals",
+                    "open-loop",
+                );
+                match run_serve_lineup(&mv.machine, &topo, *spec, plan.traffic, seed) {
+                    Ok(reports) => {
+                        for r in reports {
+                            serve_outputs.push(ServeOutput {
+                                machine_idx: mi,
+                                node_idx: ni,
+                                spec_idx: si,
+                                family: r.family,
+                                result: Ok(r),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        // Record the failure once per family so every
+                        // lineup slot exists for tables/JSON.
+                        for family in E2eFamily::lineup() {
+                            serve_outputs.push(ServeOutput {
+                                machine_idx: mi,
+                                node_idx: ni,
+                                spec_idx: si,
+                                family,
+                                result: Err(e.clone()),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
     SweepResults {
         plan,
         outputs,
         e2e_outputs,
+        serve_outputs,
         baselines,
         threads_used: n_threads,
     }
@@ -255,6 +324,23 @@ impl SweepResults {
         spec_idx: usize,
     ) -> Vec<&E2eOutput> {
         self.e2e_outputs
+            .iter()
+            .filter(|o| {
+                o.machine_idx == machine_idx && o.node_idx == node_idx && o.spec_idx == spec_idx
+            })
+            .collect()
+    }
+
+    /// Serving outputs of one (machine, node-count, spec) point, in
+    /// family-lineup order — the one selection predicate every consumer
+    /// (tables, JSON) routes through.
+    pub fn serve_point(
+        &self,
+        machine_idx: usize,
+        node_idx: usize,
+        spec_idx: usize,
+    ) -> Vec<&ServeOutput> {
+        self.serve_outputs
             .iter()
             .filter(|o| {
                 o.machine_idx == machine_idx && o.node_idx == node_idx && o.spec_idx == spec_idx
@@ -526,6 +612,53 @@ mod tests {
             for o in res.e2e_point(0, ni, 0) {
                 assert_eq!(o.plan.is_some(), o.family == E2eFamily::Auto);
             }
+        }
+    }
+
+    #[test]
+    fn serve_axis_runs_per_machine_and_topology() {
+        use crate::workload::serving::ServeSpec;
+        use crate::workload::traffic::TrafficConfig;
+        let m = MachineConfig::mi300x();
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(m)],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_serve(
+            vec![ServeSpec::parse("pd_disagg:70b:2:8").unwrap()],
+            TrafficConfig { steps: 40, ..TrafficConfig::default() },
+        )
+        .unwrap();
+        let seq = execute(plan.clone(), 1);
+        // 1 machine × 1 node count × 1 spec × 4 families.
+        assert_eq!(seq.serve_outputs.len(), 4);
+        assert!(seq.serve_outputs.iter().all(|o| o.result.is_ok()));
+        let point = seq.serve_point(0, 0, 0);
+        assert_eq!(point.len(), 4);
+        let get = |res: &SweepResults, f: E2eFamily| {
+            res.serve_point(0, 0, 0)
+                .into_iter()
+                .find(|o| o.family == f)
+                .unwrap()
+                .result
+                .clone()
+                .unwrap()
+        };
+        // Serial is the speedup identity; auto never loses on p99.
+        assert_eq!(get(&seq, E2eFamily::Serial).speedup, 1.0);
+        let auto = get(&seq, E2eFamily::Auto);
+        for f in [E2eFamily::Serial, E2eFamily::CuOverlap, E2eFamily::DmaOverlap] {
+            assert!(auto.p99 <= get(&seq, f).p99 * (1.0 + 1e-9), "vs {}", f.name());
+        }
+        // The serving axis is byte-identical at any thread count: the
+        // loop is sequential and its seed is identity-derived.
+        let par = execute(plan, 4);
+        for f in E2eFamily::lineup() {
+            let (a, b) = (get(&seq, f), get(&par, f));
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits(), "{}", f.name());
+            assert_eq!(a.goodput_tps.to_bits(), b.goodput_tps.to_bits());
         }
     }
 

@@ -60,11 +60,15 @@ impl SweepResults {
     /// carries e2e specs, so pairwise-only reports keep their shape;
     /// version 5 adds the `auto` family with its per-node `plan`
     /// record — winning strategy plus one backend/CUs/chunks entry per
-    /// graph node).
+    /// graph node; version 6 adds the per-topology `serving[]` section
+    /// for the inference-serving traffic axis — steady-state latency
+    /// percentiles, goodput and occupancies per serving family, present
+    /// only when the plan carries serve specs, so v1–v5 consumers keep
+    /// their shape).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":5,");
+        s.push_str("{\"version\":6,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -272,6 +276,73 @@ impl SweepResults {
                     }
                     s.push(']');
                 }
+                // Serving traffic axis (schema v6): steady-state
+                // percentiles per spec × family, nested under the
+                // topology alongside the e2e workloads.
+                if !self.plan.serve.is_empty() {
+                    let t = &self.plan.traffic;
+                    s.push_str(",\"serving\":[");
+                    for (si, spec) in self.plan.serve.iter().enumerate() {
+                        if si > 0 {
+                            s.push(',');
+                        }
+                        let _ = write!(
+                            s,
+                            "{{\"workload\":\"{}\",\"name\":\"{}\",\"model\":\"{}\",\
+                             \"layers\":{},\"max_batch\":{},\"rate\":{},\"steps\":{},\
+                             \"tokens_mean\":{},\"families\":{{",
+                            escape(&spec.label()),
+                            spec.kind.name(),
+                            spec.model_tag,
+                            spec.layers,
+                            spec.max_batch,
+                            num(t.rate),
+                            t.steps,
+                            num(t.tokens_mean)
+                        );
+                        let mut first = true;
+                        for out in self.serve_point(mi, ni, si) {
+                            if !first {
+                                s.push(',');
+                            }
+                            first = false;
+                            let _ = write!(s, "\"{}\":", out.family.name());
+                            match &out.result {
+                                Ok(r) => {
+                                    let _ = write!(
+                                        s,
+                                        "{{\"p50_s\":{},\"p95_s\":{},\"p99_s\":{},\
+                                         \"goodput_tps\":{},\"speedup\":{},\
+                                         \"requests_arrived\":{},\"requests_completed\":{},\
+                                         \"steps\":{},\"elapsed_s\":{},\"hbm_occupancy\":{},\
+                                         \"sdma_occupancy\":{},\"plan\":{}}}",
+                                        num(r.p50),
+                                        num(r.p95),
+                                        num(r.p99),
+                                        num(r.goodput_tps),
+                                        num(r.speedup),
+                                        r.requests_arrived,
+                                        r.requests_completed,
+                                        r.steps,
+                                        num(r.elapsed),
+                                        num(r.hbm_occupancy),
+                                        num(r.sdma_occupancy),
+                                        match r.plan {
+                                            Some(p) => format!("\"{}\"", escape(p)),
+                                            None => "null".to_string(),
+                                        }
+                                    );
+                                }
+                                Err(e) => {
+                                    let _ =
+                                        write!(s, "{{\"error\":\"{}\"}}", escape(&e.to_string()));
+                                }
+                            }
+                        }
+                        s.push_str("}}");
+                    }
+                    s.push(']');
+                }
                 s.push('}');
             }
             s.push_str("]}");
@@ -310,7 +381,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":5,"));
+        assert!(j.starts_with("{\"version\":6,"));
         assert!(j.contains("\"topologies\":[{\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\","));
         // No e2e axis -> no workloads section (pairwise shape kept).
         assert!(!j.contains("\"workloads\""));
@@ -375,7 +446,7 @@ mod tests {
         .with_e2e(vec![E2eSpec::parse("fsdp_step:70b:2:2").unwrap()])
         .unwrap();
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":5,"));
+        assert!(j.starts_with("{\"version\":6,"));
         assert_eq!(j.matches("\"workloads\":[").count(), 2, "one per topology");
         assert!(j.contains("\"name\":\"fsdp_step\",\"model\":\"70b\",\"layers\":2,\"depth\":2"));
         assert!(j.contains("\"label\":\"fsdp_step-70b-l2-d2\""));
@@ -393,6 +464,46 @@ mod tests {
         let open = j.matches('{').count();
         assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
         // Still parseable by our own reader.
+        assert!(crate::sweep::parse_json(&j).is_ok());
+    }
+
+    #[test]
+    fn serving_nests_per_topology() {
+        use crate::workload::serving::ServeSpec;
+        use crate::workload::traffic::TrafficConfig;
+        let plan = SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve(&TABLE2[0], CollectiveKind::AllGather)],
+            vec![StrategyKind::Conccl],
+            RunnerConfig::default(),
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap()
+        .with_serve(
+            vec![ServeSpec::parse("pd_disagg:70b:2:8").unwrap()],
+            TrafficConfig { steps: 40, ..TrafficConfig::default() },
+        )
+        .unwrap();
+        let j = execute(plan, 1).to_json();
+        assert!(j.starts_with("{\"version\":6,"));
+        assert_eq!(j.matches("\"serving\":[").count(), 2, "one per topology");
+        assert!(j.contains(
+            "\"workload\":\"pd_disagg-70b-l2-b8\",\"name\":\"pd_disagg\",\"model\":\"70b\""
+        ));
+        assert!(j.contains("\"rate\":2000,\"steps\":40,\"tokens_mean\":24"));
+        for fam in ["serial", "cu_overlap", "dma_overlap", "auto"] {
+            assert!(j.contains(&format!("\"{fam}\":{{\"p50_s\":")), "{fam}");
+        }
+        assert!(j.contains("\"goodput_tps\":"));
+        assert!(j.contains("\"sdma_occupancy\":"));
+        // The auto family records its winning per-class plan; fixed
+        // families serialize plan:null.
+        assert!(j.contains("\"plan\":\"kv-dma"));
+        assert!(j.contains("\"plan\":null"));
+        let open = j.matches('{').count();
+        assert_eq!(open, j.matches('}').count(), "unbalanced JSON braces");
+        // Still parseable by our own reader, and byte-identical across
+        // thread counts (the serving loop is sequential by design).
         assert!(crate::sweep::parse_json(&j).is_ok());
     }
 

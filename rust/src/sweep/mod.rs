@@ -36,6 +36,7 @@ pub mod plan;
 
 pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
 pub use engine::{
-    default_threads, execute, outcome_lineup, suite_outcomes, E2eOutput, JobOutput, SweepResults,
+    default_threads, execute, outcome_lineup, suite_outcomes, E2eOutput, JobOutput, ServeOutput,
+    SweepResults,
 };
 pub use plan::{job_seed, parse_variants, ChunkSel, MachineVariant, SweepJob, SweepPlan};

@@ -15,6 +15,8 @@ use crate::sched::StrategyKind;
 use crate::util::rng::SplitMix64;
 use crate::workload::e2e::E2eSpec;
 use crate::workload::scenarios::{self, ResolvedScenario, TABLE2};
+use crate::workload::serving::ServeSpec;
+use crate::workload::traffic::TrafficConfig;
 
 /// One machine configuration under evaluation, with a report label.
 #[derive(Debug, Clone)]
@@ -154,6 +156,13 @@ pub struct SweepPlan {
     /// engine, alongside — not multiplying — the pairwise matrix.
     /// Empty by default (pairwise sweeps only).
     pub e2e: Vec<E2eSpec>,
+    /// Serving axis: every entry is evaluated per (machine, node-count)
+    /// by the traffic engine ([`crate::workload::traffic`]) under the
+    /// four serving families, alongside — not multiplying — the
+    /// pairwise matrix. Empty by default.
+    pub serve: Vec<ServeSpec>,
+    /// Traffic parameters shared by every serving point.
+    pub traffic: TrafficConfig,
     pub scenarios: Vec<ResolvedScenario>,
     pub strategies: Vec<StrategyKind>,
     pub cfg: RunnerConfig,
@@ -172,10 +181,34 @@ impl SweepPlan {
             node_counts: vec![1],
             chunk_counts: vec![ChunkSel::Auto],
             e2e: Vec::new(),
+            serve: Vec::new(),
+            traffic: TrafficConfig::default(),
             scenarios,
             strategies,
             cfg,
         }
+    }
+
+    /// Replace the serving axis and its traffic parameters. Rejects
+    /// duplicate specs (duplicate labels would alias JSON entries and
+    /// gate keys) and invalid traffic configs.
+    pub fn with_serve(
+        mut self,
+        specs: Vec<ServeSpec>,
+        traffic: TrafficConfig,
+    ) -> Result<SweepPlan, Error> {
+        traffic.validate()?;
+        for (i, s) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|p| p.label() == s.label()) {
+                return Err(Error::Config(format!(
+                    "duplicate serve workload '{}'",
+                    s.label()
+                )));
+            }
+        }
+        self.serve = specs;
+        self.traffic = traffic;
+        Ok(self)
     }
 
     /// Replace the end-to-end workload axis. Rejects duplicate specs
@@ -573,6 +606,29 @@ mod tests {
         // Duplicate collective kind.
         let dup_kinds = [CollectiveKind::AllGather, CollectiveKind::AllGather];
         assert!(SweepPlan::from_selection(base, &[], &dup_kinds, &[], cfg()).is_err());
+    }
+
+    #[test]
+    fn serve_axis_validates_specs_and_traffic() {
+        let plan = || {
+            SweepPlan::new(
+                vec![MachineVariant::base(MachineConfig::mi300x())],
+                scenarios::suite(),
+                StrategyKind::lineup().to_vec(),
+                cfg(),
+            )
+        };
+        let spec = ServeSpec::parse("tp_decode:70b").unwrap();
+        let ok = plan()
+            .with_serve(vec![spec, ServeSpec::parse("pd_disagg:70b").unwrap()],
+                TrafficConfig::default())
+            .unwrap();
+        assert_eq!(ok.serve.len(), 2);
+        // Duplicate labels alias JSON entries and gate keys.
+        assert!(plan().with_serve(vec![spec, spec], TrafficConfig::default()).is_err());
+        // Invalid traffic configs are rejected at plan-build time.
+        let bad = TrafficConfig { rate: 0.0, ..TrafficConfig::default() };
+        assert!(plan().with_serve(vec![spec], bad).is_err());
     }
 
     #[test]

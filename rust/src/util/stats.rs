@@ -183,6 +183,41 @@ mod tests {
     }
 
     #[test]
+    fn percentile_exact_quantiles_on_known_distribution() {
+        // 0..=100 — the linear-interpolation estimator lands exactly on
+        // integers at every integer percentile (rank = q), so the
+        // serving engine's p50/p95/p99 are exact sample quantiles.
+        let xs: Vec<f64> = (0..=100).map(f64::from).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        // ... and interpolates linearly between ranks.
+        assert_eq!(percentile(&[10.0, 20.0], 25.0), 12.5);
+        assert_eq!(percentile(&[10.0, 20.0, 30.0], 75.0), 25.0);
+        // Single sample: every percentile is that sample.
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_is_order_independent() {
+        // The estimator sorts a copy: input order (e.g. request
+        // completion order in the traffic engine) must not matter, and
+        // the input slice must stay untouched.
+        let sorted: Vec<f64> = (1..=32).map(f64::from).collect();
+        let mut shuffled = sorted.clone();
+        // Deterministic shuffle: stride through the slice coprime to
+        // its length.
+        shuffled.rotate_left(13);
+        shuffled.swap(0, 17);
+        shuffled.swap(5, 29);
+        let before = shuffled.clone();
+        for q in [0.0, 13.7, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&sorted, q).to_bits(), percentile(&shuffled, q).to_bits());
+        }
+        assert_eq!(shuffled, before, "percentile must not reorder its input");
+    }
+
+    #[test]
     fn summary_consistency() {
         let xs = [3.0, 1.0, 2.0];
         let s = Summary::of(&xs);

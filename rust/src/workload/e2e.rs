@@ -29,6 +29,27 @@
 //! planner ([`crate::sched::policy`]): the graph builder here consumes
 //! [`crate::sched::policy::StagePlan`]s, so the fixed families and the
 //! planner share one construction.
+//!
+//! # Contract (where this layer sits)
+//!
+//! This module is the **workload layer**: it knows model shapes
+//! ([`LlamaConfig`]) and training/serving semantics, and turns them into
+//! [`crate::sched::graph::Graph`]s — it never touches the fluid
+//! simulator directly. Everything below consumes what it emits:
+//!
+//! * **builders** (`*_stages`, [`build_graph_planned_with`],
+//!   [`build_serial_chain_with`]) map an [`E2eTrace`] + per-stage plans
+//!   to a task DAG; dependencies encode the workload's semantics
+//!   (prefetch windows, activation chains), never scheduling policy;
+//! * **runners** ([`run_e2e_planned_with`]) execute the DAG on the
+//!   graph engine and report [`E2eRun`] metrics. The invariants the
+//!   test suites pin: the serialized chain reproduces [`serial_total`]
+//!   to ≤1e-9, and `E2eFamily::Auto` never loses to a fixed family
+//!   (the planner's candidate set contains all of them).
+//!
+//! The serving-side analogue of this module is
+//! [`crate::workload::serving`] (per-step decode graphs) driven by
+//! [`crate::workload::traffic`] (the open-loop arrival engine).
 
 use crate::conccl::DmaCollective;
 use crate::config::machine::MachineConfig;
@@ -291,7 +312,7 @@ impl CommPricer {
 /// the CU reservation while resident on the CU backend (the planner's
 /// §V-C pick; the family stamps pass the kernel's full need, which
 /// reproduces the pre-planner numbers exactly).
-fn comm_node(
+pub(crate) fn comm_node(
     m: &MachineConfig,
     topo: &Topology,
     kernel: CollectiveKernel,
@@ -376,7 +397,7 @@ fn defer_ready(ready: Ready, defer: f64) -> Ready {
 /// the plan's `comm_first = false` case. Returns the node id
 /// dependents wait on (the last chunk).
 #[allow(clippy::too_many_arguments)]
-fn push_planned_comm(
+pub(crate) fn push_planned_comm(
     g: &mut Graph,
     m: &MachineConfig,
     topo: &Topology,

@@ -1,13 +1,19 @@
 //! Workload generation: LLaMA-derived GEMMs (Table I), the C3 scenario
-//! suite (Table II), and the taxonomy engine (§III).
+//! suite (Table II), the taxonomy engine (§III), the e2e training
+//! families, and the inference-serving layer ([`serving`] step graphs
+//! driven by the [`traffic`] open-loop arrival engine).
 
 pub mod e2e;
 pub mod llama;
 pub mod scenarios;
+pub mod serving;
 pub mod taxonomy;
 pub mod trace;
+pub mod traffic;
 
 pub use scenarios::{
     resolve, resolve_tag, suite, suite_for, try_resolve, ResolvedScenario, Table2Row, TABLE2,
 };
+pub use serving::{ServeKind, ServeSpec, ServeStepper, StepCost};
 pub use taxonomy::{pct_of_ideal, C3Type, Taxonomy};
+pub use traffic::{run_serve, run_serve_lineup, ServeReport, TrafficConfig};

@@ -1,0 +1,622 @@
+//! Inference-serving workloads on the workload-graph engine: per-step
+//! decode graphs for the three serving shapes the C3 literature singles
+//! out, plus the memoized step evaluator the open-loop traffic engine
+//! ([`crate::workload::traffic`]) drives.
+//!
+//! Three serving workloads ([`ServeKind`]):
+//!
+//! * **`tp_decode`** — tensor-parallel autoregressive decode: per layer,
+//!   an activation all-gather and a partials reduce-scatter around
+//!   *tiny* GEMMs (M = current batch, a few tokens — not 8192). These
+//!   collectives sit squarely in the latency-bound regime (Fig 9 left
+//!   edge / DMA-Latte): wire time is microseconds, so the per-issue cost
+//!   decides the backend, and the MI300X DMA enqueue chain costs more
+//!   than a CU kernel launch.
+//! * **`moe_dispatch`** — expert-parallel MoE decode: per layer, an
+//!   all-to-all token dispatch, the expert GEMM, and an all-to-all
+//!   combine.
+//! * **`pd_disagg`** — prefill/decode disaggregation: the decode stages
+//!   of `tp_decode` plus a **KV-cache ingest stream** — each newly
+//!   admitted request ships its prefilled KV cache from the prefill
+//!   tier as a bulk, deadline-tolerant background transfer that
+//!   contends with the decode collectives for SDMA engines and HBM.
+//!
+//! The two request classes are the serving form of the paper's §V-A
+//! complementary-resource argument: decode collectives are
+//! latency-critical and tiny; the KV stream is bandwidth-hungry and
+//! deadline-tolerant. A uniform backend stamp gets one of them wrong —
+//! `cu_overlap` lets the KV bulk steal CUs and pollute L2 under the
+//! decode GEMMs, `dma_overlap` taxes every per-token collective with
+//! the DMA enqueue chain. The `auto` family plans **per request class**
+//! ([`crate::sched::policy::serve_candidates`]): the cost model
+//! proposes, the graph engine disposes — every candidate (plus a fully
+//! serialized chain and both uniform stamps) is simulated per step
+//! shape and the argmin wins, so auto can never lose to a fixed serving
+//! family on any step.
+//!
+//! # Contract
+//!
+//! [`ServeSpec`] describes the workload (model, simulated layers, max
+//! batch); [`ServeStepper`] maps a step shape `(batch, new_requests)` to
+//! a [`StepCost`] by building the step's task graph and executing it on
+//! the graph engine. The stepper memoizes aggressively — exact shapes
+//! hit a cost cache, and new shapes that share a decode prefix with a
+//! recorded shape resume from the recorded engine checkpoint
+//! ([`crate::sched::graph::execute_resuming`], bit-identical to a cold
+//! run by construction). Everything is deterministic: no wall clock, no
+//! thread-count dependence.
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::{CollectiveKind, CollectiveSpec, DType, GemmShape};
+use crate::error::Error;
+use crate::fabric::Topology;
+use crate::heuristics::CostModel;
+use crate::kernels::{CollectiveKernel, GemmKernel};
+use crate::sched::graph::{self, Graph, PrefixTimeline};
+use crate::sched::policy::{serve_candidates, CollPlan, PlanBackend, ServeClassPlan, StagePlan};
+use crate::workload::e2e::{
+    build_graph_planned_with, build_serial_chain_with, push_planned_comm, CommPricer, E2eFamily,
+    E2eKind, E2eStage, E2eTrace,
+};
+use crate::workload::llama::LlamaConfig;
+
+/// Tensor/expert-parallel ways the decode GEMM shards over (the paper's
+/// 8× MI300X node).
+const TP_WAYS: usize = 8;
+
+/// Prefill context length (tokens) whose KV cache a newly admitted
+/// request ships from the prefill tier (`pd_disagg`).
+pub const KV_CONTEXT_TOKENS: usize = 2048;
+
+/// Which inference-serving workload a spec describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ServeKind {
+    TpDecode,
+    MoeDispatch,
+    PdDisagg,
+}
+
+impl ServeKind {
+    /// Name used in CLI specs, JSON and gate keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeKind::TpDecode => "tp_decode",
+            ServeKind::MoeDispatch => "moe_dispatch",
+            ServeKind::PdDisagg => "pd_disagg",
+        }
+    }
+}
+
+/// One point of the serving axis: workload kind, model, simulated layer
+/// count and the continuous-batching cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeSpec {
+    pub kind: ServeKind,
+    pub model: LlamaConfig,
+    pub model_tag: &'static str,
+    /// Transformer layers simulated per decode step.
+    pub layers: usize,
+    /// Continuous-batching cap: at most this many requests decode
+    /// concurrently.
+    pub max_batch: usize,
+}
+
+impl ServeSpec {
+    /// Parse a CLI axis entry: `workload[:model[:layers[:max_batch]]]`,
+    /// e.g. `pd_disagg:70b:4:16` (defaults: 70b, 4 layers, batch 16).
+    pub fn parse(s: &str) -> Result<ServeSpec, Error> {
+        let mut it = s.split(':');
+        let kind = match it.next().unwrap_or("") {
+            "tp_decode" | "decode" => ServeKind::TpDecode,
+            "moe_dispatch" | "moe" => ServeKind::MoeDispatch,
+            "pd_disagg" | "pd" => ServeKind::PdDisagg,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown serve workload '{other}' (expected tp_decode, moe_dispatch, pd_disagg)"
+                )))
+            }
+        };
+        let (model, model_tag) = match it.next().unwrap_or("70b") {
+            "70b" => (LlamaConfig::llama70b(), "70b"),
+            "405b" => (LlamaConfig::llama405b(), "405b"),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown serve model '{other}' (expected 70b or 405b)"
+                )))
+            }
+        };
+        let parse_pos = |v: Option<&str>, what: &str, default: usize| -> Result<usize, Error> {
+            match v {
+                None => Ok(default),
+                Some(raw) => raw.parse::<usize>().ok().filter(|&x| x >= 1).ok_or_else(|| {
+                    Error::Config(format!("serve {what} '{raw}': expected a positive integer"))
+                }),
+            }
+        };
+        let layers = parse_pos(it.next(), "layer count", 4)?;
+        let max_batch = parse_pos(it.next(), "max batch", 16)?;
+        if let Some(extra) = it.next() {
+            return Err(Error::Config(format!(
+                "serve spec '{s}': unexpected trailing segment '{extra}'"
+            )));
+        }
+        Ok(ServeSpec {
+            kind,
+            model,
+            model_tag,
+            layers,
+            max_batch,
+        })
+    }
+
+    /// Stable label used in JSON and gate keys (no `/`).
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-l{}-b{}",
+            self.kind.name(),
+            self.model_tag,
+            self.layers,
+            self.max_batch
+        )
+    }
+
+    /// Per-token activation payload of one decode-path collective at a
+    /// given batch (bf16, one hidden vector per in-flight request).
+    fn act_bytes(&self, batch: usize) -> u64 {
+        (batch.max(1) * self.model.hidden * DType::Bf16.bytes()) as u64
+    }
+
+    /// Representative decode-path collective of a step (what the
+    /// per-class planner prices for the latency-critical class).
+    pub fn decode_collective(&self, batch: usize) -> CollectiveKernel {
+        let kind = match self.kind {
+            ServeKind::MoeDispatch => CollectiveKind::AllToAll,
+            _ => CollectiveKind::AllGather,
+        };
+        CollectiveKernel::new(CollectiveSpec::new(kind, self.act_bytes(batch)))
+    }
+
+    /// KV-cache bytes `new_requests` freshly admitted requests ship
+    /// from the prefill tier this step (0 for the non-disaggregated
+    /// workloads): K and V, all simulated layers, GQA KV heads,
+    /// [`KV_CONTEXT_TOKENS`] of prefilled context, bf16.
+    pub fn kv_stream_bytes(&self, new_requests: usize) -> u64 {
+        if self.kind != ServeKind::PdDisagg {
+            return 0;
+        }
+        let kv_dim = self.model.kv_heads * self.model.head_dim;
+        (new_requests * 2 * self.layers * kv_dim * KV_CONTEXT_TOKENS * DType::Bf16.bytes()) as u64
+    }
+
+    /// The decode stages of one step at a given batch, as an
+    /// [`E2eTrace`] with activation-chain (TP) dependency semantics:
+    /// every stage's collective depends on the previous GEMM — decode
+    /// has no prefetchable weights.
+    pub fn decode_trace(&self, batch: usize) -> E2eTrace {
+        let b = batch.max(1);
+        let h = self.model.hidden;
+        let act = self.act_bytes(b);
+        let ag = |bytes| CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, bytes));
+        let rs = |bytes| {
+            CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::ReduceScatter, bytes))
+        };
+        let a2a = |bytes| CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllToAll, bytes));
+        let mut stages = Vec::new();
+        match self.kind {
+            ServeKind::TpDecode | ServeKind::PdDisagg => {
+                // Megatron decode layer: AG(activations) → QKV-sharded
+                // attention GEMM → RS, then AG → MLP-sharded GEMM → RS.
+                let attn = GemmKernel::new("dec-attn", GemmShape::bf16(b, 3 * h / TP_WAYS, h));
+                let mlp = GemmKernel::new(
+                    "dec-mlp",
+                    GemmShape::bf16(b, 2 * self.model.ffn / TP_WAYS, h),
+                );
+                for i in 0..self.layers {
+                    stages.push(E2eStage {
+                        label: format!("layer{i}/dec-attn"),
+                        gemm: attn.clone(),
+                        gather: Some(ag(act)),
+                        reduce: Some(rs(act)),
+                    });
+                    stages.push(E2eStage {
+                        label: format!("layer{i}/dec-mlp"),
+                        gemm: mlp.clone(),
+                        gather: Some(ag(act)),
+                        reduce: Some(rs(act)),
+                    });
+                }
+            }
+            ServeKind::MoeDispatch => {
+                // MoE decode layer: all-to-all token dispatch → expert
+                // GEMM → all-to-all combine.
+                let expert = GemmKernel::new(
+                    "moe-expert",
+                    GemmShape::bf16(b, 2 * self.model.ffn / TP_WAYS, h),
+                );
+                for i in 0..self.layers {
+                    stages.push(E2eStage {
+                        label: format!("layer{i}/moe"),
+                        gemm: expert.clone(),
+                        gather: Some(a2a(act)),
+                        reduce: Some(a2a(act)),
+                    });
+                }
+            }
+        }
+        E2eTrace {
+            kind: E2eKind::TpChain,
+            model: self.model.name,
+            stages_per_layer: if self.kind == ServeKind::MoeDispatch { 1 } else { 2 },
+            stages,
+        }
+    }
+}
+
+/// Simulated cost of one decode step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepCost {
+    /// Step makespan, seconds.
+    pub time: f64,
+    /// HBM occupancy of the step graph (fraction of achievable bytes).
+    pub hbm: f64,
+    /// SDMA engine occupancy of the step graph.
+    pub sdma: f64,
+    /// Name of the per-class plan that produced this cost.
+    pub plan: &'static str,
+}
+
+/// One recorded step shape: the engine checkpoint timeline of the first
+/// execution, reusable for any later step that shares the decode-node
+/// prefix (same batch, same plan) but differs in the KV suffix.
+struct Recorded {
+    key: (&'static str, usize, bool),
+    decode_nodes: usize,
+    timeline: PrefixTimeline,
+}
+
+/// Memoized per-step evaluator: the bridge between the traffic loop's
+/// `(batch, new_requests)` shapes and the graph engine. One stepper is
+/// built per (machine, topology, spec, family) and owns the cost model,
+/// the wire-pricing memo and the step caches.
+pub struct ServeStepper {
+    spec: ServeSpec,
+    family: E2eFamily,
+    cost: CostModel,
+    pricer: CommPricer,
+    recorded: Vec<Recorded>,
+    costs: Vec<((usize, usize), StepCost)>,
+    /// Auto-family candidate wins, in first-win order.
+    wins: Vec<(&'static str, usize)>,
+}
+
+/// The serialized-chain pseudo-plan (the never-lose bound; also the
+/// `serial` serving family).
+const SERIAL_PLAN: ServeClassPlan = ServeClassPlan {
+    name: "serial-chain",
+    decode: PlanBackend::Cu,
+    kv: PlanBackend::Cu,
+    kv_chunks: 1,
+};
+
+impl ServeStepper {
+    pub fn new(m: &MachineConfig, topo: &Topology, spec: ServeSpec, family: E2eFamily) -> Self {
+        ServeStepper {
+            spec,
+            family,
+            cost: CostModel::new(m, topo),
+            pricer: CommPricer::new(),
+            recorded: Vec::new(),
+            costs: Vec::new(),
+            wins: Vec::new(),
+        }
+    }
+
+    /// Build one step graph: the decode trace under a per-class plan
+    /// (or the serialized chain), plus the KV ingest node(s) when the
+    /// step admits new requests. Returns the graph and the decode node
+    /// count (the resumable-prefix boundary: every KV node depends on a
+    /// decode node, so the suffix is never rooted and
+    /// `execute_resuming` applies).
+    fn build_step(
+        &mut self,
+        plan: &ServeClassPlan,
+        serialized: bool,
+        batch: usize,
+        new_requests: usize,
+    ) -> Result<(Graph, usize), Error> {
+        let m = &self.cost.m;
+        let topo = &self.cost.topo;
+        let trace = self.spec.decode_trace(batch);
+        let mut g;
+        let decode_nodes;
+        let kv_dep;
+        if serialized {
+            g = build_serial_chain_with(m, topo, &trace, &mut self.pricer)?;
+            decode_nodes = g.nodes.len();
+            // Fully serialized: the KV transfer waits for the whole
+            // decode chain.
+            kv_dep = decode_nodes - 1;
+        } else {
+            let stages: Vec<StagePlan> = trace
+                .stages
+                .iter()
+                .map(|s| StagePlan {
+                    gather: s.gather.as_ref().map(|k| CollPlan {
+                        backend: plan.decode,
+                        cus: k.cu_need(m),
+                        chunks: 1,
+                    }),
+                    reduce: s.reduce.as_ref().map(|k| CollPlan {
+                        backend: plan.decode,
+                        cus: k.cu_need(m),
+                        chunks: 1,
+                    }),
+                    gemm_cus: None,
+                    comm_first: true,
+                })
+                .collect();
+            let pg = build_graph_planned_with(m, topo, &trace, 1, &stages, &mut self.pricer)?;
+            g = pg.graph;
+            decode_nodes = g.nodes.len();
+            // Overlapped: the KV ingest starts with the step (anchored
+            // on the first decode node so the suffix stays
+            // dependency-rooted for the resume contract).
+            kv_dep = 0;
+        }
+        let kv_bytes = self.spec.kv_stream_bytes(new_requests);
+        if kv_bytes > 0 {
+            let kernel =
+                CollectiveKernel::new(CollectiveSpec::new(CollectiveKind::AllGather, kv_bytes));
+            push_planned_comm(
+                &mut g,
+                m,
+                topo,
+                "kv/ingest",
+                &kernel,
+                CollPlan {
+                    backend: plan.kv,
+                    cus: kernel.cu_need(m),
+                    chunks: plan.kv_chunks,
+                },
+                vec![kv_dep],
+                0.0,
+                &mut self.pricer,
+            )?;
+        }
+        Ok((g, decode_nodes))
+    }
+
+    /// Execute one plan for one step shape, resuming from a recorded
+    /// checkpoint when this (plan, batch) decode prefix has run before.
+    fn evaluate(
+        &mut self,
+        plan: &ServeClassPlan,
+        serialized: bool,
+        batch: usize,
+        new_requests: usize,
+    ) -> Result<StepCost, Error> {
+        let key = (plan.name, batch, serialized);
+        let (g, decode_nodes) = self.build_step(plan, serialized, batch, new_requests)?;
+        let m = &self.cost.m;
+        let topo = &self.cost.topo;
+        let run = match self.recorded.iter().find(|r| r.key == key) {
+            Some(rec) => graph::execute_resuming(m, topo, &g, &rec.timeline, rec.decode_nodes)?,
+            None => {
+                let (run, timeline) = graph::execute_recording(m, topo, &g)?;
+                self.recorded.push(Recorded {
+                    key,
+                    decode_nodes,
+                    timeline,
+                });
+                run
+            }
+        };
+        Ok(StepCost {
+            time: run.total,
+            hbm: run.hbm_occupancy,
+            sdma: run.sdma_occupancy,
+            plan: plan.name,
+        })
+    }
+
+    /// Cost of one decode step at `(batch, new_requests)` under this
+    /// stepper's family. Exact repeat shapes are served from the cost
+    /// cache; the `auto` family simulates the per-class candidate
+    /// lineup (seeded with the serialized chain) and takes the argmin,
+    /// so it can never lose to `serial`, `cu_overlap` or `dma_overlap`
+    /// on any step shape.
+    pub fn step(&mut self, batch: usize, new_requests: usize) -> Result<StepCost, Error> {
+        let batch = batch.max(1);
+        let new_requests = new_requests.min(batch);
+        let shape = (batch, new_requests);
+        if let Some(&(_, c)) = self.costs.iter().find(|&&(s, _)| s == shape) {
+            return Ok(c);
+        }
+        let cost = match self.family {
+            E2eFamily::Serial => self.evaluate(&SERIAL_PLAN, true, batch, new_requests)?,
+            E2eFamily::CuOverlap => {
+                let plan = ServeClassPlan {
+                    name: "cu-uniform",
+                    decode: PlanBackend::Cu,
+                    kv: PlanBackend::Cu,
+                    kv_chunks: 1,
+                };
+                self.evaluate(&plan, false, batch, new_requests)?
+            }
+            E2eFamily::DmaOverlap => {
+                let plan = ServeClassPlan {
+                    name: "dma-uniform",
+                    decode: PlanBackend::Dma,
+                    kv: PlanBackend::Dma,
+                    kv_chunks: 1,
+                };
+                self.evaluate(&plan, false, batch, new_requests)?
+            }
+            E2eFamily::Auto => {
+                let decode = self.spec.decode_collective(batch);
+                let kv_bytes = self.spec.kv_stream_bytes(new_requests);
+                let cands = serve_candidates(&self.cost, &decode, kv_bytes);
+                let mut best = self.evaluate(&SERIAL_PLAN, true, batch, new_requests)?;
+                for c in &cands {
+                    let cost = self.evaluate(c, false, batch, new_requests)?;
+                    if cost.time < best.time {
+                        best = cost;
+                    }
+                }
+                match self.wins.iter_mut().find(|(n, _)| *n == best.plan) {
+                    Some((_, n)) => *n += 1,
+                    None => self.wins.push((best.plan, 1)),
+                }
+                best
+            }
+        };
+        self.costs.push((shape, cost));
+        Ok(cost)
+    }
+
+    /// The modal winning per-class plan of an `auto` stepper (ties go
+    /// to the first winner), `None` for fixed families or before any
+    /// step ran.
+    pub fn winning_plan(&self) -> Option<&'static str> {
+        self.wins
+            .iter()
+            .max_by_key(|&&(_, n)| n)
+            .map(|&(name, _)| name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    #[test]
+    fn spec_parse_round_trips_and_rejects_garbage() {
+        let s = ServeSpec::parse("pd_disagg:70b:4:16").unwrap();
+        assert_eq!(s.kind, ServeKind::PdDisagg);
+        assert_eq!(s.layers, 4);
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.label(), "pd_disagg-70b-l4-b16");
+        // Defaults.
+        let d = ServeSpec::parse("tp_decode").unwrap();
+        assert_eq!((d.layers, d.max_batch, d.model_tag), (4, 16, "70b"));
+        // Aliases.
+        assert_eq!(ServeSpec::parse("moe").unwrap().kind, ServeKind::MoeDispatch);
+        assert_eq!(ServeSpec::parse("pd:405b").unwrap().model_tag, "405b");
+        // Garbage is a typed error, never a panic.
+        for bad in ["", "fsdp_step", "tp_decode:13b", "tp_decode:70b:0", "tp_decode:70b:4:x",
+            "tp_decode:70b:4:16:9"]
+        {
+            assert!(ServeSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn decode_traces_have_serving_shapes() {
+        let tp = ServeSpec::parse("tp_decode:70b:3:8").unwrap().decode_trace(8);
+        assert_eq!(tp.stages.len(), 6, "2 stages per layer");
+        for s in &tp.stages {
+            assert_eq!(s.gemm.shape.m, 8, "decode GEMM M is the batch, not 8192");
+            assert_eq!(s.gather.unwrap().spec.kind, CollectiveKind::AllGather);
+            assert_eq!(s.reduce.unwrap().spec.kind, CollectiveKind::ReduceScatter);
+            // Per-token activation payloads are tiny — the latency-bound
+            // regime the chunk tuner and the issue-latency model target.
+            assert!(s.gather.unwrap().spec.size_bytes < 1 << 20);
+            assert!(s.gather.unwrap().is_latency_bound(&m()));
+        }
+        let moe = ServeSpec::parse("moe_dispatch:70b:3:8").unwrap().decode_trace(8);
+        assert_eq!(moe.stages.len(), 3, "1 stage per layer");
+        for s in &moe.stages {
+            assert_eq!(s.gather.unwrap().spec.kind, CollectiveKind::AllToAll);
+            assert_eq!(s.reduce.unwrap().spec.kind, CollectiveKind::AllToAll);
+        }
+    }
+
+    #[test]
+    fn kv_stream_only_exists_for_disaggregation() {
+        let pd = ServeSpec::parse("pd_disagg:70b").unwrap();
+        assert_eq!(pd.kv_stream_bytes(0), 0);
+        let one = pd.kv_stream_bytes(1);
+        assert!(one > 16 << 20, "a prefilled context is a bulk transfer ({one}B)");
+        assert_eq!(pd.kv_stream_bytes(3), 3 * one, "KV bytes scale with admissions");
+        assert_eq!(ServeSpec::parse("tp_decode:70b").unwrap().kv_stream_bytes(4), 0);
+        assert_eq!(ServeSpec::parse("moe_dispatch:70b").unwrap().kv_stream_bytes(4), 0);
+    }
+
+    #[test]
+    fn resumed_step_matches_cold_execution_bit_for_bit() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("pd_disagg:70b:2:8").unwrap();
+        // Warm stepper: records (batch=4) with new=2, then re-evaluates
+        // new=1 by resuming from the recorded decode-prefix checkpoint.
+        let mut warm = ServeStepper::new(&m, &topo, spec, E2eFamily::CuOverlap);
+        warm.step(4, 2).unwrap();
+        let resumed = warm.step(4, 1).unwrap();
+        // Cold stepper: evaluates (4, 1) as its first, recorded run.
+        let mut cold = ServeStepper::new(&m, &topo, spec, E2eFamily::CuOverlap);
+        let from_scratch = cold.step(4, 1).unwrap();
+        assert_eq!(resumed.time.to_bits(), from_scratch.time.to_bits());
+        assert_eq!(resumed.hbm.to_bits(), from_scratch.hbm.to_bits());
+        assert_eq!(resumed.sdma.to_bits(), from_scratch.sdma.to_bits());
+    }
+
+    #[test]
+    fn auto_step_never_loses_to_any_fixed_family() {
+        let m = m();
+        let topo = m.topology(1);
+        for spec_s in ["tp_decode:70b:2:8", "moe_dispatch:70b:2:8", "pd_disagg:70b:2:8"] {
+            let spec = ServeSpec::parse(spec_s).unwrap();
+            let shapes = [(4usize, 2usize), (8, 0), (1, 1)];
+            let mut auto = ServeStepper::new(&m, &topo, spec, E2eFamily::Auto);
+            for fam in [E2eFamily::Serial, E2eFamily::CuOverlap, E2eFamily::DmaOverlap] {
+                let mut fixed = ServeStepper::new(&m, &topo, spec, fam);
+                for &(b, n) in &shapes {
+                    let a = auto.step(b, n).unwrap();
+                    let f = fixed.step(b, n).unwrap();
+                    assert!(
+                        a.time <= f.time + 1e-12,
+                        "{spec_s} auto {} vs {} {} at ({b},{n})",
+                        a.time,
+                        fam.name(),
+                        f.time
+                    );
+                }
+            }
+            assert!(auto.winning_plan().is_some());
+        }
+    }
+
+    #[test]
+    fn disagg_auto_routes_kv_to_dma_and_decode_to_cus() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("pd_disagg:70b:4:16").unwrap();
+        let mut auto = ServeStepper::new(&m, &topo, spec, E2eFamily::Auto);
+        let c = auto.step(16, 2).unwrap();
+        assert!(
+            c.plan.starts_with("kv-dma"),
+            "per-class split must win the disaggregated step (won: {})",
+            c.plan
+        );
+        assert!(c.sdma > 0.0, "the KV stream must occupy SDMA engines");
+    }
+
+    #[test]
+    fn step_costs_are_cached_and_deterministic() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("tp_decode:70b:2:8").unwrap();
+        let mut a = ServeStepper::new(&m, &topo, spec, E2eFamily::Auto);
+        let mut b = ServeStepper::new(&m, &topo, spec, E2eFamily::Auto);
+        let x = a.step(5, 1).unwrap();
+        let y = b.step(5, 1).unwrap();
+        assert_eq!(x.time.to_bits(), y.time.to_bits());
+        // Repeat shape: served from cache, identical.
+        let x2 = a.step(5, 1).unwrap();
+        assert_eq!(x, x2);
+    }
+}

@@ -1,0 +1,365 @@
+//! The streaming traffic engine: a long-running, deterministic,
+//! open-loop serving simulation over [`crate::workload::serving`].
+//!
+//! Requests arrive by a Poisson process (identity-seeded, exponential
+//! inter-arrivals at `--rate` req/s) with a uniform decode-length
+//! distribution around `tokens_mean`. A continuous-batching loop admits
+//! arrivals up to the spec's `max_batch`, runs one decode step per
+//! iteration through the memoized [`ServeStepper`], advances simulated
+//! time by the step's makespan, and retires requests as their tokens
+//! drain. Steady-state latency percentiles use the exact sorted
+//! estimator ([`crate::util::stats::percentile`]) over per-request
+//! completion latencies — no reservoir, no decay.
+//!
+//! # Determinism
+//!
+//! Everything is a pure function of `(machine, topology, spec, family,
+//! config, seed)`. Arrival draws are consumed in a fixed per-request
+//! order — one `(inter-arrival, tokens)` pair per request index — so
+//! families with different step clocks still see the byte-identical
+//! request stream, and the loop itself is sequential, so reports are
+//! byte-identical at any `--threads` setting. Two runs with the same
+//! seed produce bit-equal floats.
+//!
+//! # Example: a minimal serve loop
+//!
+//! ```
+//! use conccl::config::machine::MachineConfig;
+//! use conccl::workload::e2e::E2eFamily;
+//! use conccl::workload::serving::ServeSpec;
+//! use conccl::workload::traffic::{run_serve, TrafficConfig};
+//!
+//! let m = MachineConfig::mi300x();
+//! let topo = m.topology(1);
+//! let spec = ServeSpec::parse("tp_decode:70b:2:8").unwrap();
+//! let cfg = TrafficConfig { rate: 2000.0, steps: 40, ..TrafficConfig::default() };
+//! let r = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg, 42).unwrap();
+//! assert!(r.requests_completed > 0);
+//! assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+//! assert!(r.goodput_tps > 0.0);
+//! ```
+
+use crate::config::machine::MachineConfig;
+use crate::error::Error;
+use crate::fabric::Topology;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::workload::e2e::E2eFamily;
+use crate::workload::serving::{ServeSpec, ServeStepper};
+
+/// Open-loop traffic parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficConfig {
+    /// Request arrival rate, requests per second (Poisson).
+    pub rate: f64,
+    /// Decode steps to simulate (the primary budget).
+    pub steps: usize,
+    /// Optional simulated-seconds cap (0 = no cap).
+    pub duration: f64,
+    /// Mean decode length in tokens; lengths are uniform on
+    /// `[1, 2*tokens_mean - 1]`.
+    pub tokens_mean: f64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            rate: 2000.0,
+            steps: 200,
+            duration: 0.0,
+            tokens_mean: 24.0,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Typed validation of CLI-reachable parameters.
+    pub fn validate(&self) -> Result<(), Error> {
+        if !(self.rate > 0.0) || !self.rate.is_finite() {
+            return Err(Error::Config(format!(
+                "serve rate must be a positive finite req/s (got {})",
+                self.rate
+            )));
+        }
+        if self.steps < 1 {
+            return Err(Error::Config("serve steps must be >= 1".into()));
+        }
+        if !(self.tokens_mean >= 1.0) || !self.tokens_mean.is_finite() {
+            return Err(Error::Config(format!(
+                "serve tokens mean must be >= 1 (got {})",
+                self.tokens_mean
+            )));
+        }
+        if !(self.duration >= 0.0) || !self.duration.is_finite() {
+            return Err(Error::Config(format!(
+                "serve duration must be >= 0 seconds (got {})",
+                self.duration
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Steady-state report of one (spec, family) traffic run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeReport {
+    pub family: E2eFamily,
+    pub requests_arrived: usize,
+    pub requests_completed: usize,
+    /// Decode steps actually simulated.
+    pub steps: usize,
+    /// Simulated seconds covered.
+    pub elapsed: f64,
+    /// Request-latency percentiles (arrival → last token), seconds.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Decoded tokens per simulated second.
+    pub goodput_tps: f64,
+    /// `serial p99 / this family's p99` (1.0 for serial itself).
+    pub speedup: f64,
+    /// Step-time-weighted HBM occupancy over the busy fraction.
+    pub hbm_occupancy: f64,
+    /// Step-time-weighted SDMA engine occupancy.
+    pub sdma_occupancy: f64,
+    /// Modal winning per-class plan (auto family only).
+    pub plan: Option<&'static str>,
+}
+
+/// Deterministic open-loop arrival process: request `i`'s draws are
+/// always the `2i`-th and `2i+1`-th RNG outputs, independent of the
+/// consuming family's step clock.
+struct Arrivals {
+    rng: Rng,
+    rate: f64,
+    tokens_mean: f64,
+    t: f64,
+}
+
+impl Arrivals {
+    fn new(seed: u64, cfg: &TrafficConfig) -> Arrivals {
+        Arrivals {
+            rng: Rng::new(seed),
+            rate: cfg.rate,
+            tokens_mean: cfg.tokens_mean,
+            t: 0.0,
+        }
+    }
+
+    /// Next request: (arrival time, decode tokens).
+    fn next(&mut self) -> (f64, usize) {
+        let u = self.rng.f64();
+        // Inverse-CDF exponential; u ∈ [0,1) keeps the log argument in
+        // (0,1] so dt is finite and non-negative.
+        self.t += -(1.0 - u).ln() / self.rate;
+        let u2 = self.rng.f64();
+        let tokens = 1 + (u2 * 2.0 * (self.tokens_mean - 1.0)).floor() as usize;
+        (self.t, tokens)
+    }
+}
+
+/// Run one (spec, family) traffic simulation. Non-serial families also
+/// run the serialized baseline internally to report `speedup`; use
+/// [`run_serve_lineup`] to share that baseline across a family lineup.
+pub fn run_serve(
+    m: &MachineConfig,
+    topo: &Topology,
+    spec: ServeSpec,
+    family: E2eFamily,
+    cfg: TrafficConfig,
+    seed: u64,
+) -> Result<ServeReport, Error> {
+    let serial_p99 = if family == E2eFamily::Serial {
+        None
+    } else {
+        Some(run_one(m, topo, spec, E2eFamily::Serial, cfg, seed)?.p99)
+    };
+    let mut r = run_one(m, topo, spec, family, cfg, seed)?;
+    if let Some(s) = serial_p99 {
+        r.speedup = s / r.p99;
+    }
+    Ok(r)
+}
+
+/// Run the full family lineup (serial, cu_overlap, dma_overlap, auto)
+/// on one spec, sharing the serial baseline for the speedup column.
+pub fn run_serve_lineup(
+    m: &MachineConfig,
+    topo: &Topology,
+    spec: ServeSpec,
+    cfg: TrafficConfig,
+    seed: u64,
+) -> Result<Vec<ServeReport>, Error> {
+    let serial = run_one(m, topo, spec, E2eFamily::Serial, cfg, seed)?;
+    let mut out = vec![serial];
+    for family in [E2eFamily::CuOverlap, E2eFamily::DmaOverlap, E2eFamily::Auto] {
+        let mut r = run_one(m, topo, spec, family, cfg, seed)?;
+        r.speedup = serial.p99 / r.p99;
+        out.push(r);
+    }
+    Ok(out)
+}
+
+fn run_one(
+    m: &MachineConfig,
+    topo: &Topology,
+    spec: ServeSpec,
+    family: E2eFamily,
+    cfg: TrafficConfig,
+    seed: u64,
+) -> Result<ServeReport, Error> {
+    cfg.validate()?;
+    let mut stepper = ServeStepper::new(m, topo, spec, family);
+    let mut arrivals = Arrivals::new(seed, &cfg);
+    let mut next_arrival = arrivals.next();
+    // Active requests: (arrival time, tokens left). FIFO admission.
+    let mut active: Vec<(f64, usize)> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut t = 0.0_f64;
+    let (mut arrived, mut completed, mut steps_done) = (0usize, 0usize, 0usize);
+    let mut tokens_done = 0usize;
+    let (mut hbm_w, mut sdma_w) = (0.0_f64, 0.0_f64);
+    while steps_done < cfg.steps && (cfg.duration <= 0.0 || t < cfg.duration) {
+        // Admit everything that has arrived, up to the batching cap.
+        let mut new_requests = 0usize;
+        while active.len() < spec.max_batch && next_arrival.0 <= t {
+            active.push((next_arrival.0, next_arrival.1));
+            next_arrival = arrivals.next();
+            arrived += 1;
+            new_requests += 1;
+        }
+        if active.is_empty() {
+            // Idle: jump the clock to the next arrival.
+            t = next_arrival.0;
+            continue;
+        }
+        let cost = stepper.step(active.len(), new_requests)?;
+        t += cost.time;
+        hbm_w += cost.hbm * cost.time;
+        sdma_w += cost.sdma * cost.time;
+        steps_done += 1;
+        tokens_done += active.len();
+        // Every active request decoded one token this step.
+        let mut still = Vec::with_capacity(active.len());
+        for (at, tokens) in active.drain(..) {
+            if tokens <= 1 {
+                completed += 1;
+                latencies.push(t - at);
+            } else {
+                still.push((at, tokens - 1));
+            }
+        }
+        active = still;
+    }
+    if latencies.is_empty() {
+        return Err(Error::Config(format!(
+            "serve run completed no requests in {} steps at rate {} — raise --steps or --rate",
+            cfg.steps, cfg.rate
+        )));
+    }
+    Ok(ServeReport {
+        family,
+        requests_arrived: arrived,
+        requests_completed: completed,
+        steps: steps_done,
+        elapsed: t,
+        p50: percentile(&latencies, 50.0),
+        p95: percentile(&latencies, 95.0),
+        p99: percentile(&latencies, 99.0),
+        goodput_tps: tokens_done as f64 / t,
+        speedup: 1.0,
+        hbm_occupancy: hbm_w / t,
+        sdma_occupancy: sdma_w / t,
+        plan: stepper.winning_plan(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::mi300x()
+    }
+
+    fn cfg(steps: usize) -> TrafficConfig {
+        TrafficConfig {
+            steps,
+            ..TrafficConfig::default()
+        }
+    }
+
+    #[test]
+    fn config_validation_is_typed() {
+        assert!(TrafficConfig::default().validate().is_ok());
+        for bad in [
+            TrafficConfig { rate: 0.0, ..TrafficConfig::default() },
+            TrafficConfig { rate: f64::NAN, ..TrafficConfig::default() },
+            TrafficConfig { steps: 0, ..TrafficConfig::default() },
+            TrafficConfig { tokens_mean: 0.5, ..TrafficConfig::default() },
+            TrafficConfig { duration: -1.0, ..TrafficConfig::default() },
+        ] {
+            assert!(matches!(bad.validate(), Err(Error::Config(_))), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("pd_disagg:70b:2:8").unwrap();
+        let a = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg(60), 24301).unwrap();
+        let b = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg(60), 24301).unwrap();
+        assert_eq!(a.p50.to_bits(), b.p50.to_bits());
+        assert_eq!(a.p99.to_bits(), b.p99.to_bits());
+        assert_eq!(a.goodput_tps.to_bits(), b.goodput_tps.to_bits());
+        assert_eq!(a.requests_completed, b.requests_completed);
+        // A different seed sees a different request stream.
+        let c = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg(60), 7).unwrap();
+        assert_ne!(a.p50.to_bits(), c.p50.to_bits());
+    }
+
+    #[test]
+    fn lineup_shares_the_serial_baseline_and_auto_never_loses() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("pd_disagg:70b:2:8").unwrap();
+        let runs = run_serve_lineup(&m, &topo, spec, cfg(60), 24301).unwrap();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[0].family, E2eFamily::Serial);
+        assert_eq!(runs[0].speedup, 1.0);
+        let auto = runs.iter().find(|r| r.family == E2eFamily::Auto).unwrap();
+        for r in &runs {
+            assert!(
+                auto.p99 <= r.p99 * (1.0 + 1e-9),
+                "auto p99 {} must not lose to {} p99 {}",
+                auto.p99,
+                r.family.name(),
+                r.p99
+            );
+        }
+        assert!(auto.plan.is_some());
+        // The percentile ordering invariant.
+        for r in &runs {
+            assert!(r.p50 <= r.p95 && r.p95 <= r.p99);
+            assert!(r.goodput_tps > 0.0 && r.elapsed > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_run_is_a_typed_error() {
+        let m = m();
+        let topo = m.topology(1);
+        let spec = ServeSpec::parse("tp_decode:70b:2:8").unwrap();
+        // A near-zero arrival rate with a tight duration cap: the clock
+        // hits the cap before the first request ever arrives.
+        let short = TrafficConfig {
+            rate: 1e-9,
+            duration: 1e-3,
+            tokens_mean: 64.0,
+            ..TrafficConfig::default()
+        };
+        let r = run_serve(&m, &topo, spec, E2eFamily::Serial, short, 1);
+        assert!(matches!(r, Err(Error::Config(_))));
+    }
+}

@@ -234,6 +234,44 @@ fn chunk_axis_json_is_deterministic_across_thread_counts() {
 }
 
 #[test]
+fn serve_axis_json_is_deterministic_across_thread_counts() {
+    // Acceptance criterion: `conccl sweep --serve ...` produces
+    // byte-identical JSON regardless of worker count — the serving loop
+    // is sequential and its arrival streams are identity-seeded, so the
+    // open-loop traffic cannot pick up scheduling nondeterminism.
+    use conccl::workload::serving::ServeSpec;
+    use conccl::workload::traffic::TrafficConfig;
+    let plan = |cfg| {
+        SweepPlan::new(
+            vec![MachineVariant::base(MachineConfig::mi300x())],
+            vec![resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap()],
+            vec![StrategyKind::Conccl],
+            cfg,
+        )
+        .with_node_counts(vec![1, 2])
+        .unwrap()
+        .with_serve(
+            vec![
+                ServeSpec::parse("tp_decode:70b:2:8").unwrap(),
+                ServeSpec::parse("pd_disagg:70b:2:8").unwrap(),
+            ],
+            TrafficConfig {
+                steps: 40,
+                ..TrafficConfig::default()
+            },
+        )
+        .unwrap()
+    };
+    let j1 = execute(plan(jittered_cfg()), 1).to_json();
+    let j3 = execute(plan(jittered_cfg()), 3).to_json();
+    assert_eq!(j1, j3, "serve-axis sweep JSON diverged across thread counts");
+    assert!(j1.starts_with("{\"version\":6,"));
+    assert!(j1.contains("\"serving\":["));
+    assert!(j1.contains("\"workload\":\"pd_disagg-70b-l2-b8\""));
+    assert!(j1.contains("\"auto\":{\"p50_s\":"));
+}
+
+#[test]
 fn chunked_conccl_dominates_on_gc_equal_in_sweep_output() {
     // Acceptance criterion, end to end through the sweep engine: on the
     // GC-equal Table II scenarios the auto-chunked ConCCL column's
