@@ -42,9 +42,9 @@ fn main() {
         t.row(vec![
             conccl::util::units::fmt_bytes(size),
             fmt_seconds(enq),
-            fmt_seconds(m.dma_fetch_s),
+            fmt_seconds(m.sdma.fetch_s),
             fmt_seconds(wire),
-            fmt_seconds(m.dma_sync_s),
+            fmt_seconds(m.sdma.sync_s),
             fmt_seconds(total),
             format!("{:.0}%", 100.0 * (total - wire) / total),
         ]);

@@ -25,7 +25,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "machine: {} — {} CUs, {} SDMA engines, {} GPUs\n",
         m.name,
         m.cus_total(),
-        m.sdma_engines,
+        m.sdma.engines,
         m.num_gpus
     );
 
@@ -90,7 +90,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "\nConCCL all-gather of 8×{shard_len}B shards: modelled {} on {} SDMA engines — \
          all 8 GPUs hold identical {}B buffers ✓",
         fmt_seconds(run.time),
-        node.machine.sdma_engines,
+        node.machine.sdma.engines,
         reference.len()
     );
 

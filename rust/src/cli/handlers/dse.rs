@@ -1,0 +1,147 @@
+//! `conccl dse`: design-space exploration over hypothetical DMA-engine
+//! subsystems — every grid point is a full machine the planner can
+//! consume, reported as Pareto frontiers of speedup vs. engine area.
+
+use crate::cli::Args;
+use crate::sweep::dse::{run as run_dse, DsePlan};
+use crate::util::table::{speedup, Table};
+use crate::util::units::fmt_seconds;
+use crate::workload::e2e::E2eSpec;
+use crate::workload::serving::ServeSpec;
+use crate::workload::traffic::TrafficConfig;
+
+use super::{csv_list, find_scenario, parse_collective};
+
+/// Parse a comma-separated `usize` axis option.
+fn usize_axis(args: &Args, key: &str, default: &str) -> Result<Vec<usize>, String> {
+    args.opt(key, default)
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|e| format!("--{key}: {e}")))
+        .collect()
+}
+
+/// Sweep {engines × queue depth × packet fusing × NIC bandwidth} and
+/// report per-workload Pareto frontiers of speedup vs. engine area.
+pub(crate) fn dse_cmd(args: &Args) -> Result<(), String> {
+    let m = args.machine()?;
+    let mut plan = DsePlan::new(m);
+    plan.engines = usize_axis(args, "engines", "2,4,7,14")?;
+    plan.queue_depths = usize_axis(args, "queue-depths", "0,8")?;
+    plan.fused = usize_axis(args, "fused", "1")?;
+    // The NIC axis is given in GB/s on the CLI, stored in B/s.
+    if let Some(spec) = args.options.get("nic-bw") {
+        plan.nic_bws = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<f64>()
+                    .map(|gb| gb * 1e9)
+                    .map_err(|e| format!("--nic-bw: {e}"))
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    plan.nodes = args.opt_usize("nodes", 1)?;
+    plan.seed = args.opt_u64("seed", 24301)?;
+
+    let kind = parse_collective(&args.opt("collective", "ag"))?;
+    if let Some(tags) = args.options.get("pairs") {
+        for tag in csv_list(tags) {
+            plan.pairs.push(find_scenario(tag, kind)?);
+        }
+    }
+    if let Some(spec) = args.options.get("e2e") {
+        plan.e2e = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(E2eSpec::parse)
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--e2e: {e}"))?;
+    }
+    if let Some(spec) = args.options.get("serve") {
+        plan.serve = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(ServeSpec::parse)
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("--serve: {e}"))?;
+    }
+    plan.traffic = TrafficConfig {
+        rate: args.opt_f64("rate", 2000.0)?,
+        steps: args.opt_usize("serve-steps", 200)?,
+        tokens_mean: args.opt_f64("serve-tokens", 24.0)?,
+        duration: 0.0,
+    };
+    // No workload options at all: score the canonical FSDP step so a
+    // bare `conccl dse` still answers the headline hardware question.
+    if plan.pairs.is_empty() && plan.e2e.is_empty() && plan.serve.is_empty() {
+        plan.e2e = vec![E2eSpec::parse("fsdp_step:70b:2:2").map_err(|e| e.to_string())?];
+    }
+
+    let threads = args.opt_usize("threads", 0)?;
+    let t0 = std::time::Instant::now();
+    let res = run_dse(plan, threads).map_err(|e| e.to_string())?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    for (wi, w) in res.workloads.iter().enumerate() {
+        let front: Vec<usize> = res.frontier(wi).iter().map(|s| s.point_idx).collect();
+        let mut t = Table::new(vec![
+            "point".to_string(),
+            "area".to_string(),
+            "speedup".to_string(),
+            "pareto".to_string(),
+        ])
+        .left_cols(1)
+        .title(format!(
+            "dse '{}': speedup vs engine-area proxy (* = Pareto frontier)",
+            w.key
+        ));
+        for (pi, p) in res.points.iter().enumerate() {
+            let cell = match &res.outcomes[pi][wi] {
+                Ok(v) => speedup(*v),
+                Err(_) => "ERR".to_string(),
+            };
+            t.row(vec![
+                p.label.clone(),
+                format!("{:.2}", p.area),
+                cell,
+                if front.contains(&pi) { "*".to_string() } else { String::new() },
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    let errs = res.errors();
+    if !errs.is_empty() {
+        println!("{} dse point(s) failed (exploration continued):", errs.len());
+        for (pi, wi, e) in &errs {
+            println!("  [{} × {}]: {e}", res.points[*pi].label, res.workloads[*wi].key);
+        }
+    }
+    println!(
+        "{} points × {} workload column(s) on {} worker thread(s) in {}",
+        res.points.len(),
+        res.workloads.len(),
+        res.threads_used,
+        fmt_seconds(elapsed)
+    );
+    if let Some(path) = args.options.get("json") {
+        let j = res.to_json();
+        if path == "-" {
+            println!("{j}");
+        } else {
+            std::fs::write(path, &j).map_err(|e| format!("--json {path}: {e}"))?;
+            println!("wrote dse report to {path}");
+        }
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} dse point(s) failed (see list above)", errs.len()))
+    }
+}

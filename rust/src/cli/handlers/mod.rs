@@ -5,6 +5,7 @@
 //! `Result<(), String>`; the binary maps `Err` to a non-zero exit.
 
 mod analyze;
+mod dse;
 mod e2e;
 mod run;
 mod serve;
@@ -26,6 +27,7 @@ pub fn dispatch(args: &Args) -> Result<(), String> {
         "characterize" => analyze::characterize(args),
         "run" => run::run_one(args),
         "sweep" => sweep::sweep_cmd(args),
+        "dse" => dse::dse_cmd(args),
         "bench-gate" => sweep::bench_gate(args),
         "rp-sweep" => run::rp_sweep(args),
         "report" => analyze::full_report(args),

@@ -8,6 +8,9 @@
 //!   run            one scenario under one strategy
 //!   sweep          parallel scenario sweep: {scenarios x strategies x
 //!                  machines} on a worker pool, tables + JSON report
+//!   dse            design-space exploration: score workloads on a grid
+//!                  of hypothetical DMA-engine subsystems, report
+//!                  Pareto frontiers of speedup vs engine area
 //!   rp-sweep       c3_rp CU-reservation sweep for one scenario
 //!   report         full Table II suite -> Fig 7/8/10 + headline
 //!   conccl-bw      Fig 9: ConCCL vs RCCL isolated bandwidth sweep
@@ -136,6 +139,8 @@ SUBCOMMANDS
                             the chunked pipeline strategies (auto = the
                             runtime chunk heuristic)
   sweep                     parallel scenario sweep (see SWEEP OPTIONS)
+  dse                       DMA-engine design-space exploration (see
+                            DSE OPTIONS)
   bench-gate --report r.json [--baseline BENCH_baseline.json]
       [--tolerance 0.02] [--strict]
                             CI perf gate: fail on median-speedup drops;
@@ -208,6 +213,27 @@ SWEEP OPTIONS (conccl sweep)
   --threads N               worker threads (0 = one per core)
   --jitter X --seed N       measurement-protocol noise / base RNG seed
   --json PATH|-             write the machine-readable report
+
+DSE OPTIONS (conccl dse)
+  --engines 2,4,7,14        SDMA engine-count axis
+  --queue-depths 0,8        per-engine command-queue depths (0 = legacy
+                            unbounded queues)
+  --fused 1,4               fused-command-packet granularities
+  --nic-bw 25,50,100        NIC line-rate axis, GB/s (omit = base NIC)
+  --pairs tag,tag           pairwise workloads (Table II tags) scored by
+                            the ConCCL strategy's speedup
+  --collective ag|a2a|...   collective kind for --pairs (default ag)
+  --e2e spec,spec           e2e workloads; each scores every grid point
+                            under dma_overlap AND the planner's auto
+  --serve spec,spec         serving workloads (dma_overlap + auto p99
+                            speedups; identical arrivals on every point)
+  --rate/--serve-steps/--serve-tokens   as in sweep
+  --nodes N                 topology node count (single value)
+  --threads N --seed N      worker threads / arrival base seed
+  --json PATH|-             write the v7 {\"dse\": ...} report with
+                            per-workload Pareto frontiers
+                            (default grid scores fsdp_step:70b:2:2 when
+                            no workload option is given)
 
 COMMON OPTIONS
   --config <file>           TOML-lite machine config

@@ -7,7 +7,10 @@
 //!   composition: how much GEMM interference the hybrid avoids.
 //! * **DMA-engine-count sensitivity** — the paper's closing argument is
 //!   "a strong case for GPU DMA engine advancements"; we sweep
-//!   `sdma_engines` to show where the PoC design stops scaling.
+//!   `sdma.engines` to show where the PoC design stops scaling (the
+//!   `dse` sweep generalizes this to the full [`SdmaModel`] grid).
+//!
+//! [`SdmaModel`]: crate::gpu::sdma::SdmaModel
 //! * **§VII-B1 multi-kernel schedule prioritization** — the workgroup-
 //!   count ordering applied to >2 concurrent kernels.
 
@@ -62,14 +65,16 @@ pub fn allgather_time_with_engines(
     engines: usize,
 ) -> f64 {
     let mut cfg = m.clone();
-    cfg.sdma_engines = engines;
+    cfg.sdma.engines = engines;
     let n = cfg.num_gpus;
     let shard = (size_bytes as usize).div_ceil(n);
     let shards: Vec<BufferId> = (0..n as u64).map(BufferId).collect();
     let outs: Vec<BufferId> = (100..100 + n as u64).map(BufferId).collect();
     let plan = allgather_plan(n, &shards, &outs, shard);
     let topo = Topology::fully_connected(n);
-    schedule(&cfg, &topo, &plan, EnginePolicy::LeastLoaded).total
+    schedule(&cfg, &topo, &plan, EnginePolicy::LeastLoaded)
+        .expect("direct all-gather plan matches its own topology")
+        .total
 }
 
 /// §VII-B1: order N concurrent kernels (GEMMs + collectives) for launch
@@ -104,8 +109,8 @@ pub fn multi_kernel_sp_order(
 pub fn gpu_orchestrated_variant(m: &MachineConfig) -> MachineConfig {
     let mut v = m.clone();
     v.name = format!("{}+gpu-dma-ctl", m.name);
-    v.dma_enqueue_s = 0.5e-6;
-    v.dma_sync_s = 1e-6;
+    v.sdma.enqueue_s = 0.5e-6;
+    v.sdma.sync_s = 1e-6;
     v
 }
 

@@ -77,25 +77,34 @@ impl DmaCollective {
 
     /// CPU-side launch cost: one command packet per destination
     /// (peers + the local copy), serialized on the orchestration thread
-    /// (Fig 3 step 1).
+    /// (Fig 3 step 1) in `ceil(n / fused_packets)` enqueue+doorbell
+    /// rounds.
     pub fn launch_time(&self, m: &MachineConfig) -> f64 {
-        m.num_gpus as f64 * m.dma_enqueue_s
+        m.sdma.issue_hold(m.num_gpus)
     }
 
     /// Isolated execution time, seconds. Mirrors `sdma::schedule` on the
-    /// direct plan exactly:
-    /// * peer transfer `i` (0-based) starts at `(i+1)·enqueue + fetch`
-    ///   on its own engine + link → last peer lands at
-    ///   `(n-1)·enqueue + fetch + wire`;
+    /// direct plan exactly at the default [`SdmaModel`]:
+    /// * peer transfers issue in serialized enqueue+doorbell rounds,
+    ///   then the last peer lands after fetch + the wire time (inflated
+    ///   by the model's engine-pool/bandwidth-share factor, plus any
+    ///   finite-command-queue refill stalls);
     /// * the local copy (enqueued last) rides HBM at `hbm/2`;
     /// * plus the CPU sync.
+    ///
+    /// [`SdmaModel`]: crate::gpu::sdma::SdmaModel
     pub fn time_isolated(&self, m: &MachineConfig) -> f64 {
-        let wire = self.per_link_bytes(m) / self.link_bw_eff(m);
-        let peers = (m.num_gpus - 1) as f64;
-        let last_peer = peers * m.dma_enqueue_s + m.dma_fetch_s + wire;
-        let local_dur = self.per_link_bytes(m) / (m.hbm_bw_achievable() / 2.0);
-        let local = m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s + local_dur;
-        last_peer.max(local) + m.dma_sync_s
+        let sd = &m.sdma;
+        let per_wire = self.per_link_bytes(m) / self.link_bw_eff(m);
+        let wire = per_wire * sd.wire_factor(m.num_gpus - 1);
+        let last_peer = sd.issue_hold(m.num_gpus - 1)
+            + sd.fetch_s
+            + wire
+            + sd.queue_stall_s(m.num_gpus, per_wire);
+        let local_dur =
+            self.per_link_bytes(m) / (m.hbm_bw_achievable() / 2.0 * sd.engine_bw_share);
+        let local = sd.issue_hold(m.num_gpus) + sd.fetch_s + local_dur;
+        last_peer.max(local) + sd.sync_s
     }
 
     /// Fig 9's y-axis: ConCCL speedup over the CU-based (RCCL) kernel
@@ -133,16 +142,19 @@ impl DmaCollective {
                 unreachable!("constructor rejects non-offloadable kinds")
             }
         };
-        schedule_phases(m, topo, &plan.phases, EnginePolicy::LeastLoaded).total
+        schedule_phases(m, topo, &plan.phases, EnginePolicy::LeastLoaded)
+            .expect("hierarchical plans are built for this topology")
+            .total
     }
 
     /// Wire-phase duration on a topology, for the C3 composition (the
     /// executor accounts launch/fetch/sync separately around it).
     pub fn wire_time_on(&self, m: &MachineConfig, topo: &Topology) -> f64 {
         if topo.num_nodes() == 1 {
-            return self.per_link_bytes(m) / self.link_bw_eff(m);
+            return self.per_link_bytes(m) / self.link_bw_eff(m)
+                * m.sdma.wire_factor(m.num_gpus - 1);
         }
-        (self.time_isolated_on(m, topo) - self.launch_time(m) - m.dma_fetch_s - m.dma_sync_s)
+        (self.time_isolated_on(m, topo) - self.launch_time(m) - m.sdma.fetch_s - m.sdma.sync_s)
             .max(1e-12)
     }
 }
@@ -223,7 +235,7 @@ mod tests {
         let outs: Vec<BufferId> = (100..100 + n as u64).map(BufferId).collect();
         let plan = plan::allgather_plan(n, &shards, &outs, shard);
         let topo = Topology::fully_connected(n);
-        let sched = schedule(&m, &topo, &plan, EnginePolicy::LeastLoaded);
+        let sched = schedule(&m, &topo, &plan, EnginePolicy::LeastLoaded).unwrap();
         assert_rel_close!(sched.total, model.time_isolated(&m), 1e-9);
     }
 

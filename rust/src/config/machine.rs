@@ -47,8 +47,12 @@ pub struct MachineConfig {
     pub l2_per_xcd: f64,
 
     // ---- Interconnect (paper §II-A) ----
-    /// SDMA copy engines per GPU (14 on MI300X).
-    pub sdma_engines: usize,
+    /// The DMA subsystem's design point: engine count, per-engine
+    /// bandwidth share, command-queue depth, enqueue/doorbell/fetch/sync
+    /// latencies, and fused command packets. See
+    /// [`SdmaModel`](crate::gpu::sdma::SdmaModel) for field-level docs
+    /// and HARDWARE.md for provenance; the `dse` sweep perturbs it.
+    pub sdma: crate::gpu::sdma::SdmaModel,
     /// Infinity Fabric peer links per GPU (7, fully connected).
     pub link_count: usize,
     /// Uni-directional bandwidth per link, B/s (64 GB/s).
@@ -76,14 +80,9 @@ pub struct MachineConfig {
     /// Launch + protocol-setup latency of a CU-based (RCCL-like)
     /// collective kernel, s (~15 µs: kernel launch, channel setup,
     /// intra-kernel sync). Sets the latency-bound regime of Fig 9.
+    /// (The DMA-side launch latencies live in [`MachineConfig::sdma`]:
+    /// `sdma.enqueue_s`, `sdma.fetch_s`, `sdma.sync_s`.)
     pub coll_launch_s: f64,
-    /// CPU-side cost to enqueue ONE SDMA command packet, s (Fig 3 step 1;
-    /// calibrated against Fig 9's ≤4× ConCCL penalty below 32 MiB).
-    pub dma_enqueue_s: f64,
-    /// Engine fetch+decode latency per command, s (Fig 3 steps 2–3).
-    pub dma_fetch_s: f64,
-    /// CPU-side completion-synchronization cost per collective, s.
-    pub dma_sync_s: f64,
 
     // ---- GEMM kernel model (calibrated: Table I classes, Fig 5a, Fig 6) ----
     /// Macro-tile edge (rocBLAS-like 128×128 workgroup tiles).
@@ -200,7 +199,7 @@ impl MachineConfig {
             llc_capacity: 256.0 * 1024.0 * 1024.0,
             llc_bw: 17.0e12,
             l2_per_xcd: 4.0 * 1024.0 * 1024.0,
-            sdma_engines: 14,
+            sdma: crate::gpu::sdma::SdmaModel::mi300x(),
             link_count: 7,
             link_bw: 64e9,
             link_eff: 0.85,
@@ -209,9 +208,6 @@ impl MachineConfig {
             nic_latency_s: 5e-6,
             kernel_launch_s: 5e-6,
             coll_launch_s: 15e-6,
-            dma_enqueue_s: 6e-6,
-            dma_fetch_s: 4e-6,
-            dma_sync_s: 8e-6,
             gemm_tile: 128,
             gemm_traffic_coeff: 9.0,
             gemm_traffic_exp: 2.2,
@@ -411,6 +407,7 @@ impl MachineConfig {
         if self.nic_latency_s < 0.0 {
             errs.push(format!("nic_latency_s must be >= 0, got {}", self.nic_latency_s));
         }
+        self.sdma.validate_into(&mut errs);
         errs
     }
 }
@@ -442,7 +439,9 @@ mod tests {
         let m = MachineConfig::mi300x();
         assert_eq!(m.cus_total(), 304);
         assert_eq!(m.num_gpus, 8);
-        assert_eq!(m.sdma_engines, 14);
+        assert_eq!(m.sdma.engines, 14);
+        assert_eq!(m.sdma.queue_depth, 0, "default queue is unbounded");
+        assert_eq!(m.sdma.fused_packets, 1, "default issues one packet per enqueue");
         assert_eq!(m.link_count, 7);
         assert!((m.hbm_bw - 5.3e12).abs() < 1.0);
         assert!((m.llc_capacity - 268435456.0).abs() < 1.0);

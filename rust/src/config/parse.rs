@@ -134,11 +134,17 @@ impl Config {
     }
 
     /// Build a [`MachineConfig`] starting from the MI300X default and
-    /// applying every `machine.*` key. Unknown keys error.
+    /// applying every `machine.*` and `sdma.*` key (a `[sdma]` section
+    /// or `--set sdma.engines=4` addresses the DMA-subsystem model
+    /// directly). Unknown keys error.
     pub fn machine(&self) -> Result<MachineConfig, String> {
         let mut m = MachineConfig::mi300x();
         for (key, val) in &self.values {
-            let Some(field) = key.strip_prefix("machine.") else {
+            let field = if let Some(f) = key.strip_prefix("machine.") {
+                f
+            } else if key.starts_with("sdma.") {
+                key.as_str()
+            } else {
                 continue;
             };
             apply_machine_field(&mut m, field, val)?;
@@ -203,7 +209,56 @@ fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<
         "llc_capacity" => f64_field!(llc_capacity),
         "llc_bw" => f64_field!(llc_bw),
         "l2_per_xcd" => f64_field!(l2_per_xcd),
-        "sdma_engines" => usize_field!(sdma_engines),
+        // ---- DMA subsystem (SdmaModel): dotted `sdma.*` keys ----
+        "sdma.engines" => {
+            m.sdma.engines = v.as_usize()?;
+            Ok(())
+        }
+        "sdma.engine_bw_share" => {
+            m.sdma.engine_bw_share = v.as_f64()?;
+            Ok(())
+        }
+        "sdma.queue_depth" => {
+            m.sdma.queue_depth = v.as_usize()?;
+            Ok(())
+        }
+        "sdma.enqueue_s" => {
+            m.sdma.enqueue_s = v.as_f64()?;
+            Ok(())
+        }
+        "sdma.doorbell_s" => {
+            m.sdma.doorbell_s = v.as_f64()?;
+            Ok(())
+        }
+        "sdma.fetch_s" => {
+            m.sdma.fetch_s = v.as_f64()?;
+            Ok(())
+        }
+        "sdma.sync_s" => {
+            m.sdma.sync_s = v.as_f64()?;
+            Ok(())
+        }
+        "sdma.fused_packets" => {
+            m.sdma.fused_packets = v.as_usize()?;
+            Ok(())
+        }
+        // Legacy flat spellings (pre-SdmaModel configs keep working).
+        "sdma_engines" => {
+            m.sdma.engines = v.as_usize()?;
+            Ok(())
+        }
+        "dma_enqueue_s" => {
+            m.sdma.enqueue_s = v.as_f64()?;
+            Ok(())
+        }
+        "dma_fetch_s" => {
+            m.sdma.fetch_s = v.as_f64()?;
+            Ok(())
+        }
+        "dma_sync_s" => {
+            m.sdma.sync_s = v.as_f64()?;
+            Ok(())
+        }
         "link_count" => usize_field!(link_count),
         "link_bw" => f64_field!(link_bw),
         "link_eff" => f64_field!(link_eff),
@@ -212,9 +267,6 @@ fn apply_machine_field(m: &mut MachineConfig, field: &str, v: &Value) -> Result<
         "nic_latency_s" => f64_field!(nic_latency_s),
         "kernel_launch_s" => f64_field!(kernel_launch_s),
         "coll_launch_s" => f64_field!(coll_launch_s),
-        "dma_enqueue_s" => f64_field!(dma_enqueue_s),
-        "dma_fetch_s" => f64_field!(dma_fetch_s),
-        "dma_sync_s" => f64_field!(dma_sync_s),
         "gemm_tile" => usize_field!(gemm_tile),
         "gemm_traffic_coeff" => f64_field!(gemm_traffic_coeff),
         "gemm_traffic_exp" => f64_field!(gemm_traffic_exp),
@@ -318,7 +370,10 @@ mod tests {
         let fields = [
             "num_gpus", "xcds", "cus_per_xcd", "peak_flops_bf16", "compute_eff",
             "hbm_bw", "hbm_eff", "per_cu_hbm_bw", "llc_capacity", "llc_bw",
-            "l2_per_xcd", "sdma_engines", "link_count", "link_bw", "link_eff",
+            "l2_per_xcd", "sdma.engines", "sdma.engine_bw_share", "sdma.queue_depth",
+            "sdma.enqueue_s", "sdma.doorbell_s", "sdma.fetch_s", "sdma.sync_s",
+            "sdma.fused_packets",
+            "sdma_engines", "link_count", "link_bw", "link_eff",
             "link_eff_dma", "nic_bw", "nic_latency_s",
             "kernel_launch_s", "coll_launch_s", "dma_enqueue_s", "dma_fetch_s",
             "dma_sync_s", "gemm_tile", "gemm_traffic_coeff", "gemm_traffic_exp",
@@ -354,6 +409,52 @@ mod tests {
         assert_eq!(m.compute_eff, 0.6);
         assert!(set_machine_field(&mut m, "bogus", "1").is_err());
         assert!(set_machine_field(&mut m, "hbm_eff", "not-a-number").is_err());
+    }
+
+    #[test]
+    fn sdma_section_and_dotted_keys_reach_the_model() {
+        // A `[sdma]` section addresses the subsystem directly...
+        let cfg = Config::parse("[sdma]\nengines = 4\nqueue_depth = 8").unwrap();
+        let m = cfg.machine().unwrap();
+        assert_eq!(m.sdma.engines, 4);
+        assert_eq!(m.sdma.queue_depth, 8);
+        // ...as do `--set sdma.*` overrides and the legacy flat names.
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&[
+            "sdma.fused_packets=4".to_string(),
+            "sdma.doorbell_s=2e-6".to_string(),
+            "machine.sdma_engines=6".to_string(),
+            "machine.dma_enqueue_s=1e-6".to_string(),
+        ])
+        .unwrap();
+        let m = cfg.machine().unwrap();
+        assert_eq!(m.sdma.fused_packets, 4);
+        assert_eq!(m.sdma.doorbell_s, 2e-6);
+        assert_eq!(m.sdma.engines, 6);
+        assert_eq!(m.sdma.enqueue_s, 1e-6);
+    }
+
+    #[test]
+    fn malformed_sdma_overrides_are_typed_errors() {
+        // Fractional engine count: integer-typed field rejects it.
+        let mut m = MachineConfig::mi300x();
+        let e = set_machine_field(&mut m, "sdma.engines", "2.5").unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        let e = set_machine_field(&mut m, "sdma.queue_depth", "-1").unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        // Unknown subsystem field is a hard error, not a silent skip.
+        let e = set_machine_field(&mut m, "sdma.turbo", "1").unwrap_err();
+        assert!(e.contains("sdma.turbo"), "{e}");
+        // Out-of-range values pass field assignment but fail validation
+        // when a full machine is built.
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&["sdma.engine_bw_share=1.5".to_string()])
+            .unwrap();
+        let err = cfg.machine().unwrap_err();
+        assert!(err.contains("engine_bw_share"), "{err}");
+        let mut cfg = Config::default();
+        cfg.apply_overrides(&["sdma.engines=0".to_string()]).unwrap();
+        assert!(cfg.machine().is_err());
     }
 
     #[test]

@@ -11,5 +11,5 @@ pub mod sdma;
 pub use memory::{BufferId, GpuMemory};
 pub use sdma::{
     engine_demand, schedule, schedule_phases, CommandPacket, EnginePolicy, PhasedSchedule,
-    SdmaSchedule, TransferTiming,
+    SdmaModel, SdmaSchedule, TransferTiming,
 };

@@ -132,11 +132,16 @@ pub fn roofline_comm_time_on(m: &MachineConfig, topo: &Topology, c: &CollectiveK
 
 /// Per-collective issue latency of a backend: the CPU-side cost a
 /// runtime pays before the transfer can move bytes. DMA: one command
-/// packet per destination serialized on the enqueue thread plus the
-/// engine fetch (Fig 3 steps 1–3); CU: the collective kernel launch.
+/// packet per destination, issued in `ceil(n / fused_packets)`
+/// serialized enqueue+doorbell rounds, plus the engine fetch (Fig 3
+/// steps 1–3); CU: the collective kernel launch. Reduces to
+/// `num_gpus × enqueue_s + fetch_s` at the default [`SdmaModel`]
+/// (no doorbell split, no fusing).
+///
+/// [`SdmaModel`]: crate::gpu::sdma::SdmaModel
 pub fn issue_latency(m: &MachineConfig, dma_backend: bool) -> f64 {
     if dma_backend {
-        m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s
+        m.sdma.issue_hold(m.num_gpus) + m.sdma.fetch_s
     } else {
         m.coll_launch_s
     }
@@ -199,7 +204,6 @@ pub fn project_chunked(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bo
         .hbm_share_with_wire(m, sc.comm.t_wire(m, sc.comm.cu_need(m)));
     let dg = (m.mem_interference_coeff * c_share).min(m.mem_interference_cap);
     let dc = (m.mem_interference_coeff * g_share).min(m.mem_interference_cap);
-    let issue = issue_latency(m, dma_backend);
     // Interference acts only over the co-run window (min of the two).
     let overlap_g = (tc / tg).min(1.0);
     let overlap_c = (tg / tc).min(1.0);
@@ -214,7 +218,16 @@ pub fn project_chunked(m: &MachineConfig, sc: &ResolvedScenario, dma_backend: bo
     // DMA-Latte: chunks whose wire time is below the issue latency
     // expose every per-chunk enqueue batch; otherwise issue pipelines
     // behind the previous chunk's wire and only one exposure remains.
+    // Finite command queues backpressure each chunk's enqueue batch:
+    // packets beyond `engines × queue_depth` wait a wire round for a
+    // slot to retire (+0.0 at the default unbounded queue).
     let wire_chunk = tc / kf;
+    let issue = issue_latency(m, dma_backend)
+        + if dma_backend {
+            m.sdma.queue_stall_s(m.num_gpus, wire_chunk)
+        } else {
+            0.0
+        };
     let issue_total = if wire_chunk < issue { kf * issue } else { issue };
     let gemm_end = tg * (1.0 + dg * a * overlap_g) + kf * m.kernel_launch_s;
     // The collective chain is issue-gated on the GEMM chain: chunk `i`
@@ -349,7 +362,7 @@ impl CostModel {
     /// split-the-pools trigger: beyond this point every additional DMA
     /// collective slows all of them, while the CU pool sits idle.)
     pub fn engines_oversubscribed(&self, concurrent: usize) -> bool {
-        concurrent as f64 * self.engine_demand() > self.m.sdma_engines.max(1) as f64
+        concurrent as f64 * self.engine_demand() > self.m.sdma.engines.max(1) as f64
     }
 
     /// Backend preference for one *request-class* collective stream in a
@@ -364,7 +377,7 @@ impl CostModel {
     /// * A **latency-critical** stream (per-token decode collectives)
     ///   stays on whichever backend issues fastest: in the latency-bound
     ///   regime the multi-queue DMA enqueue chain
-    ///   (`num_gpus × dma_enqueue_s + dma_fetch_s`) costs more than one
+    ///   (`issue_hold(num_gpus) + sdma.fetch_s`) costs more than one
     ///   collective kernel launch on MI300X, so tiny per-token
     ///   collectives stay CU-resident; bandwidth-bound streams take the
     ///   DMA engines' better wire rate.
@@ -377,7 +390,13 @@ impl CostModel {
         if deadline_tolerant {
             return true;
         }
-        !c.is_latency_bound(&self.m) || self.issue_latency(true) <= self.issue_latency(false)
+        // The stream's own packet batch counts queue backpressure
+        // against the DMA issue path (+0.0 at the default unbounded
+        // command queue).
+        let per_wire = c.per_link_bytes(&self.m) / self.m.link_bw_dma();
+        let dma_issue = self.issue_latency(true)
+            + self.m.sdma.queue_stall_s(self.m.num_gpus, per_wire);
+        !c.is_latency_bound(&self.m) || dma_issue <= self.issue_latency(false)
     }
 }
 
@@ -443,11 +462,43 @@ mod tests {
         assert_eq!(issue_latency(&m, false), m.coll_launch_s);
         assert_eq!(
             issue_latency(&m, true),
-            m.num_gpus as f64 * m.dma_enqueue_s + m.dma_fetch_s
+            m.sdma.issue_hold(m.num_gpus) + m.sdma.fetch_s
+        );
+        // The default SdmaModel (no fusing, no doorbell split) reduces
+        // bit-exactly to the legacy per-packet enqueue chain.
+        assert_eq!(
+            issue_latency(&m, true),
+            m.num_gpus as f64 * m.sdma.enqueue_s + m.sdma.fetch_s
         );
         // On this machine DMA issue costs more than a CU launch — the
         // Fig 9 latency-bound regime the planner prices per node.
         assert!(issue_latency(&m, true) > issue_latency(&m, false));
+    }
+
+    #[test]
+    fn sdma_model_terms_feed_the_heuristics() {
+        let base = m();
+        let sc = resolve(&TABLE2[0], CollectiveKind::AllGather);
+        // Fused command packets amortize the enqueue chain.
+        let mut fused = base.clone();
+        fused.sdma.fused_packets = 8;
+        assert!(issue_latency(&fused, true) < issue_latency(&base, true));
+        // A doorbell split lengthens every enqueue round.
+        let mut bell = base.clone();
+        bell.sdma.doorbell_s = 10e-6;
+        assert!(issue_latency(&bell, true) > issue_latency(&base, true));
+        // Finite command queues backpressure the chunked projection:
+        // 8 packets contending for 2 slots cost strictly more at the
+        // same chunk count, and only on the DMA backend.
+        let mut starved = base.clone();
+        starved.sdma.engines = 2;
+        starved.sdma.queue_depth = 1;
+        let k = 8;
+        assert!(project_chunked(&starved, &sc, true, k) > project_chunked(&base, &sc, true, k));
+        assert_eq!(
+            project_chunked(&starved, &sc, false, k),
+            project_chunked(&base, &sc, false, k)
+        );
     }
 
     #[test]

@@ -45,7 +45,7 @@ fn run_checked(
     out_len: usize,
 ) -> Result<f64, Error> {
     check_conservation(plan, outs, out_len).map_err(Error::Conservation)?;
-    Ok(node.execute_phases(&plan.phases, EnginePolicy::LeastLoaded).total)
+    Ok(node.execute_phases(&plan.phases, EnginePolicy::LeastLoaded)?.total)
 }
 
 /// Which engine executes the data movement.

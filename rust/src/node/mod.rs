@@ -63,29 +63,33 @@ impl Node {
     }
 
     /// Execute a batch of DMA command packets: compute the SDMA timing
-    /// schedule *and* move the bytes. Returns the schedule.
+    /// schedule *and* move the bytes. Returns the schedule; errors with
+    /// [`Error::Config`](crate::error::Error::Config) on a malformed
+    /// batch (wrong per-GPU shape, commands not owned by their GPU)
+    /// without touching memory contents.
     pub fn execute_dma(
         &mut self,
         per_gpu: &[Vec<CommandPacket>],
         policy: EnginePolicy,
-    ) -> SdmaSchedule {
-        let sched = schedule(&self.machine, &self.topo, per_gpu, policy);
+    ) -> Result<SdmaSchedule, crate::error::Error> {
+        let sched = schedule(&self.machine, &self.topo, per_gpu, policy)?;
         for cmds in per_gpu {
             for c in cmds {
                 self.apply_copy(c);
             }
         }
-        sched
+        Ok(sched)
     }
 
     /// Execute a barrier-separated phase sequence (hierarchical
     /// collective plans): phased timing + byte movement in phase order.
+    /// Errors like [`Node::execute_dma`], before any byte moves.
     pub fn execute_phases(
         &mut self,
         phases: &[Vec<Vec<CommandPacket>>],
         policy: EnginePolicy,
-    ) -> PhasedSchedule {
-        let sched = schedule_phases(&self.machine, &self.topo, phases, policy);
+    ) -> Result<PhasedSchedule, crate::error::Error> {
+        let sched = schedule_phases(&self.machine, &self.topo, phases, policy)?;
         for per_gpu in phases {
             for cmds in per_gpu {
                 for c in cmds {
@@ -93,7 +97,7 @@ impl Node {
                 }
             }
         }
-        sched
+        Ok(sched)
     }
 
     /// Apply one copy command to memory contents, staging through the
@@ -177,7 +181,7 @@ mod tests {
             dst_off: 0,
             len: 4,
         });
-        let sched = n.execute_dma(&per_gpu, EnginePolicy::RoundRobin);
+        let sched = n.execute_dma(&per_gpu, EnginePolicy::RoundRobin).unwrap();
         assert_eq!(n.mems[2].read(dst, 0, 4), &[5, 6, 7, 8]);
         assert_eq!(n.mems[2].read(dst, 4, 4), &[0, 0, 0, 0]);
         assert!(sched.total > 0.0);
@@ -205,7 +209,7 @@ mod tests {
             dst_off: 0,
             len: 4,
         });
-        let sched = n.execute_dma(&per_gpu, EnginePolicy::LeastLoaded);
+        let sched = n.execute_dma(&per_gpu, EnginePolicy::LeastLoaded).unwrap();
         assert_eq!(n.mems[5].bytes(dst), &[9, 8, 7, 6]);
         assert!(n.mems[0].is_empty(), "leader staging not freed");
         assert!(n.mems[4].is_empty(), "leader staging not freed");

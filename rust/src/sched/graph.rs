@@ -174,7 +174,7 @@ pub struct CommWork {
     /// Bandwidth derate suffered while a GEMM co-runs (CU backend).
     pub co_penalty: f64,
     /// CPU-side completion sync appended to the reported finish
-    /// (`dma_sync_s` for DMA batches; dependents wait for it).
+    /// (`sdma.sync_s` for DMA batches; dependents wait for it).
     pub sync: f64,
     pub pen_style: PenaltyStyle,
 }
@@ -428,7 +428,7 @@ impl<'a> Engine<'a> {
 
         let mut sim = Sim::new();
         let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
-        let sdma = sim.add_resource("sdma", m.sdma_engines.max(1) as f64);
+        let sdma = sim.add_resource("sdma", m.sdma.engines.max(1) as f64);
 
         let mut queues = 0usize;
         for (i, spec) in g.nodes.iter().enumerate() {
@@ -856,7 +856,7 @@ impl<'a> Engine<'a> {
             0.0
         };
         let sdma_occupancy = if total > 0.0 {
-            (engine_secs / (m.sdma_engines.max(1) as f64 * total)).min(1.0)
+            (engine_secs / (m.sdma.engines.max(1) as f64 * total)).min(1.0)
         } else {
             0.0
         };
@@ -971,7 +971,7 @@ pub fn single_pair(
         // launches; neither waits on the other.
         Strategy::Conccl | Strategy::ConcclRp { .. } => {
             let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
-            (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
+            (m.kernel_launch_s, d.launch_time(m) + m.sdma.fetch_s)
         }
         Strategy::Serial => unreachable!("serial handled analytically"),
         Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
@@ -1077,7 +1077,7 @@ pub fn single_pair(
             share: comm_share,
             pollution,
             co_penalty,
-            sync: if dma.is_some() { m.dma_sync_s } else { 0.0 },
+            sync: if dma.is_some() { m.sdma.sync_s } else { 0.0 },
             pen_style: PenaltyStyle::RateScaled,
         }),
         issue_deps: Vec::new(),
@@ -1200,7 +1200,10 @@ pub fn chunked(
     };
     let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
     let clamped_need = comm_need.min(cus / 2);
-    let dma_launch = m.num_gpus as f64 * m.dma_enqueue_s;
+    // Per-chunk CPU enqueue batch: one packet per destination, issued
+    // in fused enqueue+doorbell rounds (the legacy per-packet chain at
+    // the default SdmaModel).
+    let dma_launch = m.sdma.issue_hold(m.num_gpus);
 
     let mut g = Graph::default();
     // GEMM chunk chain first (node ids 0..kk, matching the legacy task
@@ -1247,7 +1250,7 @@ pub fn chunked(
                 share: comm_share,
                 pollution,
                 co_penalty,
-                sync: if dma.is_some() { m.dma_sync_s } else { 0.0 },
+                sync: if dma.is_some() { m.sdma.sync_s } else { 0.0 },
                 pen_style: PenaltyStyle::Aligned(align),
             }),
             issue_deps: vec![i],
@@ -1260,7 +1263,7 @@ pub fn chunked(
                 Ready::Queue {
                     queue: 0,
                     hold: dma_launch,
-                    post: m.dma_fetch_s,
+                    post: m.sdma.fetch_s,
                 }
             },
         });
@@ -1320,7 +1323,7 @@ mod tests {
         // Even with fewer engines than peers the demand is clamped to
         // the pool, so a lone collective still finishes at its wire time.
         let mut small = m.clone();
-        small.sdma_engines = 3;
+        small.sdma.engines = 3;
         let mut g2 = Graph::default();
         g2.push(dma_node(&small, &topo, 896 * MIB, "ag"));
         let r2 = execute(&small, &topo, &g2).unwrap();
@@ -1361,20 +1364,20 @@ mod tests {
         // pays both enqueue batches on the shared CPU thread.
         let m = m();
         let topo = Topology::fully_connected(m.num_gpus);
-        let hold = m.num_gpus as f64 * m.dma_enqueue_s;
+        let hold = m.num_gpus as f64 * m.sdma.enqueue_s;
         let mut g = Graph::default();
         for i in 0..2 {
             let mut n = dma_node(&m, &topo, 64 * MIB, &format!("c{i}"));
             n.ready = Ready::Queue {
                 queue: 0,
                 hold,
-                post: m.dma_fetch_s,
+                post: m.sdma.fetch_s,
             };
             g.push(n);
         }
         let r = execute(&m, &topo, &g).unwrap();
-        assert_rel_close!(r.issue[0], hold + m.dma_fetch_s, 1e-12);
-        assert_rel_close!(r.issue[1], 2.0 * hold + m.dma_fetch_s, 1e-12);
+        assert_rel_close!(r.issue[0], hold + m.sdma.fetch_s, 1e-12);
+        assert_rel_close!(r.issue[1], 2.0 * hold + m.sdma.fetch_s, 1e-12);
         assert!(r.finish[1] > r.finish[0]);
     }
 

@@ -1,0 +1,625 @@
+//! Design-space exploration over hypothetical DMA-engine subsystems:
+//! sweep an [`SdmaModel`] grid {engines × queue depth × packet fusing ×
+//! NIC bandwidth}, evaluate real workloads on every hypothetical
+//! machine, and report **Pareto frontiers** of speedup vs. an
+//! engine-area proxy ([`SdmaModel::area_proxy`]).
+//!
+//! The paper closes with "a strong case for GPU DMA engine
+//! advancements" (§VII-B6); this module turns that argument into a
+//! hardware question a designer can actually ask: *which engine
+//! configurations buy workload speedup per unit of die area, and which
+//! are dominated?* Every grid point is a full [`MachineConfig`] — the
+//! per-node planner consumes it like any real machine, so the `auto`
+//! rows answer "what hardware makes the planner's choice win?".
+//!
+//! Determinism: points are evaluated on the worker pool in index order
+//! with identity-derived serving seeds, so [`DseResults::to_json`] is
+//! byte-identical at any thread count (same contract as the sweep
+//! report; schema version 7, top-level `dse` key).
+//!
+//! ```
+//! use conccl::config::machine::MachineConfig;
+//! use conccl::config::workload::CollectiveKind;
+//! use conccl::sweep::dse::DsePlan;
+//! use conccl::workload::scenarios::resolve_tag;
+//!
+//! let mut plan = DsePlan::new(MachineConfig::mi300x());
+//! plan.engines = vec![2, 14];
+//! plan.queue_depths = vec![0];
+//! plan.pairs = vec![resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap()];
+//! let res = conccl::sweep::dse::run(plan, 1).unwrap();
+//! assert_eq!(res.points.len(), 2);
+//! assert_eq!(res.points[0].label, "e2-q0-f1");
+//! // The frontier is never empty when at least one point evaluated.
+//! assert!(!res.frontier(0).is_empty());
+//! assert!(res.to_json().starts_with("{\"version\":7,\"dse\":"));
+//! ```
+//!
+//! [`SdmaModel`]: crate::gpu::sdma::SdmaModel
+//! [`SdmaModel::area_proxy`]: crate::gpu::sdma::SdmaModel::area_proxy
+
+use crate::config::machine::MachineConfig;
+use crate::error::Error;
+use crate::sched::{C3Executor, Planner, Strategy};
+use crate::util::pool;
+use crate::workload::e2e::{run_e2e_planned_with, E2eFamily, E2eSpec};
+use crate::workload::scenarios::ResolvedScenario;
+use crate::workload::serving::ServeSpec;
+use crate::workload::traffic::{run_serve_lineup, TrafficConfig};
+
+use super::engine::default_threads;
+use super::json::{escape, num};
+use super::plan::job_seed;
+
+/// The exploration grid plus the workloads scoring every point.
+#[derive(Debug, Clone)]
+pub struct DsePlan {
+    /// Machine every grid point derives from (only the swept fields
+    /// change; everything else — GEMM rooflines, fabric, CU counts —
+    /// stays the real machine's).
+    pub base: MachineConfig,
+    /// SDMA engine counts to explore.
+    pub engines: Vec<usize>,
+    /// Per-engine command-queue depths (0 = unbounded).
+    pub queue_depths: Vec<usize>,
+    /// Fused-command-packet granularities (1 = no fusing).
+    pub fused: Vec<usize>,
+    /// Absolute NIC line rates to explore, B/s; empty keeps the base
+    /// machine's NIC on every point.
+    pub nic_bws: Vec<f64>,
+    /// Topology node count every point is evaluated on.
+    pub nodes: usize,
+    /// Pairwise workloads: each scores a point by the ConCCL strategy's
+    /// speedup over the serial baseline.
+    pub pairs: Vec<ResolvedScenario>,
+    /// End-to-end workloads: each scores a point twice, by the
+    /// `dma_overlap` and planner-driven `auto` family speedups.
+    pub e2e: Vec<E2eSpec>,
+    /// Serving workloads: each scores a point twice, by the
+    /// `dma_overlap` and `auto` p99 speedups over serial.
+    pub serve: Vec<ServeSpec>,
+    /// Traffic parameters shared by every serving evaluation.
+    pub traffic: TrafficConfig,
+    /// Base seed for the serving arrival processes. Arrivals are seeded
+    /// per *workload*, not per point, so every hypothetical machine
+    /// faces the identical request sequence.
+    pub seed: u64,
+}
+
+impl DsePlan {
+    /// Default grid around the MI300X point: engines {2, 4, 7, 14} ×
+    /// queue depth {0, 8} × no fusing, base NIC, single node, no
+    /// workloads yet (callers pick at least one).
+    pub fn new(base: MachineConfig) -> DsePlan {
+        DsePlan {
+            base,
+            engines: vec![2, 4, 7, 14],
+            queue_depths: vec![0, 8],
+            fused: vec![1],
+            nic_bws: Vec::new(),
+            nodes: 1,
+            pairs: Vec::new(),
+            e2e: Vec::new(),
+            serve: Vec::new(),
+            traffic: TrafficConfig::default(),
+            seed: 24301,
+        }
+    }
+
+    /// Validate the grid and workload axes (typed errors, never panics).
+    pub fn validate(&self) -> Result<(), Error> {
+        for (name, axis) in [
+            ("engines", &self.engines),
+            ("queue_depths", &self.queue_depths),
+            ("fused", &self.fused),
+        ] {
+            if axis.is_empty() {
+                return Err(Error::Config(format!("dse {name} axis cannot be empty")));
+            }
+            for (i, v) in axis.iter().enumerate() {
+                if axis[..i].contains(v) {
+                    return Err(Error::Config(format!("duplicate dse {name} entry {v}")));
+                }
+            }
+        }
+        if self.engines.contains(&0) {
+            return Err(Error::Config("dse engines entries must be >= 1".into()));
+        }
+        if self.fused.contains(&0) {
+            return Err(Error::Config("dse fused entries must be >= 1".into()));
+        }
+        for (i, &bw) in self.nic_bws.iter().enumerate() {
+            if !(bw > 0.0) {
+                return Err(Error::Config(format!("dse nic_bw entry {bw} must be > 0 B/s")));
+            }
+            if self.nic_bws[..i].contains(&bw) {
+                return Err(Error::Config(format!("duplicate dse nic_bw entry {bw}")));
+            }
+        }
+        if self.nodes == 0 {
+            return Err(Error::Config("dse node count must be >= 1".into()));
+        }
+        if self.pairs.is_empty() && self.e2e.is_empty() && self.serve.is_empty() {
+            return Err(Error::Config(
+                "dse needs at least one workload (pairs, e2e or serve)".into(),
+            ));
+        }
+        for (axis, labels) in [
+            ("pair", self.pairs.iter().map(|s| s.tag()).collect::<Vec<_>>()),
+            ("e2e", self.e2e.iter().map(|s| s.label()).collect()),
+            ("serve", self.serve.iter().map(|s| s.label()).collect()),
+        ] {
+            for (i, l) in labels.iter().enumerate() {
+                if labels[..i].contains(l) {
+                    return Err(Error::Config(format!("duplicate dse {axis} workload '{l}'")));
+                }
+            }
+        }
+        if !self.serve.is_empty() {
+            self.traffic.validate()?;
+        }
+        let errs = self.base.validate();
+        if !errs.is_empty() {
+            return Err(Error::Config(format!("dse base machine invalid: {}", errs.join("; "))));
+        }
+        Ok(())
+    }
+
+    /// Expand the grid into hypothetical machines, in
+    /// engines → queue-depth → fusing → NIC order.
+    pub fn points(&self) -> Vec<DsePoint> {
+        let nics: Vec<Option<f64>> = if self.nic_bws.is_empty() {
+            vec![None]
+        } else {
+            self.nic_bws.iter().copied().map(Some).collect()
+        };
+        let mut out = Vec::new();
+        for &e in &self.engines {
+            for &q in &self.queue_depths {
+                for &f in &self.fused {
+                    for &nic in &nics {
+                        let mut label = format!("e{e}-q{q}-f{f}");
+                        if let Some(bw) = nic {
+                            // Shortest-roundtrip GB/s keeps labels both
+                            // readable and collision-free.
+                            label.push_str(&format!("-nic{}", bw / 1e9));
+                        }
+                        let mut m = self.base.clone();
+                        m.sdma.engines = e;
+                        m.sdma.queue_depth = q;
+                        m.sdma.fused_packets = f;
+                        if let Some(bw) = nic {
+                            m.nic_bw = bw;
+                        }
+                        m.name = format!("{}+{label}", self.base.name);
+                        let area = m.sdma.area_proxy();
+                        out.push(DsePoint {
+                            label,
+                            engines: e,
+                            queue_depth: q,
+                            fused: f,
+                            nic_bw: nic,
+                            area,
+                            machine: m,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The scored workload columns, in pair → e2e → serve order (e2e
+    /// and serve each contribute a `dma_overlap` and an `auto` column).
+    pub fn workloads(&self) -> Vec<DseWorkload> {
+        let mut out = Vec::new();
+        for (i, sc) in self.pairs.iter().enumerate() {
+            out.push(DseWorkload {
+                key: format!("pair:{}:{}/conccl", sc.tag(), sc.comm.spec.kind.name()),
+                kind: DseWorkloadKind::Pair(i),
+            });
+        }
+        for (i, spec) in self.e2e.iter().enumerate() {
+            for family in [E2eFamily::DmaOverlap, E2eFamily::Auto] {
+                out.push(DseWorkload {
+                    key: format!("e2e:{}/{}", spec.label(), family.name()),
+                    kind: DseWorkloadKind::E2e(i, family),
+                });
+            }
+        }
+        for (i, spec) in self.serve.iter().enumerate() {
+            for family in [E2eFamily::DmaOverlap, E2eFamily::Auto] {
+                out.push(DseWorkload {
+                    key: format!("serve:{}/{}", spec.label(), family.name()),
+                    kind: DseWorkloadKind::Serve(i, family),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// One hypothetical machine of the grid.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// Axis label, e.g. `e14-q8-f1` (`-nic50` appended when the NIC
+    /// axis is swept).
+    pub label: String,
+    pub engines: usize,
+    pub queue_depth: usize,
+    pub fused: usize,
+    /// NIC override, B/s (`None` = base machine's NIC).
+    pub nic_bw: Option<f64>,
+    /// Engine-area proxy of this point's [`crate::gpu::sdma::SdmaModel`].
+    pub area: f64,
+    pub machine: MachineConfig,
+}
+
+/// How one workload column scores a grid point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DseWorkloadKind {
+    /// Index into [`DsePlan::pairs`]; ConCCL-strategy speedup.
+    Pair(usize),
+    /// Index into [`DsePlan::e2e`] plus the scored family.
+    E2e(usize, E2eFamily),
+    /// Index into [`DsePlan::serve`] plus the scored family.
+    Serve(usize, E2eFamily),
+}
+
+/// One scored workload column.
+#[derive(Debug, Clone)]
+pub struct DseWorkload {
+    /// Unique report key, e.g. `e2e:fsdp_step-70b-l2-d2/dma_overlap`.
+    pub key: String,
+    pub kind: DseWorkloadKind,
+}
+
+/// One surviving (or candidate) frontier entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DseScore {
+    /// Index into [`DseResults::points`].
+    pub point_idx: usize,
+    pub area: f64,
+    pub speedup: f64,
+}
+
+/// All outcomes of one exploration.
+#[derive(Debug, Clone)]
+pub struct DseResults {
+    pub plan: DsePlan,
+    pub points: Vec<DsePoint>,
+    pub workloads: Vec<DseWorkload>,
+    /// `outcomes[point_idx][workload_idx]` = that point's speedup on
+    /// that workload column (typed error per slot; the sweep continues).
+    pub outcomes: Vec<Vec<Result<f64, Error>>>,
+    pub threads_used: usize,
+}
+
+/// Explore the grid. `threads == 0` means one worker per core;
+/// `threads == 1` is the sequential reference path, byte-identical to
+/// any parallel run.
+pub fn run(plan: DsePlan, threads: usize) -> Result<DseResults, Error> {
+    plan.validate()?;
+    let points = plan.points();
+    let workloads = plan.workloads();
+    let req = if threads == 0 { default_threads() } else { threads };
+    let n_threads = req.min(points.len()).max(1);
+    let outcomes = pool::run_indexed(points.len(), n_threads, |pi| {
+        eval_point(&plan, &points[pi], &workloads)
+    });
+    Ok(DseResults {
+        plan,
+        points,
+        workloads,
+        outcomes,
+        threads_used: n_threads,
+    })
+}
+
+/// Score one hypothetical machine on every workload column.
+fn eval_point(plan: &DsePlan, point: &DsePoint, workloads: &[DseWorkload]) -> Vec<Result<f64, Error>> {
+    let m = &point.machine;
+    let topo = m.topology(plan.nodes);
+    // One executor / planner — one cost-model profile — per point,
+    // shared across its workload columns.
+    let exec = (!plan.pairs.is_empty())
+        .then(|| C3Executor::with_topology(m.clone(), m.topology(plan.nodes)));
+    let planner = (!plan.e2e.is_empty()).then(|| Planner::new(m, &topo));
+    // Serving lineups are memoized per spec (each lineup already runs
+    // all four families).
+    let mut serve_cache: Vec<Option<Result<Vec<crate::workload::traffic::ServeReport>, Error>>> =
+        vec![None; plan.serve.len()];
+    workloads
+        .iter()
+        .map(|w| match w.kind {
+            DseWorkloadKind::Pair(i) => {
+                let exec = exec.as_ref().expect("executor built when pairs are planned");
+                let sc = &plan.pairs[i];
+                let b = exec.baselines(sc);
+                exec.try_run_with_baselines(sc, Strategy::Conccl, b)
+                    .map(|r| r.speedup)
+            }
+            DseWorkloadKind::E2e(i, family) => {
+                let planner = planner.as_ref().expect("planner built when e2e is planned");
+                let spec = &plan.e2e[i];
+                run_e2e_planned_with(planner, &spec.trace(), spec.depth, family)
+                    .map(|(r, _)| r.speedup)
+            }
+            DseWorkloadKind::Serve(i, family) => {
+                let spec = plan.serve[i];
+                let lineup = serve_cache[i].get_or_insert_with(|| {
+                    // Per-workload (NOT per-point) arrival seed: every
+                    // hypothetical machine faces identical requests.
+                    let seed = job_seed(
+                        plan.seed,
+                        "dse",
+                        &plan.nodes.to_string(),
+                        "serve",
+                        &spec.label(),
+                        "arrivals",
+                        "open-loop",
+                    );
+                    run_serve_lineup(m, &topo, spec, plan.traffic, seed)
+                });
+                match lineup {
+                    Ok(reports) => reports
+                        .iter()
+                        .find(|r| r.family == family)
+                        .map(|r| r.speedup)
+                        .ok_or_else(|| {
+                            Error::Config(format!("serve lineup lacks family {}", family.name()))
+                        }),
+                    Err(e) => Err(e.clone()),
+                }
+            }
+        })
+        .collect()
+}
+
+impl DseResults {
+    /// All successfully scored points of one workload column, in point
+    /// order.
+    pub fn scores(&self, workload_idx: usize) -> Vec<DseScore> {
+        self.outcomes
+            .iter()
+            .enumerate()
+            .filter_map(|(pi, per_w)| {
+                per_w[workload_idx].as_ref().ok().map(|&speedup| DseScore {
+                    point_idx: pi,
+                    area: self.points[pi].area,
+                    speedup,
+                })
+            })
+            .collect()
+    }
+
+    /// Pareto frontier of one workload column: the scored points not
+    /// dominated by any other (dominated = some other point has
+    /// `area <=` AND `speedup >=`, at least one strictly). Sorted by
+    /// ascending area, ties by point order — deterministic.
+    pub fn frontier(&self, workload_idx: usize) -> Vec<DseScore> {
+        let scores = self.scores(workload_idx);
+        let mut front: Vec<DseScore> = scores
+            .iter()
+            .filter(|p| {
+                !scores.iter().any(|q| {
+                    q.area <= p.area
+                        && q.speedup >= p.speedup
+                        && (q.area < p.area || q.speedup > p.speedup)
+                })
+            })
+            .copied()
+            .collect();
+        front.sort_by(|a, b| a.area.total_cmp(&b.area).then(a.point_idx.cmp(&b.point_idx)));
+        front
+    }
+
+    /// Per-slot errors, flattened for reporting.
+    pub fn errors(&self) -> Vec<(usize, usize, &Error)> {
+        let mut out = Vec::new();
+        for (pi, per_w) in self.outcomes.iter().enumerate() {
+            for (wi, r) in per_w.iter().enumerate() {
+                if let Err(e) = r {
+                    out.push((pi, wi, e));
+                }
+            }
+        }
+        out
+    }
+
+    /// Serialize the exploration (schema version 7, top-level `dse`
+    /// key). Byte-identical at any thread count: point, workload and
+    /// frontier orders are all plan-derived.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(16 * 1024);
+        s.push_str("{\"version\":7,\"dse\":{");
+        let _ = write!(
+            s,
+            "\"base\":\"{}\",\"nodes\":{},\"seed\":{},",
+            escape(&self.plan.base.name),
+            self.plan.nodes,
+            self.plan.seed
+        );
+        let usize_list =
+            |xs: &[usize]| xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+        let _ = write!(
+            s,
+            "\"axes\":{{\"engines\":[{}],\"queue_depths\":[{}],\"fused\":[{}],\"nic_bws\":[{}]}},",
+            usize_list(&self.plan.engines),
+            usize_list(&self.plan.queue_depths),
+            usize_list(&self.plan.fused),
+            self.plan
+                .nic_bws
+                .iter()
+                .map(|&v| num(v))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        s.push_str("\"points\":[");
+        for (pi, p) in self.points.iter().enumerate() {
+            if pi > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"label\":\"{}\",\"engines\":{},\"queue_depth\":{},\"fused\":{},\
+                 \"nic_bw\":{},\"area\":{}}}",
+                escape(&p.label),
+                p.engines,
+                p.queue_depth,
+                p.fused,
+                p.nic_bw.map_or("null".to_string(), num),
+                num(p.area)
+            );
+        }
+        s.push_str("],\"workloads\":[");
+        for (wi, w) in self.workloads.iter().enumerate() {
+            if wi > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{{\"key\":\"{}\",\"results\":[", escape(&w.key));
+            for (pi, per_w) in self.outcomes.iter().enumerate() {
+                if pi > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "{{\"point\":\"{}\",", escape(&self.points[pi].label));
+                match &per_w[wi] {
+                    Ok(v) => {
+                        let _ = write!(s, "\"speedup\":{}}}", num(*v));
+                    }
+                    Err(e) => {
+                        let _ = write!(s, "\"error\":\"{}\"}}", escape(&e.to_string()));
+                    }
+                }
+            }
+            s.push_str("],\"frontier\":[");
+            for (fi, f) in self.frontier(wi).iter().enumerate() {
+                if fi > 0 {
+                    s.push(',');
+                }
+                let _ = write!(
+                    s,
+                    "{{\"point\":\"{}\",\"area\":{},\"speedup\":{}}}",
+                    escape(&self.points[f.point_idx].label),
+                    num(f.area),
+                    num(f.speedup)
+                );
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::CollectiveKind;
+    use crate::workload::scenarios::resolve_tag;
+
+    fn pair_plan() -> DsePlan {
+        let mut plan = DsePlan::new(MachineConfig::mi300x());
+        plan.engines = vec![2, 14];
+        plan.queue_depths = vec![0];
+        plan.pairs = vec![resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap()];
+        plan
+    }
+
+    #[test]
+    fn grid_expands_in_axis_order_with_area() {
+        let mut plan = pair_plan();
+        plan.queue_depths = vec![0, 8];
+        plan.fused = vec![1, 4];
+        let pts = plan.points();
+        assert_eq!(pts.len(), 8);
+        assert_eq!(pts[0].label, "e2-q0-f1");
+        assert_eq!(pts[1].label, "e2-q0-f4");
+        assert_eq!(pts[7].label, "e14-q8-f4");
+        // Area tracks engines and queue depth, never fusing.
+        assert_eq!(pts[0].area, 2.0);
+        assert_eq!(pts[1].area, 2.0);
+        assert_eq!(pts[7].area, 14.0 * 1.5);
+        // Every point is a valid machine carrying its own label.
+        for p in &pts {
+            assert!(p.machine.validate().is_empty(), "{}", p.label);
+            assert!(p.machine.name.ends_with(&p.label));
+        }
+        // The NIC axis appends to labels and overrides the machine.
+        plan.fused = vec![1];
+        plan.nic_bws = vec![50e9];
+        let pts = plan.points();
+        assert_eq!(pts[0].label, "e2-q0-f1-nic50");
+        assert_eq!(pts[0].machine.nic_bw, 50e9);
+    }
+
+    #[test]
+    fn invalid_plans_are_typed_errors() {
+        let base = MachineConfig::mi300x();
+        let mut p = DsePlan::new(base.clone());
+        // No workloads at all.
+        assert!(matches!(p.validate(), Err(Error::Config(_))));
+        p.pairs = vec![resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap()];
+        assert!(p.validate().is_ok());
+        // Empty / zero / duplicate axes.
+        let mut bad = p.clone();
+        bad.engines = vec![];
+        assert!(bad.validate().is_err());
+        let mut bad = p.clone();
+        bad.engines = vec![0];
+        assert!(bad.validate().is_err());
+        let mut bad = p.clone();
+        bad.queue_depths = vec![8, 8];
+        assert!(bad.validate().is_err());
+        let mut bad = p.clone();
+        bad.fused = vec![0];
+        assert!(bad.validate().is_err());
+        let mut bad = p.clone();
+        bad.nic_bws = vec![-1.0];
+        assert!(bad.validate().is_err());
+        let mut bad = p.clone();
+        bad.nodes = 0;
+        assert!(bad.validate().is_err());
+        // Duplicate workload labels.
+        let mut bad = p.clone();
+        bad.pairs.push(bad.pairs[0].clone());
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pair_column_scores_and_dominance_prunes() {
+        let res = run(pair_plan(), 1).unwrap();
+        assert!(res.errors().is_empty());
+        assert_eq!(res.workloads.len(), 1);
+        assert_eq!(res.workloads[0].key, "pair:mb1_896M:all-gather/conccl");
+        let scores = res.scores(0);
+        assert_eq!(scores.len(), 2);
+        // 2 engines serialize the 7 peer transfers (wire rounds 4x):
+        // the full engine pool is strictly faster end-to-end.
+        assert!(scores[1].speedup > scores[0].speedup, "{scores:?}");
+        // Both survive the frontier: more area buys more speedup.
+        assert_eq!(res.frontier(0).len(), 2);
+        // A dominated point — same engines, deeper queues (more area),
+        // identical speedup — is pruned.
+        let mut plan = pair_plan();
+        plan.engines = vec![14];
+        plan.queue_depths = vec![0, 8];
+        let res = run(plan, 1).unwrap();
+        let f = res.frontier(0);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(res.points[f[0].point_idx].label, "e14-q0-f1");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_well_formed() {
+        let a = run(pair_plan(), 1).unwrap().to_json();
+        let b = run(pair_plan(), 2).unwrap().to_json();
+        assert_eq!(a, b, "thread count leaked into dse JSON");
+        assert!(a.starts_with("{\"version\":7,\"dse\":{\"base\":\"mi300x-8\""));
+        assert!(a.contains("\"axes\":{\"engines\":[2,14]"));
+        assert!(a.contains("\"label\":\"e2-q0-f1\""));
+        assert!(a.contains("\"frontier\":["));
+        assert_eq!(a.matches('{').count(), a.matches('}').count());
+    }
+}

@@ -64,11 +64,14 @@ impl SweepResults {
     /// for the inference-serving traffic axis — steady-state latency
     /// percentiles, goodput and occupancies per serving family, present
     /// only when the plan carries serve specs, so v1–v5 consumers keep
-    /// their shape).
+    /// their shape; version 7 introduces the companion design-space
+    /// report — `conccl dse` emits a separate `{"version":7,"dse":…}`
+    /// document ([`super::dse`]) in the same version namespace, while
+    /// sweep reports keep their v6 shape).
     pub fn to_json(&self) -> String {
         let cfg = &self.plan.cfg;
         let mut s = String::with_capacity(64 * 1024);
-        s.push_str("{\"version\":6,");
+        s.push_str("{\"version\":7,");
         let _ = write!(
             s,
             "\"protocol\":{{\"warmup\":{},\"measured\":{},\"jitter\":{},\"seed\":{}}},",
@@ -381,7 +384,7 @@ mod tests {
             RunnerConfig::default(),
         );
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":6,"));
+        assert!(j.starts_with("{\"version\":7,"));
         assert!(j.contains("\"topologies\":[{\"nodes\":1,\"chunkings\":[{\"chunks\":\"auto\","));
         // No e2e axis -> no workloads section (pairwise shape kept).
         assert!(!j.contains("\"workloads\""));
@@ -446,7 +449,7 @@ mod tests {
         .with_e2e(vec![E2eSpec::parse("fsdp_step:70b:2:2").unwrap()])
         .unwrap();
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":6,"));
+        assert!(j.starts_with("{\"version\":7,"));
         assert_eq!(j.matches("\"workloads\":[").count(), 2, "one per topology");
         assert!(j.contains("\"name\":\"fsdp_step\",\"model\":\"70b\",\"layers\":2,\"depth\":2"));
         assert!(j.contains("\"label\":\"fsdp_step-70b-l2-d2\""));
@@ -485,7 +488,7 @@ mod tests {
         )
         .unwrap();
         let j = execute(plan, 1).to_json();
-        assert!(j.starts_with("{\"version\":6,"));
+        assert!(j.starts_with("{\"version\":7,"));
         assert_eq!(j.matches("\"serving\":[").count(), 2, "one per topology");
         assert!(j.contains(
             "\"workload\":\"pd_disagg-70b-l2-b8\",\"name\":\"pd_disagg\",\"model\":\"70b\""

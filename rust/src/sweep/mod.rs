@@ -28,13 +28,20 @@
 //! identity, never from execution order). `coordinator::run_suite` is a
 //! thin wrapper over [`suite_outcomes`], so every figure bench and test
 //! rides this engine.
+//!
+//! A fourth mode, [`dse`], inverts the sweep: instead of many workloads
+//! on one machine, it scores workloads on a grid of *hypothetical*
+//! DMA-engine subsystems and reports Pareto frontiers of speedup vs.
+//! engine area (`conccl dse`).
 
 pub mod baseline;
+pub mod dse;
 pub mod engine;
 pub mod json;
 pub mod plan;
 
 pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
+pub use dse::{DsePlan, DsePoint, DseResults, DseScore, DseWorkload};
 pub use engine::{
     default_threads, execute, outcome_lineup, suite_outcomes, E2eOutput, JobOutput, ServeOutput,
     SweepResults,

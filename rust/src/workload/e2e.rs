@@ -335,13 +335,13 @@ pub(crate) fn comm_node(
                 share: kernel.hbm_share_with_wire(m, wire),
                 pollution: 0.0,
                 co_penalty: m.comm_co_penalty(kind),
-                sync: m.dma_sync_s,
+                sync: m.sdma.sync_s,
                 pen_style: PenaltyStyle::RateScaled,
             }),
             Ready::Queue {
                 queue: 0,
-                hold: m.num_gpus as f64 * m.dma_enqueue_s,
-                post: m.dma_fetch_s,
+                hold: m.sdma.issue_hold(m.num_gpus),
+                post: m.sdma.fetch_s,
             },
         ))
     } else {

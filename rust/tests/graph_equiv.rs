@@ -61,7 +61,7 @@ mod reference {
             }
             Strategy::Conccl | Strategy::ConcclRp { .. } => {
                 let d = dma.as_ref().expect("conccl strategies carry a DMA collective");
-                (m.kernel_launch_s, d.launch_time(m) + m.dma_fetch_s)
+                (m.kernel_launch_s, d.launch_time(m) + m.sdma.fetch_s)
             }
             Strategy::Serial => unreachable!("serial handled analytically"),
             Strategy::C3Chunked { .. } | Strategy::ConcclChunked { .. } => {
@@ -224,7 +224,7 @@ mod reference {
                     comm_done = true;
                     comm_finish = sim.now()
                         + match &dma {
-                            Some(_) => m.dma_sync_s,
+                            Some(_) => m.sdma.sync_s,
                             None => 0.0,
                         };
                 }
@@ -308,7 +308,7 @@ mod reference {
         };
         let co_penalty = m.comm_co_penalty(sc.comm.spec.kind);
 
-        let dma_launch = m.num_gpus as f64 * m.dma_enqueue_s;
+        let dma_launch = m.num_gpus as f64 * m.sdma.enqueue_s;
 
         let mut sim = Sim::new();
         let hbm = sim.add_resource("hbm", m.hbm_bw_achievable());
@@ -417,7 +417,7 @@ mod reference {
                         } else {
                             let start = cpu_free.max(fin);
                             cpu_free = start + dma_launch;
-                            cpu_free + m.dma_fetch_s
+                            cpu_free + m.sdma.fetch_s
                         };
                         sim.schedule_wake(c_ready[ci].max(fin));
                         g_done += 1;
@@ -444,7 +444,7 @@ mod reference {
             }));
         }
         let gemm_finish = g_fin[kk - 1].expect("all gemm chunks finished");
-        let sync = if dma.is_some() { m.dma_sync_s } else { 0.0 };
+        let sync = if dma.is_some() { m.sdma.sync_s } else { 0.0 };
         let comm_finish = c_fin[kk - 1].expect("all comm chunks finished") + sync;
         Ok((gemm_finish.max(comm_finish), gemm_finish, comm_finish))
     }

@@ -224,7 +224,7 @@ fn flat_direct_plan_still_works_on_multi_node_via_staged_hops() {
     let shards: Vec<_> = (0..n).map(|g| nd.alloc_init(g, &data[g])).collect();
     let outs: Vec<_> = (0..n).map(|g| nd.alloc(g, n * shard)).collect();
     let flat = allgather_plan(n, &shards, &outs, shard);
-    let sched = nd.execute_dma(&flat, EnginePolicy::LeastLoaded);
+    let sched = nd.execute_dma(&flat, EnginePolicy::LeastLoaded).unwrap();
     let expect: Vec<u8> = data.concat();
     for g in 0..n {
         assert_eq!(nd.mems[g].bytes(outs[g]), &expect[..], "gpu {g}");
@@ -236,6 +236,8 @@ fn flat_direct_plan_still_works_on_multi_node_via_staged_hops() {
     let shards2: Vec<_> = (0..n).map(|g| nd2.alloc_init(g, &data[g])).collect();
     let outs2: Vec<_> = (0..n).map(|g| nd2.alloc(g, n * shard)).collect();
     let hier = allgather_hier(&topology(nodes, p), &shards2, &outs2, shard);
-    let phased = nd2.execute_phases(&hier.phases, EnginePolicy::LeastLoaded);
+    let phased = nd2
+        .execute_phases(&hier.phases, EnginePolicy::LeastLoaded)
+        .unwrap();
     assert!(sched.total > 0.0 && phased.total > 0.0);
 }

@@ -265,7 +265,7 @@ fn serve_axis_json_is_deterministic_across_thread_counts() {
     let j1 = execute(plan(jittered_cfg()), 1).to_json();
     let j3 = execute(plan(jittered_cfg()), 3).to_json();
     assert_eq!(j1, j3, "serve-axis sweep JSON diverged across thread counts");
-    assert!(j1.starts_with("{\"version\":6,"));
+    assert!(j1.starts_with("{\"version\":7,"));
     assert!(j1.contains("\"serving\":["));
     assert!(j1.contains("\"workload\":\"pd_disagg-70b-l2-b8\""));
     assert!(j1.contains("\"auto\":{\"p50_s\":"));
