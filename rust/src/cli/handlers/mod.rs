@@ -29,6 +29,12 @@ pub fn dispatch(args: &Args) -> Result<(), String> {
         "sweep" => sweep::sweep_cmd(args),
         "dse" => dse::dse_cmd(args),
         "bench-gate" => sweep::bench_gate(args),
+        // CI keys its result-cache restore on this salt; a model-
+        // semantics bump then misses the stale cache cleanly.
+        "model-version" => {
+            println!("{}", crate::sweep::MODEL_VERSION);
+            Ok(())
+        }
         "rp-sweep" => run::rp_sweep(args),
         "report" => analyze::full_report(args),
         "conccl-bw" => analyze::conccl_bw(args),

@@ -4,7 +4,10 @@
 use crate::cli::Args;
 use crate::config::workload::CollectiveKind;
 use crate::coordinator::{headline, report, RunnerConfig};
-use crate::sweep::{execute as execute_sweep, parse_variants, ChunkSel, MachineVariant, SweepPlan};
+use crate::sweep::{
+    execute_with, parse_variants, Cache, ChunkSel, ExecOptions, JobSource, MachineVariant,
+    SweepPlan,
+};
 use crate::util::table::{speedup, Table};
 use crate::util::units::fmt_seconds;
 use crate::workload::e2e::{E2eFamily, E2eSpec};
@@ -110,9 +113,45 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
             }
         })
         .map_err(|e| e.to_string())?;
+    // Result cache + sharding: --cache-dir is the read/write store for
+    // this run's job records; --merge adds read-only stores (typically
+    // the cache dirs of other shards) so a merge run materializes every
+    // slot without simulating; --shard i/n owns only this shard's jobs.
+    let merge_dirs: Vec<std::path::PathBuf> = match args.options.get("merge") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect(),
+    };
+    let cache = match (args.options.get("cache-dir"), merge_dirs.is_empty()) {
+        (None, true) => Cache::disabled(),
+        (write_dir, _) => Cache::open(write_dir.map(std::path::PathBuf::from), merge_dirs)?,
+    };
+    let shard = match args.options.get("shard") {
+        None => None,
+        Some(spec) => {
+            let (i, n) = spec
+                .split_once('/')
+                .ok_or_else(|| format!("--shard '{spec}': expected i/n, e.g. 0/3"))?;
+            let i: usize = i.parse().map_err(|e| format!("--shard '{spec}': {e}"))?;
+            let n: usize = n.parse().map_err(|e| format!("--shard '{spec}': {e}"))?;
+            if n == 0 || i >= n {
+                return Err(format!("--shard '{spec}': need 0 <= i < n"));
+            }
+            Some((i, n))
+        }
+    };
+    let opts = ExecOptions {
+        threads,
+        cache,
+        shard,
+    };
     let n_jobs = plan.job_count();
     let t0 = std::time::Instant::now();
-    let results = execute_sweep(plan, threads);
+    let results = execute_with(plan, &opts);
     let elapsed = t0.elapsed().as_secs_f64();
 
     for (mi, mv) in results.plan.machines.iter().enumerate() {
@@ -130,6 +169,10 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
                     let mut row = vec![sc.tag(), sc.comm.spec.kind.name().to_string()];
                     for (ki, _) in results.plan.strategies.iter().enumerate() {
                         let out = &results.outputs[results.plan.job_id(mi, ni, ci, si, ki)];
+                        if out.source == JobSource::Skipped {
+                            row.push("—".to_string());
+                            continue;
+                        }
                         row.push(match &out.result {
                             Ok(meas) => match (out.rp_cus, out.chunks_used) {
                                 (Some(k), _) => format!("{} @{k}CU", speedup(meas.speedup_median)),
@@ -230,7 +273,7 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
     let e2e_errs: Vec<&crate::sweep::E2eOutput> = results
         .e2e_outputs
         .iter()
-        .filter(|o| o.result.is_err())
+        .filter(|o| o.source != JobSource::Skipped && o.result.is_err())
         .collect();
     if !e2e_errs.is_empty() {
         println!("{} e2e workload point(s) failed:", e2e_errs.len());
@@ -249,7 +292,7 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
     let serve_errs: Vec<&crate::sweep::ServeOutput> = results
         .serve_outputs
         .iter()
-        .filter(|o| o.result.is_err())
+        .filter(|o| o.source != JobSource::Skipped && o.result.is_err())
         .collect();
     if !serve_errs.is_empty() {
         println!("{} serving point(s) failed:", serve_errs.len());
@@ -269,6 +312,12 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
         results.threads_used,
         fmt_seconds(elapsed)
     );
+    if opts.cache.enabled() || opts.shard.is_some() {
+        println!(
+            "cache: {} slot(s) simulated, {} from cache, {} skipped (other shards)",
+            results.counters.simulated, results.counters.cached, results.counters.skipped
+        );
+    }
     if let Some(path) = args.options.get("json") {
         let j = results.to_json();
         if path == "-" {
@@ -277,6 +326,15 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
             std::fs::write(path, &j).map_err(|e| format!("--json {path}: {e}"))?;
             println!("wrote JSON report to {path}");
         }
+    }
+    // --require-warm: assert the run performed zero simulations (every
+    // slot came from cache or was skipped to another shard) — CI uses
+    // this to prove a merged re-sweep is pure cache replay.
+    if args.flag("require-warm") && results.counters.simulated > 0 {
+        return Err(format!(
+            "--require-warm: {} slot(s) were simulated instead of served from cache",
+            results.counters.simulated
+        ));
     }
     // Partial failure must not look like success to scripts/CI: the
     // tables and JSON above still describe what ran, but the exit
@@ -300,6 +358,14 @@ pub(crate) fn sweep_cmd(args: &Args) -> Result<(), String> {
 /// baseline passes with seeding instructions (bootstrap mode, useful
 /// locally); with `--strict` — what CI uses — an unseeded baseline is
 /// a hard failure, so the gate can never pass vacuously.
+///
+/// `--reseed OUT` additionally writes the report back out as an
+/// *exact-provenance* baseline (every measured value verbatim, tagged
+/// `"provenance":"exact"`), which is the recipe for tightening the
+/// gate from conservative floors to real 2% regression tracking.
+/// `--require-exact` fails unless the baseline being gated against
+/// carries that exact provenance — CI's merged-matrix gate sets it so
+/// a floor-seeded baseline can never satisfy the tight-tolerance leg.
 pub(crate) fn bench_gate(args: &Args) -> Result<(), String> {
     let baseline_path = args.opt("baseline", "BENCH_baseline.json");
     let report_path = args
@@ -314,8 +380,40 @@ pub(crate) fn bench_gate(args: &Args) -> Result<(), String> {
         let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
         crate::sweep::parse_json(&text).map_err(|e| format!("{p}: {e}"))
     };
+    let report_text =
+        std::fs::read_to_string(report_path).map_err(|e| format!("{report_path}: {e}"))?;
+    let report =
+        crate::sweep::parse_json(&report_text).map_err(|e| format!("{report_path}: {e}"))?;
+    if let Some(out) = args.options.get("reseed") {
+        // An exact baseline is the report itself with seeding metadata
+        // spliced into the document head; every value is verbatim from
+        // the run, so provenance is honestly "exact".
+        let body = report_text
+            .trim_start()
+            .strip_prefix('{')
+            .ok_or_else(|| format!("{report_path}: report is not a JSON object"))?;
+        let seeded = format!("{{\"seeded\":true,\"provenance\":\"exact\",{body}");
+        std::fs::write(out, &seeded).map_err(|e| format!("--reseed {out}: {e}"))?;
+        println!("bench-gate: wrote exact-provenance baseline to {out}");
+    }
     let baseline = read(&baseline_path)?;
-    let report = read(report_path)?;
+    let provenance = baseline
+        .get("provenance")
+        .and_then(crate::sweep::Json::as_str)
+        .unwrap_or("unknown");
+    if args.flag("require-exact") && provenance != "exact" {
+        return Err(format!(
+            "--require-exact: baseline '{baseline_path}' has provenance '{provenance}', \
+             not 'exact'; reseed it from a real run (bench-gate --reseed)"
+        ));
+    }
+    if !args.flag("require-exact") && provenance == "floor-seeded" {
+        println!(
+            "bench-gate: note — baseline '{baseline_path}' is floor-seeded (conservative \
+             model-derived floors). Floor compatibility is kept for one release; CI's \
+             exact gate reseeds from a cold run and enforces --require-exact."
+        );
+    }
     if !crate::sweep::is_seeded(&baseline) {
         let points = crate::sweep::extract_points(&report)?;
         println!(

@@ -142,9 +142,15 @@ SUBCOMMANDS
   dse                       DMA-engine design-space exploration (see
                             DSE OPTIONS)
   bench-gate --report r.json [--baseline BENCH_baseline.json]
-      [--tolerance 0.02] [--strict]
+      [--tolerance 0.02] [--strict] [--reseed OUT] [--require-exact]
                             CI perf gate: fail on median-speedup drops;
-                            --strict also fails on an unseeded baseline
+                            --strict also fails on an unseeded baseline;
+                            --reseed writes the report back out as an
+                            exact-provenance baseline; --require-exact
+                            fails unless the baseline was reseeded from
+                            a real run (provenance \"exact\")
+  model-version             print the simulator-semantics salt mixed
+                            into every cached job key (CI cache key)
   rp-sweep --scenario cb1_896M --collective all-to-all
   report [--jitter 0.01]    full suite: Fig 7, Fig 8, Fig 10, headline
   conccl-bw                 Fig 9 size sweep
@@ -213,6 +219,23 @@ SWEEP OPTIONS (conccl sweep)
   --threads N               worker threads (0 = one per core)
   --jitter X --seed N       measurement-protocol noise / base RNG seed
   --json PATH|-             write the machine-readable report
+  --cache-dir DIR           content-addressed result cache: store every
+                            simulated job keyed by its full input
+                            closure (machine fields incl. sdma.*,
+                            topology, spec, strategy, chunking, seeds,
+                            model-version salt); a re-sweep only
+                            simulates changed points, and an
+                            interrupted run resumes from the records it
+                            already wrote
+  --shard i/n               own only the jobs whose key hashes to shard
+                            i of n (0-based); skipped slots are emitted
+                            as {\"skipped\":true} placeholders
+  --merge d1,d2             extra read-only cache dirs (other shards'
+                            --cache-dir); with every shard cached, the
+                            merged run simulates nothing and emits the
+                            same bytes as an unsharded run
+  --require-warm            fail unless zero slots were simulated
+                            (CI's proof that a merge is pure replay)
 
 DSE OPTIONS (conccl dse)
   --engines 2,4,7,14        SDMA engine-count axis

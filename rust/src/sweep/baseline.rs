@@ -8,8 +8,49 @@
 //! JSON parser (no `serde` offline) that understands exactly the
 //! documents our own writer emits — plus a `{"seeded":false}` bootstrap
 //! form so the first commit can land before any baseline numbers exist.
+//!
+//! Hardening: a malformed baseline file can never panic the gate. Every
+//! failure path returns a typed [`ParseError`] carrying the byte offset
+//! of the problem; duplicate object keys, non-finite numbers and
+//! runaway nesting are rejected outright (our writer emits none of
+//! them, so anything exhibiting one is not a document we wrote).
 
 use std::fmt::Write as _;
+
+/// A typed JSON parse failure: what went wrong and the byte offset at
+/// which it was detected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl ParseError {
+    fn new(offset: usize, msg: impl Into<String>) -> Self {
+        ParseError { offset, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// CLI handlers return `Result<(), String>`; let `?` carry the typed
+/// error across that boundary without losing the offset.
+impl From<ParseError> for String {
+    fn from(e: ParseError) -> String {
+        e.to_string()
+    }
+}
+
+/// Deeper nesting than any document our writer emits (which tops out
+/// around depth 12) is rejected instead of risking a recursion-induced
+/// stack overflow on adversarial input.
+const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value. Objects keep insertion order (our reports are
 /// deterministically ordered; preserving it keeps diffs stable).
@@ -58,13 +99,13 @@ impl Json {
 }
 
 /// Parse a JSON document.
-pub fn parse_json(text: &str) -> Result<Json, String> {
+pub fn parse_json(text: &str) -> Result<Json, ParseError> {
     let bytes = text.as_bytes();
     let mut pos = 0usize;
-    let v = parse_value(bytes, &mut pos)?;
+    let v = parse_value(bytes, &mut pos, 0)?;
     skip_ws(bytes, &mut pos);
     if pos != bytes.len() {
-        return Err(format!("trailing garbage at byte {pos}"));
+        return Err(ParseError::new(pos, "trailing garbage"));
     }
     Ok(v)
 }
@@ -75,23 +116,26 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), ParseError> {
     skip_ws(b, pos);
     if *pos < b.len() && b[*pos] == c {
         *pos += 1;
         Ok(())
     } else {
-        Err(format!("expected '{}' at byte {}", c as char, pos))
+        Err(ParseError::new(*pos, format!("expected '{}'", c as char)))
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, ParseError> {
+    if depth > MAX_DEPTH {
+        return Err(ParseError::new(*pos, format!("nesting deeper than {MAX_DEPTH}")));
+    }
     skip_ws(b, pos);
     match b.get(*pos) {
-        None => Err("unexpected end of input".into()),
+        None => Err(ParseError::new(*pos, "unexpected end of input")),
         Some(b'{') => {
             *pos += 1;
-            let mut fields = Vec::new();
+            let mut fields: Vec<(String, Json)> = Vec::new();
             skip_ws(b, pos);
             if b.get(*pos) == Some(&b'}') {
                 *pos += 1;
@@ -99,9 +143,16 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
             }
             loop {
                 skip_ws(b, pos);
+                let key_at = *pos;
                 let key = parse_string(b, pos)?;
+                if fields.iter().any(|(k, _)| *k == key) {
+                    return Err(ParseError::new(
+                        key_at,
+                        format!("duplicate object key '{key}'"),
+                    ));
+                }
                 expect(b, pos, b':')?;
-                let val = parse_value(b, pos)?;
+                let val = parse_value(b, pos, depth + 1)?;
                 fields.push((key, val));
                 skip_ws(b, pos);
                 match b.get(*pos) {
@@ -110,7 +161,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                         *pos += 1;
                         return Ok(Json::Obj(fields));
                     }
-                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                    _ => return Err(ParseError::new(*pos, "expected ',' or '}'")),
                 }
             }
         }
@@ -123,7 +174,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 return Ok(Json::Arr(items));
             }
             loop {
-                items.push(parse_value(b, pos)?);
+                items.push(parse_value(b, pos, depth + 1)?);
                 skip_ws(b, pos);
                 match b.get(*pos) {
                     Some(b',') => *pos += 1,
@@ -131,7 +182,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                         *pos += 1;
                         return Ok(Json::Arr(items));
                     }
-                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                    _ => return Err(ParseError::new(*pos, "expected ',' or ']'")),
                 }
             }
         }
@@ -143,32 +194,41 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
     }
 }
 
-fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, ParseError> {
     if b[*pos..].starts_with(lit.as_bytes()) {
         *pos += lit.len();
         Ok(v)
     } else {
-        Err(format!("bad literal at byte {pos}"))
+        // "NaN"/"Infinity" land here too (via 'n' they don't — but no
+        // number charset letter starts them, so they surface as bad
+        // literals/values with the offset of the offending token).
+        Err(ParseError::new(*pos, "bad literal"))
     }
 }
 
-fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, ParseError> {
     let start = *pos;
     while *pos < b.len()
         && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
     {
         *pos += 1;
     }
-    std::str::from_utf8(&b[start..*pos])
+    let n = std::str::from_utf8(&b[start..*pos])
         .ok()
         .and_then(|s| s.parse::<f64>().ok())
-        .map(Json::Num)
-        .ok_or_else(|| format!("bad number at byte {start}"))
+        .ok_or_else(|| ParseError::new(start, "bad number"))?;
+    // JSON has no NaN/inf; an overflowing literal like 1e999 parses to
+    // inf in Rust but is not a number our writer emits — reject it
+    // rather than let a non-finite baseline value slip into the gate.
+    if !n.is_finite() {
+        return Err(ParseError::new(start, "non-finite number"));
+    }
+    Ok(Json::Num(n))
 }
 
-fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, ParseError> {
     if b.get(*pos) != Some(&b'"') {
-        return Err(format!("expected string at byte {pos}"));
+        return Err(ParseError::new(*pos, "expected string"));
     }
     *pos += 1;
     let mut out = String::new();
@@ -193,13 +253,14 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                         let hex = b
                             .get(*pos + 1..*pos + 5)
                             .and_then(|h| std::str::from_utf8(h).ok())
-                            .ok_or("truncated \\u escape")?;
-                        let cp = u32::from_str_radix(hex, 16)
-                            .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                            .ok_or_else(|| ParseError::new(*pos, "truncated \\u escape"))?;
+                        let cp = u32::from_str_radix(hex, 16).map_err(|_| {
+                            ParseError::new(*pos, format!("bad \\u escape '{hex}'"))
+                        })?;
                         out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         *pos += 4;
                     }
-                    _ => return Err(format!("bad escape at byte {pos}")),
+                    _ => return Err(ParseError::new(*pos, "bad escape")),
                 }
                 *pos += 1;
             }
@@ -210,12 +271,13 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                     *pos += 1;
                 }
                 out.push_str(
-                    std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?,
+                    std::str::from_utf8(&b[start..*pos])
+                        .map_err(|e| ParseError::new(start, e.to_string()))?,
                 );
             }
         }
     }
-    Err("unterminated string".into())
+    Err(ParseError::new(*pos, "unterminated string"))
 }
 
 /// One measured matrix point extracted from a report:
@@ -252,24 +314,25 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
             None => vec![(1, m)],
         };
         for (nodes, t) in topos {
-            // v3 nests scenarios under chunkings[]; v1/v2 documents get
-            // an empty chunk segment so their keys stay stable.
-            let chunkings: Vec<(String, &Json)> =
+            // v3 nests scenarios under chunkings[]; v1/v2 documents have
+            // no chunk label (None) and keep their legacy key format so
+            // old baselines stay addressable.
+            let chunkings: Vec<(Option<String>, &Json)> =
                 match t.get("chunkings").and_then(Json::as_arr) {
                     Some(cs) => cs
                         .iter()
                         .map(|c| {
                             let lab = match c.get("chunks") {
-                                Some(Json::Str(s)) => format!("/k={s}"),
-                                Some(Json::Num(n)) => format!("/k={}", *n as u64),
-                                _ => "/k=?".to_string(),
+                                Some(Json::Str(s)) => s.clone(),
+                                Some(Json::Num(n)) => format!("{}", *n as u64),
+                                _ => "?".to_string(),
                             };
-                            (lab, c)
+                            (Some(lab), c)
                         })
                         .collect(),
-                    None => vec![(String::new(), t)],
+                    None => vec![(None, t)],
                 };
-            for (chunk_seg, c) in chunkings {
+            for (chunk_label, c) in chunkings {
                 let scenarios = c
                     .get("scenarios")
                     .and_then(Json::as_arr)
@@ -283,12 +346,15 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
                     for (name, v) in strategies {
                         if let Some(sp) = v.get("speedup_median").and_then(Json::as_num) {
                             if sp.is_finite() {
-                                out.push(BenchPoint {
-                                    key: format!(
-                                        "{label}/{nodes}n{chunk_seg}/{tag}/{coll}/{name}"
+                                let key = match &chunk_label {
+                                    Some(k) => super::key::pair_gate_key(
+                                        label, nodes, k, tag, coll, name,
                                     ),
-                                    speedup_median: sp,
-                                });
+                                    None => {
+                                        format!("{label}/{nodes}n/{tag}/{coll}/{name}")
+                                    }
+                                };
+                                out.push(BenchPoint { key, speedup_median: sp });
                             }
                         }
                     }
@@ -305,7 +371,7 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
                         if let Some(sp) = v.get("speedup").and_then(Json::as_num) {
                             if sp.is_finite() {
                                 out.push(BenchPoint {
-                                    key: format!("{label}/{nodes}n/wl={wl}/{fam}"),
+                                    key: super::key::e2e_gate_key(label, nodes, wl, fam),
                                     speedup_median: sp,
                                 });
                             }
@@ -327,7 +393,7 @@ pub fn extract_points(report: &Json) -> Result<Vec<BenchPoint>, String> {
                         if let Some(sp) = v.get("speedup").and_then(Json::as_num) {
                             if sp.is_finite() {
                                 out.push(BenchPoint {
-                                    key: format!("{label}/{nodes}n/serve={wl}/{fam}"),
+                                    key: super::key::serve_gate_key(label, nodes, wl, fam),
                                     speedup_median: sp,
                                 });
                             }
@@ -467,6 +533,70 @@ mod tests {
         assert!(parse_json("[1,2,").is_err());
         assert!(parse_json("{}extra").is_err());
         assert_eq!(parse_json(r#""A""#).unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn truncated_input_errors_with_offset_instead_of_panicking() {
+        for doc in [
+            "",
+            "{",
+            "{\"a\"",
+            "{\"a\":",
+            "[1,2",
+            "\"unterminated",
+            "{\"a\":1,",
+            "tru",
+        ] {
+            let err = parse_json(doc).unwrap_err();
+            assert!(err.offset <= doc.len(), "{doc:?}: {err}");
+            assert!(err.to_string().starts_with(&format!("byte {}", err.offset)));
+        }
+    }
+
+    #[test]
+    fn duplicate_object_keys_are_rejected_at_their_offset() {
+        let doc = r#"{"a":1,"a":2}"#;
+        let err = parse_json(doc).unwrap_err();
+        assert_eq!(err.offset, 7, "offset of the second \"a\"");
+        assert!(err.msg.contains("duplicate"), "{err}");
+        assert!(err.msg.contains('a'), "{err}");
+        // Same key at different nesting levels is fine.
+        assert!(parse_json(r#"{"a":{"a":1}}"#).is_ok());
+        // ... and in sibling objects.
+        assert!(parse_json(r#"[{"a":1},{"a":2}]"#).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_are_rejected() {
+        // JSON has no NaN/Infinity tokens; they must not sneak in as
+        // literals, and overflow-to-inf decimals must not either.
+        assert!(parse_json("NaN").is_err());
+        assert!(parse_json("Infinity").is_err());
+        assert!(parse_json("-Infinity").is_err());
+        let err = parse_json(r#"{"speedup":1e999}"#).unwrap_err();
+        assert!(err.msg.contains("non-finite"), "{err}");
+        assert_eq!(err.offset, 11, "offset of the 1e999 token");
+        // Large-but-finite values still parse.
+        assert!(parse_json("1e308").is_ok());
+    }
+
+    #[test]
+    fn runaway_nesting_is_rejected_not_overflowed() {
+        let deep = "[".repeat(MAX_DEPTH + 8) + &"]".repeat(MAX_DEPTH + 8);
+        let err = parse_json(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // Depth at the limit is fine.
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_error_converts_to_string_for_cli_boundaries() {
+        let err = parse_json("{").unwrap_err();
+        let s: String = err.clone().into();
+        assert_eq!(s, err.to_string());
+        // And it is a real std error (boxable, source-chainable).
+        let _: &dyn std::error::Error = &err;
     }
 
     fn small_report() -> Json {

@@ -1,0 +1,824 @@
+//! Content-addressed on-disk result cache for sweep jobs.
+//!
+//! Every job kind (pair, e2e, serve lineup, dse point) hashes its *full
+//! input closure* — every [`MachineConfig`] field including `sdma.*`,
+//! the topology node count, the workload spec, strategy/family, chunk
+//! selection, seeds, and [`MODEL_VERSION`] — into a 128-bit
+//! [`JobKey`]. A completed job is persisted as one small JSON record
+//! named `<kind>-<hex key>.json` under `--cache-dir`; a later run of
+//! the same closure reads the record back instead of simulating.
+//!
+//! Contracts:
+//!
+//! * **Bit-exact**: every `f64` is stored as the hex of `to_bits()`, so
+//!   a reconstructed result is indistinguishable from a recomputed one
+//!   and warm-cache JSON reports are byte-identical to cold ones.
+//! * **Fail-open**: any anomaly — unreadable file, parse error, salt
+//!   mismatch, unknown interned name — is a cache *miss*, never an
+//!   error. The job is simply re-simulated.
+//! * **Success-only**: failed jobs are never cached; errors always
+//!   re-run.
+//! * **Atomic**: records are written to a temp file and renamed into
+//!   place, so an interrupted sweep leaves only complete records — that
+//!   is what makes partial sweeps resumable.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::machine::MachineConfig;
+use crate::coordinator::runner::{Measured, RunnerConfig};
+use crate::sched::{C3Run, PlanNode, PlanSummary, Strategy};
+use crate::util::stats::Summary;
+use crate::workload::e2e::{E2eFamily, E2eRun};
+use crate::workload::traffic::{ServeReport, TrafficConfig};
+
+use super::baseline::{parse_json, Json};
+use super::key::{JobKey, KeyHasher, MODEL_VERSION};
+
+// ---------------------------------------------------------------------------
+// Closure hashing
+// ---------------------------------------------------------------------------
+
+/// Hash every field of a [`MachineConfig`] (incl. each `sdma.*`
+/// subfield). Kept exhaustive by hand, mirrored by the perturbation
+/// property test, which drives `config::parse::set_machine_field` over
+/// the canonical field list and asserts every field changes the key.
+pub fn machine_closure(h: &mut KeyHasher, m: &MachineConfig) {
+    h.field("machine.name", &m.name);
+    h.u64_field("num_gpus", m.num_gpus as u64);
+    h.u64_field("xcds", m.xcds as u64);
+    h.u64_field("cus_per_xcd", m.cus_per_xcd as u64);
+    h.f64_field("peak_flops_bf16", m.peak_flops_bf16);
+    h.f64_field("compute_eff", m.compute_eff);
+    h.f64_field("hbm_bw", m.hbm_bw);
+    h.f64_field("hbm_eff", m.hbm_eff);
+    h.f64_field("per_cu_hbm_bw", m.per_cu_hbm_bw);
+    h.f64_field("llc_capacity", m.llc_capacity);
+    h.f64_field("llc_bw", m.llc_bw);
+    h.f64_field("l2_per_xcd", m.l2_per_xcd);
+    h.u64_field("sdma.engines", m.sdma.engines as u64);
+    h.f64_field("sdma.engine_bw_share", m.sdma.engine_bw_share);
+    h.u64_field("sdma.queue_depth", m.sdma.queue_depth as u64);
+    h.f64_field("sdma.enqueue_s", m.sdma.enqueue_s);
+    h.f64_field("sdma.doorbell_s", m.sdma.doorbell_s);
+    h.f64_field("sdma.fetch_s", m.sdma.fetch_s);
+    h.f64_field("sdma.sync_s", m.sdma.sync_s);
+    h.u64_field("sdma.fused_packets", m.sdma.fused_packets as u64);
+    h.u64_field("link_count", m.link_count as u64);
+    h.f64_field("link_bw", m.link_bw);
+    h.f64_field("link_eff", m.link_eff);
+    h.f64_field("link_eff_dma", m.link_eff_dma);
+    h.f64_field("nic_bw", m.nic_bw);
+    h.f64_field("nic_latency_s", m.nic_latency_s);
+    h.f64_field("kernel_launch_s", m.kernel_launch_s);
+    h.f64_field("coll_launch_s", m.coll_launch_s);
+    h.u64_field("gemm_tile", m.gemm_tile as u64);
+    h.f64_field("gemm_traffic_coeff", m.gemm_traffic_coeff);
+    h.f64_field("gemm_traffic_exp", m.gemm_traffic_exp);
+    h.f64_field("gemm_traffic_cap", m.gemm_traffic_cap);
+    h.f64_field("gemm_cache_damp", m.gemm_cache_damp);
+    h.u64_field("ag_cu_need", u64::from(m.ag_cu_need));
+    h.u64_field("a2a_cu_need", u64::from(m.a2a_cu_need));
+    h.u64_field("ar_cu_need", u64::from(m.ar_cu_need));
+    h.u64_field("rs_cu_need", u64::from(m.rs_cu_need));
+    h.f64_field("a2a_hbm_factor", m.a2a_hbm_factor);
+    h.f64_field("ag_hbm_factor", m.ag_hbm_factor);
+    h.f64_field("a2a_link_derate", m.a2a_link_derate);
+    h.f64_field("comm_co_penalty_ag", m.comm_co_penalty_ag);
+    h.f64_field("comm_co_penalty_a2a", m.comm_co_penalty_a2a);
+    h.f64_field("gemm_l2_pollution_ag", m.gemm_l2_pollution_ag);
+    h.f64_field("gemm_l2_pollution_a2a", m.gemm_l2_pollution_a2a);
+    h.f64_field("mem_interference_coeff", m.mem_interference_coeff);
+    h.f64_field("mem_interference_cap", m.mem_interference_cap);
+    h.u64_field("base_leak_cus", u64::from(m.base_leak_cus));
+    h.f64_field("base_dispatch_backlog", m.base_dispatch_backlog);
+    h.u64_field("min_cu_granularity", u64::from(m.min_cu_granularity));
+    h.f64_field("roofline_eff", m.roofline_eff);
+    h.f64_field("chunk_align_frac", m.chunk_align_frac);
+    h.u64_field("max_chunks", u64::from(m.max_chunks));
+}
+
+/// Identity of one pair-scenario job. The per-job RNG seed is hashed
+/// directly (it already folds in the machine label, node count, chunk
+/// label, scenario tag, collective and strategy via `plan::job_seed`),
+/// so a seed-derivation change re-keys automatically.
+#[allow(clippy::too_many_arguments)]
+pub fn pair_job_key(
+    m: &MachineConfig,
+    nodes: usize,
+    chunk: &str,
+    tag: &str,
+    collective: &str,
+    strategy: &str,
+    cfg: &RunnerConfig,
+    seed: u64,
+) -> JobKey {
+    let mut h = KeyHasher::new("pair");
+    machine_closure(&mut h, m);
+    h.u64_field("nodes", nodes as u64);
+    h.field("chunk", chunk);
+    h.field("scenario", tag);
+    h.field("collective", collective);
+    h.field("strategy", strategy);
+    h.u64_field("cfg.warmup", cfg.warmup as u64);
+    h.u64_field("cfg.measured", cfg.measured as u64);
+    h.f64_field("cfg.jitter", cfg.jitter);
+    h.u64_field("cfg.seed", cfg.seed);
+    h.u64_field("job.seed", seed);
+    h.finish()
+}
+
+/// Identity of one e2e workload job. The spec label encodes the full
+/// spec closure (`kind-model-l{layers}-d{depth}`); the graph engine is
+/// noise-free, so no RNG seed participates.
+pub fn e2e_job_key(m: &MachineConfig, nodes: usize, workload: &str, family: &str) -> JobKey {
+    let mut h = KeyHasher::new("e2e");
+    machine_closure(&mut h, m);
+    h.u64_field("nodes", nodes as u64);
+    h.field("workload", workload);
+    h.field("family", family);
+    h.finish()
+}
+
+/// Identity of one serving *lineup* (all four families of one spec on
+/// one machine/topology — they share the arrival process and the
+/// serial denominator, so they cache and shard as a unit).
+pub fn serve_job_key(
+    m: &MachineConfig,
+    nodes: usize,
+    workload: &str,
+    traffic: &TrafficConfig,
+    seed: u64,
+) -> JobKey {
+    let mut h = KeyHasher::new("serve");
+    machine_closure(&mut h, m);
+    h.u64_field("nodes", nodes as u64);
+    h.field("workload", workload);
+    h.f64_field("traffic.rate", traffic.rate);
+    h.u64_field("traffic.steps", traffic.steps as u64);
+    h.f64_field("traffic.duration", traffic.duration);
+    h.f64_field("traffic.tokens_mean", traffic.tokens_mean);
+    h.u64_field("arrival.seed", seed);
+    h.finish()
+}
+
+/// Identity of one dse grid point (the mutated machine carries the
+/// point's `sdma.*`/`nic_bw` overrides and its label in `name`).
+pub fn dse_point_key(m: &MachineConfig, nodes: usize, seed: u64) -> JobKey {
+    let mut h = KeyHasher::new("dse");
+    machine_closure(&mut h, m);
+    h.u64_field("nodes", nodes as u64);
+    h.u64_field("seed", seed);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------------
+
+/// Read/write handle over one writable cache dir and any number of
+/// extra read-only dirs (`--merge`). Lookups scan the write dir first,
+/// then the merge dirs in order.
+#[derive(Debug, Clone, Default)]
+pub struct Cache {
+    read_dirs: Vec<PathBuf>,
+    write_dir: Option<PathBuf>,
+}
+
+/// Distinguishes temp-file names when concurrent processes share a
+/// cache dir (threads within one run never collide on a key).
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl Cache {
+    /// A disabled cache: every lookup misses, every store is a no-op.
+    pub fn disabled() -> Self {
+        Cache::default()
+    }
+
+    /// Open a cache. The write dir is created; missing read dirs are
+    /// tolerated (their lookups miss).
+    pub fn open(write_dir: Option<PathBuf>, read_dirs: Vec<PathBuf>) -> Result<Self, String> {
+        if let Some(d) = &write_dir {
+            fs::create_dir_all(d)
+                .map_err(|e| format!("cannot create cache dir {}: {e}", d.display()))?;
+        }
+        Ok(Cache { read_dirs, write_dir })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.write_dir.is_some() || !self.read_dirs.is_empty()
+    }
+
+    fn record_name(kind: &str, key: &JobKey) -> String {
+        format!("{kind}-{}.json", key.hex())
+    }
+
+    /// Load + validate a record: parseable JSON whose salt and key echo
+    /// match. Anything else is a miss.
+    fn load(&self, kind: &str, key: &JobKey) -> Option<Json> {
+        let name = Self::record_name(kind, key);
+        let dirs = self.write_dir.iter().chain(self.read_dirs.iter());
+        for d in dirs {
+            let Ok(text) = fs::read_to_string(d.join(&name)) else {
+                continue;
+            };
+            let Ok(j) = parse_json(&text) else { continue };
+            if str_field(&j, "model_version") == Some(MODEL_VERSION)
+                && str_field(&j, "key").is_some_and(|k| k == key.hex())
+            {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Atomically persist a record body (the caller supplies everything
+    /// after the shared `model_version`/`kind`/`key` preamble). Write
+    /// failures are swallowed: the cache is an accelerator, not a
+    /// correctness dependency.
+    fn store(&self, kind: &str, key: &JobKey, body: &str) {
+        let Some(d) = &self.write_dir else { return };
+        let path = d.join(Self::record_name(kind, key));
+        if path.exists() {
+            return;
+        }
+        let record = format!(
+            "{{\"model_version\":\"{MODEL_VERSION}\",\"kind\":\"{kind}\",\"key\":\"{}\",{body}}}",
+            key.hex()
+        );
+        let tmp = d.join(format!(
+            ".{kind}-{}.{}.{}.tmp",
+            key.hex(),
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        if fs::write(&tmp, record).is_ok() && fs::rename(&tmp, &path).is_err() {
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+
+    // -- pair ---------------------------------------------------------------
+
+    /// Reconstructed pair-job result (bit-exact vs. the cold run).
+    pub fn lookup_pair(&self, key: &JobKey) -> Option<PairHit> {
+        let j = self.load("pair", key)?;
+        let strategy = strategy_from_parts(
+            str_field(&j, "strategy")?,
+            u32_field(&j, "strategy_param")?,
+        )?;
+        let run = j.get("run")?;
+        let stats = j.get("stats")?;
+        Some(PairHit {
+            measured: Measured {
+                strategy,
+                run: C3Run {
+                    strategy,
+                    total: bits_field(run, "total")?,
+                    gemm_finish: bits_field(run, "gemm_finish")?,
+                    comm_finish: bits_field(run, "comm_finish")?,
+                    serial: bits_field(run, "serial")?,
+                    ideal: bits_field(run, "ideal")?,
+                    speedup: bits_field(run, "speedup")?,
+                    pct_ideal: bits_field(run, "pct_ideal")?,
+                },
+                stats: Summary {
+                    n: usize_field(stats, "n")?,
+                    mean: bits_field(stats, "mean")?,
+                    median: bits_field(stats, "median")?,
+                    stddev: bits_field(stats, "stddev")?,
+                    min: bits_field(stats, "min")?,
+                    max: bits_field(stats, "max")?,
+                    p5: bits_field(stats, "p5")?,
+                    p95: bits_field(stats, "p95")?,
+                },
+                speedup_median: bits_field(&j, "speedup_median")?,
+                pct_ideal_median: bits_field(&j, "pct_ideal_median")?,
+            },
+            rp_cus: opt_u32_field(&j, "rp_cus"),
+            chunks_used: opt_u32_field(&j, "chunks_used"),
+        })
+    }
+
+    pub fn store_pair(
+        &self,
+        key: &JobKey,
+        m: &Measured,
+        rp_cus: Option<u32>,
+        chunks_used: Option<u32>,
+    ) {
+        if self.write_dir.is_none() {
+            return;
+        }
+        let (sname, sparam) = strategy_to_parts(m.strategy);
+        let mut b = String::with_capacity(640);
+        push_str_f(&mut b, "strategy", sname);
+        push_u64_f(&mut b, "strategy_param", u64::from(sparam));
+        push_opt_u32_f(&mut b, "rp_cus", rp_cus);
+        push_opt_u32_f(&mut b, "chunks_used", chunks_used);
+        b.push_str("\"run\":{");
+        push_bits_f(&mut b, "total", m.run.total);
+        push_bits_f(&mut b, "gemm_finish", m.run.gemm_finish);
+        push_bits_f(&mut b, "comm_finish", m.run.comm_finish);
+        push_bits_f(&mut b, "serial", m.run.serial);
+        push_bits_f(&mut b, "ideal", m.run.ideal);
+        push_bits_f(&mut b, "speedup", m.run.speedup);
+        push_bits_last(&mut b, "pct_ideal", m.run.pct_ideal);
+        b.push_str("},\"stats\":{");
+        push_u64_f(&mut b, "n", m.stats.n as u64);
+        push_bits_f(&mut b, "mean", m.stats.mean);
+        push_bits_f(&mut b, "median", m.stats.median);
+        push_bits_f(&mut b, "stddev", m.stats.stddev);
+        push_bits_f(&mut b, "min", m.stats.min);
+        push_bits_f(&mut b, "max", m.stats.max);
+        push_bits_f(&mut b, "p5", m.stats.p5);
+        push_bits_last(&mut b, "p95", m.stats.p95);
+        b.push_str("},");
+        push_bits_f(&mut b, "speedup_median", m.speedup_median);
+        push_bits_last(&mut b, "pct_ideal_median", m.pct_ideal_median);
+        self.store("pair", key, &b);
+    }
+
+    // -- e2e ----------------------------------------------------------------
+
+    /// Reconstructed e2e-job result. `family` is the caller's slot; a
+    /// record whose stored family disagrees is a miss (hash collision
+    /// paranoia, effectively free to check).
+    pub fn lookup_e2e(&self, key: &JobKey, family: E2eFamily) -> Option<E2eHit> {
+        let j = self.load("e2e", key)?;
+        if str_field(&j, "family")? != family.name() {
+            return None;
+        }
+        let run = j.get("run")?;
+        let plan = match j.get("plan")? {
+            Json::Null => None,
+            p => Some(plan_summary_from(p)?),
+        };
+        Some(E2eHit {
+            run: E2eRun {
+                family,
+                total: bits_field(run, "total")?,
+                serial: bits_field(run, "serial")?,
+                speedup: bits_field(run, "speedup")?,
+                exposed_comm: bits_field(run, "exposed_comm")?,
+                bubble: bits_field(run, "bubble")?,
+                hbm_occupancy: bits_field(run, "hbm_occupancy")?,
+                sdma_occupancy: bits_field(run, "sdma_occupancy")?,
+                graph_nodes: usize_field(run, "graph_nodes")?,
+            },
+            plan,
+        })
+    }
+
+    pub fn store_e2e(&self, key: &JobKey, run: &E2eRun, plan: Option<&PlanSummary>) {
+        if self.write_dir.is_none() {
+            return;
+        }
+        let mut b = String::with_capacity(512);
+        push_str_f(&mut b, "family", run.family.name());
+        b.push_str("\"run\":{");
+        push_bits_f(&mut b, "total", run.total);
+        push_bits_f(&mut b, "serial", run.serial);
+        push_bits_f(&mut b, "speedup", run.speedup);
+        push_bits_f(&mut b, "exposed_comm", run.exposed_comm);
+        push_bits_f(&mut b, "bubble", run.bubble);
+        push_bits_f(&mut b, "hbm_occupancy", run.hbm_occupancy);
+        push_bits_f(&mut b, "sdma_occupancy", run.sdma_occupancy);
+        push_u64_last(&mut b, "graph_nodes", run.graph_nodes as u64);
+        b.push_str("},\"plan\":");
+        match plan {
+            None => b.push_str("null"),
+            Some(p) => {
+                b.push('{');
+                push_str_f(&mut b, "strategy", p.strategy);
+                push_u64_f(&mut b, "candidates", p.candidates as u64);
+                b.push_str("\"nodes\":[");
+                for (i, n) in p.nodes.iter().enumerate() {
+                    if i > 0 {
+                        b.push(',');
+                    }
+                    b.push('{');
+                    push_str_f(&mut b, "label", &super::json::escape(&n.label));
+                    push_str_f(&mut b, "role", n.role);
+                    push_str_f(&mut b, "backend", n.backend);
+                    push_u64_f(&mut b, "cus", u64::from(n.cus));
+                    push_u64_last(&mut b, "chunks", u64::from(n.chunks));
+                    b.push('}');
+                }
+                b.push_str("]}");
+            }
+        }
+        self.store("e2e", key, &b);
+    }
+
+    // -- serve --------------------------------------------------------------
+
+    /// Reconstructed serving lineup (one report per family, in stored
+    /// order).
+    pub fn lookup_serve(&self, key: &JobKey) -> Option<Vec<ServeReport>> {
+        let j = self.load("serve", key)?;
+        let Json::Arr(fams) = j.get("families")? else {
+            return None;
+        };
+        let mut out = Vec::with_capacity(fams.len());
+        for f in fams {
+            let plan = match f.get("plan")? {
+                Json::Null => None,
+                Json::Str(s) => Some(intern_plan(s)?),
+                _ => return None,
+            };
+            out.push(ServeReport {
+                family: family_from_name(str_field(f, "family")?)?,
+                requests_arrived: usize_field(f, "requests_arrived")?,
+                requests_completed: usize_field(f, "requests_completed")?,
+                steps: usize_field(f, "steps")?,
+                elapsed: bits_field(f, "elapsed")?,
+                p50: bits_field(f, "p50")?,
+                p95: bits_field(f, "p95")?,
+                p99: bits_field(f, "p99")?,
+                goodput_tps: bits_field(f, "goodput_tps")?,
+                speedup: bits_field(f, "speedup")?,
+                hbm_occupancy: bits_field(f, "hbm_occupancy")?,
+                sdma_occupancy: bits_field(f, "sdma_occupancy")?,
+                plan,
+            });
+        }
+        Some(out)
+    }
+
+    pub fn store_serve(&self, key: &JobKey, reports: &[ServeReport]) {
+        if self.write_dir.is_none() {
+            return;
+        }
+        let mut b = String::with_capacity(256 * reports.len());
+        b.push_str("\"families\":[");
+        for (i, r) in reports.iter().enumerate() {
+            if i > 0 {
+                b.push(',');
+            }
+            b.push('{');
+            push_str_f(&mut b, "family", r.family.name());
+            push_u64_f(&mut b, "requests_arrived", r.requests_arrived as u64);
+            push_u64_f(&mut b, "requests_completed", r.requests_completed as u64);
+            push_u64_f(&mut b, "steps", r.steps as u64);
+            push_bits_f(&mut b, "elapsed", r.elapsed);
+            push_bits_f(&mut b, "p50", r.p50);
+            push_bits_f(&mut b, "p95", r.p95);
+            push_bits_f(&mut b, "p99", r.p99);
+            push_bits_f(&mut b, "goodput_tps", r.goodput_tps);
+            push_bits_f(&mut b, "speedup", r.speedup);
+            push_bits_f(&mut b, "hbm_occupancy", r.hbm_occupancy);
+            push_bits_f(&mut b, "sdma_occupancy", r.sdma_occupancy);
+            match r.plan {
+                None => b.push_str("\"plan\":null"),
+                Some(p) => {
+                    b.push_str("\"plan\":\"");
+                    b.push_str(p);
+                    b.push('"');
+                }
+            }
+            b.push('}');
+        }
+        b.push(']');
+        self.store("serve", key, &b);
+    }
+}
+
+/// A cache hit for one pair job.
+#[derive(Debug, Clone)]
+pub struct PairHit {
+    pub measured: Measured,
+    pub rp_cus: Option<u32>,
+    pub chunks_used: Option<u32>,
+}
+
+/// A cache hit for one e2e job.
+#[derive(Debug, Clone)]
+pub struct E2eHit {
+    pub run: E2eRun,
+    pub plan: Option<PlanSummary>,
+}
+
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
+
+fn push_str_f(b: &mut String, name: &str, v: &str) {
+    b.push('"');
+    b.push_str(name);
+    b.push_str("\":\"");
+    b.push_str(v);
+    b.push_str("\",");
+}
+
+fn push_u64_f(b: &mut String, name: &str, v: u64) {
+    b.push('"');
+    b.push_str(name);
+    b.push_str("\":");
+    b.push_str(&v.to_string());
+    b.push(',');
+}
+
+fn push_u64_last(b: &mut String, name: &str, v: u64) {
+    push_u64_f(b, name, v);
+    b.pop();
+}
+
+fn push_opt_u32_f(b: &mut String, name: &str, v: Option<u32>) {
+    match v {
+        Some(x) => push_u64_f(b, name, u64::from(x)),
+        None => {
+            b.push('"');
+            b.push_str(name);
+            b.push_str("\":null,");
+        }
+    }
+}
+
+/// `f64` as the 16-hex-digit bit pattern — lossless round-trip.
+fn push_bits_f(b: &mut String, name: &str, v: f64) {
+    b.push('"');
+    b.push_str(name);
+    b.push_str("\":\"");
+    let bits = v.to_bits();
+    for shift in (0..16).rev() {
+        b.push(b"0123456789abcdef"[((bits >> (shift * 4)) & 0xf) as usize] as char);
+    }
+    b.push_str("\",");
+}
+
+fn push_bits_last(b: &mut String, name: &str, v: f64) {
+    push_bits_f(b, name, v);
+    b.pop();
+}
+
+fn str_field<'a>(j: &'a Json, name: &str) -> Option<&'a str> {
+    match j.get(name)? {
+        Json::Str(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn u64_num(j: &Json) -> Option<u64> {
+    match j {
+        // Counters are small integers; anything that lost integrality
+        // in transit is a corrupt record → miss.
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => Some(*n as u64),
+        _ => None,
+    }
+}
+
+fn u32_field(j: &Json, name: &str) -> Option<u32> {
+    u32::try_from(u64_num(j.get(name)?)).ok()
+}
+
+fn usize_field(j: &Json, name: &str) -> Option<usize> {
+    usize::try_from(u64_num(j.get(name)?)).ok()
+}
+
+fn opt_u32_field(j: &Json, name: &str) -> Option<u32> {
+    match j.get(name) {
+        Some(Json::Null) | None => None,
+        Some(v) => u64_num(v).and_then(|x| u32::try_from(x).ok()),
+    }
+}
+
+fn bits_field(j: &Json, name: &str) -> Option<f64> {
+    let s = str_field(j, name)?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+// ---------------------------------------------------------------------------
+// `&'static str` interning
+// ---------------------------------------------------------------------------
+//
+// `PlanSummary.strategy`, `PlanNode.role/backend` and `ServeReport.plan`
+// are `&'static str` in the simulator; reconstruction maps the stored
+// string back onto the canonical static. An unknown name (e.g. a
+// candidate added after the record was written) is a miss — the job
+// re-simulates, which is always safe.
+
+const PLAN_NAMES: &[&str] = &[
+    "cu-rp",
+    "cu-uniform",
+    "dma-chunked",
+    "dma-hybrid",
+    "dma-trim",
+    "dma-uniform",
+    "kv-dma",
+    "kv-dma-chunked",
+    "split-even",
+    "split-odd",
+    "split-thirds",
+];
+const ROLE_NAMES: &[&str] = &["gather", "gemm", "reduce"];
+const BACKEND_NAMES: &[&str] = &["cu", "dma"];
+
+fn intern(pool: &'static [&'static str], s: &str) -> Option<&'static str> {
+    pool.iter().find(|p| **p == s).copied()
+}
+
+fn intern_plan(s: &str) -> Option<&'static str> {
+    intern(PLAN_NAMES, s)
+}
+
+fn family_from_name(s: &str) -> Option<E2eFamily> {
+    E2eFamily::lineup().into_iter().find(|f| f.name() == s)
+}
+
+fn plan_summary_from(j: &Json) -> Option<PlanSummary> {
+    let Json::Arr(nodes) = j.get("nodes")? else {
+        return None;
+    };
+    let mut out = Vec::with_capacity(nodes.len());
+    for n in nodes {
+        out.push(PlanNode {
+            label: unescape(str_field(n, "label")?),
+            role: intern(ROLE_NAMES, str_field(n, "role")?)?,
+            backend: intern(BACKEND_NAMES, str_field(n, "backend")?)?,
+            cus: u32_field(n, "cus")?,
+            chunks: u32_field(n, "chunks")?,
+        });
+    }
+    Some(PlanSummary {
+        strategy: intern(PLAN_NAMES, str_field(j, "strategy")?)?,
+        candidates: usize_field(j, "candidates")?,
+        nodes: out,
+    })
+}
+
+/// Node labels pass through `json::escape` on store; the baseline
+/// parser already decodes JSON escapes, so the parsed string is the
+/// original — this is the identity, kept as a named seam.
+fn unescape(s: &str) -> String {
+    s.to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Strategy (de)serialization
+// ---------------------------------------------------------------------------
+
+/// A `Strategy` flattens to (name, one u32 payload).
+pub fn strategy_to_parts(s: Strategy) -> (&'static str, u32) {
+    let param = match s {
+        Strategy::C3Rp { comm_cus } | Strategy::C3SpRp { comm_cus } => comm_cus,
+        Strategy::ConcclRp { cus_removed } => cus_removed,
+        Strategy::C3Chunked { chunks } | Strategy::ConcclChunked { chunks } => chunks,
+        _ => 0,
+    };
+    (s.name(), param)
+}
+
+pub fn strategy_from_parts(name: &str, param: u32) -> Option<Strategy> {
+    Some(match name {
+        "serial" => Strategy::Serial,
+        "c3_base" => Strategy::C3Base,
+        "c3_sp" => Strategy::C3Sp,
+        "c3_rp" => Strategy::C3Rp { comm_cus: param },
+        "c3_sp_rp" => Strategy::C3SpRp { comm_cus: param },
+        "conccl" => Strategy::Conccl,
+        "conccl_rp" => Strategy::ConcclRp { cus_removed: param },
+        "c3_chunked" => Strategy::C3Chunked { chunks: param },
+        "conccl_chunked" => Strategy::ConcclChunked { chunks: param },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("conccl-cache-test-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_measured() -> Measured {
+        let strategy = Strategy::ConcclRp { cus_removed: 8 };
+        Measured {
+            strategy,
+            run: C3Run {
+                strategy,
+                total: 1.25e-3,
+                gemm_finish: 1.0e-3,
+                comm_finish: 1.2e-3,
+                serial: 2.0e-3,
+                ideal: 1.9,
+                speedup: 1.6,
+                pct_ideal: 84.2105263157893,
+            },
+            stats: Summary {
+                n: 9,
+                mean: 1.26e-3,
+                median: 1.25e-3,
+                stddev: 1.0e-6,
+                min: 1.24e-3,
+                max: 1.29e-3,
+                p5: 1.243e-3,
+                p95: 1.288e-3,
+            },
+            speedup_median: 1.6000000000000003,
+            pct_ideal_median: 84.21052631578948,
+        }
+    }
+
+    #[test]
+    fn pair_record_round_trips_bit_exactly() {
+        let dir = tmpdir("pair");
+        let cache = Cache::open(Some(dir.clone()), Vec::new()).unwrap();
+        let key = JobKey { hi: 7, lo: 11 };
+        let m = sample_measured();
+        cache.store_pair(&key, &m, Some(24), None);
+        let hit = cache.lookup_pair(&key).expect("hit");
+        assert_eq!(hit.rp_cus, Some(24));
+        assert_eq!(hit.chunks_used, None);
+        assert_eq!(hit.measured.strategy, m.strategy);
+        assert_eq!(hit.measured.run.total.to_bits(), m.run.total.to_bits());
+        assert_eq!(
+            hit.measured.speedup_median.to_bits(),
+            m.speedup_median.to_bits()
+        );
+        assert_eq!(
+            hit.measured.pct_ideal_median.to_bits(),
+            m.pct_ideal_median.to_bits()
+        );
+        assert_eq!(hit.measured.stats.n, 9);
+        assert_eq!(hit.measured.stats.p95.to_bits(), m.stats.p95.to_bits());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_key_or_salt_misses() {
+        let dir = tmpdir("salt");
+        let cache = Cache::open(Some(dir.clone()), Vec::new()).unwrap();
+        let key = JobKey { hi: 1, lo: 2 };
+        cache.store_pair(&key, &sample_measured(), None, None);
+        // Unwritten key → miss.
+        assert!(cache.lookup_pair(&JobKey { hi: 1, lo: 3 }).is_none());
+        // Tamper with the salt → miss, not an error.
+        let path = dir.join(Cache::record_name("pair", &key));
+        let doctored =
+            fs::read_to_string(&path).unwrap().replace(MODEL_VERSION, "conccl-model-v0.0");
+        fs::write(&path, doctored).unwrap();
+        assert!(cache.lookup_pair(&key).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_record_is_a_miss_not_an_error() {
+        let dir = tmpdir("corrupt");
+        let cache = Cache::open(Some(dir.clone()), Vec::new()).unwrap();
+        let key = JobKey { hi: 3, lo: 4 };
+        fs::write(dir.join(Cache::record_name("pair", &key)), "{\"trunc").unwrap();
+        assert!(cache.lookup_pair(&key).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_merge_dir_serves_hits() {
+        let shard = tmpdir("shard");
+        let writer = Cache::open(Some(shard.clone()), Vec::new()).unwrap();
+        let key = JobKey { hi: 5, lo: 6 };
+        writer.store_pair(&key, &sample_measured(), None, Some(4));
+        // A merge run opens the shard dir read-only.
+        let merged = Cache::open(None, vec![shard.clone()]).unwrap();
+        assert_eq!(merged.lookup_pair(&key).unwrap().chunks_used, Some(4));
+        // ...and never writes into it.
+        merged.store_pair(&JobKey { hi: 9, lo: 9 }, &sample_measured(), None, None);
+        assert!(merged.lookup_pair(&JobKey { hi: 9, lo: 9 }).is_none());
+        let _ = fs::remove_dir_all(&shard);
+    }
+
+    #[test]
+    fn strategy_parts_round_trip_every_variant() {
+        for s in [
+            Strategy::Serial,
+            Strategy::C3Base,
+            Strategy::C3Sp,
+            Strategy::C3Rp { comm_cus: 24 },
+            Strategy::C3SpRp { comm_cus: 16 },
+            Strategy::Conccl,
+            Strategy::ConcclRp { cus_removed: 8 },
+            Strategy::C3Chunked { chunks: 6 },
+            Strategy::ConcclChunked { chunks: 12 },
+        ] {
+            let (name, param) = strategy_to_parts(s);
+            assert_eq!(strategy_from_parts(name, param), Some(s));
+        }
+        assert_eq!(strategy_from_parts("warp", 0), None);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let cache = Cache::disabled();
+        assert!(!cache.enabled());
+        let key = JobKey { hi: 1, lo: 1 };
+        cache.store_pair(&key, &sample_measured(), None, None);
+        assert!(cache.lookup_pair(&key).is_none());
+    }
+}

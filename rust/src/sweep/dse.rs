@@ -461,11 +461,16 @@ impl DseResults {
             if pi > 0 {
                 s.push(',');
             }
+            // The content-addressed identity of this grid point's job
+            // closure (machine fields + topology + seed + model salt):
+            // external tooling can diff two explorations point-by-point
+            // without re-deriving the closure.
             let _ = write!(
                 s,
-                "{{\"label\":\"{}\",\"engines\":{},\"queue_depth\":{},\"fused\":{},\
-                 \"nic_bw\":{},\"area\":{}}}",
+                "{{\"label\":\"{}\",\"key\":\"{}\",\"engines\":{},\"queue_depth\":{},\
+                 \"fused\":{},\"nic_bw\":{},\"area\":{}}}",
                 escape(&p.label),
+                super::cache::dse_point_key(&p.machine, self.plan.nodes, self.plan.seed).hex(),
                 p.engines,
                 p.queue_depth,
                 p.fused,

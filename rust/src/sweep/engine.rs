@@ -8,6 +8,11 @@
 //!   (machine, scenario) and shared across all strategy jobs.
 //! * A job that fails (unknown input, stalled simulation) records a
 //!   typed [`Error`] in its slot; the rest of the sweep proceeds.
+//! * Every job carries a content-addressed identity ([`super::key`]);
+//!   [`execute_with`] consults the on-disk cache ([`super::cache`])
+//!   before simulating, skips jobs another `--shard` owns, and tags
+//!   each output with its [`JobSource`] so callers can assert a warm
+//!   run performed zero simulations.
 
 use crate::config::machine::MachineConfig;
 use crate::coordinator::runner::{measure_run, Measured, RunnerConfig, ScenarioOutcome};
@@ -19,7 +24,58 @@ use crate::workload::e2e::{run_e2e_planned_with, E2eFamily, E2eRun};
 use crate::workload::scenarios::ResolvedScenario;
 use crate::workload::traffic::{run_serve_lineup, ServeReport};
 
+use super::cache::{self, Cache};
+use super::key::{e2e_gate_key, pair_gate_key, serve_gate_key};
 use super::plan::{job_seed, ChunkSel, MachineVariant, SweepJob, SweepPlan};
+
+/// Where an output slot's value came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobSource {
+    /// Simulated in this run (and persisted, if a cache dir is set).
+    Simulated,
+    /// Reconstructed bit-exactly from a cache record.
+    Cached,
+    /// Owned by another `--shard`; the slot holds a placeholder error
+    /// and is excluded from error reporting and exit codes.
+    Skipped,
+}
+
+/// Output-slot counts by [`JobSource`] — the job-execution counter the
+/// warm-cache acceptance check (`--require-warm`) asserts on. A serving
+/// lineup contributes one count per family slot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecCounters {
+    pub simulated: usize,
+    pub cached: usize,
+    pub skipped: usize,
+}
+
+impl ExecCounters {
+    fn tally(&mut self, source: JobSource) {
+        match source {
+            JobSource::Simulated => self.simulated += 1,
+            JobSource::Cached => self.cached += 1,
+            JobSource::Skipped => self.skipped += 1,
+        }
+    }
+}
+
+/// Execution options beyond the plan itself.
+#[derive(Debug, Clone, Default)]
+pub struct ExecOptions {
+    /// Worker count; 0 = auto (one per core).
+    pub threads: usize,
+    /// Result cache (disabled by default).
+    pub cache: Cache,
+    /// `Some((i, n))`: only simulate jobs with `key.shard_of(n) == i`;
+    /// everything else is served from cache or skipped.
+    pub shard: Option<(usize, usize)>,
+}
+
+/// The placeholder error in a shard-skipped slot.
+fn skipped_err() -> Error {
+    Error::Config("skipped: owned by another --shard (merge shard caches to materialize)".into())
+}
 
 /// The measured (or failed) result of one sweep job.
 #[derive(Debug, Clone)]
@@ -32,6 +88,7 @@ pub struct JobOutput {
     /// clamped fixed count otherwise).
     pub chunks_used: Option<u32>,
     pub result: Result<Measured, Error>,
+    pub source: JobSource,
 }
 
 /// The result of one end-to-end workload point: a graph run of one
@@ -47,6 +104,7 @@ pub struct E2eOutput {
     /// Per-node decisions of the planner-driven family (`auto` only;
     /// fixed families carry none).
     pub plan: Option<PlanSummary>,
+    pub source: JobSource,
 }
 
 /// The result of one serving point: a traffic-engine run of one
@@ -59,6 +117,7 @@ pub struct ServeOutput {
     pub spec_idx: usize,
     pub family: E2eFamily,
     pub result: Result<ServeReport, Error>,
+    pub source: JobSource,
 }
 
 /// All outputs of one sweep, with enough plan context to aggregate and
@@ -76,9 +135,13 @@ pub struct SweepResults {
     /// order (empty unless the plan carries a serving axis).
     pub serve_outputs: Vec<ServeOutput>,
     /// Memoized baselines, `[machine_idx][node_idx][scenario_idx]`.
+    /// Closed-form arithmetic, recomputed every run (cheap; not a
+    /// simulation, so warm runs still count zero simulated slots).
     pub baselines: Vec<Vec<Vec<Baselines>>>,
     /// Worker threads actually used.
     pub threads_used: usize,
+    /// Output-slot counts by source (simulated / cached / skipped).
+    pub counters: ExecCounters,
 }
 
 /// Default worker count: one per available core.
@@ -92,6 +155,16 @@ pub fn default_threads() -> usize {
 /// `threads == 1` runs inline with no pool (the sequential reference
 /// path — bit-identical to any parallel run by construction).
 pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
+    execute_with(plan, &ExecOptions { threads, ..ExecOptions::default() })
+}
+
+/// Execute a plan with caching/sharding options. The cache is consulted
+/// *before* the shard filter, so a merge run (`--merge`, all jobs
+/// cached) materializes every slot regardless of sharding — which is
+/// what makes the union of shard caches byte-identical to an unsharded
+/// run.
+pub fn execute_with(plan: SweepPlan, opts: &ExecOptions) -> SweepResults {
+    let threads = opts.threads;
     let jobs = plan.jobs();
     // One executor per (machine, node-count): the topology is part of
     // the evaluation point.
@@ -124,7 +197,7 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
     // unclaimed job until the matrix drains), outputs reassembled in
     // job-id order — `util::pool` owns that determinism contract now.
     let outputs = pool::run_indexed(jobs.len(), n_threads, |i| {
-        run_job(&plan, &execs, &baselines, &jobs[i])
+        run_job(&plan, &execs, &baselines, &jobs[i], opts)
     });
     // End-to-end workload axis: deterministic graph runs (no
     // measurement protocol — the graph engine is noise-free), a few
@@ -137,24 +210,49 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
             let topo = mv.machine.topology(nodes);
             // One planner — one cost-model profile — per (machine,
             // topology), shared across every spec's `auto` evaluation.
-            let planner = (!plan.e2e.is_empty()).then(|| Planner::new(&mv.machine, &topo));
+            // Built lazily so an all-cached (or all-skipped) topology
+            // never pays for one.
+            let mut planner: Option<Planner> = None;
             for (si, spec) in plan.e2e.iter().enumerate() {
-                let trace = spec.trace();
+                let mut trace = None;
                 for family in E2eFamily::lineup() {
-                    let planner = planner.as_ref().expect("planner built when e2e axis is set");
-                    let (result, fam_plan) =
-                        match run_e2e_planned_with(planner, &trace, spec.depth, family) {
-                            Ok((run, p)) => (Ok(run), p),
-                            Err(e) => (Err(e), None),
-                        };
-                    e2e_outputs.push(E2eOutput {
+                    let key =
+                        cache::e2e_job_key(&mv.machine, nodes, &spec.label(), family.name());
+                    let mut slot = E2eOutput {
                         machine_idx: mi,
                         node_idx: ni,
                         spec_idx: si,
                         family,
-                        result,
-                        plan: fam_plan,
-                    });
+                        result: Err(skipped_err()),
+                        plan: None,
+                        source: JobSource::Skipped,
+                    };
+                    if let Some(hit) = opts.cache.lookup_e2e(&key, family) {
+                        slot.result = Ok(hit.run);
+                        slot.plan = hit.plan;
+                        slot.source = JobSource::Cached;
+                        e2e_outputs.push(slot);
+                        continue;
+                    }
+                    if let Some((i, n)) = opts.shard {
+                        if key.shard_of(n) != i {
+                            e2e_outputs.push(slot);
+                            continue;
+                        }
+                    }
+                    let planner =
+                        planner.get_or_insert_with(|| Planner::new(&mv.machine, &topo));
+                    let trace = trace.get_or_insert_with(|| spec.trace());
+                    match run_e2e_planned_with(planner, trace, spec.depth, family) {
+                        Ok((run, p)) => {
+                            opts.cache.store_e2e(&key, &run, p.as_ref());
+                            slot.result = Ok(run);
+                            slot.plan = p;
+                        }
+                        Err(e) => slot.result = Err(e),
+                    }
+                    slot.source = JobSource::Simulated;
+                    e2e_outputs.push(slot);
                 }
             }
         }
@@ -162,7 +260,9 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
     // Serving axis: long-running traffic simulations, one lineup per
     // (machine, node-count, spec). The traffic loop is sequential and
     // identity-seeded, so — like the e2e axis — its outputs are
-    // byte-identical at any worker-thread count.
+    // byte-identical at any worker-thread count. A lineup's four
+    // families share the arrival process and the serial denominator, so
+    // the lineup caches and shards as one unit.
     let mut serve_outputs = Vec::with_capacity(
         plan.machines.len()
             * plan.node_counts.len()
@@ -182,34 +282,65 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
                     "arrivals",
                     "open-loop",
                 );
+                let key =
+                    cache::serve_job_key(&mv.machine, nodes, &spec.label(), &plan.traffic, seed);
+                let push_lineup = |results: Vec<(E2eFamily, Result<ServeReport, Error>)>,
+                                   source: JobSource,
+                                   out: &mut Vec<ServeOutput>| {
+                    for (family, result) in results {
+                        out.push(ServeOutput {
+                            machine_idx: mi,
+                            node_idx: ni,
+                            spec_idx: si,
+                            family,
+                            result,
+                            source,
+                        });
+                    }
+                };
+                if let Some(reports) = opts.cache.lookup_serve(&key) {
+                    let slots = reports.into_iter().map(|r| (r.family, Ok(r))).collect();
+                    push_lineup(slots, JobSource::Cached, &mut serve_outputs);
+                    continue;
+                }
+                if let Some((i, n)) = opts.shard {
+                    if key.shard_of(n) != i {
+                        let slots = E2eFamily::lineup()
+                            .into_iter()
+                            .map(|f| (f, Err(skipped_err())))
+                            .collect();
+                        push_lineup(slots, JobSource::Skipped, &mut serve_outputs);
+                        continue;
+                    }
+                }
                 match run_serve_lineup(&mv.machine, &topo, *spec, plan.traffic, seed) {
                     Ok(reports) => {
-                        for r in reports {
-                            serve_outputs.push(ServeOutput {
-                                machine_idx: mi,
-                                node_idx: ni,
-                                spec_idx: si,
-                                family: r.family,
-                                result: Ok(r),
-                            });
-                        }
+                        opts.cache.store_serve(&key, &reports);
+                        let slots = reports.into_iter().map(|r| (r.family, Ok(r))).collect();
+                        push_lineup(slots, JobSource::Simulated, &mut serve_outputs);
                     }
                     Err(e) => {
                         // Record the failure once per family so every
                         // lineup slot exists for tables/JSON.
-                        for family in E2eFamily::lineup() {
-                            serve_outputs.push(ServeOutput {
-                                machine_idx: mi,
-                                node_idx: ni,
-                                spec_idx: si,
-                                family,
-                                result: Err(e.clone()),
-                            });
-                        }
+                        let slots = E2eFamily::lineup()
+                            .into_iter()
+                            .map(|f| (f, Err(e.clone())))
+                            .collect();
+                        push_lineup(slots, JobSource::Simulated, &mut serve_outputs);
                     }
                 }
             }
         }
+    }
+    let mut counters = ExecCounters::default();
+    for o in &outputs {
+        counters.tally(o.source);
+    }
+    for o in &e2e_outputs {
+        counters.tally(o.source);
+    }
+    for o in &serve_outputs {
+        counters.tally(o.source);
     }
     SweepResults {
         plan,
@@ -218,6 +349,7 @@ pub fn execute(plan: SweepPlan, threads: usize) -> SweepResults {
         serve_outputs,
         baselines,
         threads_used: n_threads,
+        counters,
     }
 }
 
@@ -229,11 +361,42 @@ fn run_job(
     execs: &[Vec<C3Executor>],
     baselines: &[Vec<Vec<Baselines>>],
     job: &SweepJob,
+    opts: &ExecOptions,
 ) -> JobOutput {
     let exec = &execs[job.machine_idx][job.node_idx];
     let sc = &plan.scenarios[job.scenario_idx];
     let b = baselines[job.machine_idx][job.node_idx][job.scenario_idx];
     let chunk_sel = plan.chunk_counts[job.chunk_idx];
+    let key = cache::pair_job_key(
+        &plan.machines[job.machine_idx].machine,
+        plan.node_counts[job.node_idx],
+        &chunk_sel.label(),
+        &sc.tag(),
+        sc.comm.spec.kind.name(),
+        job.strategy.name(),
+        &plan.cfg,
+        job.seed,
+    );
+    if let Some(hit) = opts.cache.lookup_pair(&key) {
+        return JobOutput {
+            job: *job,
+            rp_cus: hit.rp_cus,
+            chunks_used: hit.chunks_used,
+            result: Ok(hit.measured),
+            source: JobSource::Cached,
+        };
+    }
+    if let Some((i, n)) = opts.shard {
+        if key.shard_of(n) != i {
+            return JobOutput {
+                job: *job,
+                rp_cus: None,
+                chunks_used: None,
+                result: Err(skipped_err()),
+                source: JobSource::Skipped,
+            };
+        }
+    }
     let mut rp_cus = None;
     let mut chunks_used = None;
     let run: Result<C3Run, Error> = match job.strategy {
@@ -277,11 +440,16 @@ fn run_job(
         }
     };
     let mut rng = Rng::new(job.seed);
+    let result = run.map(|r| measure_run(r, &plan.cfg, &mut rng));
+    if let Ok(m) = &result {
+        opts.cache.store_pair(&key, m, rp_cus, chunks_used);
+    }
     JobOutput {
         job: *job,
         rp_cus,
         chunks_used,
-        result: run.map(|r| measure_run(r, &plan.cfg, &mut rng)),
+        result,
+        source: JobSource::Simulated,
     }
 }
 
@@ -348,12 +516,88 @@ impl SweepResults {
             .collect()
     }
 
-    /// Job errors, flattened for reporting.
+    /// Job errors, flattened for reporting. Shard-skipped slots are
+    /// placeholders, not failures — they are excluded here (and so
+    /// from non-zero exit codes).
     pub fn errors(&self) -> Vec<(&SweepJob, &Error)> {
         self.outputs
             .iter()
+            .filter(|o| o.source != JobSource::Skipped)
             .filter_map(|o| o.result.as_ref().err().map(|e| (&o.job, e)))
             .collect()
+    }
+
+    /// The gate keys this sweep's JSON report will yield when parsed by
+    /// `baseline::extract_points` — built from the *same* key module,
+    /// so emitter and parser cannot drift. One key per materialized
+    /// point with a finite speedup (errors, skipped slots and
+    /// non-finite values parse to no point).
+    pub fn gate_keys(&self) -> Vec<String> {
+        let mut keys = Vec::new();
+        for (mi, mv) in self.plan.machines.iter().enumerate() {
+            for (ni, &nodes) in self.plan.node_counts.iter().enumerate() {
+                let nodes = nodes as u64;
+                for (ci, chunk) in self.plan.chunk_counts.iter().enumerate() {
+                    for (si, sc) in self.plan.scenarios.iter().enumerate() {
+                        for &kind in &self.plan.strategies {
+                            let Some(out) = self.output_at(mi, ni, ci, si, kind) else {
+                                continue;
+                            };
+                            if out.source == JobSource::Skipped {
+                                continue;
+                            }
+                            let Ok(m) = &out.result else { continue };
+                            if !m.speedup_median.is_finite() {
+                                continue;
+                            }
+                            keys.push(pair_gate_key(
+                                &mv.label,
+                                nodes,
+                                &chunk.label(),
+                                &sc.tag(),
+                                sc.comm.spec.kind.name(),
+                                kind.name(),
+                            ));
+                        }
+                    }
+                }
+                for (si, spec) in self.plan.e2e.iter().enumerate() {
+                    for out in self.e2e_point(mi, ni, si) {
+                        if out.source == JobSource::Skipped {
+                            continue;
+                        }
+                        let Ok(run) = &out.result else { continue };
+                        if !run.speedup.is_finite() {
+                            continue;
+                        }
+                        keys.push(e2e_gate_key(
+                            &mv.label,
+                            nodes,
+                            &spec.label(),
+                            out.family.name(),
+                        ));
+                    }
+                }
+                for (si, spec) in self.plan.serve.iter().enumerate() {
+                    for out in self.serve_point(mi, ni, si) {
+                        if out.source == JobSource::Skipped {
+                            continue;
+                        }
+                        let Ok(r) = &out.result else { continue };
+                        if !r.speedup.is_finite() {
+                            continue;
+                        }
+                        keys.push(serve_gate_key(
+                            &mv.label,
+                            nodes,
+                            &spec.label(),
+                            out.family.name(),
+                        ));
+                    }
+                }
+            }
+        }
+        keys
     }
 
     /// Assemble the legacy per-scenario outcome rows (the structure all

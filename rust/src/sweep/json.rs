@@ -139,6 +139,14 @@ impl SweepResults {
                             }
                             let _ = write!(s, "\"{}\":", kind.name());
                             let out = &self.outputs[self.plan.job_id(mi, ni, ci, si, ki)];
+                            if out.source == super::engine::JobSource::Skipped {
+                                // Shard runs leave non-owned slots as
+                                // explicit placeholders; a `--merge`
+                                // run materializes them from the shard
+                                // caches.
+                                s.push_str("{\"skipped\":true}");
+                                continue;
+                            }
                             match &out.result {
                                 Ok(m) => {
                                     let _ = write!(
@@ -224,6 +232,10 @@ impl SweepResults {
                             }
                             first = false;
                             let _ = write!(s, "\"{}\":", out.family.name());
+                            if out.source == super::engine::JobSource::Skipped {
+                                s.push_str("{\"skipped\":true}");
+                                continue;
+                            }
                             match &out.result {
                                 Ok(r) => {
                                     let _ = write!(
@@ -310,6 +322,10 @@ impl SweepResults {
                             }
                             first = false;
                             let _ = write!(s, "\"{}\":", out.family.name());
+                            if out.source == super::engine::JobSource::Skipped {
+                                s.push_str("{\"skipped\":true}");
+                                continue;
+                            }
                             match &out.result {
                                 Ok(r) => {
                                     let _ = write!(

@@ -1,0 +1,247 @@
+//! Job identity: the one place gate-key strings are built and the one
+//! place content-addressed job keys are hashed.
+//!
+//! Two different "keys" live here on purpose, because they must move
+//! together:
+//!
+//! * **Gate keys** — the human-readable `machine/2n/k=auto/...` strings
+//!   that `bench-gate` compares between a baseline and a report. Both
+//!   the report *emitter* (`engine::SweepResults::gate_keys`) and the
+//!   report *parser* (`baseline::extract_points`) call the builders
+//!   below, so a format change cannot silently desynchronize them.
+//! * **Job keys** — 128-bit content hashes over a job's *full input
+//!   closure* (every `MachineConfig` field incl. `sdma.*`, topology,
+//!   workload spec, strategy/family, chunk selection, seeds, and
+//!   [`MODEL_VERSION`]). They address the on-disk result cache
+//!   ([`super::cache`]) and partition `--shard i/n` runs.
+//!
+//! Determinism contract: job keys are a pure function of the closure —
+//! no pointers, no iteration order, no wall clock — so the same plan
+//! hashes to the same keys on every machine and every run.
+
+use crate::util::rng::SplitMix64;
+
+/// Simulator-semantics version salt, mixed into every job key.
+///
+/// Bump this whenever a change alters *what a job computes* — timeline
+/// semantics, seeding, measurement post-processing, auto-chunk policy —
+/// even when no input struct changed shape. A stale cache then misses
+/// cleanly instead of replaying results from the old model. Purely
+/// additive changes (new axes, new output fields that don't affect
+/// existing numbers) do not need a bump; cached records carry the salt
+/// and are re-verified on read either way.
+///
+/// `conccl model-version` prints this string so CI can key its cache
+/// restore on it.
+pub const MODEL_VERSION: &str = "conccl-model-v7.0";
+
+// ---------------------------------------------------------------------------
+// Gate keys
+// ---------------------------------------------------------------------------
+
+/// Gate key for a pair-scenario point:
+/// `{machine}/{nodes}n/k={chunk}/{tag}/{collective}/{strategy}`.
+pub fn pair_gate_key(
+    machine: &str,
+    nodes: u64,
+    chunk: &str,
+    tag: &str,
+    collective: &str,
+    strategy: &str,
+) -> String {
+    format!("{machine}/{nodes}n/k={chunk}/{tag}/{collective}/{strategy}")
+}
+
+/// Gate key for an e2e workload point:
+/// `{machine}/{nodes}n/wl={workload}/{family}`.
+pub fn e2e_gate_key(machine: &str, nodes: u64, workload: &str, family: &str) -> String {
+    format!("{machine}/{nodes}n/wl={workload}/{family}")
+}
+
+/// Gate key for a serving traffic point:
+/// `{machine}/{nodes}n/serve={workload}/{family}`.
+pub fn serve_gate_key(machine: &str, nodes: u64, workload: &str, family: &str) -> String {
+    format!("{machine}/{nodes}n/serve={workload}/{family}")
+}
+
+// ---------------------------------------------------------------------------
+// Job keys
+// ---------------------------------------------------------------------------
+
+/// A 128-bit content-addressed job identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobKey {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl JobKey {
+    /// 32-hex-digit rendering; the cache's on-disk file-name stem.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    /// Which of `n` shards owns this job (`lo % n`). The partition is a
+    /// pure function of the key, so every shard of a plan agrees on
+    /// ownership without coordination.
+    pub fn shard_of(&self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.lo % n.max(1) as u64) as usize
+    }
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Lane-a seed: the standard FNV-1a 64 offset basis.
+const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+/// Lane-b seed: a distinct constant (the SplitMix64 increment) so the
+/// two lanes never collapse onto the same stream.
+const FNV_OFFSET_B: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Incremental hasher for job closures: two FNV-1a 64 lanes over
+/// `name = value` fields with explicit separators, finalized through
+/// SplitMix64 for avalanche (so `shard_of`'s modulo sees well-mixed
+/// low bits).
+#[derive(Debug, Clone)]
+pub struct KeyHasher {
+    a: u64,
+    b: u64,
+}
+
+impl KeyHasher {
+    /// Start a hash for one job kind ("pair" / "e2e" / "serve" /
+    /// "dse"). The kind and [`MODEL_VERSION`] are the first two fields,
+    /// so job kinds can never collide and a salt bump re-keys
+    /// everything.
+    pub fn new(kind: &str) -> Self {
+        let mut h = KeyHasher {
+            a: FNV_OFFSET_A,
+            b: FNV_OFFSET_B,
+        };
+        h.field("model_version", MODEL_VERSION);
+        h.field("kind", kind);
+        h
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &byte in bs {
+            self.a = (self.a ^ u64::from(byte)).wrapping_mul(FNV_PRIME);
+            // The second lane rotates between octets so it is not a
+            // bijective function of lane a.
+            self.b = (self.b ^ u64::from(byte)).wrapping_mul(FNV_PRIME).rotate_left(29);
+        }
+    }
+
+    /// Hash one named string field. The name participates in the hash
+    /// (with unit separators), so reordering or renaming fields changes
+    /// the key — exactly the "any closure change re-keys" contract.
+    pub fn field(&mut self, name: &str, value: &str) {
+        self.bytes(name.as_bytes());
+        self.bytes(&[0x1f]); // unit separator between name and value
+        self.bytes(value.as_bytes());
+        self.bytes(&[0x1e]); // record separator between fields
+    }
+
+    /// Hash an integer field (hex-rendered, so width never ambiguates).
+    pub fn u64_field(&mut self, name: &str, v: u64) {
+        let mut buf = [0u8; 16];
+        let mut x = v;
+        for slot in buf.iter_mut().rev() {
+            *slot = b"0123456789abcdef"[(x & 0xf) as usize];
+            x >>= 4;
+        }
+        self.bytes(name.as_bytes());
+        self.bytes(&[0x1f]);
+        self.bytes(&buf);
+        self.bytes(&[0x1e]);
+    }
+
+    /// Hash an `f64` field by its exact bit pattern — `-0.0`, subnormals
+    /// and NaN payloads all key distinctly, matching the cache's
+    /// bit-exact reconstruction contract.
+    pub fn f64_field(&mut self, name: &str, v: f64) {
+        self.u64_field(name, v.to_bits());
+    }
+
+    /// Finalize into a [`JobKey`]. Each lane is cross-mixed with the
+    /// other before a SplitMix64 finalization pass.
+    pub fn finish(&self) -> JobKey {
+        let hi = SplitMix64::new(self.a ^ self.b.rotate_left(32)).next_u64();
+        let lo = SplitMix64::new(self.b ^ self.a.rotate_left(32)).next_u64();
+        JobKey { hi, lo }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key_of(kind: &str, fields: &[(&str, &str)]) -> JobKey {
+        let mut h = KeyHasher::new(kind);
+        for (n, v) in fields {
+            h.field(n, v);
+        }
+        h.finish()
+    }
+
+    #[test]
+    fn gate_key_formats_are_frozen() {
+        assert_eq!(
+            pair_gate_key("mi300x-8", 2, "auto", "mb1_896M", "all-gather", "conccl"),
+            "mi300x-8/2n/k=auto/mb1_896M/all-gather/conccl"
+        );
+        assert_eq!(
+            e2e_gate_key("mi300x-8", 1, "fsdp_step-70b-l2-d2", "auto"),
+            "mi300x-8/1n/wl=fsdp_step-70b-l2-d2/auto"
+        );
+        assert_eq!(
+            serve_gate_key("slowlink", 4, "tp_decode-70b-l2-b8", "serial"),
+            "slowlink/4n/serve=tp_decode-70b-l2-b8/serial"
+        );
+    }
+
+    #[test]
+    fn hex_is_32_digits_and_stable() {
+        let k = key_of("pair", &[("a", "1")]);
+        assert_eq!(k.hex().len(), 32);
+        assert_eq!(k, key_of("pair", &[("a", "1")]));
+    }
+
+    #[test]
+    fn kind_name_value_and_order_all_matter() {
+        let base = key_of("pair", &[("a", "1"), ("b", "2")]);
+        assert_ne!(base, key_of("e2e", &[("a", "1"), ("b", "2")]), "kind");
+        assert_ne!(base, key_of("pair", &[("a", "2"), ("b", "2")]), "value");
+        assert_ne!(base, key_of("pair", &[("x", "1"), ("b", "2")]), "name");
+        assert_ne!(base, key_of("pair", &[("b", "2"), ("a", "1")]), "order");
+        // Field boundaries are separated: ("ab","c") != ("a","bc").
+        assert_ne!(key_of("pair", &[("ab", "c")]), key_of("pair", &[("a", "bc")]));
+    }
+
+    #[test]
+    fn numeric_fields_key_by_bit_pattern() {
+        let f = |v: f64| {
+            let mut h = KeyHasher::new("t");
+            h.f64_field("x", v);
+            h.finish()
+        };
+        assert_ne!(f(0.0), f(-0.0));
+        assert_ne!(f(1.0), f(1.0 + f64::EPSILON));
+        assert_eq!(f(0.5), f(0.5));
+    }
+
+    #[test]
+    fn shard_partition_is_total_and_disjoint() {
+        // Every key lands in exactly one shard for every n.
+        for n in [2usize, 3, 7] {
+            let mut counts = vec![0usize; n];
+            for i in 0..256 {
+                let k = key_of("pair", &[("i", &i.to_string())]);
+                counts[k.shard_of(n)] += 1;
+            }
+            assert_eq!(counts.iter().sum::<usize>(), 256);
+            // The finalizer should spread keys across shards, not
+            // degenerately pile onto one.
+            assert!(counts.iter().all(|&c| c > 0), "empty shard for n={n}: {counts:?}");
+        }
+    }
+}

@@ -35,15 +35,21 @@
 //! engine area (`conccl dse`).
 
 pub mod baseline;
+pub mod cache;
 pub mod dse;
 pub mod engine;
 pub mod json;
+pub mod key;
 pub mod plan;
 
-pub use baseline::{extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json};
+pub use baseline::{
+    extract_points, gate, is_seeded, parse_json, BenchPoint, GateReport, Json, ParseError,
+};
+pub use cache::Cache;
 pub use dse::{DsePlan, DsePoint, DseResults, DseScore, DseWorkload};
 pub use engine::{
-    default_threads, execute, outcome_lineup, suite_outcomes, E2eOutput, JobOutput, ServeOutput,
-    SweepResults,
+    default_threads, execute, execute_with, outcome_lineup, suite_outcomes, E2eOutput,
+    ExecCounters, ExecOptions, JobOutput, JobSource, ServeOutput, SweepResults,
 };
+pub use key::{JobKey, KeyHasher, MODEL_VERSION};
 pub use plan::{job_seed, parse_variants, ChunkSel, MachineVariant, SweepJob, SweepPlan};

@@ -1,0 +1,291 @@
+//! Integration tests for the content-addressed job-identity layer: the
+//! persistent result cache (warm replay is byte-identical to a cold
+//! run and performs zero simulations), job-key sensitivity (any single
+//! closure-field perturbation re-keys the job), shard-union equality
+//! (`--shard i/n` outputs merged over all shards reproduce the
+//! unsharded bytes), and gate-key round-tripping (every key the engine
+//! emits is recovered verbatim by the baseline parser).
+
+use conccl::config::parse::set_machine_field;
+use conccl::config::workload::CollectiveKind;
+use conccl::config::MachineConfig;
+use conccl::coordinator::RunnerConfig;
+use conccl::sched::StrategyKind;
+use conccl::sweep::cache::pair_job_key;
+use conccl::sweep::{
+    execute, execute_with, extract_points, parse_json, Cache, ExecOptions, MachineVariant,
+    SweepPlan,
+};
+use conccl::workload::scenarios::resolve_tag;
+use conccl::workload::serving::ServeSpec;
+use conccl::workload::traffic::TrafficConfig;
+
+use std::path::PathBuf;
+
+/// Fresh per-test scratch dir under the system temp root.
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "conccl-cache-it-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A plan exercising every cacheable job kind: pair scenarios (with a
+/// chunked strategy), the e2e workload axis, and the serving axis, on
+/// a two-point topology axis, with protocol jitter on so cached pair
+/// records must reproduce noisy measurements bit-exactly.
+fn full_plan() -> SweepPlan {
+    let cfg = RunnerConfig {
+        jitter: 0.02,
+        seed: 0x5EED_CA5E,
+        ..RunnerConfig::default()
+    };
+    SweepPlan::new(
+        vec![MachineVariant::base(MachineConfig::mi300x())],
+        vec![
+            resolve_tag("mb1_896M", CollectiveKind::AllGather).unwrap(),
+            resolve_tag("cb1_896M", CollectiveKind::AllToAll).unwrap(),
+        ],
+        vec![StrategyKind::Conccl, StrategyKind::ConcclChunked],
+        cfg,
+    )
+    .with_node_counts(vec![1, 2])
+    .unwrap()
+    .with_e2e(vec![conccl::workload::e2e::E2eSpec::parse("tp_chain:70b:2").unwrap()])
+    .unwrap()
+    .with_serve(
+        vec![ServeSpec::parse("tp_decode:70b:2:8").unwrap()],
+        TrafficConfig {
+            steps: 40,
+            ..TrafficConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn warm_cache_replays_every_job_kind_byte_identically() {
+    let dir = tmpdir("warm");
+    let cold_opts = ExecOptions {
+        threads: 2,
+        cache: Cache::open(Some(dir.clone()), Vec::new()).unwrap(),
+        shard: None,
+    };
+    let cold = execute_with(full_plan(), &cold_opts);
+    assert!(cold.counters.simulated > 0, "cold run must simulate");
+    assert_eq!(cold.counters.cached, 0, "cold run cannot hit an empty cache");
+    assert_eq!(cold.counters.skipped, 0);
+    assert!(cold.errors().is_empty());
+
+    // Warm run: identical plan, same cache dir — zero simulations, and
+    // the JSON byte-stream is indistinguishable from the cold run's.
+    let warm_opts = ExecOptions {
+        threads: 2,
+        cache: Cache::open(Some(dir.clone()), Vec::new()).unwrap(),
+        shard: None,
+    };
+    let warm = execute_with(full_plan(), &warm_opts);
+    assert_eq!(
+        warm.counters.simulated, 0,
+        "warm run re-simulated {} slot(s)",
+        warm.counters.simulated
+    );
+    assert_eq!(
+        warm.counters.cached,
+        cold.counters.simulated,
+        "every cold-simulated slot must come back from cache"
+    );
+    assert_eq!(cold.to_json(), warm.to_json(), "warm JSON diverged from cold");
+
+    // The cache is populated with records of all three kinds.
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    for kind in ["pair-", "e2e-", "serve-"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(kind)),
+            "no {kind}* record in cache: {names:?}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn model_version_salt_invalidates_foreign_records() {
+    // A record written under a different model-version salt must miss:
+    // simulate that by corrupting the stored salt of one pair record.
+    let dir = tmpdir("salt");
+    let opts = ExecOptions {
+        threads: 1,
+        cache: Cache::open(Some(dir.clone()), Vec::new()).unwrap(),
+        shard: None,
+    };
+    let cold = execute_with(full_plan(), &opts);
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replace(conccl::sweep::MODEL_VERSION, "conccl-model-v0.0"))
+            .unwrap();
+    }
+    let warm = execute_with(full_plan(), &opts);
+    assert_eq!(warm.counters.cached, 0, "stale-salt records must all miss");
+    assert_eq!(warm.counters.simulated, cold.counters.simulated);
+    assert_eq!(cold.to_json(), warm.to_json());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_machine_closure_field_perturbs_the_job_key() {
+    // The exact field set hashed by `cache::machine_closure` — one
+    // `--set`-able name per hashed field, `sdma.*` included. Flipping
+    // any single one must produce a different pair-job key.
+    let fields = [
+        "num_gpus", "xcds", "cus_per_xcd", "peak_flops_bf16", "compute_eff",
+        "hbm_bw", "hbm_eff", "per_cu_hbm_bw", "llc_capacity", "llc_bw",
+        "l2_per_xcd", "sdma.engines", "sdma.engine_bw_share", "sdma.queue_depth",
+        "sdma.enqueue_s", "sdma.doorbell_s", "sdma.fetch_s", "sdma.sync_s",
+        "sdma.fused_packets", "link_count", "link_bw", "link_eff",
+        "link_eff_dma", "nic_bw", "nic_latency_s", "kernel_launch_s",
+        "coll_launch_s", "gemm_tile", "gemm_traffic_coeff", "gemm_traffic_exp",
+        "gemm_traffic_cap", "gemm_cache_damp", "ag_cu_need", "a2a_cu_need",
+        "ar_cu_need", "rs_cu_need", "a2a_hbm_factor", "ag_hbm_factor",
+        "a2a_link_derate", "comm_co_penalty_ag", "comm_co_penalty_a2a",
+        "gemm_l2_pollution_ag", "gemm_l2_pollution_a2a", "mem_interference_coeff",
+        "mem_interference_cap", "base_leak_cus", "base_dispatch_backlog",
+        "min_cu_granularity", "roofline_eff", "chunk_align_frac", "max_chunks",
+    ];
+    let cfg = RunnerConfig::default();
+    let base = MachineConfig::mi300x();
+    let key_of = |m: &MachineConfig| {
+        pair_job_key(m, 2, "auto", "mb1_896M", "all-gather", "conccl", &cfg, 42)
+    };
+    let base_key = key_of(&base);
+    for f in fields {
+        let mut m = base.clone();
+        // 7919 is far from every default; no validation runs here, so
+        // the perturbed struct only needs to hash, not simulate.
+        set_machine_field(&mut m, f, "7919").unwrap_or_else(|e| panic!("{f}: {e}"));
+        assert_ne!(key_of(&m), base_key, "field '{f}' did not re-key the job");
+    }
+    // The machine label and every non-machine closure component re-key
+    // too: topology, chunking, scenario, collective, strategy, runner
+    // protocol, and the per-job seed.
+    let mut renamed = base.clone();
+    renamed.name = "other".into();
+    assert_ne!(key_of(&renamed), base_key, "machine name");
+    assert_ne!(
+        pair_job_key(&base, 4, "auto", "mb1_896M", "all-gather", "conccl", &cfg, 42),
+        base_key,
+        "nodes"
+    );
+    assert_ne!(
+        pair_job_key(&base, 2, "8", "mb1_896M", "all-gather", "conccl", &cfg, 42),
+        base_key,
+        "chunk selection"
+    );
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "cb1_896M", "all-gather", "conccl", &cfg, 42),
+        base_key,
+        "scenario"
+    );
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "mb1_896M", "all-to-all", "conccl", &cfg, 42),
+        base_key,
+        "collective"
+    );
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "mb1_896M", "all-gather", "c3_base", &cfg, 42),
+        base_key,
+        "strategy"
+    );
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "mb1_896M", "all-gather", "conccl", &cfg, 43),
+        base_key,
+        "job seed"
+    );
+    let mut jittered = cfg;
+    jittered.jitter = 0.05;
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "mb1_896M", "all-gather", "conccl", &jittered, 42),
+        base_key,
+        "runner jitter"
+    );
+    let mut reseeded = cfg;
+    reseeded.seed ^= 1;
+    assert_ne!(
+        pair_job_key(&base, 2, "auto", "mb1_896M", "all-gather", "conccl", &reseeded, 42),
+        base_key,
+        "runner seed"
+    );
+}
+
+#[test]
+fn shard_union_reproduces_unsharded_bytes() {
+    // Acceptance criterion: for n ∈ {2,3,7}, run each shard with its
+    // own cache dir, then merge all shard caches in one run — the
+    // merged JSON is byte-identical to an unsharded cold run and the
+    // merge performs zero simulations.
+    let reference = execute(full_plan(), 2).to_json();
+    for n in [2usize, 3, 7] {
+        let mut shard_dirs = Vec::new();
+        let mut owned_slots = 0usize;
+        for i in 0..n {
+            let dir = tmpdir(&format!("shard-{n}-{i}"));
+            let opts = ExecOptions {
+                threads: 2,
+                cache: Cache::open(Some(dir.clone()), Vec::new()).unwrap(),
+                shard: Some((i, n)),
+            };
+            let res = execute_with(full_plan(), &opts);
+            assert!(res.errors().is_empty(), "shard {i}/{n} failed");
+            owned_slots += res.counters.simulated + res.counters.cached;
+            shard_dirs.push(dir);
+        }
+        // The partition is total: across shards, every slot was owned
+        // exactly once (the remainder were skipped placeholders).
+        let merged = execute_with(
+            full_plan(),
+            &ExecOptions {
+                threads: 2,
+                cache: Cache::open(None, shard_dirs.clone()).unwrap(),
+                shard: None,
+            },
+        );
+        assert_eq!(
+            merged.counters.simulated, 0,
+            "n={n}: merge run should be pure cache replay"
+        );
+        assert_eq!(
+            owned_slots, merged.counters.cached,
+            "n={n}: shards together must own each slot exactly once"
+        );
+        assert_eq!(
+            merged.to_json(),
+            reference,
+            "n={n}: shard-union JSON diverged from the unsharded run"
+        );
+        for dir in shard_dirs {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn emitted_gate_keys_round_trip_through_the_baseline_parser() {
+    // Every gate key the engine emits must be recovered verbatim when
+    // the baseline parser re-reads the JSON report — the two sides
+    // share `sweep::key`'s builders, and this pins that contract.
+    let res = execute(full_plan(), 2);
+    let mut emitted = res.gate_keys();
+    let report = parse_json(&res.to_json()).unwrap();
+    let mut parsed: Vec<String> =
+        extract_points(&report).unwrap().into_iter().map(|p| p.key).collect();
+    emitted.sort();
+    parsed.sort();
+    assert!(!emitted.is_empty());
+    assert_eq!(emitted, parsed, "emitter and parser disagree on gate keys");
+}
