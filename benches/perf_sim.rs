@@ -26,7 +26,7 @@ fn main() {
                 cap: 1.0 / (1e-3 * (i + 1) as f64),
             });
         }
-        sim.run_to_completion()
+        sim.run_to_completion().unwrap()
     });
 
     let exec = C3Executor::new(m.clone());

@@ -1,0 +1,85 @@
+//! Traffic-core wall-clock bench — the incremental fluid core's
+//! events/sec yardstick (EXPERIMENTS.md, "Profiling the simulator").
+//! Two shapes: a 200-step `pd_disagg:70b` serving run under the auto
+//! family (the workload the event-horizon heaps were built for) and a
+//! dense multi-component arrival storm on the raw simulator (the shape
+//! where the old full-active-set solver was quadratic). Each prints the
+//! event-loop counters and the full-recompute ratio alongside the
+//! wall-clock summary.
+use conccl::config::MachineConfig;
+use conccl::sim::{Sim, SimCounters, TaskSpec};
+use conccl::util::bench::Bencher;
+use conccl::workload::e2e::E2eFamily;
+use conccl::workload::serving::ServeSpec;
+use conccl::workload::traffic::{run_serve, TrafficConfig};
+
+/// 48 resource-disjoint components × 4 contenders each, with staggered
+/// arrivals so the horizon heap churns. Pre-incremental, every arrival
+/// and completion re-solved all 192 tasks; now each event re-fills at
+/// most one 4-task component.
+fn arrival_storm() -> SimCounters {
+    let mut sim = Sim::new();
+    for c in 0..48usize {
+        let r = sim.add_resource(&format!("r{c}"), 1.0);
+        for k in 0..4usize {
+            sim.add_task(TaskSpec {
+                name: None,
+                arrival: (c * 4 + k) as f64 * 1e-3,
+                work: 1.0,
+                demands: &[(r, 1.0)],
+                cap: f64::INFINITY,
+            });
+        }
+    }
+    sim.run_to_completion().unwrap();
+    sim.counters()
+}
+
+/// One counter line per bench, grep-able from the CI job summary:
+/// `counters <name>: events=... events_per_sec=... full_ratio=...`.
+fn counter_line(name: &str, c: SimCounters, median_s: f64) {
+    let eps = if median_s > 0.0 {
+        c.events as f64 / median_s
+    } else {
+        0.0
+    };
+    println!(
+        "counters {name}: events={} rate_passes={} full_passes={} tasks_swept={} \
+         max_component={} events_per_sec={eps:.0} full_ratio={:.4}",
+        c.events,
+        c.rate_passes,
+        c.full_passes,
+        c.tasks_swept,
+        c.max_component,
+        c.full_recompute_ratio()
+    );
+}
+
+fn main() {
+    let m = MachineConfig::mi300x();
+    let topo = m.topology(1);
+    let mut b = Bencher::from_args().iters(3, 10);
+    b.section("traffic_core: incremental event-loop throughput");
+
+    let spec = ServeSpec::parse("pd_disagg:70b").unwrap();
+    let cfg = TrafficConfig { steps: 200, ..TrafficConfig::default() };
+    let mut serve_counters = SimCounters::default();
+    let s = b.bench("serve_pd_disagg_70b_200steps_auto", || {
+        let r = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg, 24301).unwrap();
+        serve_counters = r.counters;
+        r.counters.events
+    });
+    if let Some(s) = s {
+        counter_line("serve_pd_disagg_70b_200steps_auto", serve_counters, s.median);
+    }
+
+    let mut storm_counters = SimCounters::default();
+    let s = b.bench("arrival_storm_48x4_disjoint", || {
+        storm_counters = arrival_storm();
+        storm_counters.events
+    });
+    if let Some(s) = s {
+        counter_line("arrival_storm_48x4_disjoint", storm_counters, s.median);
+    }
+    b.finish();
+}

@@ -51,6 +51,12 @@ pub(crate) fn graph_cmd(args: &Args) -> Result<(), String> {
         &runs,
     )
     .print();
+    if args.flag("profile") {
+        let rows: Vec<(&str, crate::sim::SimCounters)> =
+            runs.iter().map(|r| (r.family.name(), r.counters)).collect();
+        println!();
+        report::render_profile("fluid-core event-loop profile", &rows).print();
+    }
     for p in &plans {
         println!();
         report::render_plan_summary(&format!("auto plan for {}", spec.label()), p).print();

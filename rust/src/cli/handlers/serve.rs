@@ -42,6 +42,12 @@ pub(crate) fn serve_cmd(args: &Args) -> Result<(), String> {
         &runs,
     )
     .print();
+    if args.flag("profile") {
+        let rows: Vec<(&str, crate::sim::SimCounters)> =
+            runs.iter().map(|r| (r.family.name(), r.counters)).collect();
+        println!();
+        report::render_profile("fluid-core event-loop profile", &rows).print();
+    }
     Ok(())
 }
 
@@ -63,6 +69,14 @@ mod tests {
     fn serve_single_family_and_overrides() {
         assert!(serve_cmd(&args(
             "serve --workload pd:70b:2:8 --family auto --rate 1500 --steps 40 --seed 7"
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn serve_profile_flag_prints_event_loop_counters() {
+        assert!(serve_cmd(&args(
+            "serve --workload tp_decode:70b:2:8 --family serial --steps 40 --profile"
         ))
         .is_ok());
     }

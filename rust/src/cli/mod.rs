@@ -161,15 +161,19 @@ SUBCOMMANDS
                             engine's continuous-timeline comparison
   graph --workload fsdp_forward|fsdp_step|tp_chain [--model 70b|405b]
       [--layers 4] [--prefetch-depth 2] [--nodes N]
-      [--family all|serial|cu|dma|auto]
+      [--family all|serial|cu|dma|auto] [--profile]
                             one end-to-end workload graph: multi-layer
                             FSDP/TP schedule on the graph engine, with
                             exposed-comm / bubble / occupancy metrics;
                             'auto' runs the per-node planner and prints
-                            its backend/CUs/chunks plan table
+                            its backend/CUs/chunks plan table;
+                            --profile adds the fluid core's event-loop
+                            counter table (events, rate passes, full
+                            passes, tasks swept, max component)
   serve --workload tp_decode|moe_dispatch|pd_disagg[:model[:layers[:batch]]]
       [--rate 2000] [--steps 200] [--duration 0] [--tokens 24]
       [--seed 24301] [--nodes N] [--family all|serial|cu|dma|auto]
+      [--profile]
                             long-running serving simulation: open-loop
                             Poisson arrivals, continuous batching up to
                             :batch, one decode step per iteration on the
@@ -180,7 +184,8 @@ SUBCOMMANDS
                             count; 'auto' plans per request class
                             (latency-bound decode collectives vs the
                             DMA-offloaded KV-cache ingest stream of
-                            pd_disagg)
+                            pd_disagg); --profile adds the fluid-core
+                            event-loop counter table
   help                      this text
 
 SWEEP OPTIONS (conccl sweep)

@@ -64,6 +64,31 @@ pub fn render_serve(title: &str, runs: &[crate::workload::traffic::ServeReport])
     t
 }
 
+/// Event-loop profile table for `--profile`: one row per family with
+/// the incremental fluid core's counters — events processed, rate
+/// passes, full-active-set passes, tasks swept, the largest component
+/// any pass touched, and the full-recompute ratio the incremental
+/// solver drives toward zero.
+pub fn render_profile(title: &str, rows: &[(&str, crate::sim::SimCounters)]) -> Table {
+    let mut t = Table::new(vec![
+        "family", "events", "rate passes", "full passes", "tasks swept", "max comp", "full/evt",
+    ])
+    .title(title.to_string())
+    .left_cols(1);
+    for (name, c) in rows {
+        t.row(vec![
+            name.to_string(),
+            c.events.to_string(),
+            c.rate_passes.to_string(),
+            c.full_passes.to_string(),
+            c.tasks_swept.to_string(),
+            c.max_component.to_string(),
+            f(c.full_recompute_ratio(), 3),
+        ]);
+    }
+    t
+}
+
 /// Plan-summary table for the planner-driven `auto` family: one row per
 /// graph node with the backend / CU / chunk decisions the
 /// [`crate::sched::Planner`] committed to (rendered alongside the

@@ -9,7 +9,7 @@
 
 use std::fmt;
 
-use crate::sim::fluid::StallError;
+use crate::sim::fluid::{SimError, StallError, UnboundedRateError};
 
 /// One failure in the scenario/strategy/simulation pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,6 +34,10 @@ pub enum Error {
     /// The fluid simulation stalled: tasks remained with no way to make
     /// progress. Carries the full per-task diagnosis.
     SimStall(StallError),
+    /// The fluid rate solver diverged: tasks with an infinite cap and no
+    /// positive resource demand have no finite max-min rate. Names the
+    /// unbounded tasks.
+    SimUnbounded(UnboundedRateError),
 }
 
 impl fmt::Display for Error {
@@ -59,6 +63,7 @@ impl fmt::Display for Error {
                 write!(f, "collective plan violates conservation: {msg}")
             }
             Error::SimStall(s) => write!(f, "{s}"),
+            Error::SimUnbounded(u) => write!(f, "{u}"),
         }
     }
 }
@@ -68,6 +73,21 @@ impl std::error::Error for Error {}
 impl From<StallError> for Error {
     fn from(s: StallError) -> Error {
         Error::SimStall(s)
+    }
+}
+
+impl From<UnboundedRateError> for Error {
+    fn from(u: UnboundedRateError) -> Error {
+        Error::SimUnbounded(u)
+    }
+}
+
+impl From<SimError> for Error {
+    fn from(e: SimError) -> Error {
+        match e {
+            SimError::Stall(s) => Error::SimStall(s),
+            SimError::Unbounded(u) => Error::SimUnbounded(u),
+        }
     }
 }
 

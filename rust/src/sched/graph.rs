@@ -253,6 +253,10 @@ pub struct GraphRun {
     pub hbm_occupancy: f64,
     /// Fraction of SDMA engine-seconds the run consumed.
     pub sdma_occupancy: f64,
+    /// Event-loop counters from the fluid core (a resumed run reports
+    /// only its replayed suffix — the recorded prefix was counted by the
+    /// recording run).
+    pub counters: crate::sim::SimCounters,
 }
 
 /// Per-iteration phase state of one collective node.
@@ -515,6 +519,9 @@ impl<'a> Engine<'a> {
 
         let mut sim = snap.sim.clone();
         sim.truncate_tasks(boundary);
+        // A resumed run reports only its own suffix: the recording run
+        // already counted the prefix's events and rate passes.
+        sim.reset_counters();
         let (hbm, sdma) = (0, 1);
         for (i, spec) in g.nodes.iter().enumerate().skip(boundary) {
             debug_assert!(
@@ -761,7 +768,7 @@ impl<'a> Engine<'a> {
                 }
             }
 
-            match self.sim.next_event() {
+            match self.sim.next_event()? {
                 Event::Completion(i) => {
                     let t = self.sim.now();
                     self.finished[i] = Some(t);
@@ -814,6 +821,7 @@ impl<'a> Engine<'a> {
 
     /// Aggregate metrics of a completed run.
     fn into_run(self) -> GraphRun {
+        let counters = self.sim.counters();
         let (m, g) = (self.m, self.g);
         let finish_raw: Vec<f64> =
             self.finished.iter().map(|f| f.expect("all nodes finished")).collect();
@@ -870,6 +878,7 @@ impl<'a> Engine<'a> {
             bubble,
             hbm_occupancy,
             sdma_occupancy,
+            counters,
         }
     }
 }

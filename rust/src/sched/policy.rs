@@ -546,10 +546,14 @@ impl Planner {
 
         let chain_stages = family_stages(m, trace, E2eFamily::CuOverlap);
         let mut n_candidates = 1usize;
+        // Auto's counters aggregate every simulation the lineup cost —
+        // the chain bound plus all candidates — not just the winner's.
+        let mut counters = chain_run.counters;
         let mut best: (graph::GraphRun, usize, &'static str, Vec<StagePlan>) =
             (chain_run, chain.nodes.len(), "serial-chain", chain_stages);
         for (i, cand) in cands.into_iter().enumerate() {
             let run = runs[i].take().expect("every candidate was simulated");
+            counters.absorb(run.counters);
             n_candidates += 1;
             if run.total < best.0.total {
                 best = (run, built[i].graph.nodes.len(), cand.name, cand.stages);
@@ -566,6 +570,7 @@ impl Planner {
             hbm_occupancy: run.hbm_occupancy,
             sdma_occupancy: run.sdma_occupancy,
             graph_nodes,
+            counters,
         };
         Ok((e2e, self.summarize(trace, name, n_candidates, &stages)))
     }

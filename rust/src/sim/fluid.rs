@@ -29,10 +29,28 @@
 //! - Names are optional interned ids ([`Sim::intern`]); the event loop
 //!   never touches a `String`. Stall diagnostics ([`Blocker`]) are kept
 //!   as data and formatted lazily, only when an error is displayed.
-//! - The event loop maintains *incremental* task sets across events: a
-//!   `pending` set (not yet arrived) and an `active` set (started,
-//!   unfinished). Each event costs O(active + pending), not O(all
-//!   tasks), and rate recomputes only stream over `active`.
+//! - The event loop is *incremental* in both time and space. Pending
+//!   arrivals, scheduled wakes, and projected completions live in three
+//!   min-heaps, so finding the next event never scans the task set;
+//!   completion entries are lazy (a per-task generation counter
+//!   invalidates entries whose rates were re-solved, and stale entries
+//!   are dropped on pop).
+//! - Rate solving is *component-partitioned*: live tasks are grouped
+//!   into resource-connected components (per-resource member lists over
+//!   the demand CSR, maintained on arrival / completion / cap and
+//!   demand changes), and a dirty event re-runs max-min water-filling
+//!   only on its own component. Max-min fairness decomposes exactly
+//!   over resource-disjoint components (the feasible region is a
+//!   product), so rates elsewhere are provably unaffected; only
+//!   low-order float bits can differ from a whole-set fill (the delta
+//!   sequences differ), which is why `sweep/key.rs::MODEL_VERSION` was
+//!   bumped when this solver landed. Each component pass sweeps its
+//!   members in ascending task id, making the result a pure function of
+//!   the member set — re-running a pass is bit-stable, which is what
+//!   keeps checkpoint/resume bit-identical.
+//! - [`Sim::counters`] exposes cheap event-loop counters (events
+//!   processed, rate passes, full-active-set passes, tasks swept, max
+//!   component size) so callers can assert the incrementality win.
 //!
 //! The simulator itself knows nothing about GPUs: CU policies, launch
 //! latencies and interference penalties are applied by the caller (the
@@ -63,6 +81,9 @@
 //! assert!((finish[0] - 2.0).abs() < 1e-12);
 //! assert!((finish[1] - 2.0).abs() < 1e-12);
 //! ```
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Index of a resource registered with [`Sim::add_resource`].
 pub type ResourceId = usize;
@@ -196,6 +217,166 @@ impl std::fmt::Display for StallError {
 
 impl std::error::Error for StallError {}
 
+/// The max-min fill diverged: some tasks have an infinite cap and no
+/// positive resource demand, so no finite rate bounds them. Previously a
+/// `debug_assert!` (silent garbage in release builds); now a typed error
+/// that names the uncapped tasks, like [`StallError`] does.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnboundedRateError {
+    /// Simulation time at which the divergent fill was attempted.
+    pub at: f64,
+    /// `(task id, diagnostic name)` of every task left with an
+    /// unbounded rate (infinite cap, no positive demand).
+    pub tasks: Vec<(TaskId, String)>,
+}
+
+impl std::fmt::Display for UnboundedRateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fluid rate fill diverged at t={:.6e}s: {} task(s) have an \
+             unbounded rate (infinite cap and no positive resource demand):",
+            self.at,
+            self.tasks.len()
+        )?;
+        for (k, (id, name)) in self.tasks.iter().enumerate() {
+            if k > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, " task {id} '{name}'")?;
+        }
+        write!(f, "; add a cap or a demand")
+    }
+}
+
+impl std::error::Error for UnboundedRateError {}
+
+/// Either way a driverless simulation can fail: tasks that cannot
+/// progress ([`StallError`]) or tasks that nothing bounds
+/// ([`UnboundedRateError`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimError {
+    Stall(StallError),
+    Unbounded(UnboundedRateError),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Stall(e) => e.fmt(f),
+            SimError::Unbounded(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<StallError> for SimError {
+    fn from(e: StallError) -> Self {
+        SimError::Stall(e)
+    }
+}
+
+impl From<UnboundedRateError> for SimError {
+    fn from(e: UnboundedRateError) -> Self {
+        SimError::Unbounded(e)
+    }
+}
+
+/// Cheap event-loop counters, maintained by [`Sim::next_event`] and the
+/// rate solver. Zero-cost to read; used by `GraphRun`, `ServeReport` and
+/// the `--profile` CLI flag to make the incremental core's win
+/// assertable in tier-1 tests without a profiler.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimCounters {
+    /// Events returned by `next_event` (arrivals, completions, wakes —
+    /// not `Idle`).
+    pub events: u64,
+    /// Water-filling passes run (one per dirty component settled).
+    pub rate_passes: u64,
+    /// Passes whose component spanned the *entire* active set — what
+    /// the pre-incremental solver did on every dirty event.
+    pub full_passes: u64,
+    /// Total tasks swept across all rate passes (`Σ` component sizes).
+    pub tasks_swept: u64,
+    /// Largest component any single pass swept.
+    pub max_component: u32,
+}
+
+impl SimCounters {
+    /// Accumulate another counter block (e.g. across the per-step graph
+    /// executions of a serving run).
+    pub fn absorb(&mut self, o: SimCounters) {
+        self.events += o.events;
+        self.rate_passes += o.rate_passes;
+        self.full_passes += o.full_passes;
+        self.tasks_swept += o.tasks_swept;
+        self.max_component = self.max_component.max(o.max_component);
+    }
+
+    /// Full-active-set recomputes per event processed — the quantity
+    /// the incremental core drives toward zero (the old solver's ratio
+    /// was ~1 for every dirty event).
+    pub fn full_recompute_ratio(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.full_passes as f64 / self.events as f64
+        }
+    }
+}
+
+/// A `(time, task, generation)` min-heap entry with a total order:
+/// `f64::total_cmp` on time, then lowest task id (preserving the legacy
+/// scan's tie-break exactly), then generation.
+#[derive(Debug, Clone, Copy)]
+struct TimedEntry {
+    t: f64,
+    id: TaskId,
+    gen: u32,
+}
+
+impl PartialEq for TimedEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for TimedEntry {}
+impl PartialOrd for TimedEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for TimedEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&o.t)
+            .then(self.id.cmp(&o.id))
+            .then(self.gen.cmp(&o.gen))
+    }
+}
+
+/// Totally ordered wake time (wakes carry no payload).
+#[derive(Debug, Clone, Copy)]
+struct OrdTime(f64);
+
+impl PartialEq for OrdTime {
+    fn eq(&self, o: &Self) -> bool {
+        self.0.total_cmp(&o.0) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for OrdTime {}
+impl PartialOrd for OrdTime {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for OrdTime {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&o.0)
+    }
+}
+
 /// What [`Sim::next_event`] observed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
@@ -228,20 +409,51 @@ pub struct Sim {
     rates: Vec<f64>,
     started: Vec<Option<f64>>,
     finished: Vec<Option<f64>>,
+    /// Per-task recompute generation: bumped whenever a task's rate is
+    /// re-solved (or it leaves the live set), invalidating any
+    /// projected-completion heap entry pushed under an older value.
+    gen: Vec<u32>,
     // ---- flat CSR demand arena: task i's demands are
     //      (dem_res, dem_amt)[dem_off[i] .. dem_off[i+1]] ----
     dem_off: Vec<u32>,
     dem_res: Vec<u32>,
     dem_amt: Vec<f64>,
-    // ---- incremental event-loop sets ----
-    /// Tasks not yet started (unsorted; scanned, |pending| ≤ n and
-    /// usually ~0 after warm-up).
-    pending: Vec<TaskId>,
-    /// Tasks started and unfinished (unsorted; all selections pick an
-    /// explicit minimum id, so the order carries no semantics).
-    active: Vec<TaskId>,
-    wakes: Vec<f64>,
-    rates_dirty: bool,
+    /// Per demand slot: position in `res_members[dem_res[d]]` while the
+    /// slot is enrolled in the solver, else `u32::MAX`. Only positive
+    /// demands of *live* tasks are enrolled.
+    dem_pos: Vec<u32>,
+    // ---- component partition over the live set ----
+    /// Per resource: `(task, demand slot)` of every enrolled demand.
+    /// Two live tasks are in the same component iff connected through
+    /// these lists (transitively).
+    res_members: Vec<Vec<(TaskId, u32)>>,
+    /// Live tasks — active with a positive cap; the only tasks the
+    /// solver and the integrator ever touch. Dense list + position map.
+    live: Vec<TaskId>,
+    live_pos: Vec<u32>,
+    /// Active (started, unfinished) task count, including zero-cap
+    /// spectators; `full_passes` compares component size against this.
+    active_count: usize,
+    /// Seeds of components whose rates need re-solving (a stack of task
+    /// ids; `dirty_flag` dedupes, and a sweep clears every member's
+    /// flag so one pass settles a whole component — order is irrelevant,
+    /// each component's fill is a pure function of its membership).
+    dirty: Vec<TaskId>,
+    dirty_flag: Vec<bool>,
+    /// Live tasks whose work hit zero (via integration or a solve pass)
+    /// but whose Completion event has not been emitted yet; drained, not
+    /// `finished`. Completed lowest-id-first before anything else.
+    drained: Vec<TaskId>,
+    drained_flag: Vec<bool>,
+    // ---- indexed event horizon ----
+    /// Pending arrivals, keyed `(arrival, id)`.
+    arrivals: BinaryHeap<Reverse<TimedEntry>>,
+    /// Projected completions, keyed `(time, id)`; lazy — entries whose
+    /// `gen` no longer matches (or whose task finished) drop on pop.
+    completions: BinaryHeap<Reverse<TimedEntry>>,
+    /// Caller-scheduled wake points.
+    wakes: BinaryHeap<Reverse<OrdTime>>,
+    counters: SimCounters,
     // ---- diagnostics (cold path only) ----
     name_table: Vec<String>,
     // ---- scratch buffers reused across events (no allocation) ----
@@ -249,6 +461,14 @@ pub struct Sim {
     scratch_load: Vec<f64>,
     scratch_slack: Vec<f64>,
     scratch_touched: Vec<ResourceId>,
+    /// BFS output: the component being swept (sorted ascending before
+    /// the fill) and the resources it spans.
+    scratch_comp: Vec<TaskId>,
+    scratch_res: Vec<ResourceId>,
+    /// Epoch-stamped visited marks for the BFS (no clearing needed).
+    seen_task: Vec<u64>,
+    seen_res: Vec<u64>,
+    epoch: u64,
 }
 
 impl Sim {
@@ -265,18 +485,33 @@ impl Sim {
             rates: Vec::new(),
             started: Vec::new(),
             finished: Vec::new(),
+            gen: Vec::new(),
             dem_off: vec![0],
             dem_res: Vec::new(),
             dem_amt: Vec::new(),
-            pending: Vec::new(),
-            active: Vec::new(),
-            wakes: Vec::new(),
-            rates_dirty: true,
+            dem_pos: Vec::new(),
+            res_members: Vec::new(),
+            live: Vec::new(),
+            live_pos: Vec::new(),
+            active_count: 0,
+            dirty: Vec::new(),
+            dirty_flag: Vec::new(),
+            drained: Vec::new(),
+            drained_flag: Vec::new(),
+            arrivals: BinaryHeap::new(),
+            completions: BinaryHeap::new(),
+            wakes: BinaryHeap::new(),
+            counters: SimCounters::default(),
             name_table: Vec::new(),
             scratch_frozen: Vec::new(),
             scratch_load: Vec::new(),
             scratch_slack: Vec::new(),
             scratch_touched: Vec::new(),
+            scratch_comp: Vec::new(),
+            scratch_res: Vec::new(),
+            seen_task: Vec::new(),
+            seen_res: Vec::new(),
+            epoch: 0,
         }
     }
 
@@ -287,8 +522,10 @@ impl Sim {
             name: name.to_string(),
             capacity,
         });
+        self.res_members.push(Vec::new());
         self.scratch_load.push(0.0);
         self.scratch_slack.push(0.0);
+        self.seen_res.push(0);
         self.resources.len() - 1
     }
 
@@ -324,14 +561,23 @@ impl Sim {
         self.rates.push(0.0);
         self.started.push(None);
         self.finished.push(None);
+        self.gen.push(0);
         for &(rid, amt) in spec.demands {
             self.dem_res.push(rid as u32);
             self.dem_amt.push(amt);
+            self.dem_pos.push(u32::MAX);
         }
         self.dem_off.push(self.dem_res.len() as u32);
+        self.live_pos.push(u32::MAX);
+        self.dirty_flag.push(false);
+        self.drained_flag.push(false);
         self.scratch_frozen.push(false);
-        self.pending.push(id);
-        self.rates_dirty = true;
+        self.seen_task.push(0);
+        self.arrivals.push(Reverse(TimedEntry {
+            t: spec.arrival,
+            id,
+            gen: 0,
+        }));
         id
     }
 
@@ -348,6 +594,18 @@ impl Sim {
     /// would be orphaned (ids are dense, so truncation is exact).
     pub fn truncate_tasks(&mut self, keep: usize) {
         assert!(keep <= self.names.len(), "truncate beyond task count");
+        // Unenroll dropped live tasks first (their CSR rows must still
+        // exist), seeding the surviving fragments of their components.
+        // The last removal a resource sees leaves only survivors in its
+        // member list, so every affected surviving component gets a
+        // dirty seed; graph-resume suffixes are zero-cap spectators, so
+        // that path seeds nothing and prefix rates stay bit-identical.
+        for i in keep..self.names.len() {
+            if self.live_pos[i] != u32::MAX {
+                self.remove_live(i);
+                self.unenroll(i, true);
+            }
+        }
         self.names.truncate(keep);
         self.arrival.truncate(keep);
         self.work.truncate(keep);
@@ -356,14 +614,31 @@ impl Sim {
         self.rates.truncate(keep);
         self.started.truncate(keep);
         self.finished.truncate(keep);
+        self.gen.truncate(keep);
+        self.live_pos.truncate(keep);
+        self.dirty_flag.truncate(keep);
+        self.drained_flag.truncate(keep);
         let tail = self.dem_off[keep] as usize;
         self.dem_res.truncate(tail);
         self.dem_amt.truncate(tail);
+        self.dem_pos.truncate(tail);
         self.dem_off.truncate(keep + 1);
         self.scratch_frozen.truncate(keep);
-        self.pending.retain(|&i| i < keep);
-        self.active.retain(|&i| i < keep);
-        self.rates_dirty = true;
+        self.seen_task.truncate(keep);
+        self.dirty.retain(|&i| i < keep);
+        self.drained.retain(|&i| i < keep);
+        // Dropped ids may sit in the two task heaps; filter and re-heap
+        // (entries are totally ordered, so the rebuilt pop order is
+        // deterministic regardless of internal layout).
+        let mut v = std::mem::take(&mut self.arrivals).into_vec();
+        v.retain(|e| e.0.id < keep);
+        self.arrivals = BinaryHeap::from(v);
+        let mut v = std::mem::take(&mut self.completions).into_vec();
+        v.retain(|e| e.0.id < keep);
+        self.completions = BinaryHeap::from(v);
+        self.active_count = (0..keep)
+            .filter(|&i| self.started[i].is_some() && self.finished[i].is_none())
+            .count();
     }
 
     /// Change a task's rate cap (e.g. its CU allocation changed).
@@ -375,7 +650,20 @@ impl Sim {
             return;
         }
         self.caps[tid] = cap;
-        self.rates_dirty = true;
+        if self.started[tid].is_none() || self.finished[tid].is_some() {
+            return; // takes effect when (if) the task activates
+        }
+        let was_live = self.live_pos[tid] != u32::MAX;
+        let now_live = cap > EPS;
+        match (was_live, now_live) {
+            // A controller grant: the task joins the solver.
+            (false, true) => self.make_live(tid),
+            // Revoked: leave the solver, re-seed the neighbours.
+            (true, false) => self.make_dead(tid),
+            // A cap change only dirties the task's own component.
+            (true, true) => self.mark_dirty(tid),
+            (false, false) => {}
+        }
     }
 
     /// Current rate cap of a task.
@@ -393,9 +681,23 @@ impl Sim {
         let hi = self.dem_off[tid + 1] as usize;
         for d in lo..hi {
             if self.dem_res[d] as usize == rid {
-                if self.dem_amt[d] != per_work {
-                    self.dem_amt[d] = per_work;
-                    self.rates_dirty = true;
+                let old = self.dem_amt[d];
+                if old == per_work {
+                    return;
+                }
+                self.dem_amt[d] = per_work;
+                if self.live_pos[tid] != u32::MAX {
+                    if old <= 0.0 && per_work > 0.0 {
+                        // The slot becomes a connectivity edge.
+                        self.dem_pos[d] = self.res_members[rid].len() as u32;
+                        self.res_members[rid].push((tid, d as u32));
+                    } else if old > 0.0 && per_work == 0.0 {
+                        // Dropping the edge may split the component;
+                        // seeding the resource's first surviving member
+                        // re-solves the detached side.
+                        self.unenroll_slot(d, true);
+                    }
+                    self.mark_dirty(tid);
                 }
                 return;
             }
@@ -410,7 +712,19 @@ impl Sim {
     /// Schedule a wake event (control point) at absolute time `t`.
     pub fn schedule_wake(&mut self, t: f64) {
         assert!(t >= self.time, "wake in the past");
-        self.wakes.push(t);
+        self.wakes.push(Reverse(OrdTime(t)));
+    }
+
+    /// Event-loop counters accumulated since construction (or the last
+    /// [`reset_counters`](Sim::reset_counters)).
+    pub fn counters(&self) -> SimCounters {
+        self.counters
+    }
+
+    /// Zero the counters — e.g. when resuming from a snapshot, so a
+    /// resumed run reports only its own suffix.
+    pub fn reset_counters(&mut self) {
+        self.counters = SimCounters::default();
     }
 
     /// Current simulation time.
@@ -448,210 +762,421 @@ impl Sim {
         self.rates[tid]
     }
 
-    fn recompute_rates(&mut self) {
-        // Max-min fair progressive filling over the active set. Rates of
-        // non-active tasks are maintained at 0 by the event loop
-        // (completion/truncation zero them; pending tasks start at 0).
-        self.rates_dirty = false;
-        let mut any = false;
-        for &i in &self.active {
-            self.rates[i] = 0.0;
-            let participates = self.remaining[i] > EPS && self.caps[i] > EPS;
-            self.scratch_frozen[i] = !participates;
-            any |= participates;
+    /// Queue a component re-solve, seeded at `i` (deduped).
+    fn mark_dirty(&mut self, i: TaskId) {
+        if !self.dirty_flag[i] {
+            self.dirty_flag[i] = true;
+            self.dirty.push(i);
         }
-        if !any {
+    }
+
+    /// Enter the live set: join the dense list, enroll every positive
+    /// demand as a connectivity edge, and dirty the joined component.
+    fn make_live(&mut self, i: TaskId) {
+        debug_assert_eq!(self.live_pos[i], u32::MAX);
+        self.live_pos[i] = self.live.len() as u32;
+        self.live.push(i);
+        let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+        for d in lo..hi {
+            if self.dem_amt[d] > 0.0 {
+                let rid = self.dem_res[d] as usize;
+                self.dem_pos[d] = self.res_members[rid].len() as u32;
+                self.res_members[rid].push((i, d as u32));
+            }
+        }
+        self.mark_dirty(i);
+    }
+
+    /// Leave the live set (cap revoked) and re-seed the neighbours.
+    fn make_dead(&mut self, i: TaskId) {
+        self.rates[i] = 0.0;
+        self.gen[i] = self.gen[i].wrapping_add(1);
+        self.remove_live(i);
+        self.unenroll(i, true);
+    }
+
+    fn remove_live(&mut self, i: TaskId) {
+        let p = self.live_pos[i] as usize;
+        self.live.swap_remove(p);
+        if let Some(&moved) = self.live.get(p) {
+            self.live_pos[moved] = p as u32;
+        }
+        self.live_pos[i] = u32::MAX;
+    }
+
+    /// Withdraw every enrolled demand slot of task `i`. With `seed`,
+    /// each affected resource's first surviving member is marked dirty:
+    /// a removal can split a component, and every fragment holds at
+    /// least one such member, so every fragment gets re-solved.
+    fn unenroll(&mut self, i: TaskId, seed: bool) {
+        let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+        for d in lo..hi {
+            self.unenroll_slot(d, seed);
+        }
+    }
+
+    fn unenroll_slot(&mut self, d: usize, seed: bool) {
+        let p = self.dem_pos[d];
+        if p == u32::MAX {
             return;
         }
-        // Remaining slack per resource.
-        for (r, s) in self.resources.iter().zip(self.scratch_slack.iter_mut()) {
-            *s = r.capacity;
+        self.dem_pos[d] = u32::MAX;
+        let rid = self.dem_res[d] as usize;
+        self.res_members[rid].swap_remove(p as usize);
+        if let Some(&(_, moved_slot)) = self.res_members[rid].get(p as usize) {
+            self.dem_pos[moved_slot as usize] = p;
         }
-        // Progressive filling: raise all unfrozen rates uniformly until a
-        // cap or a resource saturates; iterate. Each round either freezes
-        // a task or exhausts the unfrozen set, so the bound is loose.
-        for _round in 0..(self.active.len() + self.resources.len() + 1) {
-            // Load per resource from unfrozen tasks; `scratch_touched`
-            // tracks exactly the resources demanded this round so the
-            // delta/saturation checks never sweep untouched resources.
-            for &rid in &self.scratch_touched {
-                self.scratch_load[rid] = 0.0;
+        if seed {
+            if let Some(&(j, _)) = self.res_members[rid].first() {
+                self.mark_dirty(j);
             }
-            self.scratch_touched.clear();
-            let mut delta = f64::INFINITY;
-            let mut any_unfrozen = false;
-            for &i in &self.active {
-                if self.scratch_frozen[i] {
+        }
+    }
+
+    /// Mark a task finished at the current time and detach it from the
+    /// solver, seeding its former component for re-solve.
+    fn complete_now(&mut self, i: TaskId) {
+        self.remaining[i] = 0.0;
+        self.rates[i] = 0.0;
+        self.finished[i] = Some(self.time);
+        self.gen[i] = self.gen[i].wrapping_add(1);
+        self.drained_flag[i] = false;
+        self.active_count -= 1;
+        if self.live_pos[i] != u32::MAX {
+            self.remove_live(i);
+            self.unenroll(i, true);
+        }
+    }
+
+    /// Re-solve every dirty component. Normally called lazily inside
+    /// [`next_event`](Sim::next_event); public so tests and oracles can
+    /// force the rates current and read them.
+    pub fn settle(&mut self) -> Result<(), UnboundedRateError> {
+        while let Some(seed) = self.dirty.pop() {
+            if !self.dirty_flag[seed] {
+                continue; // already swept as part of an earlier component
+            }
+            self.dirty_flag[seed] = false;
+            if self.live_pos[seed] == u32::MAX {
+                continue; // completed or revoked since it was queued
+            }
+            self.sweep_component(seed)?;
+        }
+        Ok(())
+    }
+
+    /// BFS the resource-connected component containing `seed`, then run
+    /// one max-min water-filling pass restricted to it. The member list
+    /// is sorted ascending first, so the resulting rates are a pure
+    /// function of (membership, caps, remaining, demands, capacities) —
+    /// re-running a pass is bit-stable, which keeps snapshot resume
+    /// bit-identical.
+    fn sweep_component(&mut self, seed: TaskId) -> Result<(), UnboundedRateError> {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.scratch_comp.clear();
+        self.scratch_res.clear();
+        self.scratch_comp.push(seed);
+        self.seen_task[seed] = epoch;
+        let mut head = 0;
+        while head < self.scratch_comp.len() {
+            let i = self.scratch_comp[head];
+            head += 1;
+            let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+            for d in lo..hi {
+                if self.dem_pos[d] == u32::MAX {
+                    continue; // zero demand: not a connectivity edge
+                }
+                let rid = self.dem_res[d] as usize;
+                if self.seen_res[rid] == epoch {
                     continue;
                 }
-                any_unfrozen = true;
-                delta = delta.min(self.caps[i] - self.rates[i]);
-                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
-                for d in lo..hi {
-                    let amt = self.dem_amt[d];
-                    if amt <= 0.0 {
+                self.seen_res[rid] = epoch;
+                self.scratch_res.push(rid);
+                for &(j, _) in &self.res_members[rid] {
+                    if self.seen_task[j] != epoch {
+                        self.seen_task[j] = epoch;
+                        self.scratch_comp.push(j);
+                    }
+                }
+            }
+        }
+        self.scratch_comp.sort_unstable();
+        let comp_len = self.scratch_comp.len();
+        self.counters.rate_passes += 1;
+        self.counters.tasks_swept += comp_len as u64;
+        self.counters.max_component = self.counters.max_component.max(comp_len as u32);
+        if comp_len == self.active_count {
+            self.counters.full_passes += 1;
+        }
+        // Every member's previous projection is now stale, whether or
+        // not the fill pushes a new one; clear their dirty flags so one
+        // pass settles the whole component.
+        let mut any = false;
+        for &i in &self.scratch_comp {
+            self.gen[i] = self.gen[i].wrapping_add(1);
+            self.dirty_flag[i] = false;
+            self.rates[i] = 0.0;
+            // Members are live (cap > EPS), so only drained work can
+            // exclude one from the fill.
+            let participates = self.remaining[i] > EPS;
+            self.scratch_frozen[i] = !participates;
+            if !participates && !self.drained_flag[i] {
+                self.drained_flag[i] = true;
+                self.drained.push(i);
+            }
+            any |= participates;
+        }
+        if any {
+            // Remaining slack, only for the resources this component spans.
+            for &rid in &self.scratch_res {
+                self.scratch_slack[rid] = self.resources[rid].capacity;
+            }
+            // Progressive filling: raise all unfrozen rates uniformly
+            // until a cap or a resource saturates; iterate. Each round
+            // either freezes a task or exhausts the unfrozen set.
+            for _round in 0..(comp_len + self.scratch_res.len() + 1) {
+                // Load per resource from unfrozen tasks; `scratch_touched`
+                // tracks exactly the resources demanded this round so the
+                // delta/saturation checks never sweep untouched resources.
+                for &rid in &self.scratch_touched {
+                    self.scratch_load[rid] = 0.0;
+                }
+                self.scratch_touched.clear();
+                let mut delta = f64::INFINITY;
+                let mut any_unfrozen = false;
+                for &i in &self.scratch_comp {
+                    if self.scratch_frozen[i] {
                         continue;
                     }
-                    let rid = self.dem_res[d] as usize;
-                    if self.scratch_load[rid] == 0.0 {
-                        self.scratch_touched.push(rid);
+                    any_unfrozen = true;
+                    delta = delta.min(self.caps[i] - self.rates[i]);
+                    let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                    for d in lo..hi {
+                        let amt = self.dem_amt[d];
+                        if amt <= 0.0 {
+                            continue;
+                        }
+                        let rid = self.dem_res[d] as usize;
+                        if self.scratch_load[rid] == 0.0 {
+                            self.scratch_touched.push(rid);
+                        }
+                        self.scratch_load[rid] += amt;
                     }
-                    self.scratch_load[rid] += amt;
+                }
+                if !any_unfrozen {
+                    break;
+                }
+                for &rid in &self.scratch_touched {
+                    if self.scratch_load[rid] > EPS {
+                        delta = delta.min(self.scratch_slack[rid] / self.scratch_load[rid]);
+                    }
+                }
+                if !delta.is_finite() {
+                    return Err(self.unbounded_error());
+                }
+                let delta = delta.max(0.0);
+                // Apply the uniform raise and consume slack.
+                for &i in &self.scratch_comp {
+                    if self.scratch_frozen[i] {
+                        continue;
+                    }
+                    self.rates[i] += delta;
+                    let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                    for d in lo..hi {
+                        self.scratch_slack[self.dem_res[d] as usize] -= self.dem_amt[d] * delta;
+                    }
+                }
+                // Freeze tasks at cap or touching a saturated resource.
+                for &i in &self.scratch_comp {
+                    if self.scratch_frozen[i] {
+                        continue;
+                    }
+                    let at_cap = self.rates[i] >= self.caps[i] - EPS * self.caps[i].max(1.0);
+                    let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
+                    let saturated = (lo..hi).any(|d| {
+                        let rid = self.dem_res[d] as usize;
+                        self.dem_amt[d] > EPS
+                            && self.scratch_slack[rid] <= EPS * self.resources[rid].capacity
+                    });
+                    if at_cap || saturated {
+                        self.scratch_frozen[i] = true;
+                    }
                 }
             }
-            if !any_unfrozen {
+        }
+        // Re-project completions for the swept members only.
+        for &i in &self.scratch_comp {
+            if self.rates[i] > EPS && self.remaining[i] > EPS {
+                self.completions.push(Reverse(TimedEntry {
+                    t: self.time + self.remaining[i] / self.rates[i],
+                    id: i,
+                    gen: self.gen[i],
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the divergence report from the pass state left by
+    /// `sweep_component` (unfrozen members are the unbounded ones).
+    fn unbounded_error(&self) -> UnboundedRateError {
+        let mut tasks = Vec::new();
+        for &i in &self.scratch_comp {
+            if !self.scratch_frozen[i] {
+                let name = self.names[i]
+                    .map(|n| self.name_table[n as usize].clone())
+                    .unwrap_or_else(|| format!("task {i}"));
+                tasks.push((i, name));
+            }
+        }
+        UnboundedRateError {
+            at: self.time,
+            tasks,
+        }
+    }
+
+    /// Drop completion-heap entries whose task finished or whose rates
+    /// were re-solved since the entry was pushed.
+    fn pop_stale_completions(&mut self) {
+        while let Some(&Reverse(e)) = self.completions.peek() {
+            if self.finished[e.id].is_some() || self.gen[e.id] != e.gen {
+                self.completions.pop();
+            } else {
                 break;
-            }
-            for &rid in &self.scratch_touched {
-                if self.scratch_load[rid] > EPS {
-                    delta = delta.min(self.scratch_slack[rid] / self.scratch_load[rid]);
-                }
-            }
-            debug_assert!(delta.is_finite(), "unbounded task rate: add a cap");
-            let delta = delta.max(0.0);
-            // Apply the uniform raise and consume slack.
-            for &i in &self.active {
-                if self.scratch_frozen[i] {
-                    continue;
-                }
-                self.rates[i] += delta;
-                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
-                for d in lo..hi {
-                    self.scratch_slack[self.dem_res[d] as usize] -= self.dem_amt[d] * delta;
-                }
-            }
-            // Freeze tasks at cap or touching a saturated resource.
-            for &i in &self.active {
-                if self.scratch_frozen[i] {
-                    continue;
-                }
-                let at_cap = self.rates[i] >= self.caps[i] - EPS * self.caps[i].max(1.0);
-                let (lo, hi) = (self.dem_off[i] as usize, self.dem_off[i + 1] as usize);
-                let saturated = (lo..hi).any(|d| {
-                    let rid = self.dem_res[d] as usize;
-                    self.dem_amt[d] > EPS
-                        && self.scratch_slack[rid] <= EPS * self.resources[rid].capacity
-                });
-                if at_cap || saturated {
-                    self.scratch_frozen[i] = true;
-                }
             }
         }
     }
 
     /// Advance to the next event and return it. Between calls the caller
-    /// may adjust caps/demands (they take effect immediately).
-    pub fn next_event(&mut self) -> Event {
-        // Zero-time events first: tasks that already drained their work
-        // (e.g. simultaneous completions after the last integration).
-        // Lowest id first, matching the pre-SoA full scan.
-        let mut done: Option<usize> = None;
-        for (pos, &i) in self.active.iter().enumerate() {
-            if self.remaining[i] <= EPS && done.is_none_or(|p| i < self.active[p]) {
-                done = Some(pos);
-            }
-        }
-        if let Some(pos) = done {
-            let i = self.active.swap_remove(pos);
-            self.remaining[i] = 0.0;
-            self.rates[i] = 0.0;
-            self.finished[i] = Some(self.time);
-            self.rates_dirty = true;
-            return Event::Completion(i);
-        }
-        // Then activate arrivals that are due *now*, lowest id first.
-        let mut due: Option<usize> = None;
-        for (pos, &i) in self.pending.iter().enumerate() {
-            if self.arrival[i] <= self.time + EPS && due.is_none_or(|p| i < self.pending[p]) {
-                due = Some(pos);
-            }
-        }
-        if let Some(pos) = due {
-            let i = self.pending.swap_remove(pos);
-            self.started[i] = Some(self.time.max(self.arrival[i]));
-            self.rates_dirty = true;
-            // Zero-work tasks complete instantly.
-            if self.remaining[i] <= EPS {
-                self.finished[i] = Some(self.time);
-                return Event::Completion(i);
-            }
-            self.active.push(i);
-            return Event::Arrival(i);
-        }
-        if self.rates_dirty {
-            self.recompute_rates();
-        }
-        // Horizon candidates: completions, future arrivals, wakes. Task
-        // ties resolve to the lowest id (the pre-SoA scan order); a wake
-        // fires only if strictly earlier than every task event.
-        let mut best_t = f64::INFINITY;
-        let mut best_task = usize::MAX;
-        let mut best_is_completion = false;
-        for &i in &self.active {
-            if self.rates[i] > EPS {
-                let t = self.time + self.remaining[i] / self.rates[i];
-                if t < best_t || (t == best_t && i < best_task) {
-                    best_t = t;
-                    best_task = i;
-                    best_is_completion = true;
+    /// may adjust caps/demands (they take effect immediately). Errors if
+    /// a dirty component's max-min fill diverges (a task with infinite
+    /// cap and no positive demand).
+    pub fn next_event(&mut self) -> Result<Event, UnboundedRateError> {
+        // A future arrival advances time and loops back through
+        // activation — iteratively, so open-loop traffic runs do not
+        // grow the stack with arrival depth.
+        loop {
+            // Zero-time events first: tasks whose work already drained
+            // (simultaneous completions after the last integration or a
+            // solve pass). Lowest id first, matching the legacy scan;
+            // stale entries (already completed / re-flagged) drop here.
+            if !self.drained.is_empty() {
+                let mut min: Option<TaskId> = None;
+                let mut k = 0;
+                while k < self.drained.len() {
+                    let i = self.drained[k];
+                    if !self.drained_flag[i] || self.finished[i].is_some() {
+                        self.drained_flag[i] = false;
+                        self.drained.swap_remove(k);
+                        continue;
+                    }
+                    if min.map_or(true, |m| i < m) {
+                        min = Some(i);
+                    }
+                    k += 1;
+                }
+                if let Some(i) = min {
+                    let pos = self
+                        .drained
+                        .iter()
+                        .position(|&x| x == i)
+                        .expect("drained entry");
+                    self.drained.swap_remove(pos);
+                    self.complete_now(i);
+                    self.counters.events += 1;
+                    return Ok(Event::Completion(i));
                 }
             }
-        }
-        for &i in &self.pending {
-            let a = self.arrival[i];
-            if a < best_t || (a == best_t && i < best_task) {
-                best_t = a;
-                best_task = i;
-                best_is_completion = false;
-            }
-        }
-        let mut horizon = best_t;
-        let mut wake_pos: Option<usize> = None;
-        for (pos, &w) in self.wakes.iter().enumerate() {
-            if w < horizon {
-                horizon = w;
-                wake_pos = Some(pos);
-            }
-        }
-        if !horizon.is_finite() {
-            // Nothing can make progress. Distinguish "all done" from
-            // "stalled" (active tasks with zero rate wait for the caller
-            // to raise a cap — report Idle either way; the caller drives).
-            return Event::Idle;
-        }
-        // Integrate progress to the horizon.
-        let dt = horizon - self.time;
-        if dt > 0.0 {
-            for &i in &self.active {
-                if self.rates[i] > 0.0 {
-                    self.remaining[i] = (self.remaining[i] - self.rates[i] * dt).max(0.0);
+            // Then activate arrivals that are due *now* — the heap pops
+            // the earliest `(arrival, id)`.
+            if let Some(&Reverse(e)) = self.arrivals.peek() {
+                if e.t <= self.time + EPS {
+                    self.arrivals.pop();
+                    let i = e.id;
+                    self.started[i] = Some(self.time.max(self.arrival[i]));
+                    self.active_count += 1;
+                    self.counters.events += 1;
+                    // Zero-work tasks complete instantly.
+                    if self.remaining[i] <= EPS {
+                        self.finished[i] = Some(self.time);
+                        self.active_count -= 1;
+                        return Ok(Event::Completion(i));
+                    }
+                    if self.caps[i] > EPS {
+                        self.make_live(i);
+                    }
+                    return Ok(Event::Arrival(i));
                 }
             }
-            self.time = horizon;
-        }
-        if let Some(pos) = wake_pos {
-            self.wakes.swap_remove(pos);
-            self.rates_dirty = true;
-            return Event::Wake(self.time);
-        }
-        if best_task != usize::MAX {
+            self.settle()?;
+            // Horizon candidates: projected completions, future
+            // arrivals, wakes. Task ties resolve to the lowest id (the
+            // legacy scan order); a wake fires only if strictly earlier
+            // than every task event.
+            self.pop_stale_completions();
+            let comp = self.completions.peek().map(|&Reverse(e)| (e.t, e.id));
+            let arr = self.arrivals.peek().map(|&Reverse(e)| (e.t, e.id));
+            let (best_t, best_task, best_is_completion) = match (comp, arr) {
+                (None, None) => (f64::INFINITY, usize::MAX, false),
+                (Some((t, i)), None) => (t, i, true),
+                (None, Some((t, i))) => (t, i, false),
+                (Some((tc, ic)), Some((ta, ia))) => {
+                    if tc < ta || (tc == ta && ic < ia) {
+                        (tc, ic, true)
+                    } else {
+                        (ta, ia, false)
+                    }
+                }
+            };
+            let mut horizon = best_t;
+            let mut fire_wake = false;
+            if let Some(&Reverse(OrdTime(w))) = self.wakes.peek() {
+                if w < horizon {
+                    horizon = w;
+                    fire_wake = true;
+                }
+            }
+            if !horizon.is_finite() {
+                // Nothing can make progress. Distinguish "all done" from
+                // "stalled" (live tasks with zero rate wait for the
+                // caller to raise a cap — report Idle either way; the
+                // caller drives).
+                return Ok(Event::Idle);
+            }
+            // Integrate progress to the horizon (live tasks only; tasks
+            // draining to zero en route queue as zero-time completions).
+            let dt = horizon - self.time;
+            if dt > 0.0 {
+                for &i in &self.live {
+                    if self.rates[i] > 0.0 {
+                        let left = (self.remaining[i] - self.rates[i] * dt).max(0.0);
+                        self.remaining[i] = left;
+                        if left <= EPS && !self.drained_flag[i] {
+                            self.drained_flag[i] = true;
+                            self.drained.push(i);
+                        }
+                    }
+                }
+                self.time = horizon;
+            }
+            if fire_wake {
+                self.wakes.pop();
+                self.counters.events += 1;
+                return Ok(Event::Wake(self.time));
+            }
+            if best_task == usize::MAX {
+                return Ok(Event::Idle);
+            }
             if best_is_completion {
-                let pos = self
-                    .active
-                    .iter()
-                    .position(|&i| i == best_task)
-                    .expect("completing task is active");
-                self.active.swap_remove(pos);
-                self.remaining[best_task] = 0.0;
-                self.rates[best_task] = 0.0;
-                self.finished[best_task] = Some(self.time);
-                self.rates_dirty = true;
-                return Event::Completion(best_task);
+                self.completions.pop();
+                self.complete_now(best_task);
+                self.counters.events += 1;
+                return Ok(Event::Completion(best_task));
             }
-            // Future arrival: loop back through activation at the new time.
-            return self.next_event();
+            // Future arrival: time advanced to it; next iteration
+            // activates it through the due-arrival path.
         }
-        Event::Idle
     }
 
     /// Diagnose why unfinished tasks cannot progress right now. Used to
@@ -706,12 +1231,12 @@ impl Sim {
     }
 
     /// Drive to completion with no controller; returns per-task finish
-    /// times, or a [`StallError`] naming every task that could not
-    /// finish (so a bad job fails itself instead of aborting the whole
-    /// sweep).
-    pub fn run_to_completion(&mut self) -> Result<Vec<f64>, StallError> {
+    /// times, or a [`SimError`] naming every task that could not finish
+    /// ([`StallError`]) or that nothing bounds ([`UnboundedRateError`])
+    /// — so a bad job fails itself instead of aborting the whole sweep.
+    pub fn run_to_completion(&mut self) -> Result<Vec<f64>, SimError> {
         loop {
-            match self.next_event() {
+            match self.next_event()? {
                 Event::Idle => break,
                 _ => continue,
             }
@@ -721,10 +1246,10 @@ impl Sim {
             match self.finished[i] {
                 Some(f) => fins.push(f),
                 None => {
-                    return Err(StallError {
+                    return Err(SimError::Stall(StallError {
                         at: self.time,
                         stalled: self.stall_report(),
-                    })
+                    }))
                 }
             }
         }
@@ -853,11 +1378,11 @@ mod tests {
         let t = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 0.25);
         sim.schedule_wake(2.0);
         // Drive manually: first event is the arrival, then the wake.
-        assert_eq!(sim.next_event(), Event::Arrival(t));
-        assert_eq!(sim.next_event(), Event::Wake(2.0));
+        assert_eq!(sim.next_event().unwrap(), Event::Arrival(t));
+        assert_eq!(sim.next_event().unwrap(), Event::Wake(2.0));
         // Progress so far: 0.5. Raise cap; remaining 0.5 at rate 1 -> 2.5.
         sim.set_cap(t, 1e18);
-        match sim.next_event() {
+        match sim.next_event().unwrap() {
             Event::Completion(tid) => assert_eq!(tid, t),
             e => panic!("expected completion, got {e:?}"),
         }
@@ -870,17 +1395,17 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let a = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 1e18);
         let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 0.0);
-        assert_eq!(sim.next_event(), Event::Arrival(a));
-        assert_eq!(sim.next_event(), Event::Arrival(b));
+        assert_eq!(sim.next_event().unwrap(), Event::Arrival(a));
+        assert_eq!(sim.next_event().unwrap(), Event::Arrival(b));
         // b is starved (cap 0): a completes alone at t=1.
-        match sim.next_event() {
+        match sim.next_event().unwrap() {
             Event::Completion(tid) => assert_eq!(tid, a),
             e => panic!("{e:?}"),
         }
         assert_rel_close!(sim.now(), 1.0, 1e-9);
         // Controller grants b a cap now.
         sim.set_cap(b, 1e18);
-        match sim.next_event() {
+        match sim.next_event().unwrap() {
             Event::Completion(tid) => assert_eq!(tid, b),
             e => panic!("{e:?}"),
         }
@@ -906,9 +1431,9 @@ mod tests {
         let _a = add(&mut sim, "a", 0.0, 0.5, &[(r, 10.0)], 1e18);
         let b = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
         // a arrives, b arrives, a completes at t=1.
-        sim.next_event();
-        sim.next_event();
-        match sim.next_event() {
+        sim.next_event().unwrap();
+        sim.next_event().unwrap();
+        match sim.next_event().unwrap() {
             Event::Completion(tid) => assert_eq!(tid, 0),
             e => panic!("{e:?}"),
         }
@@ -935,7 +1460,11 @@ mod tests {
         let r = sim.add_resource("hbm", 10.0);
         let _a = add(&mut sim, "runs", 0.0, 1.0, &[(r, 10.0)], 1e18);
         let _b = add(&mut sim, "starved", 0.0, 1.0, &[(r, 10.0)], 0.0);
-        let err = sim.run_to_completion().unwrap_err();
+        let err = match sim.run_to_completion() {
+            Err(SimError::Stall(e)) => e,
+            Ok(_) => panic!("expected a stall"),
+            Err(e) => panic!("expected a stall, got {e}"),
+        };
         assert_rel_close!(err.at, 1.0, 1e-9); // 'runs' finished at t=1
         assert_eq!(err.stalled.len(), 1);
         let s = &err.stalled[0];
@@ -986,11 +1515,9 @@ mod tests {
                 });
             }
             for _ in 0..n {
-                sim.next_event(); // n arrival activations
+                sim.next_event().unwrap(); // n arrival activations
             }
-            while sim.rates_dirty {
-                sim.recompute_rates();
-            }
+            sim.settle().unwrap();
             let used: f64 = (0..n as usize)
                 .map(|i| sim.rate(i) * dscale * (i + 1) as f64)
                 .sum();
@@ -1028,5 +1555,69 @@ mod tests {
                 Err(format!("makespan {max} vs expected {expect}"))
             }
         });
+    }
+
+    #[test]
+    fn unbounded_rate_is_a_typed_error_naming_the_task() {
+        // Infinite cap, no demand: nothing bounds the rate. This used to
+        // be a debug_assert (silent garbage in release); now it names
+        // the offender.
+        let mut sim = Sim::new();
+        sim.add_resource("hbm", 10.0);
+        let _ = add(&mut sim, "runaway", 0.0, 1.0, &[], f64::INFINITY);
+        let err = match sim.run_to_completion() {
+            Err(SimError::Unbounded(e)) => e,
+            Ok(_) => panic!("expected divergence"),
+            Err(e) => panic!("expected divergence, got {e}"),
+        };
+        assert_eq!(err.tasks.len(), 1);
+        assert_eq!(err.tasks[0].0, 0);
+        assert_eq!(err.tasks[0].1, "runaway");
+        let msg = err.to_string();
+        assert!(msg.contains("runaway") && msg.contains("unbounded"), "{msg}");
+    }
+
+    #[test]
+    fn disjoint_components_are_solved_separately() {
+        // Two pairs on two disjoint resources: every rate pass sweeps
+        // one pair, never the whole active set.
+        let mut sim = Sim::new();
+        let r1 = sim.add_resource("r1", 10.0);
+        let r2 = sim.add_resource("r2", 10.0);
+        let a1 = add(&mut sim, "a1", 0.0, 1.0, &[(r1, 10.0)], 1e18);
+        let _ = add(&mut sim, "a2", 0.0, 1.0, &[(r1, 10.0)], 1e18);
+        let _ = add(&mut sim, "b1", 0.0, 2.0, &[(r2, 10.0)], 1e18);
+        let _ = add(&mut sim, "b2", 0.0, 2.0, &[(r2, 10.0)], 1e18);
+        for _ in 0..4 {
+            assert!(matches!(sim.next_event().unwrap(), Event::Arrival(_)));
+        }
+        sim.settle().unwrap();
+        let c = sim.counters();
+        assert_eq!(c.rate_passes, 2, "one pass per component");
+        assert_eq!(c.tasks_swept, 4);
+        assert_eq!(c.max_component, 2, "components never merge");
+        assert_eq!(c.full_passes, 0, "no pass spans the active set");
+        // Poking one component re-solves only it.
+        sim.set_cap(a1, 0.5);
+        sim.settle().unwrap();
+        let c2 = sim.counters();
+        assert_eq!(c2.rate_passes - c.rate_passes, 1);
+        assert_eq!(c2.tasks_swept - c.tasks_swept, 2);
+        assert_eq!(c2.full_passes, 0);
+    }
+
+    #[test]
+    fn single_component_pass_counts_as_full() {
+        let mut sim = Sim::new();
+        let r = sim.add_resource("r", 10.0);
+        let _ = add(&mut sim, "a", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        let _ = add(&mut sim, "b", 0.0, 1.0, &[(r, 10.0)], 1e18);
+        sim.next_event().unwrap();
+        sim.next_event().unwrap();
+        sim.settle().unwrap();
+        let c = sim.counters();
+        assert_eq!(c.rate_passes, 1);
+        assert_eq!(c.full_passes, 1, "the pair is the whole active set");
+        assert_eq!(c.max_component, 2);
     }
 }

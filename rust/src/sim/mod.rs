@@ -8,5 +8,6 @@
 pub mod fluid;
 
 pub use fluid::{
-    Blocker, Event, NameId, Resource, ResourceId, Sim, StallError, StalledTask, TaskId, TaskSpec,
+    Blocker, Event, NameId, Resource, ResourceId, Sim, SimCounters, SimError, StallError,
+    StalledTask, TaskId, TaskSpec, UnboundedRateError,
 };

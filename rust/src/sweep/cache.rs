@@ -365,6 +365,10 @@ impl Cache {
                 hbm_occupancy: bits_field(run, "hbm_occupancy")?,
                 sdma_occupancy: bits_field(run, "sdma_occupancy")?,
                 graph_nodes: usize_field(run, "graph_nodes")?,
+                // A cache replay simulates nothing: zero events is the
+                // truthful counter block (counters never enter the JSON
+                // report, so replay stays byte-invisible).
+                counters: crate::sim::SimCounters::default(),
             },
             plan,
         })
@@ -441,6 +445,10 @@ impl Cache {
                 hbm_occupancy: bits_field(f, "hbm_occupancy")?,
                 sdma_occupancy: bits_field(f, "sdma_occupancy")?,
                 plan,
+                // A cache replay simulates nothing: zero events is the
+                // truthful counter block (counters never enter the JSON
+                // record, so replay stays byte-invisible).
+                counters: crate::sim::SimCounters::default(),
             });
         }
         Some(out)

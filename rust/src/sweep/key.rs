@@ -33,7 +33,14 @@ use crate::util::rng::SplitMix64;
 ///
 /// `conccl model-version` prints this string so CI can key its cache
 /// restore on it.
-pub const MODEL_VERSION: &str = "conccl-model-v7.0";
+///
+/// v8.0: the incremental fluid core solves max-min rates per
+/// resource-connected component instead of over the whole active set.
+/// The allocation is the same max-min fixpoint, but the progressive-fill
+/// delta sequences differ, so low-order float bits of timelines can move
+/// (within the 1e-9 graph-equivalence envelope) — cached results from
+/// v7.0 must re-key.
+pub const MODEL_VERSION: &str = "conccl-model-v8.0";
 
 // ---------------------------------------------------------------------------
 // Gate keys

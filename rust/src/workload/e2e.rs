@@ -798,6 +798,11 @@ pub struct E2eRun {
     pub sdma_occupancy: f64,
     /// Nodes in the executed graph (0 for the analytic serial family).
     pub graph_nodes: usize,
+    /// Fluid event-loop counters for the executed graph (zeros for the
+    /// analytic serial family and for cache-replayed records, which
+    /// simulate nothing; for `auto`, accumulated over every candidate
+    /// simulation the planner ran).
+    pub counters: crate::sim::SimCounters,
 }
 
 /// [`run_e2e_planned`] with a caller-provided planner — THE one Auto
@@ -879,6 +884,7 @@ pub fn run_e2e(
             },
             sdma_occupancy: 0.0,
             graph_nodes: 0,
+            counters: crate::sim::SimCounters::default(),
         });
     }
     let g = build_graph(m, topo, trace, depth, family)?;
@@ -893,6 +899,7 @@ pub fn run_e2e(
         hbm_occupancy: r.hbm_occupancy,
         sdma_occupancy: r.sdma_occupancy,
         graph_nodes: g.nodes.len(),
+        counters: r.counters,
     })
 }
 

@@ -287,6 +287,9 @@ pub struct ServeStepper {
     costs: Vec<((usize, usize), StepCost)>,
     /// Auto-family candidate wins, in first-win order.
     wins: Vec<(&'static str, usize)>,
+    /// Event-loop counters accumulated over every graph execution this
+    /// stepper performed (cost-cache hits add nothing: no simulation).
+    counters: crate::sim::SimCounters,
 }
 
 /// The serialized-chain pseudo-plan (the never-lose bound; also the
@@ -308,7 +311,14 @@ impl ServeStepper {
             recorded: Vec::new(),
             costs: Vec::new(),
             wins: Vec::new(),
+            counters: crate::sim::SimCounters::default(),
         }
+    }
+
+    /// Event-loop counters summed over every simulated step (resumed
+    /// steps report only their replayed suffix).
+    pub fn counters(&self) -> crate::sim::SimCounters {
+        self.counters
     }
 
     /// Build one step graph: the decode trace under a per-class plan
@@ -411,6 +421,7 @@ impl ServeStepper {
                 run
             }
         };
+        self.counters.absorb(run.counters);
         Ok(StepCost {
             time: run.total,
             hbm: run.hbm_occupancy,

@@ -124,6 +124,9 @@ pub struct ServeReport {
     pub sdma_occupancy: f64,
     /// Modal winning per-class plan (auto family only).
     pub plan: Option<&'static str>,
+    /// Fluid-core event-loop counters summed over every simulated step
+    /// (cache-replayed reports carry zeros: a replay simulates nothing).
+    pub counters: crate::sim::SimCounters,
 }
 
 /// Deterministic open-loop arrival process: request `i`'s draws are
@@ -271,6 +274,7 @@ fn run_one(
         hbm_occupancy: hbm_w / t,
         sdma_occupancy: sdma_w / t,
         plan: stepper.winning_plan(),
+        counters: stepper.counters(),
     })
 }
 

@@ -215,7 +215,7 @@ mod reference {
                 };
                 sim.set_cap(comm_t, cap);
             }
-            match sim.next_event() {
+            match sim.next_event().unwrap() {
                 Event::Completion(t) if t == gemm_t => {
                     gemm_done = true;
                     gemm_finish = sim.now();
@@ -406,7 +406,7 @@ mod reference {
                 sim.set_cap(c_tasks[ci], cap);
             }
 
-            match sim.next_event() {
+            match sim.next_event().unwrap() {
                 Event::Completion(t) => {
                     if g_done < kk && t == g_tasks[g_done] {
                         let fin = sim.now();

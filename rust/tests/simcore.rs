@@ -1,0 +1,337 @@
+//! Incremental fluid-core equivalence and counter tests.
+//!
+//! The component-partitioned solver must be *observationally identical*
+//! to a whole-simulation max-min water-fill: after any event, settling
+//! the dirty set leaves every in-flight task at the rate a global
+//! progressive fill over the full live set would assign (≤ 1e-9). On
+//! top of that, the event-loop counters pin the incrementality claims
+//! themselves: resource-disjoint components never cross-invalidate, and
+//! real graph/serving workloads do almost no full-active-set passes.
+
+use conccl::config::MachineConfig;
+use conccl::sim::{Event, Sim, TaskSpec};
+use conccl::util::prop::forall;
+use conccl::util::rng::Rng;
+use conccl::workload::e2e::{run_e2e_planned, E2eFamily, E2eSpec};
+use conccl::workload::serving::ServeSpec;
+use conccl::workload::traffic::{run_serve, TrafficConfig};
+
+/// The solver's saturation epsilon (`sim/fluid.rs`); the oracle must
+/// freeze with the same tolerances to land within 1e-9 of the sim.
+const EPS: f64 = 1e-12;
+
+/// Test-side randomized instance: resource capacities plus per-task
+/// (arrival, work) and a dense demand matrix (0.0 = no demand).
+struct Inst {
+    res_caps: Vec<f64>,
+    arrival: Vec<f64>,
+    work: Vec<f64>,
+    dem: Vec<Vec<f64>>,
+}
+
+fn gen_inst(rng: &mut Rng) -> Inst {
+    let nres = 2 + rng.u64_below(4) as usize;
+    let ntasks = 3 + rng.u64_below(10) as usize;
+    let mut res_caps = Vec::with_capacity(nres);
+    for _ in 0..nres {
+        res_caps.push(rng.f64_in(1.0, 10.0));
+    }
+    let mut arrival = Vec::with_capacity(ntasks);
+    let mut work = Vec::with_capacity(ntasks);
+    let mut dem = Vec::with_capacity(ntasks);
+    for _ in 0..ntasks {
+        arrival.push(rng.f64_in(0.0, 2.0));
+        work.push(rng.f64_in(0.2, 2.0));
+        let mut row = vec![0.0; nres];
+        for d in row.iter_mut() {
+            if rng.f64() < 0.5 {
+                *d = rng.f64_in(0.1, 3.0);
+            }
+        }
+        dem.push(row);
+    }
+    Inst { res_caps, arrival, work, dem }
+}
+
+/// Reference solver: one global progressive max-min water-fill over the
+/// given participant set, mirroring the sim's freeze tolerances. This is
+/// exactly what the pre-incremental core did on every dirty event.
+fn global_fill(res_caps: &[f64], parts: &[usize], caps: &[f64], dem: &[Vec<f64>]) -> Vec<f64> {
+    let n = dem.len();
+    let nres = res_caps.len();
+    let mut rates = vec![0.0; n];
+    let mut frozen = vec![true; n];
+    for &i in parts {
+        frozen[i] = false;
+    }
+    let mut slack = res_caps.to_vec();
+    for _round in 0..(parts.len() + nres + 1) {
+        let mut load = vec![0.0; nres];
+        let mut delta = f64::INFINITY;
+        let mut any = false;
+        for &i in parts {
+            if frozen[i] {
+                continue;
+            }
+            any = true;
+            delta = delta.min(caps[i] - rates[i]);
+            for (r, &amt) in dem[i].iter().enumerate() {
+                if amt > 0.0 {
+                    load[r] += amt;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        for r in 0..nres {
+            if load[r] > EPS {
+                delta = delta.min(slack[r] / load[r]);
+            }
+        }
+        assert!(delta.is_finite(), "oracle fill diverged (uncapped free task)");
+        let delta = delta.max(0.0);
+        for &i in parts {
+            if frozen[i] {
+                continue;
+            }
+            rates[i] += delta;
+            for (r, &amt) in dem[i].iter().enumerate() {
+                slack[r] -= amt * delta;
+            }
+        }
+        for &i in parts {
+            if frozen[i] {
+                continue;
+            }
+            let at_cap = rates[i] >= caps[i] - EPS * caps[i].max(1.0);
+            let saturated = dem[i]
+                .iter()
+                .enumerate()
+                .any(|(r, &amt)| amt > EPS && slack[r] <= EPS * res_caps[r]);
+            if at_cap || saturated {
+                frozen[i] = true;
+            }
+        }
+    }
+    rates
+}
+
+/// Drive one random instance through the incremental event loop,
+/// comparing every post-settle rate vector against the global oracle.
+/// Wake events poke random caps/demands so the incremental paths
+/// (grant, revoke, re-fill, component split) all get exercised.
+fn check_case(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed ^ 0x51A1_C0DE);
+    let inst = gen_inst(&mut rng);
+    let n = inst.work.len();
+    let nres = inst.res_caps.len();
+    let mut dem = inst.dem.clone();
+
+    let mut sim = Sim::new();
+    let mut rids = Vec::with_capacity(nres);
+    for (r, &c) in inst.res_caps.iter().enumerate() {
+        rids.push(sim.add_resource(&format!("r{r}"), c));
+    }
+    let mut caps = Vec::with_capacity(n);
+    for i in 0..n {
+        let cap = rng.f64_in(0.1, 5.0);
+        caps.push(cap);
+        let demands: Vec<_> = rids.iter().copied().zip(dem[i].iter().copied()).collect();
+        sim.add_task(TaskSpec {
+            name: None,
+            arrival: inst.arrival[i],
+            work: inst.work[i],
+            demands: &demands,
+            cap,
+        });
+    }
+    for _ in 0..4 {
+        sim.schedule_wake(rng.f64_in(0.1, 3.0));
+    }
+
+    for _step in 0..10_000 {
+        let ev = sim.next_event().map_err(|e| e.to_string())?;
+        if let Event::Wake(_) = ev {
+            // Mid-flight control poke on a random unfinished task.
+            let i = rng.u64_below(n as u64) as usize;
+            if sim.finish_time(i).is_none() {
+                if rng.f64() < 0.5 {
+                    caps[i] = rng.f64_in(0.0, 5.0);
+                    sim.set_cap(i, caps[i]);
+                } else {
+                    let r = rng.u64_below(nres as u64) as usize;
+                    dem[i][r] = if rng.f64() < 0.3 {
+                        0.0
+                    } else {
+                        rng.f64_in(0.1, 3.0)
+                    };
+                    sim.set_demand(i, rids[r], dem[i][r]);
+                }
+            }
+        }
+        // Settle anything the event left dirty, then audit the whole
+        // rate vector against a from-scratch global fill.
+        sim.settle().map_err(|e| e.to_string())?;
+        let mut parts = Vec::new();
+        for i in 0..n {
+            if sim.is_active(i) && caps[i] > EPS && sim.remaining_frac(i) * inst.work[i] > EPS {
+                parts.push(i);
+            }
+        }
+        let want = global_fill(&inst.res_caps, &parts, &caps, &dem);
+        for &i in &parts {
+            let got = sim.rate(i);
+            if (got - want[i]).abs() > 1e-9 {
+                return Err(format!(
+                    "task {i} at t={}: incremental rate {got} vs global fill {}",
+                    sim.now(),
+                    want[i]
+                ));
+            }
+        }
+        if ev == Event::Idle {
+            return Ok(());
+        }
+    }
+    Err("event loop did not reach Idle in 10k events".into())
+}
+
+#[test]
+fn incremental_rates_match_a_global_water_fill_at_every_event() {
+    forall("incremental == whole-sim recompute", 40, |rng| rng.u64_below(1 << 32))
+        .check(|&seed| check_case(seed));
+}
+
+#[test]
+fn disjoint_components_never_cross_invalidate() {
+    let mut sim = Sim::new();
+    let ra = sim.add_resource("a", 1.0);
+    let rb = sim.add_resource("b", 1.0);
+    let t0 = sim.add_task(TaskSpec {
+        name: None,
+        arrival: 0.0,
+        work: 1.0,
+        demands: &[(ra, 1.0)],
+        cap: f64::INFINITY,
+    });
+    let t1 = sim.add_task(TaskSpec {
+        name: None,
+        arrival: 0.0,
+        work: 1.0,
+        demands: &[(rb, 1.0)],
+        cap: f64::INFINITY,
+    });
+    assert_eq!(sim.next_event().unwrap(), Event::Arrival(t0));
+    assert_eq!(sim.next_event().unwrap(), Event::Arrival(t1));
+    sim.settle().unwrap();
+    let c = sim.counters();
+    // Two arrivals, two single-task components — and never a pass over
+    // the full active set.
+    assert_eq!(c.rate_passes, 2);
+    assert_eq!(c.tasks_swept, 2);
+    assert_eq!(c.max_component, 1);
+    assert_eq!(c.full_passes, 0);
+
+    // Poking t0 must re-solve t0's component only: one more pass, one
+    // more task swept, t1 untouched.
+    sim.set_cap(t0, 0.5);
+    sim.settle().unwrap();
+    let c = sim.counters();
+    assert_eq!(c.rate_passes, 3);
+    assert_eq!(c.tasks_swept, 3);
+    assert_eq!(c.full_passes, 0);
+
+    // Completions on disjoint resources seed no one: the run finishes
+    // with zero cross-component recomputes.
+    while sim.next_event().unwrap() != Event::Idle {}
+    assert_eq!(sim.finish_time(t1), Some(1.0));
+    assert_eq!(sim.finish_time(t0), Some(2.0));
+    let c = sim.counters();
+    assert_eq!(c.rate_passes, 3, "completions must not trigger extra passes");
+    assert_eq!(c.full_passes, 0);
+    assert_eq!(c.events, 4); // 2 arrivals + 2 completions
+}
+
+/// One run of N identical contenders on one resource: every completion
+/// lands at the same instant, so the ordering is pure tie-break.
+fn identical_contenders_run(n: usize) -> (Vec<Event>, Vec<u64>) {
+    let mut sim = Sim::new();
+    let r = sim.add_resource("hbm", 4.0);
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(sim.add_task(TaskSpec {
+            name: None,
+            arrival: 0.0,
+            work: 1.0,
+            demands: &[(r, 1.0)],
+            cap: f64::INFINITY,
+        }));
+    }
+    let mut events = Vec::new();
+    loop {
+        let ev = sim.next_event().unwrap();
+        if ev == Event::Idle {
+            break;
+        }
+        events.push(ev);
+    }
+    let mut bits = Vec::with_capacity(n);
+    for &i in &ids {
+        bits.push(sim.finish_time(i).unwrap().to_bits());
+    }
+    (events, bits)
+}
+
+#[test]
+fn equal_time_completions_break_ties_by_lowest_id_deterministically() {
+    let (events, bits) = identical_contenders_run(6);
+    // All six completions tie; they must pop in ascending id order.
+    let mut completions = Vec::new();
+    for e in &events {
+        if let Event::Completion(t) = e {
+            completions.push(*t);
+        }
+    }
+    assert_eq!(completions, vec![0, 1, 2, 3, 4, 5]);
+    // Byte-compared determinism across runs: same events, bit-identical
+    // finish times.
+    let (events2, bits2) = identical_contenders_run(6);
+    assert_eq!(events, events2);
+    assert_eq!(bits, bits2);
+}
+
+#[test]
+fn auto_lineup_full_recomputes_drop_at_least_2x_vs_events() {
+    let m = MachineConfig::mi300x();
+    let topo = m.topology(1);
+    let spec = E2eSpec::parse("fsdp_step:70b:4:2").unwrap();
+    let trace = spec.trace();
+    let (run, _plan) = run_e2e_planned(&m, &topo, &trace, spec.depth, E2eFamily::Auto).unwrap();
+    let c = run.counters;
+    assert!(c.events > 0, "auto lineup must report simulated events");
+    assert!(c.rate_passes > 0);
+    assert!(
+        c.full_passes * 2 <= c.events,
+        "full-active-set recomputes did not drop 2x: {} full passes / {} events",
+        c.full_passes,
+        c.events
+    );
+}
+
+#[test]
+fn serve_run_full_recomputes_drop_at_least_2x_vs_events() {
+    let m = MachineConfig::mi300x();
+    let topo = m.topology(1);
+    let spec = ServeSpec::parse("pd_disagg:70b:2:8").unwrap();
+    let cfg = TrafficConfig { steps: 200, ..TrafficConfig::default() };
+    let r = run_serve(&m, &topo, spec, E2eFamily::Auto, cfg, 24301).unwrap();
+    let c = r.counters;
+    assert!(c.events > 0, "serve run must report simulated events");
+    assert!(
+        c.full_passes * 2 <= c.events,
+        "full-active-set recomputes did not drop 2x: {} full passes / {} events",
+        c.full_passes,
+        c.events
+    );
+}
